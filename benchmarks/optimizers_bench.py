@@ -1,0 +1,103 @@
+"""Paper Table V + Fig. 6: optimizer comparison over workload spaces.
+
+For each workload × optimizer: 10 runs with random starts and the paper's
+stopping rule (no improvement in 5 trials).  Reports max/median trials,
+best%/median best% (percentile of the space's CDF reached), and the
+P(≥1 sample in the 95th percentile) vs N curve against the analytic
+hypergeometric random-walk baseline.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import ActionSpace, DiscoverySpace, SampleStore
+from repro.core.optimizers import (OPTIMIZER_REGISTRY, hypergeom_p_found,
+                                   run_optimizer)
+
+from .workloads import WORKLOADS, exhaustive_values
+
+__all__ = ["run_table_v", "run_fig6"]
+
+OPTIMIZERS = ("bo-gp", "tpe", "bohb")
+
+
+def _percentile_of(value: float, values: np.ndarray, mode: str = "min") -> float:
+    """best%: fraction of the space this value beats (100 = global best)."""
+    if mode == "min":
+        return float((values > value).mean() * 100.0)
+    return float((values < value).mean() * 100.0)
+
+
+def run_table_v(n_runs: int = 10, max_trials: int = 120, patience: int = 5,
+                verbose: bool = True) -> list:
+    rows = []
+    for wname, factory in WORKLOADS.items():
+        space, exp, metric, mode = factory()
+        _, truth = exhaustive_values(space, exp, metric)
+        for oname in OPTIMIZERS:
+            trials, bests = [], []
+            for run_i in range(n_runs):
+                ds = DiscoverySpace(space=space,
+                                    actions=ActionSpace.make([exp]),
+                                    store=SampleStore(":memory:"))
+                opt = OPTIMIZER_REGISTRY[oname](seed=run_i)
+                run = run_optimizer(opt, ds, metric, mode,
+                                    max_trials=max_trials, patience=patience,
+                                    rng=np.random.default_rng(1000 + run_i))
+                trials.append(run.num_trials)
+                bests.append(_percentile_of(run.best.value, truth, mode))
+            row = {
+                "test_case": wname, "optimizer": oname,
+                "max_trials": int(np.max(trials)),
+                "median_trials": float(np.median(trials)),
+                "best_pct": round(float(np.max(bests)), 1),
+                "median_pct": round(float(np.median(bests)), 1),
+                "space_size": space.size,
+            }
+            rows.append(row)
+            if verbose:
+                print(f"[table-v] {wname:7s} {oname:6s} trials max/med "
+                      f"{row['max_trials']}/{row['median_trials']:.1f} "
+                      f"best%/med% {row['best_pct']}/{row['median_pct']}")
+    return rows
+
+
+def run_fig6(n_runs: int = 10, n_samples: int = 60, verbose: bool = True) -> dict:
+    """P(found ≥1 config in 95th pctile) after N samples, per optimizer,
+    plus the analytic hypergeometric random baseline."""
+    out = {}
+    for wname, factory in WORKLOADS.items():
+        space, exp, metric, mode = factory()
+        configs, truth = exhaustive_values(space, exp, metric)
+        thresh = np.quantile(truth, 0.05 if mode == "min" else 0.95)
+        target_digests = {
+            c.digest for c, v in zip(configs, truth)
+            if (v <= thresh if mode == "min" else v >= thresh)}
+        curves = {}
+        for oname in OPTIMIZERS:
+            found_at = np.full((n_runs, n_samples), False)
+            for run_i in range(n_runs):
+                ds = DiscoverySpace(space=space,
+                                    actions=ActionSpace.make([exp]),
+                                    store=SampleStore(":memory:"))
+                opt = OPTIMIZER_REGISTRY[oname](seed=50 + run_i)
+                run = run_optimizer(opt, ds, metric, mode,
+                                    max_trials=n_samples,
+                                    patience=n_samples,  # run to N samples
+                                    rng=np.random.default_rng(77 + run_i))
+                hit = False
+                for j, t in enumerate(run.trials[:n_samples]):
+                    hit = hit or (t.configuration.digest in target_digests)
+                    found_at[run_i, j] = hit
+                found_at[run_i, len(run.trials):] = hit
+            curves[oname] = found_at.mean(axis=0)
+        curves["random"] = np.array([
+            hypergeom_p_found(space.size, len(target_digests), n + 1)
+            for n in range(n_samples)])
+        out[wname] = curves
+        if verbose:
+            n_probe = min(n_samples, 30) - 1
+            msg = " ".join(f"{k}={v[n_probe]:.2f}" for k, v in curves.items())
+            print(f"[fig6] {wname}: P(hit 95th pct) @{n_probe + 1} samples: {msg}")
+    return out

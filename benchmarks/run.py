@@ -1,0 +1,106 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  * Table V  — optimizer trials/best% per workload  (optimizers_bench)
+  * Fig. 6   — P(95th pctile) vs samples            (optimizers_bench)
+  * Fig. 7   — incremental-sampling savings         (incremental)
+  * Table VI — RSSC transfer quality                (rssc_bench)
+  * §Roofline — aggregated dry-run baselines        (roofline_bench)
+
+Prints one CSV block per benchmark: ``name,us_per_call,derived``, where
+``us_per_call`` is the mean wall-time per primitive operation of that
+benchmark (one optimizer trial / one RSSC transfer / one table render) and
+``derived`` is the benchmark's headline metric.
+
+Set QUICK=1 for a fast pass (fewer runs).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+
+def _csv(name: str, us_per_call: float, derived: str) -> None:
+    print(f"CSV,{name},{us_per_call:.1f},{derived}")
+
+
+def main() -> None:
+    quick = os.environ.get("QUICK", "0") == "1"
+    n_runs = 3 if quick else 10
+    results = {}
+
+    from . import incremental, optimizers_bench, roofline_bench, rssc_bench
+
+    # ---------------- Table V
+    t0 = time.time()
+    table_v = optimizers_bench.run_table_v(n_runs=n_runs)
+    dt = time.time() - t0
+    n_trials = sum(r["median_trials"] * n_runs for r in table_v)
+    best = max(r["best_pct"] for r in table_v)
+    _csv("table_v_optimizers", 1e6 * dt / max(n_trials, 1),
+         f"best%={best};rows={len(table_v)}")
+    results["table_v"] = table_v
+
+    # ---------------- Fig 6
+    t0 = time.time()
+    fig6 = optimizers_bench.run_fig6(n_runs=n_runs,
+                                     n_samples=30 if quick else 60)
+    dt = time.time() - t0
+    mi = fig6.get("MI-OPT", {})
+    probe = {k: round(float(v[-1]), 3) for k, v in mi.items()}
+    _csv("fig6_p_found", 1e6 * dt / (len(fig6) * n_runs * 3),
+         f"MI-OPT_final={probe}")
+    results["fig6"] = {w: {k: list(map(float, v)) for k, v in c.items()}
+                       for w, c in fig6.items()}
+
+    # ---------------- Fig 7
+    t0 = time.time()
+    fig7 = incremental.run_fig7(n_runs=12 if quick else 30,
+                                n_permutations=10 if quick else 20,
+                                checkpoints=(10,) if quick else (10, 20, 30))
+    dt = time.time() - t0
+    savings = {w: v["savings_pct"] for w, v in fig7.items()}
+    _csv("fig7_incremental", 1e6 * dt / max(len(fig7), 1),
+         f"savings={savings}")
+    results["fig7"] = fig7
+
+    # ---------------- Table VI
+    t0 = time.time()
+    table_vi = rssc_bench.run_table_vi()
+    dt = time.time() - t0
+    n_ok = sum(1 for r in table_vi if r["transfer"])
+    _csv("table_vi_rssc", 1e6 * dt / max(len(table_vi), 1),
+         f"transfers={n_ok}/{len(table_vi)}")
+    results["table_vi"] = table_vi
+
+    # ---------------- real measured transfer (skipped in QUICK mode)
+    if not quick:
+        t0 = time.time()
+        real = rssc_bench.run_real_transfer()
+        dt = time.time() - t0
+        _csv("real_transfer_walltime", 1e6 * dt,
+             f"r={real.get('r')};transfer={real.get('transfer')};"
+             f"best%={real.get('best%')}")
+        results["real_transfer"] = real
+
+    # ---------------- roofline aggregation
+    t0 = time.time()
+    n_cells = 0
+    for mesh in ("16x16", "2x16x16"):
+        rows = roofline_bench.load_reports(mesh)
+        n_cells += len(rows)
+    dt = time.time() - t0
+    _csv("roofline_aggregate", 1e6 * dt / max(n_cells, 1),
+         f"cells={n_cells}")
+
+    out = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "bench_results.json")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(results, f, indent=1, default=str)
+    print(f"[benchmarks] results saved to {out}")
+
+
+if __name__ == "__main__":
+    main()

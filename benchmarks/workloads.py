@@ -1,0 +1,129 @@
+"""Synthetic workload configuration spaces mirroring the paper's Table III.
+
+The paper measured real deployments (Spark/TPC-DS, TGI inference); offline we
+use closed-form performance surfaces with the SAME dimensions and sizes as
+Table III, qualitatively shaped to the paper's findings:
+
+* TP-OPT  (120 cfgs)  — plateaued Spark-like surface; optimizers ≈ random.
+* SI-OPT  (864 cfgs)  — smooth single-basin latency; BO-friendly.
+* MI-OPT  (2268 cfgs) — multimodal with interactions and non-deployable
+  cliffs (the paper's OOM points); favours TPE/BOHB-style samplers.
+
+Each returns (DiscoverySpace-ready ProbabilitySpace, experiment, metric,
+mode).  Ground truth is enumerable, so best%-style metrics are exact.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (ActionSpace, Configuration, Dimension,
+                        FunctionExperiment, MeasurementError,
+                        ProbabilitySpace)
+
+__all__ = ["make_tp_opt", "make_si_opt", "make_mi_opt", "WORKLOADS",
+           "exhaustive_values"]
+
+
+def make_tp_opt(seed: int = 0):
+    space = ProbabilitySpace.make([
+        Dimension.discrete("executors", [12, 14, 16, 18, 20, 22]),
+        Dimension.discrete("cores_per_exec", [1, 2, 4, 8]),
+        Dimension.discrete("mem_gb", [1, 2, 4, 8, 16]),
+    ])
+    rng = np.random.default_rng(seed)
+    jitter = {c.digest: rng.normal(0, 8.0) for c in space.all_configurations()}
+
+    def fn(c):
+        work = 3600.0
+        parallel = c["executors"] * c["cores_per_exec"] ** 0.55
+        t = work / parallel
+        if c["mem_gb"] < 4:                      # spill penalty
+            t *= 1.9 - 0.2 * c["mem_gb"]
+        if c["cores_per_exec"] == 8:             # GC contention plateau
+            t *= 1.15
+        return {"runtime_s": t + jitter[c.digest]}
+
+    exp = FunctionExperiment(fn=fn, properties=("runtime_s",), name="tpcds")
+    return space, exp, "runtime_s", "min"
+
+
+def make_si_opt(seed: int = 0):
+    space = ProbabilitySpace.make([
+        Dimension.categorical("gpu_model",
+                              ["A100-PCIE-40GB", "Tesla-T4", "V100-PCIE-16GB"]),
+        Dimension.discrete("num_gpus", [1, 2, 4]),
+        Dimension.discrete("cpu_cores", [2, 4, 8, 16]),
+        Dimension.discrete("memory_gi", [16, 32, 64]),
+        Dimension.discrete("max_batch", [4, 24, 64, 128]),
+        Dimension.discrete("max_seq", [1024, 2048]),
+    ])
+    rng = np.random.default_rng(seed + 1)
+    jitter = {c.digest: rng.normal(0, 4.0) for c in space.all_configurations()}
+    tflops = {"A100-PCIE-40GB": 3.0, "V100-PCIE-16GB": 2.0, "Tesla-T4": 1.0}
+
+    def fn(c):
+        base = 600.0 / (tflops[c["gpu_model"]] * c["num_gpus"] ** 0.75)
+        cpu = 120.0 / c["cpu_cores"]
+        batch = 4.0 * np.log2(c["max_batch"])    # batching overhead @p95
+        seq = 0.012 * c["max_seq"]
+        mem = 20.0 if c["memory_gi"] < 32 else 0.0
+        return {"latency95_ms": base + cpu + batch + seq + mem
+                + jitter[c.digest]}
+
+    exp = FunctionExperiment(fn=fn, properties=("latency95_ms",), name="tgi-single")
+    return space, exp, "latency95_ms", "min"
+
+
+def make_mi_opt(seed: int = 0):
+    space = ProbabilitySpace.make([
+        Dimension.discrete("max_batch", [4, 8, 16, 32, 64, 128, 256]),
+        Dimension.discrete("max_batch_weight",
+                           [19000, 50000, 100000, 1000000, 2000000, 2968750]),
+        Dimension.discrete("max_concurrent", [64, 128, 320]),
+        Dimension.discrete("max_new_tokens", [512, 1024, 1536]),
+        Dimension.discrete("max_seq", [1024, 2048, 4096]),
+        Dimension.categorical("flash_attention", [False, True]),
+    ])
+    rng = np.random.default_rng(seed + 2)
+    jitter = {c.digest: rng.normal(0, 6.0) for c in space.all_configurations()}
+
+    def fn(c):
+        # OOM cliff: big batch×seq without flash attention is non-deployable
+        pressure = c["max_batch"] * c["max_seq"]
+        if not c["flash_attention"] and pressure > 128 * 2048:
+            raise MeasurementError("OOM")
+        throughput = min(c["max_batch"], c["max_concurrent"]) ** 0.8
+        t = 4000.0 / throughput
+        t += 0.04 * c["max_new_tokens"]
+        if c["max_batch_weight"] < 100000:       # queueing mode
+            t += 55.0
+        elif c["max_batch_weight"] > 2000000 and not c["flash_attention"]:
+            t += 90.0                            # thrashing mode
+        if c["flash_attention"]:
+            t *= 0.82
+        if c["max_seq"] == 4096 and c["max_batch"] >= 64:
+            t *= 1.3                             # interaction bump
+        return {"mean_latency_ms": t + jitter[c.digest]}
+
+    exp = FunctionExperiment(fn=fn, properties=("mean_latency_ms",), name="tgi-multi")
+    return space, exp, "mean_latency_ms", "min"
+
+
+WORKLOADS = {
+    "TP-OPT": make_tp_opt,
+    "SI-OPT": make_si_opt,
+    "MI-OPT": make_mi_opt,
+}
+
+
+def exhaustive_values(space, exp, metric):
+    """(configs, values) over deployable points (ground truth)."""
+    configs, values = [], []
+    for c in space.all_configurations():
+        try:
+            values.append(exp.measure(c)[metric])
+            configs.append(c)
+        except MeasurementError:
+            continue
+    return configs, np.array(values)

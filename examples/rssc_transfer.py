@@ -1,0 +1,78 @@
+"""RSSC knowledge transfer between two real measured spaces.
+
+Source: wall-clock training-step times of the reduced xlstm-125m over a
+deployment space (batch × seq × attention chunk × remat), exhaustively
+measured on this machine.  Target: the SAME space for the reduced
+deepseek-67b (dense transformer) — a different architecture, i.e. a change
+in the Action space (paper §IV-1's FT-TRANS pattern).
+
+RSSC clusters the source samples, measures only the representatives in the
+target, applies the r>0.7 / p<0.01 criteria, and (if they pass) installs the
+linear surrogate as a predictor experiment — then sweeps predictions over
+the rest of the target space.
+
+    PYTHONPATH=src python examples/rssc_transfer.py
+"""
+
+import numpy as np
+
+from repro.core import (ActionSpace, Dimension, DiscoverySpace,
+                        ProbabilitySpace, SampleStore, prediction_quality,
+                        rssc_transfer)
+from repro.tuning.experiments import WalltimeExperiment
+
+
+def main():
+    space = ProbabilitySpace.make([
+        Dimension.discrete("batch", [1, 2, 4]),
+        Dimension.discrete("seq", [32, 64, 128]),
+        Dimension.discrete("attn_q_chunk", [16, 32, 64]),
+        Dimension.categorical("remat", ["none", "full"]),
+    ])
+    store = SampleStore(":memory:")
+    ds_src = DiscoverySpace(
+        space=space,
+        actions=ActionSpace.make([WalltimeExperiment("xlstm-125m", repeats=2)]),
+        store=store)
+    ds_tgt = DiscoverySpace(
+        space=space,
+        actions=ActionSpace.make([WalltimeExperiment("deepseek-67b", repeats=2)]),
+        store=store)
+
+    print(f"exhaustively characterizing the source ({space.size} configs, "
+          f"measured wall-times — takes a minute)...")
+    for c in list(ds_src.remaining_configurations()):
+        s = ds_src.sample(c)
+    src_best = min(ds_src.read(), key=lambda s: s.value("step_ms"))
+    print(f"source best: {src_best.configuration.as_dict()} "
+          f"{src_best.value('step_ms'):.1f} ms\n")
+
+    res = rssc_transfer(ds_src, ds_tgt, "step_ms", mapping=None,
+                        rng=np.random.default_rng(0))
+    print(f"representative sub-space: {len(res.representatives)} points")
+    print(f"transfer criteria: r={res.assessment.r:+.3f} "
+          f"p={res.assessment.p_value:.2g} -> "
+          f"{'TRANSFER' if res.transferable else 'NO TRANSFER'}")
+    if not res.transferable:
+        return
+
+    preds = res.predicted_space.read()
+    n_pred = sum(1 for s in preds if s.properties["step_ms"].predicted)
+    print(f"predicted {n_pred} of {len(preds)} target configs from "
+          f"{res.n_target_measured} real measurements "
+          f"({100 * (1 - res.n_target_measured / space.size):.0f}% of "
+          f"target sampling cost saved)\n")
+
+    # score against ground truth (exhaustive target, for evaluation only)
+    truth_ds = DiscoverySpace(space=space, actions=ds_tgt.actions, store=store)
+    pred_vals, true_vals = [], []
+    for s in preds:
+        pred_vals.append(s.value("step_ms"))
+        true_vals.append(truth_ds.sample(s.configuration).value("step_ms"))
+    q = prediction_quality(np.array(pred_vals), np.array(true_vals),
+                           n_measured=res.n_target_measured, mode="min")
+    print("prediction quality vs ground truth:", q.summary())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps.
+
+Runs the full production path on local devices: deterministic data pipeline
+→ sharded train step (AdamW, grad clip, warmup+cosine) → periodic async
+checkpoints → restart-safe resume.  Loss drops well below the unigram
+entropy of the synthetic Markov distribution within ~200 steps.
+
+    PYTHONPATH=src python examples/train_lm.py                   # ~100M model
+    PYTHONPATH=src python examples/train_lm.py --quick           # 2-minute demo
+    # kill it mid-run, re-run the same command: it resumes from the last
+    # checkpoint (same final state as an uninterrupted run).
+"""
+
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced model, 60 steps (~2 min)")
+    ap.add_argument("--steps", type=int, default=250)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_100m")
+    args = ap.parse_args()
+
+    if args.quick:
+        argv = ["--arch", "nano-100m", "--smoke", "--steps", "60",
+                "--batch", "8", "--seq", "64", "--ckpt-dir", args.ckpt_dir,
+                "--ckpt-every", "20", "--log-every", "10"]
+    else:
+        argv = ["--arch", "nano-100m", "--steps", str(args.steps),
+                "--batch", "2", "--seq", "128", "--lr", "1e-3",
+                "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "50",
+                "--log-every", "10"]
+    out = train_main(argv)
+    print(f"[train_lm] {out}")
+    if out["first_loss"] is not None and out["last_loss"] is not None \
+            and out["steps_run"] >= 50:
+        assert out["last_loss"] < out["first_loss"], "loss did not decrease"
+        print(f"[train_lm] loss {out['first_loss']:.3f} -> "
+              f"{out['last_loss']:.3f} over {out['steps_run']} steps")
+
+
+if __name__ == "__main__":
+    main()

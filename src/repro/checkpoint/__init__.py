@@ -1,0 +1,7 @@
+"""Checkpointing and fault tolerance."""
+
+from .checkpoint import (CheckpointManager, load_checkpoint, save_checkpoint)
+from .failure import ElasticPlan, FailureManager, StragglerPolicy
+
+__all__ = ["CheckpointManager", "load_checkpoint", "save_checkpoint",
+           "ElasticPlan", "FailureManager", "StragglerPolicy"]

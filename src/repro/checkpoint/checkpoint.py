@@ -1,0 +1,166 @@
+"""Mesh-independent checkpointing: msgpack + zstd, async save, resharding load.
+
+Layout: a checkpoint is a directory with
+  * ``manifest.json``      — step, flat key list, shapes/dtypes, metadata
+  * ``arrays.msgpack.zst`` — flat {path: raw bytes} (host-gathered numpy)
+
+Arrays are stored UNSHARDED (gathered to host), keyed by tree path — so a
+checkpoint written from a 16×16 mesh restores onto 2×16×16, onto the
+post-failure 14×16 elastic mesh, or onto one CPU, by simply device_put-ing
+with the target sharding (``load_checkpoint(..., shardings=...)``).
+
+``CheckpointManager`` adds: atomic writes (tmp dir + rename), retention,
+async save (background thread; ``wait()`` joins), and latest-step discovery
+for restart-after-failure.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import zstandard
+
+__all__ = ["save_checkpoint", "load_checkpoint", "CheckpointManager"]
+
+
+def _flatten(tree) -> dict:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return {jax.tree_util.keystr(path): leaf for path, leaf in flat}
+
+
+def _unflatten_like(template, flat: dict):
+    leaves_p = jax.tree_util.tree_flatten_with_path(template)[0]
+    treedef = jax.tree_util.tree_structure(template)
+    leaves = []
+    for path, _ in leaves_p:
+        key = jax.tree_util.keystr(path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing array {key!r}")
+        leaves.append(flat[key])
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save_checkpoint(directory: str, step: int, tree, metadata: Optional[dict] = None,
+                    ) -> str:
+    """Write checkpoint atomically.  Returns the checkpoint path."""
+    flat = _flatten(tree)
+    path = os.path.join(directory, f"step_{step:08d}")
+    tmp = path + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+
+    manifest = {"step": step, "metadata": metadata or {}, "arrays": {}}
+    payload = {}
+    for key, leaf in flat.items():
+        arr = np.asarray(jax.device_get(leaf))
+        manifest["arrays"][key] = {"shape": list(arr.shape),
+                                   "dtype": str(arr.dtype)}
+        payload[key] = arr.tobytes()
+    raw = msgpack.packb(payload, use_bin_type=True)
+    with open(os.path.join(tmp, "arrays.msgpack.zst"), "wb") as f:
+        f.write(zstandard.ZstdCompressor(level=3).compress(raw))
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.rename(tmp, path)
+    return path
+
+
+def load_checkpoint(directory: str, template, step: Optional[int] = None,
+                    shardings=None):
+    """Load a checkpoint (latest if ``step`` is None), optionally placing
+    each array with the given sharding tree (resharding on load)."""
+    step = step if step is not None else latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    with open(os.path.join(path, "arrays.msgpack.zst"), "rb") as f:
+        raw = zstandard.ZstdDecompressor().decompress(f.read())
+    payload = msgpack.unpackb(raw, raw=False)
+    flat = {}
+    for key, info in manifest["arrays"].items():
+        arr = np.frombuffer(payload[key], dtype=np.dtype(info["dtype"]))
+        flat[key] = arr.reshape(info["shape"])
+    tree = _unflatten_like(template, flat)
+    if shardings is not None:
+        tree = jax.tree.map(
+            lambda a, s: jax.device_put(a, s), tree, shardings)
+    else:
+        tree = jax.tree.map(jnp.asarray, tree)
+    return tree, manifest
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            try:
+                steps.append(int(name[5:]))
+            except ValueError:
+                continue
+    return max(steps) if steps else None
+
+
+class CheckpointManager:
+    """Retention + async save + restart discovery."""
+
+    def __init__(self, directory: str, keep: int = 3, save_every: int = 100):
+        self.directory = directory
+        self.keep = keep
+        self.save_every = save_every
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    def should_save(self, step: int) -> bool:
+        return step > 0 and step % self.save_every == 0
+
+    def save(self, step: int, tree, metadata: Optional[dict] = None,
+             async_: bool = True) -> None:
+        # materialize on host BEFORE handing to the thread (donated buffers
+        # may be reused by the next step otherwise)
+        host_tree = jax.tree.map(lambda a: np.asarray(jax.device_get(a)), tree)
+        self.wait()
+
+        def work():
+            save_checkpoint(self.directory, step, host_tree, metadata)
+            self._retain()
+
+        if async_:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+        else:
+            work()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def restore_latest(self, template, shardings=None):
+        self.wait()
+        return load_checkpoint(self.directory, template, shardings=shardings)
+
+    def latest_step(self) -> Optional[int]:
+        self.wait()
+        return latest_step(self.directory)
+
+    def _retain(self) -> None:
+        steps = sorted(
+            int(n[5:]) for n in os.listdir(self.directory)
+            if n.startswith("step_") and not n.endswith(".tmp"))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)

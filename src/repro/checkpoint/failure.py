@@ -1,0 +1,139 @@
+"""Fault tolerance: node-failure handling, elastic re-meshing, stragglers.
+
+At 1000+ node scale the failure model is: (a) hard node loss (host gone —
+detected by the coordinator via missed heartbeats), (b) stragglers (host
+alive but slow), (c) data poisoning / bad shards.  The policies here are
+deterministic functions so every surviving host computes the SAME plan
+without extra coordination:
+
+* :class:`FailureManager` — heartbeat registry; declares hosts dead after
+  ``timeout`` and produces an :class:`ElasticPlan`.
+* :func:`elastic_remesh` — given surviving device count, pick the largest
+  (data × model) mesh that (1) keeps the model axis intact (TP degree is a
+  property of the checkpoint layout we want to preserve) and (2) maximizes
+  used devices.  Training resumes from the last checkpoint — the checkpoint
+  format is mesh-independent (see checkpoint.py) so resharding is just a
+  device_put with the new mesh's shardings.
+* :class:`StragglerPolicy` — per-step deadline policy: a host that misses
+  the deadline k times in a window is treated as failed (escalate to
+  elastic re-mesh); individual slow *steps* are absorbed by the async
+  dispatch queue depth.
+
+On this single-host container the manager is exercised by tests that
+simulate heartbeats and by the train launcher's restart path (kill/resume).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+__all__ = ["ElasticPlan", "FailureManager", "StragglerPolicy", "elastic_remesh"]
+
+
+@dataclass(frozen=True)
+class ElasticPlan:
+    """What the cluster should look like after a failure."""
+
+    mesh_shape: Tuple[int, ...]
+    axis_names: Tuple[str, ...]
+    dropped_hosts: Tuple[int, ...]
+    devices_used: int
+    devices_idle: int
+    resume_step: int
+
+
+def elastic_remesh(total_devices: int, model_axis: int,
+                   axis_names: Sequence[str] = ("data", "model"),
+                   pod_axis: int = 1) -> Tuple[Tuple[int, ...], int]:
+    """Largest (pod ×) data × model mesh with the model axis preserved.
+
+    Returns (mesh_shape, idle_devices).  The model axis is preserved because
+    changing TP degree changes per-device parameter layouts; the data axis
+    (pure DP/FSDP) can shrink freely — batch is re-balanced by the
+    deterministic data pipeline.
+    """
+    if total_devices < model_axis:
+        raise ValueError(
+            f"cannot keep model axis {model_axis} with {total_devices} devices")
+    groups = total_devices // (model_axis * pod_axis)
+    if groups < 1:
+        pod_axis = 1
+        groups = total_devices // model_axis
+    used = groups * model_axis * pod_axis
+    if pod_axis > 1:
+        return (pod_axis, groups, model_axis), total_devices - used
+    return (groups, model_axis), total_devices - used
+
+
+class FailureManager:
+    """Heartbeat-based failure detection + deterministic elastic planning."""
+
+    def __init__(self, hosts: Sequence[int], devices_per_host: int,
+                 model_axis: int, timeout: float = 60.0):
+        self.devices_per_host = devices_per_host
+        self.model_axis = model_axis
+        self.timeout = timeout
+        self._last_seen: Dict[int, float] = {h: time.time() for h in hosts}
+        self._dead: set = set()
+
+    def heartbeat(self, host: int, now: Optional[float] = None) -> None:
+        if host in self._dead:
+            return  # dead hosts must rejoin via admit()
+        self._last_seen[host] = now if now is not None else time.time()
+
+    def admit(self, host: int, now: Optional[float] = None) -> None:
+        """Scale-up / rejoin path."""
+        self._dead.discard(host)
+        self._last_seen[host] = now if now is not None else time.time()
+
+    def check(self, now: Optional[float] = None) -> List[int]:
+        """Returns newly-dead hosts."""
+        now = now if now is not None else time.time()
+        newly = []
+        for host, seen in self._last_seen.items():
+            if host not in self._dead and now - seen > self.timeout:
+                self._dead.add(host)
+                newly.append(host)
+        return newly
+
+    @property
+    def alive(self) -> List[int]:
+        return sorted(h for h in self._last_seen if h not in self._dead)
+
+    def plan(self, resume_step: int) -> ElasticPlan:
+        total = len(self.alive) * self.devices_per_host
+        shape, idle = elastic_remesh(total, self.model_axis)
+        names = ("data", "model") if len(shape) == 2 else ("pod", "data", "model")
+        return ElasticPlan(
+            mesh_shape=shape,
+            axis_names=names,
+            dropped_hosts=tuple(sorted(self._dead)),
+            devices_used=total - idle,
+            devices_idle=idle,
+            resume_step=resume_step,
+        )
+
+
+@dataclass
+class StragglerPolicy:
+    """Deadline-based straggler escalation.
+
+    ``observe(host, step_time)`` returns True when the host should be
+    treated as failed (k misses within the last ``window`` observations).
+    """
+
+    deadline_s: float
+    misses_to_fail: int = 3
+    window: int = 10
+    _history: Dict[int, List[bool]] = field(default_factory=dict)
+
+    def observe(self, host: int, step_time_s: float) -> bool:
+        h = self._history.setdefault(host, [])
+        h.append(step_time_s > self.deadline_s)
+        del h[:-self.window]
+        return sum(h) >= self.misses_to_fail
+
+    def reset(self, host: int) -> None:
+        self._history.pop(host, None)

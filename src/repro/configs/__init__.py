@@ -1,0 +1,41 @@
+"""Architecture registry: one module per assigned architecture.
+
+``get_config(arch_id, smoke=False)`` resolves ``--arch <id>`` CLI selections.
+"""
+
+from . import (chatglm3_6b, deepseek_67b, gemma3_27b, granite_moe_3b_a800m,
+               hubert_xlarge, internvl2_76b, llama4_scout_17b_a16e,
+               nano_100m, recurrentgemma_9b, stablelm_12b, xlstm_125m)
+from .shapes import SHAPES, ShapeSpec, all_cells, cell_applicability
+
+# extra (non-assigned) configs usable via --arch but excluded from the
+# 40-cell dry-run matrix
+_EXTRA_MODULES = {"nano-100m": nano_100m}
+
+_MODULES = {
+    "internvl2-76b": internvl2_76b,
+    "recurrentgemma-9b": recurrentgemma_9b,
+    "llama4-scout-17b-a16e": llama4_scout_17b_a16e,
+    "granite-moe-3b-a800m": granite_moe_3b_a800m,
+    "hubert-xlarge": hubert_xlarge,
+    "gemma3-27b": gemma3_27b,
+    "stablelm-12b": stablelm_12b,
+    "chatglm3-6b": chatglm3_6b,
+    "deepseek-67b": deepseek_67b,
+    "xlstm-125m": xlstm_125m,
+}
+
+ARCHITECTURES = {name: mod.CONFIG for name, mod in _MODULES.items()}
+
+
+def get_config(arch_id: str, smoke: bool = False):
+    registry = {**_MODULES, **_EXTRA_MODULES}
+    if arch_id not in registry:
+        raise KeyError(f"unknown architecture {arch_id!r}; "
+                       f"available: {sorted(registry)}")
+    mod = registry[arch_id]
+    return mod.smoke() if smoke else mod.CONFIG
+
+
+__all__ = ["ARCHITECTURES", "get_config", "SHAPES", "ShapeSpec",
+           "all_cells", "cell_applicability"]

@@ -1,0 +1,39 @@
+"""chatglm3-6b — RoPE 2d, GQA kv=2 [arXiv:2406.12793; hf].
+
+ChatGLM's 2d RoPE is realized as partial rotary (rotary over half the head
+dims, the standard GLM practice) — ``rotary_fraction=0.5``.
+"""
+
+from repro.models.config import LayerSpec, ModelConfig, Stage
+
+ATTN = LayerSpec(kind="attn", window=None)
+
+CONFIG = ModelConfig(
+    name="chatglm3-6b",
+    family="dense",
+    num_layers=28,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=2,
+    d_ff=13696,
+    vocab_size=65024,
+    stages=(Stage(superblock=(ATTN,), repeat=28),),
+    rotary_fraction=0.5,
+    notes="kv=2 < 16-way model axis: KV projections replicated; "
+          "pure full attention: long_500k skipped",
+)
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="chatglm3-6b-smoke",
+        family="dense",
+        num_layers=4,
+        d_model=128,
+        num_heads=8,
+        num_kv_heads=2,
+        d_ff=256,
+        vocab_size=512,
+        stages=(Stage(superblock=(ATTN,), repeat=4),),
+        rotary_fraction=0.5,
+    )

@@ -1,0 +1,36 @@
+"""deepseek-67b — llama-arch dense, 95 layers [arXiv:2401.02954; hf].
+
+The deepest assigned model: the scan-over-layers stress test for dry-run
+compile size (one superblock traced, 95 repeats).
+"""
+
+from repro.models.config import LayerSpec, ModelConfig, Stage
+
+ATTN = LayerSpec(kind="attn", window=None)
+
+CONFIG = ModelConfig(
+    name="deepseek-67b",
+    family="dense",
+    num_layers=95,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=22016,
+    vocab_size=102400,
+    stages=(Stage(superblock=(ATTN,), repeat=95),),
+    notes="pure full attention: long_500k skipped",
+)
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-67b-smoke",
+        family="dense",
+        num_layers=5,
+        d_model=128,
+        num_heads=8,
+        num_kv_heads=2,
+        d_ff=256,
+        vocab_size=512,
+        stages=(Stage(superblock=(ATTN,), repeat=5),),
+    )

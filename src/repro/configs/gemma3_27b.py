@@ -1,0 +1,49 @@
+"""gemma3-27b — 5:1 local:global, 128k [hf:google/gemma-3-1b-pt; unverified].
+
+62 layers: 10 superblocks of (5 × local window-1024 + 1 global) + 2 trailing
+local layers.  head_dim fixed at 128 (q width ≠ d_model).  The 5:1 pattern
+makes the KV cache ~6x cheaper at 32k, but global layers are full attention
+over the whole context => treated as full-attention for long_500k (skipped;
+see DESIGN.md).
+"""
+
+from repro.models.config import LayerSpec, ModelConfig, Stage
+
+LOCAL = LayerSpec(kind="attn", window=1024)
+GLOBAL = LayerSpec(kind="attn", window=None)
+
+CONFIG = ModelConfig(
+    name="gemma3-27b",
+    family="dense",
+    num_layers=62,
+    d_model=5376,
+    num_heads=32,
+    num_kv_heads=16,
+    head_dim=128,
+    d_ff=21504,
+    vocab_size=262144,
+    stages=(
+        Stage(superblock=(LOCAL, LOCAL, LOCAL, LOCAL, LOCAL, GLOBAL), repeat=10),
+        Stage(superblock=(LOCAL, LOCAL), repeat=1),
+    ),
+    notes="global layers full-attention: long_500k skipped",
+)
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="gemma3-27b-smoke",
+        family="dense",
+        num_layers=8,
+        d_model=96,
+        num_heads=4,
+        num_kv_heads=2,
+        head_dim=32,
+        d_ff=192,
+        vocab_size=512,
+        stages=(
+            Stage(superblock=(LayerSpec(kind="attn", window=16),) * 5
+                  + (GLOBAL,), repeat=1),
+            Stage(superblock=(LayerSpec(kind="attn", window=16),) * 2, repeat=1),
+        ),
+    )

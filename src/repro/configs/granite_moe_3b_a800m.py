@@ -1,0 +1,42 @@
+"""granite-moe-3b-a800m — 40 experts top-8 [hf:ibm-granite/granite-3.0-1b-a400m-base; hf].
+
+Fine-grained MoE: tiny experts (d_ff 512), many of them (40), top-8 routing.
+"""
+
+from repro.models.config import LayerSpec, ModelConfig, Stage
+
+MOE = LayerSpec(kind="moe")
+
+CONFIG = ModelConfig(
+    name="granite-moe-3b-a800m",
+    family="moe",
+    num_layers=32,
+    d_model=1536,
+    num_heads=24,
+    num_kv_heads=8,
+    d_ff=512,
+    vocab_size=49155,
+    stages=(Stage(superblock=(MOE,), repeat=32),),
+    num_experts=40,
+    experts_per_token=8,
+    moe_d_ff=512,
+    notes="40 experts do not divide a 16-way model axis: experts replicated, "
+          "expert hidden dim TP-sharded instead (see sharding rules)",
+)
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="granite-moe-3b-a800m-smoke",
+        family="moe",
+        num_layers=3,
+        d_model=96,
+        num_heads=8,
+        num_kv_heads=4,
+        d_ff=64,
+        vocab_size=512,
+        stages=(Stage(superblock=(MOE,), repeat=3),),
+        num_experts=5,
+        experts_per_token=2,
+        moe_d_ff=64,
+    )

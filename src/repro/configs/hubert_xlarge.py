@@ -1,0 +1,45 @@
+"""hubert-xlarge — encoder-only, same arch as wav2vec2 [arXiv:2106.07447; unverified].
+
+Audio: bidirectional transformer encoder over precomputed conv frame features
+(frontend STUB provides (B, S, 512) frame embeddings).  vocab 504 = masked
+k-means-unit prediction head.  Encoder-only => no decode shapes.
+"""
+
+from repro.models.config import LayerSpec, ModelConfig, Stage
+
+ATTN = LayerSpec(kind="attn", window=None)
+
+CONFIG = ModelConfig(
+    name="hubert-xlarge",
+    family="audio",
+    num_layers=48,
+    d_model=1280,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=5120,
+    vocab_size=504,
+    stages=(Stage(superblock=(ATTN,), repeat=48),),
+    causal=False,
+    mlp_gated=False,
+    frontend="frame",
+    frontend_dim=512,
+    notes="encoder-only: decode_32k and long_500k skipped",
+)
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="hubert-xlarge-smoke",
+        family="audio",
+        num_layers=4,
+        d_model=96,
+        num_heads=4,
+        num_kv_heads=4,
+        d_ff=192,
+        vocab_size=64,
+        stages=(Stage(superblock=(ATTN,), repeat=4),),
+        causal=False,
+        mlp_gated=False,
+        frontend="frame",
+        frontend_dim=48,
+    )

@@ -1,0 +1,41 @@
+"""internvl2-76b — InternViT + InternLM2 [arXiv:2404.16821; unverified].
+
+VLM: the transformer BACKBONE (InternLM2, llama-arch decoder) only; the ViT
+frontend is a STUB — ``input_specs`` provides precomputed patch embeddings
+(frontend_dim 3200, InternViT-6B feature width) projected into d_model.
+"""
+
+from repro.models.config import LayerSpec, ModelConfig, Stage
+
+ATTN = LayerSpec(kind="attn", window=None)
+
+CONFIG = ModelConfig(
+    name="internvl2-76b",
+    family="vlm",
+    num_layers=80,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=28672,
+    vocab_size=128256,
+    stages=(Stage(superblock=(ATTN,), repeat=80),),
+    frontend="patch",
+    frontend_dim=3200,
+    notes="pure full attention: long_500k skipped",
+)
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="internvl2-76b-smoke",
+        family="vlm",
+        num_layers=4,
+        d_model=128,
+        num_heads=8,
+        num_kv_heads=2,
+        d_ff=256,
+        vocab_size=512,
+        stages=(Stage(superblock=(ATTN,), repeat=4),),
+        frontend="patch",
+        frontend_dim=96,
+    )

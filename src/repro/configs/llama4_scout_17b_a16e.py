@@ -1,0 +1,45 @@
+"""llama4-scout-17b-a16e — MoE, early fusion [hf:meta-llama/Llama-4-Scout-17B-16E; unverified].
+
+16 routed experts, top-1, plus an always-on shared expert (Llama-4 routing).
+~17B active parameters.  Text backbone only (early-fusion frontend not
+exercised by the LM shape set).
+"""
+
+from repro.models.config import LayerSpec, ModelConfig, Stage
+
+MOE = LayerSpec(kind="moe")
+
+CONFIG = ModelConfig(
+    name="llama4-scout-17b-a16e",
+    family="moe",
+    num_layers=48,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=8,
+    d_ff=8192,
+    vocab_size=202048,
+    stages=(Stage(superblock=(MOE,), repeat=48),),
+    num_experts=16,
+    experts_per_token=1,
+    moe_d_ff=8192,
+    shared_expert=True,
+    notes="EP: 16 experts shard exactly over a 16-way model axis",
+)
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="llama4-scout-17b-a16e-smoke",
+        family="moe",
+        num_layers=3,
+        d_model=96,
+        num_heads=8,
+        num_kv_heads=2,
+        d_ff=128,
+        vocab_size=512,
+        stages=(Stage(superblock=(MOE,), repeat=3),),
+        num_experts=4,
+        experts_per_token=1,
+        moe_d_ff=128,
+        shared_expert=True,
+    )

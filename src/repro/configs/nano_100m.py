@@ -1,0 +1,35 @@
+"""nano-100m — a ~100M-parameter dense decoder for the end-to-end CPU
+training example (not part of the assigned architecture pool).
+
+≈ 42M embedding/head + 78M block parameters ≈ 120M total.
+"""
+
+from repro.models.config import LayerSpec, ModelConfig, Stage
+
+ATTN = LayerSpec(kind="attn", window=None)
+
+CONFIG = ModelConfig(
+    name="nano-100m",
+    family="dense",
+    num_layers=12,
+    d_model=640,
+    num_heads=10,
+    num_kv_heads=2,
+    d_ff=2560,
+    vocab_size=32768,
+    stages=(Stage(superblock=(ATTN,), repeat=12),),
+)
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="nano-100m-smoke",
+        family="dense",
+        num_layers=2,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=2,
+        d_ff=128,
+        vocab_size=512,
+        stages=(Stage(superblock=(ATTN,), repeat=2),),
+    )

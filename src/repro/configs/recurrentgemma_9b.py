@@ -1,0 +1,50 @@
+"""recurrentgemma-9b — RG-LRU + local attention, 1:2 [arXiv:2402.19427; unverified].
+
+Griffin-style hybrid: pattern (recurrent, recurrent, local-attention) — one
+attention per two RG-LRU blocks; local attention window 2048.  Sub-quadratic
+sequence mixing => eligible for the long_500k shape.
+"""
+
+from repro.models.config import LayerSpec, ModelConfig, Stage
+
+REC = LayerSpec(kind="rglru")
+LOCAL = LayerSpec(kind="attn", window=2048)
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-9b",
+    family="hybrid",
+    num_layers=38,
+    d_model=4096,
+    num_heads=16,
+    num_kv_heads=1,
+    d_ff=12288,
+    vocab_size=256000,
+    stages=(
+        Stage(superblock=(REC, REC, LOCAL), repeat=12),
+        Stage(superblock=(REC, REC), repeat=1),
+    ),
+    lru_dim=4096,
+    conv_width=4,
+    sub_quadratic=True,
+    notes="kv=1: KV projections replicated across the model axis",
+)
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="recurrentgemma-9b-smoke",
+        family="hybrid",
+        num_layers=5,
+        d_model=96,
+        num_heads=4,
+        num_kv_heads=1,
+        d_ff=192,
+        vocab_size=512,
+        stages=(
+            Stage(superblock=(REC, REC, LayerSpec(kind="attn", window=16)), repeat=1),
+            Stage(superblock=(REC, REC), repeat=1),
+        ),
+        lru_dim=96,
+        conv_width=4,
+        sub_quadratic=True,
+    )

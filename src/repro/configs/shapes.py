@@ -1,0 +1,57 @@
+"""Assigned input shapes and (architecture × shape) cell applicability.
+
+All ten architectures share the LM shape set:
+
+  * train_4k    — seq 4,096,  global batch 256  (training step)
+  * prefill_32k — seq 32,768, global batch 32   (inference prefill)
+  * decode_32k  — seq 32,768, global batch 128  (one token, 32k KV cache)
+  * long_500k   — seq 524,288, global batch 1   (long-context decode)
+
+decode/long shapes lower ``serve_step`` (one new token over a KV cache of
+seq_len), not ``train_step``.  long_500k requires sub-quadratic sequence
+mixing; decode shapes require a decoder.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+from repro.models.config import ModelConfig
+
+__all__ = ["ShapeSpec", "SHAPES", "cell_applicability", "all_cells"]
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def cell_applicability(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[bool, str]:
+    """(runnable, reason-if-skipped)."""
+    if cfg.is_encoder_only and shape.kind == "decode":
+        return False, "encoder-only: no autoregressive decode step"
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "full-attention layers: 512k context needs sub-quadratic mixing"
+    return True, ""
+
+
+def all_cells(architectures: dict) -> list:
+    """[(arch_id, shape_name, runnable, reason)] for the full 40-cell table."""
+    out = []
+    for arch_id, cfg in architectures.items():
+        for shape_name, shape in SHAPES.items():
+            ok, reason = cell_applicability(cfg, shape)
+            out.append((arch_id, shape_name, ok, reason))
+    return out

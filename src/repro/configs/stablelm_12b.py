@@ -1,0 +1,32 @@
+"""stablelm-12b — dense GQA decoder [hf:stabilityai/stablelm-2-1_6b; hf]."""
+
+from repro.models.config import LayerSpec, ModelConfig, Stage
+
+ATTN = LayerSpec(kind="attn", window=None)
+
+CONFIG = ModelConfig(
+    name="stablelm-12b",
+    family="dense",
+    num_layers=40,
+    d_model=5120,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=13824,
+    vocab_size=100352,
+    stages=(Stage(superblock=(ATTN,), repeat=40),),
+    notes="pure full attention: long_500k skipped",
+)
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="stablelm-12b-smoke",
+        family="dense",
+        num_layers=4,
+        d_model=128,
+        num_heads=8,
+        num_kv_heads=2,
+        d_ff=256,
+        vocab_size=512,
+        stages=(Stage(superblock=(ATTN,), repeat=4),),
+    )

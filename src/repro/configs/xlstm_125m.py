@@ -1,0 +1,41 @@
+"""xlstm-125m — sLSTM + mLSTM blocks [arXiv:2405.04517; unverified].
+
+xLSTM[1:1]: alternating (mLSTM, sLSTM) superblocks, 12 layers, d_model 768,
+4 heads.  d_ff=0 in the assignment: blocks carry their own projections
+(mLSTM pf=2, sLSTM pf=4/3).  Pure recurrent state => long_500k eligible.
+"""
+
+from repro.models.config import LayerSpec, ModelConfig, Stage
+
+M = LayerSpec(kind="mlstm")
+S = LayerSpec(kind="slstm")
+
+CONFIG = ModelConfig(
+    name="xlstm-125m",
+    family="ssm",
+    num_layers=12,
+    d_model=768,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    stages=(Stage(superblock=(M, S), repeat=6),),
+    sub_quadratic=True,
+    notes="sLSTM has no parallel form (nonlinear recurrence): lowers as "
+          "lax.scan over time — see DESIGN.md hardware-adaptation notes",
+)
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="xlstm-125m-smoke",
+        family="ssm",
+        num_layers=4,
+        d_model=96,
+        num_heads=4,
+        num_kv_heads=4,
+        d_ff=0,
+        vocab_size=512,
+        stages=(Stage(superblock=(M, S), repeat=2),),
+        sub_quadratic=True,
+    )

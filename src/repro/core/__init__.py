@@ -1,0 +1,29 @@
+"""repro.core — the paper's contribution: Discovery Spaces with TRACE.
+
+``D = (P, Ω) ⊗ A`` — a probability space over configuration dimensions
+tensored with an action space of experiments, backed by a common-context
+sample store, searched by interchangeable optimizers, and transferable across
+related spaces via RSSC.
+"""
+
+from .actions import (ActionSpace, Experiment, FunctionExperiment,
+                      MeasurementError, SurrogateExperiment)
+from .clustering import (select_linspace, select_representatives, select_top_k,
+                         silhouette_clusters)
+from .discovery import DiscoverySpace
+from .entities import Configuration, Dimension, PropertyValue, Sample
+from .rssc import RSSCResult, rssc_transfer
+from .space import ProbabilitySpace
+from .store import RecordEntry, SampleStore
+from .transfer import (LinearSurrogate, PredictionQuality, TransferAssessment,
+                       TransferCriteria, assess_transfer, prediction_quality)
+
+__all__ = [
+    "ActionSpace", "Experiment", "FunctionExperiment", "MeasurementError",
+    "SurrogateExperiment", "DiscoverySpace", "Configuration", "Dimension",
+    "PropertyValue", "Sample", "ProbabilitySpace", "RecordEntry", "SampleStore",
+    "RSSCResult", "rssc_transfer", "LinearSurrogate", "PredictionQuality",
+    "TransferAssessment", "TransferCriteria", "assess_transfer",
+    "prediction_quality", "select_representatives", "select_top_k",
+    "select_linspace", "silhouette_clusters",
+]

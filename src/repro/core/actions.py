@@ -1,0 +1,213 @@
+"""Action space ``A`` — the methodology of a study (paper §III-B1).
+
+Each element of A is an :class:`Experiment` that can be applied to a
+configuration to obtain measured property values.  The Action space defines
+the measurable properties of interest *and their provenance*: every value in
+the store records which experiment produced it.
+
+Surrogate predictors (paper §IV-4) are experiments too: adding one to an
+action space produces a *new* Discovery Space (``A*_pred``), keeping
+predicted values distinguishable from measured ones by provenance.
+"""
+
+from __future__ import annotations
+
+import abc
+from dataclasses import dataclass, field
+from typing import Any, Callable, Mapping, Optional, Sequence
+
+from .entities import Configuration, content_hash
+
+__all__ = ["Experiment", "FunctionExperiment", "SurrogateExperiment", "ActionSpace"]
+
+
+class Experiment(abc.ABC):
+    """A measurement that maps a configuration to property values.
+
+    Identity is ``(name, version, parameterization)`` — hermetic and hashable
+    so stored provenance is meaningful across processes and machines.
+    """
+
+    name: str = "experiment"
+    version: str = "1"
+
+    @property
+    def parameterization(self) -> Mapping[str, Any]:
+        return {}
+
+    @property
+    def identifier(self) -> str:
+        h = content_hash({"p": dict(self.parameterization)})[:8]
+        return f"{self.name}-v{self.version}-{h}"
+
+    @property
+    def predicted(self) -> bool:
+        """True when this experiment is a surrogate model, not a measurement."""
+        return False
+
+    @property
+    def deferred(self) -> bool:
+        """True when sample() must NOT auto-run this experiment (§IV-4)."""
+        return False
+
+    @property
+    @abc.abstractmethod
+    def observed_properties(self) -> Sequence[str]:
+        """Names of the properties this experiment measures."""
+
+    @abc.abstractmethod
+    def measure(self, configuration: Configuration) -> Mapping[str, float]:
+        """Run the experiment; returns ``{property: value}``.
+
+        May raise :class:`MeasurementError` for non-deployable configurations;
+        the Discovery Space records these as failed samples (the paper's
+        "non-deployable points", excluded from CDFs).
+        """
+
+
+class MeasurementError(RuntimeError):
+    """A configuration could not be deployed / measured."""
+
+
+class DeferredExperiment(Experiment):
+    """A real experiment kept in an action space as apply-on-demand.
+
+    Used by ``A*_pred`` (paper §IV-4): the surrogate predictor provides cheap
+    values, while "the action space of A* can still be applied to points to
+    get the real values".  A deferred experiment keeps the *identity* of the
+    wrapped experiment — stored values reconcile normally — but
+    ``DiscoverySpace.sample`` will not execute it automatically; call
+    :meth:`measure` explicitly (or sample through the original space) to get
+    real values.
+    """
+
+    def __init__(self, wrapped: Experiment):
+        self.wrapped = wrapped
+
+    @property
+    def name(self) -> str:  # type: ignore[override]
+        return self.wrapped.name
+
+    @property
+    def version(self) -> str:  # type: ignore[override]
+        return self.wrapped.version
+
+    @property
+    def parameterization(self) -> Mapping[str, Any]:
+        return self.wrapped.parameterization
+
+    @property
+    def identifier(self) -> str:
+        return self.wrapped.identifier
+
+    @property
+    def predicted(self) -> bool:
+        return self.wrapped.predicted
+
+    @property
+    def deferred(self) -> bool:
+        return True
+
+    @property
+    def observed_properties(self) -> Sequence[str]:
+        return self.wrapped.observed_properties
+
+    def measure(self, configuration: Configuration) -> Mapping[str, float]:
+        return self.wrapped.measure(configuration)
+
+
+@dataclass
+class FunctionExperiment(Experiment):
+    """Wrap a plain callable as an experiment (tests, synthetic workloads)."""
+
+    fn: Callable[[Configuration], Mapping[str, float]]
+    properties: tuple = ()
+    name: str = "fn"
+    version: str = "1"
+    params: dict = field(default_factory=dict)
+
+    @property
+    def parameterization(self) -> Mapping[str, Any]:
+        return self.params
+
+    @property
+    def observed_properties(self) -> Sequence[str]:
+        return self.properties
+
+    def measure(self, configuration: Configuration) -> Mapping[str, float]:
+        out = self.fn(configuration)
+        missing = set(self.properties) - set(out)
+        if missing:
+            raise MeasurementError(f"experiment {self.name} missing properties {missing}")
+        return {k: float(v) for k, v in out.items() if k in self.properties}
+
+
+@dataclass
+class SurrogateExperiment(Experiment):
+    """A predictor experiment installed by knowledge transfer (paper §IV-4).
+
+    ``model`` maps a *source-space property value* to a predicted target value
+    (the linear surrogate fitted by RSSC), and ``source`` supplies the source
+    value for a configuration (typically a lookup into the source Discovery
+    Space through the configuration mapping).
+    """
+
+    source: Callable[[Configuration], float]
+    model: Callable[[float], float]
+    property_name: str = "metric"
+    name: str = "surrogate"
+    version: str = "1"
+    params: dict = field(default_factory=dict)
+
+    @property
+    def parameterization(self) -> Mapping[str, Any]:
+        return self.params
+
+    @property
+    def predicted(self) -> bool:
+        return True
+
+    @property
+    def observed_properties(self) -> Sequence[str]:
+        return (self.property_name,)
+
+    def measure(self, configuration: Configuration) -> Mapping[str, float]:
+        return {self.property_name: float(self.model(self.source(configuration)))}
+
+
+@dataclass(frozen=True)
+class ActionSpace:
+    """The methodology: an ordered set of experiments."""
+
+    experiments: tuple
+
+    @staticmethod
+    def make(exps: Sequence[Experiment]) -> "ActionSpace":
+        return ActionSpace(experiments=tuple(exps))
+
+    @property
+    def observed_properties(self) -> tuple:
+        out = []
+        for e in self.experiments:
+            for p in e.observed_properties:
+                if p not in out:
+                    out.append(p)
+        return tuple(out)
+
+    @property
+    def identifiers(self) -> tuple:
+        return tuple(e.identifier for e in self.experiments)
+
+    @property
+    def digest(self) -> str:
+        return content_hash(list(self.identifiers))
+
+    def extended(self, *exps: Experiment) -> "ActionSpace":
+        """A new action space with extra experiments (e.g. a surrogate)."""
+        return ActionSpace(experiments=self.experiments + tuple(exps))
+
+    def experiment_for(self, prop: str) -> Experiment:
+        for e in self.experiments:
+            if prop in e.observed_properties:
+                return e
+        raise KeyError(prop)

@@ -1,0 +1,130 @@
+"""Clustering for representative sub-space identification (paper §IV-2).
+
+The paper clusters source-space samples on the property values to be
+transferred and uses silhouette scoring to pick the number of clusters
+("silhouette clustering"); cluster representatives (the samples nearest each
+centroid) form the representative sub-space.  We implement k-means (numpy,
+k-means++ init) + mean-silhouette model selection, plus the two baseline
+point-selection methods the paper compares against: ``top5`` and
+``linspace`` (§V-B2).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+import numpy as np
+
+__all__ = ["kmeans", "silhouette_score", "silhouette_clusters", "select_representatives",
+           "select_top_k", "select_linspace"]
+
+
+def kmeans(X: np.ndarray, k: int, rng: np.random.Generator, n_iter: int = 100):
+    """Standard k-means with k-means++ seeding.  Returns (centroids, labels)."""
+    n = len(X)
+    k = min(k, n)
+    # k-means++ init
+    centroids = [X[int(rng.integers(n))]]
+    for _ in range(1, k):
+        d2 = np.min(((X[:, None, :] - np.array(centroids)[None]) ** 2).sum(-1), axis=1)
+        total = d2.sum()
+        if total <= 0:
+            centroids.append(X[int(rng.integers(n))])
+            continue
+        probs = d2 / total
+        centroids.append(X[int(rng.choice(n, p=probs))])
+    C = np.array(centroids)
+    labels = np.zeros(n, dtype=int)
+    for _ in range(n_iter):
+        d2 = ((X[:, None, :] - C[None]) ** 2).sum(-1)
+        new_labels = d2.argmin(axis=1)
+        if (new_labels == labels).all() and _ > 0:
+            break
+        labels = new_labels
+        for j in range(k):
+            m = labels == j
+            if m.any():
+                C[j] = X[m].mean(axis=0)
+    return C, labels
+
+
+def silhouette_score(X: np.ndarray, labels: np.ndarray) -> float:
+    """Mean silhouette coefficient (O(n²), fine for sample-store sizes)."""
+    n = len(X)
+    uniq = np.unique(labels)
+    if len(uniq) < 2 or n < 3:
+        return -1.0
+    D = np.sqrt(((X[:, None, :] - X[None]) ** 2).sum(-1))
+    s = np.zeros(n)
+    for i in range(n):
+        same = labels == labels[i]
+        n_same = same.sum()
+        a = D[i, same].sum() / max(n_same - 1, 1) if n_same > 1 else 0.0
+        b = np.inf
+        for c in uniq:
+            if c == labels[i]:
+                continue
+            m = labels == c
+            b = min(b, D[i, m].mean())
+        s[i] = 0.0 if max(a, b) == 0 else (b - a) / max(a, b)
+    return float(s.mean())
+
+
+def silhouette_clusters(X: np.ndarray, rng: np.random.Generator,
+                        k_min: int = 2, k_max: Optional[int] = None):
+    """Pick k by maximum mean silhouette; returns (k, centroids, labels)."""
+    n = len(X)
+    k_max = k_max if k_max is not None else max(k_min, min(12, n // 2))
+    best = None
+    for k in range(k_min, k_max + 1):
+        if k >= n:
+            break
+        C, labels = kmeans(X, k, rng)
+        score = silhouette_score(X, labels)
+        if best is None or score > best[0]:
+            best = (score, k, C, labels)
+    if best is None:  # degenerate: fewer than 3 points
+        C, labels = kmeans(X, min(n, k_min), rng)
+        return min(n, k_min), C, labels
+    return best[1], best[2], best[3]
+
+
+def select_representatives(values: np.ndarray, rng: np.random.Generator,
+                           k_min: int = 4, k_max: Optional[int] = None) -> list:
+    """Cluster samples on (normalized) property values; return the indices of
+    the sample nearest each centroid — the representative sub-space.
+
+    ``k_min`` defaults to 4: a linear-regression transfer criterion needs a
+    handful of points to be meaningful (the paper's clustering selected
+    4–33 points across its transfer tests, Table VI)."""
+    V = np.atleast_2d(np.asarray(values, dtype=float))
+    if V.shape[0] == 1 and V.size > 1:
+        V = V.T  # single property passed as flat vector
+    lo, hi = V.min(axis=0), V.max(axis=0)
+    Vn = (V - lo) / np.where(hi - lo > 0, hi - lo, 1.0)
+    k, C, labels = silhouette_clusters(Vn, rng, k_min=min(k_min, max(2, len(V) // 2)),
+                                       k_max=k_max)
+    reps = []
+    for j in range(k):
+        m = np.where(labels == j)[0]
+        if len(m) == 0:
+            continue
+        d2 = ((Vn[m] - C[j]) ** 2).sum(-1)
+        reps.append(int(m[d2.argmin()]))
+    return sorted(set(reps))
+
+
+def select_top_k(values: np.ndarray, k: int = 5, mode: str = "min") -> list:
+    """Baseline 'top5' of §V-B2: the k best-ranked points."""
+    v = np.asarray(values, dtype=float)
+    order = np.argsort(v if mode == "min" else -v)
+    return [int(i) for i in order[:k]]
+
+
+def select_linspace(values: np.ndarray, k: int) -> list:
+    """Baseline 'linspace' of §V-B2: k evenly spaced points over the ranking."""
+    v = np.asarray(values, dtype=float)
+    order = np.argsort(v)
+    idx = np.linspace(0, len(v) - 1, num=min(k, len(v)))
+    return sorted({int(order[int(round(i))]) for i in idx})

@@ -1,0 +1,219 @@
+"""The Discovery Space: ``D = (P, Ω) ⊗ A`` (paper §III-B, §III-C).
+
+The class below is the concrete data model of the paper's Fig. 3: it is
+composed of the configuration probability space, the Action space, and is
+backed by the common-context :class:`~repro.core.store.SampleStore` for the
+sample store + sampling records.
+
+TRACE characteristics, and where they live:
+
+* **Encapsulated** — :meth:`sample` validates configurations against Ω and
+  only runs/records experiments in A; :meth:`read` only returns values whose
+  provenance is in A.
+* **Actionable** — the space itself knows how to obtain measurements
+  (:meth:`sample` with no stored data runs the experiments) and what remains
+  to measure (:meth:`remaining_configurations`).
+* **Time-Resolved** — every sample event appends to the per-operation
+  sampling record with a sequence number and timestamp
+  (:meth:`timeseries`).
+* **Common Context** — all values go through the shared store in the generic
+  schema; nothing is kept privately on the object (operations are stateless).
+* **Reconcilable** — data written by *another* space for the same
+  configuration is invisible here until *this* space's :meth:`sample`
+  generates that configuration; at that point the stored values are reused
+  rather than re-measured (paper §III-C4, and §III-C5's
+  reuse-once-sampled default).
+"""
+
+from __future__ import annotations
+
+import uuid
+from typing import Iterator, Mapping, Optional, Sequence
+
+import numpy as np
+
+from .actions import ActionSpace, Experiment, MeasurementError, SurrogateExperiment
+from .entities import Configuration, PropertyValue, Sample, content_hash
+from .space import ProbabilitySpace
+from .store import RecordEntry, SampleStore
+
+__all__ = ["DiscoverySpace"]
+
+
+class DiscoverySpace:
+    """A configuration search study's data model: space ⊗ actions, stored."""
+
+    def __init__(
+        self,
+        space: ProbabilitySpace,
+        actions: ActionSpace,
+        store: Optional[SampleStore] = None,
+        space_id: Optional[str] = None,
+    ):
+        self.space = space
+        self.actions = actions
+        self.store = store if store is not None else SampleStore(":memory:")
+        # Identity: the space is defined by (Ω, A).  Two DiscoverySpace objects
+        # over the same store with the same (Ω, A) are views of the same study.
+        self.space_id = space_id or content_hash(
+            {"space": space.digest, "actions": actions.digest}
+        )
+        self.store.register_space(
+            self.space_id, space.to_json(), actions.identifiers
+        )
+
+    # ------------------------------------------------------------------ sample
+
+    def sample(
+        self,
+        configuration: Optional[Configuration] = None,
+        rng: Optional[np.random.Generator] = None,
+        operation_id: str = "adhoc",
+    ) -> Sample:
+        """Sample one point of D (paper Fig. 3 right-hand flow).
+
+        If ``configuration`` is None, draw from (P, Ω).  Then, for every
+        experiment in A: if the common context already holds that
+        experiment's values for this configuration, *reuse* them; otherwise
+        *measure* (execute the experiment) and store the results.  Either
+        way the event is appended to this space's sampling record — this is
+        the only way data becomes visible to :meth:`read`.
+        """
+        if configuration is None:
+            rng = rng if rng is not None else np.random.default_rng()
+            configuration = self.space.sample_configuration(rng)
+        # Encapsulated: reject configurations outside Ω.
+        self.space.validate(configuration)
+        digest = self.store.put_configuration(configuration)
+
+        measured_any = False
+        reused_any = False
+        predicted_any = False
+        try:
+            for exp in self.actions.experiments:
+                if self.store.has_values(digest, exp.identifier):
+                    reused_any = True
+                    continue
+                if exp.deferred:
+                    # apply-on-demand (A*_pred semantics, paper §IV-4)
+                    continue
+                values = exp.measure(configuration)
+                self.store.put_values(
+                    digest,
+                    [
+                        PropertyValue(
+                            name=k,
+                            value=float(v),
+                            experiment_id=exp.identifier,
+                            predicted=exp.predicted,
+                        )
+                        for k, v in values.items()
+                    ],
+                )
+                if exp.predicted:
+                    predicted_any = True
+                else:
+                    measured_any = True
+        except MeasurementError:
+            self.store.append_record(self.space_id, operation_id, digest, "failed")
+            raise
+
+        if measured_any:
+            action = "measured"
+        elif predicted_any and not reused_any:
+            action = "predicted"
+        else:
+            action = "reused"
+        self.store.append_record(self.space_id, operation_id, digest, action)
+        return self._reconstruct(digest, configuration)
+
+    # -------------------------------------------------------------------- read
+
+    def read(self) -> list:
+        """The reconciled sample set {x}: only configurations in *this*
+        space's sampling record, with values restricted to *this* action
+        space's experiments."""
+        out = []
+        for digest in self.store.sampled_digests(self.space_id):
+            config = self.store.get_configuration(digest)
+            if config is None:  # pragma: no cover - store corruption guard
+                continue
+            out.append(self._reconstruct(digest, config))
+        return out
+
+    def read_one(self, configuration: Configuration) -> Optional[Sample]:
+        digest = configuration.digest
+        if digest not in set(self.store.sampled_digests(self.space_id)):
+            return None
+        return self._reconstruct(digest, configuration)
+
+    def _reconstruct(self, digest: str, config: Configuration) -> Sample:
+        values = self.store.get_values(digest, self.actions.identifiers)
+        props = {}
+        for v in values:
+            # last write wins within an experiment; measured values win over
+            # predictions for the same property
+            if v.name in props and props[v.name].predicted is False and v.predicted:
+                continue
+            props[v.name] = v
+        return Sample(configuration=config, properties=props)
+
+    # ------------------------------------------------------------- time series
+
+    def timeseries(self, operation_id: Optional[str] = None) -> list:
+        """The time-resolved sampling record (TRACE: Time-Resolved)."""
+        return self.store.records_for(self.space_id, operation_id)
+
+    def begin_operation(self, kind: str, meta: Optional[Mapping] = None) -> str:
+        operation_id = f"{kind}-{uuid.uuid4().hex[:12]}"
+        self.store.register_operation(operation_id, self.space_id, kind, meta)
+        return operation_id
+
+    # -------------------------------------------------------------- actionable
+
+    def sampled_configurations(self) -> list:
+        return [self.store.get_configuration(d)
+                for d in self.store.sampled_digests(self.space_id)]
+
+    def remaining_configurations(self) -> Iterator[Configuration]:
+        """What has not been sampled yet, and (via A) how to measure it."""
+        seen = set(self.store.sampled_digests(self.space_id, include_failed=True))
+        for config in self.space.all_configurations():
+            if config.digest not in seen:
+                yield config
+
+    def count_sampled(self) -> int:
+        return len(self.store.sampled_digests(self.space_id))
+
+    # ------------------------------------------------------------ derived space
+
+    def with_predictor(self, surrogate: SurrogateExperiment) -> "DiscoverySpace":
+        """``A*_pred``: a *new* Discovery Space whose action space adds a
+        surrogate predictor (paper §IV-4).  Provenance is preserved — the
+        surrogate's values are marked ``predicted``, the original experiments
+        remain in the action space as *deferred* (apply-on-demand), and
+        measured values win over predictions on read."""
+        from .actions import DeferredExperiment  # local: avoid cycle at import
+
+        deferred = tuple(
+            e if e.deferred else DeferredExperiment(e) for e in self.actions.experiments
+        )
+        return DiscoverySpace(
+            space=self.space,
+            actions=ActionSpace(experiments=(surrogate,) + deferred),
+            store=self.store,
+        )
+
+    def related(self, mapping: Mapping[str, Mapping], actions: Optional[ActionSpace] = None,
+                ) -> "DiscoverySpace":
+        """Define a target space A* differing by a value mapping (paper §IV-1)."""
+        return DiscoverySpace(
+            space=self.space.map_values(mapping),
+            actions=actions if actions is not None else self.actions,
+            store=self.store,
+        )
+
+    def __repr__(self) -> str:  # pragma: no cover
+        size = self.space.size if self.space.finite else "inf"
+        return (f"DiscoverySpace(id={self.space_id[:8]}, |Ω|={size}, "
+                f"|A|={len(self.actions.experiments)}, sampled={self.count_sampled()})")

@@ -1,0 +1,258 @@
+"""Core entities of the Discovery Space data model.
+
+The paper (§III-B) defines a Discovery Space as ``D = (P, Ω) ⊗ A`` where
+``(P, Ω)`` is a probability space over configuration dimensions and ``A`` is
+an *Action space* of experiments.  The entities here are the vocabulary that
+definition is written in:
+
+* :class:`Dimension` — one axis of the sample space Ω (categorical, discrete
+  numeric, or continuous), optionally with a non-uniform prior (the measure P).
+* :class:`Configuration` — one element of Ω: an immutable, hash-identified
+  assignment of a value to every dimension.  The content hash is the identity
+  used by the common-context store, so the *same* configuration sampled by two
+  different studies reconciles to one row (paper Fig. 4).
+* :class:`PropertyValue` — a measured (or predicted) value for one property of
+  a configuration, carrying provenance: which experiment produced it and when.
+* :class:`Sample` — a configuration together with all property values known
+  for it under a given action space: one element of ``D``.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Any, Iterator, Mapping, Sequence
+
+__all__ = [
+    "Dimension",
+    "Configuration",
+    "PropertyValue",
+    "Sample",
+    "canonical_json",
+    "content_hash",
+]
+
+
+def canonical_json(obj: Any) -> str:
+    """Deterministic JSON encoding used for all content hashing."""
+    return json.dumps(obj, sort_keys=True, separators=(",", ":"), default=_json_default)
+
+
+def _json_default(obj: Any):
+    # numpy scalars and similar sneak in from optimizers; normalize them.
+    if hasattr(obj, "item"):
+        return obj.item()
+    raise TypeError(f"not JSON serializable: {type(obj)!r}")
+
+
+def content_hash(obj: Any) -> str:
+    return hashlib.sha256(canonical_json(obj).encode()).hexdigest()[:32]
+
+
+# ---------------------------------------------------------------------------
+# Dimensions (the axes of Ω, with optional prior P per-dimension)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Dimension:
+    """One dimension of a configuration sample space.
+
+    ``kind``:
+      * ``"categorical"`` — unordered finite set of values (strings or tuples).
+      * ``"discrete"``    — ordered finite set of numeric values.
+      * ``"continuous"``  — interval ``[low, high]``.
+
+    ``prior`` — optional per-value weights (finite kinds only); uniform when
+    omitted.  This is the per-dimension factor of the probability measure P.
+    """
+
+    name: str
+    kind: str
+    values: tuple = ()
+    low: float = 0.0
+    high: float = 1.0
+    prior: tuple = ()
+
+    def __post_init__(self):
+        if self.kind not in ("categorical", "discrete", "continuous"):
+            raise ValueError(f"unknown dimension kind {self.kind!r}")
+        if self.kind in ("categorical", "discrete"):
+            if not self.values:
+                raise ValueError(f"dimension {self.name!r}: finite kinds need values")
+            if self.prior and len(self.prior) != len(self.values):
+                raise ValueError(f"dimension {self.name!r}: prior/value length mismatch")
+            if self.kind == "discrete":
+                vals = list(self.values)
+                if any(not isinstance(v, (int, float)) for v in vals):
+                    raise ValueError(f"dimension {self.name!r}: discrete values must be numeric")
+                if vals != sorted(vals):
+                    raise ValueError(f"dimension {self.name!r}: discrete values must be sorted")
+        else:
+            if not (math.isfinite(self.low) and math.isfinite(self.high) and self.low < self.high):
+                raise ValueError(f"dimension {self.name!r}: bad interval [{self.low},{self.high}]")
+
+    # -- membership & cardinality ------------------------------------------
+
+    @property
+    def finite(self) -> bool:
+        return self.kind != "continuous"
+
+    @property
+    def cardinality(self) -> int:
+        if not self.finite:
+            raise ValueError(f"dimension {self.name!r} is continuous")
+        return len(self.values)
+
+    def contains(self, value: Any) -> bool:
+        if self.kind == "continuous":
+            return isinstance(value, (int, float)) and self.low <= value <= self.high
+        return value in self.values
+
+    # -- encoding for optimizers -------------------------------------------
+
+    def to_unit(self, value: Any) -> float:
+        """Map a value into [0, 1] (index-based for finite kinds)."""
+        if self.kind == "continuous":
+            return (float(value) - self.low) / (self.high - self.low)
+        idx = self.values.index(value)
+        if len(self.values) == 1:
+            return 0.0
+        return idx / (len(self.values) - 1)
+
+    def from_unit(self, u: float) -> Any:
+        u = min(1.0, max(0.0, float(u)))
+        if self.kind == "continuous":
+            return self.low + u * (self.high - self.low)
+        idx = int(round(u * (len(self.values) - 1)))
+        return self.values[idx]
+
+    # -- serialization ------------------------------------------------------
+
+    def to_json(self) -> dict:
+        return {
+            "name": self.name,
+            "kind": self.kind,
+            "values": list(self.values),
+            "low": self.low,
+            "high": self.high,
+            "prior": list(self.prior),
+        }
+
+    @staticmethod
+    def from_json(d: Mapping[str, Any]) -> "Dimension":
+        return Dimension(
+            name=d["name"],
+            kind=d["kind"],
+            values=tuple(tuple(v) if isinstance(v, list) else v for v in d.get("values", ())),
+            low=d.get("low", 0.0),
+            high=d.get("high", 1.0),
+            prior=tuple(d.get("prior", ())),
+        )
+
+    # convenience constructors
+    @staticmethod
+    def categorical(name: str, values: Sequence[Any], prior: Sequence[float] = ()) -> "Dimension":
+        return Dimension(name=name, kind="categorical", values=tuple(values), prior=tuple(prior))
+
+    @staticmethod
+    def discrete(name: str, values: Sequence[float], prior: Sequence[float] = ()) -> "Dimension":
+        return Dimension(name=name, kind="discrete", values=tuple(sorted(values)), prior=tuple(prior))
+
+    @staticmethod
+    def continuous(name: str, low: float, high: float) -> "Dimension":
+        return Dimension(name=name, kind="continuous", low=float(low), high=float(high))
+
+
+# ---------------------------------------------------------------------------
+# Configurations (elements of Ω)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Configuration:
+    """An immutable point in a configuration space.
+
+    Identity is the content hash of the sorted ``(name, value)`` mapping —
+    the common-context store keys on this, which is what makes transparent
+    sharing across studies possible.
+    """
+
+    values: tuple  # tuple of (name, value) pairs, sorted by name
+
+    @staticmethod
+    def make(mapping: Mapping[str, Any]) -> "Configuration":
+        items = tuple(sorted((str(k), _freeze(v)) for k, v in mapping.items()))
+        return Configuration(values=items)
+
+    def as_dict(self) -> dict:
+        return dict(self.values)
+
+    def __getitem__(self, key: str) -> Any:
+        for k, v in self.values:
+            if k == key:
+                return v
+        raise KeyError(key)
+
+    def get(self, key: str, default: Any = None) -> Any:
+        try:
+            return self[key]
+        except KeyError:
+            return default
+
+    @property
+    def digest(self) -> str:
+        return content_hash(self.values)
+
+    def replace(self, **updates: Any) -> "Configuration":
+        d = self.as_dict()
+        d.update(updates)
+        return Configuration.make(d)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        inner = ", ".join(f"{k}={v!r}" for k, v in self.values)
+        return f"Configuration({inner})"
+
+
+def _freeze(v: Any) -> Any:
+    if isinstance(v, list):
+        return tuple(_freeze(x) for x in v)
+    if hasattr(v, "item") and not isinstance(v, (int, float, str, bool, tuple)):
+        return v.item()
+    return v
+
+
+# ---------------------------------------------------------------------------
+# Property values & samples (elements of D)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class PropertyValue:
+    """A measured or predicted value with provenance."""
+
+    name: str
+    value: float
+    experiment_id: str
+    timestamp: float = field(default_factory=time.time)
+    predicted: bool = False
+
+
+@dataclass
+class Sample:
+    """One element of a Discovery Space: configuration ⊗ property values."""
+
+    configuration: Configuration
+    properties: dict  # name -> PropertyValue
+
+    def value(self, name: str) -> float:
+        return self.properties[name].value
+
+    def has(self, name: str) -> bool:
+        return name in self.properties
+
+    def items(self) -> Iterator:
+        return iter(self.properties.items())

@@ -1,0 +1,42 @@
+"""Optimizer suite driving Discovery Spaces (paper §III-D, §V-B1).
+
+The paper ran skopt-BO, Ax, and BOHB through a Ray-Tune compatibility
+wrapper.  Those libraries are not available offline, so this package
+implements the same three optimizer *families* from scratch on numpy/scipy —
+GP-based Bayesian optimization (≈ skopt), TPE (the model family Optuna/Ax
+style samplers draw from), and BOHB (TPE + successive halving) — plus the
+random-walk baseline whose behaviour is analytically the hypergeometric
+distribution (paper §V-B1).
+
+All optimizers interact with a study exclusively through
+:class:`~repro.core.optimizers.base.SearchAdapter` — the analogue of the
+paper's Ray Tune wrapper: they see ``suggest``/``observe`` over (Ω, P) and
+never touch experiments directly, which is what makes the framework
+workload-agnostic and lets multiple optimizers share one sample store.
+"""
+
+from .base import OptimizerRun, SearchAdapter, Trial, run_optimizer, hypergeom_p_found
+from .random_search import RandomSearch
+from .bo_gp import GPBayesOpt
+from .tpe import TPE
+from .bohb import BOHB
+
+OPTIMIZER_REGISTRY = {
+    "random": RandomSearch,
+    "bo-gp": GPBayesOpt,
+    "tpe": TPE,
+    "bohb": BOHB,
+}
+
+__all__ = [
+    "OptimizerRun",
+    "SearchAdapter",
+    "Trial",
+    "run_optimizer",
+    "hypergeom_p_found",
+    "RandomSearch",
+    "GPBayesOpt",
+    "TPE",
+    "BOHB",
+    "OPTIMIZER_REGISTRY",
+]

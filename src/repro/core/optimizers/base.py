@@ -1,0 +1,236 @@
+"""Optimizer base classes + the Discovery Space compatibility wrapper.
+
+Mirrors the paper's design (§III-D): optimization algorithms are decoupled
+from workload experiments — they only see the ``sample`` method of a
+Discovery Space through :class:`SearchAdapter`.  The adapter also implements
+the paper's stopping rule (§V-B1: stop when the incumbent has not improved
+for five consecutive trials) and reports, per trial, whether the sample was
+*measured* or transparently *reused* from the common context — the raw data
+behind the paper's Fig. 7 incremental-sampling evaluation.
+"""
+
+from __future__ import annotations
+
+import abc
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from ..actions import MeasurementError
+from ..discovery import DiscoverySpace
+from ..entities import Configuration
+
+__all__ = ["Trial", "OptimizerRun", "SearchAdapter", "Optimizer", "run_optimizer",
+           "hypergeom_p_found"]
+
+
+@dataclass
+class Trial:
+    configuration: Configuration
+    value: Optional[float]  # objective value (None => non-deployable)
+    action: str             # 'measured' | 'reused' | 'predicted' | 'failed'
+    seq: int
+
+
+@dataclass
+class OptimizerRun:
+    optimizer: str
+    metric: str
+    mode: str
+    trials: list = field(default_factory=list)
+    operation_id: str = ""
+
+    @property
+    def num_trials(self) -> int:
+        return len(self.trials)
+
+    @property
+    def num_measured(self) -> int:
+        return sum(1 for t in self.trials if t.action == "measured")
+
+    @property
+    def num_reused(self) -> int:
+        return sum(1 for t in self.trials if t.action in ("reused", "predicted"))
+
+    @property
+    def best(self) -> Optional[Trial]:
+        vals = [t for t in self.trials if t.value is not None]
+        if not vals:
+            return None
+        key = (lambda t: t.value) if self.mode == "min" else (lambda t: -t.value)
+        return min(vals, key=key)
+
+    @property
+    def normalized_cost(self) -> float:
+        """Paper §V-B1: new measurements / total samples."""
+        if not self.trials:
+            return 0.0
+        return self.num_measured / len(self.trials)
+
+    def best_value_by_step(self) -> list:
+        out, best = [], None
+        sign = 1.0 if self.mode == "min" else -1.0
+        for t in self.trials:
+            if t.value is not None:
+                v = sign * t.value
+                best = v if best is None else min(best, v)
+            out.append(None if best is None else sign * best)
+        return out
+
+
+class SearchAdapter:
+    """The 'Ray Tune wrapper' of §III-D: optimizer-facing view of a study.
+
+    Optimizers call :meth:`evaluate` with a configuration; the adapter routes
+    it through ``DiscoverySpace.sample`` (so all TRACE bookkeeping happens),
+    extracts the target metric, and translates minimize/maximize.
+    """
+
+    def __init__(self, ds: DiscoverySpace, metric: str, mode: str = "min",
+                 operation_id: Optional[str] = None, optimizer_name: str = "opt"):
+        if mode not in ("min", "max"):
+            raise ValueError(f"mode must be min|max, got {mode}")
+        self.ds = ds
+        self.metric = metric
+        self.mode = mode
+        self.operation_id = operation_id or ds.begin_operation(
+            "optimization", {"optimizer": optimizer_name, "metric": metric, "mode": mode}
+        )
+        self.trials: list = []
+
+    @property
+    def space(self):
+        return self.ds.space
+
+    def evaluate(self, configuration: Configuration) -> Optional[float]:
+        try:
+            sample = self.ds.sample(configuration, operation_id=self.operation_id)
+        except MeasurementError:
+            self.trials.append(Trial(configuration, None, "failed", len(self.trials)))
+            return None
+        record = self.ds.timeseries(self.operation_id)[-1]
+        if not sample.has(self.metric):
+            raise KeyError(
+                f"metric {self.metric!r} not among action-space properties "
+                f"{self.ds.actions.observed_properties}"
+            )
+        value = sample.value(self.metric)
+        self.trials.append(Trial(configuration, value, record.action, len(self.trials)))
+        return value
+
+    def seen_digests(self) -> set:
+        return {t.configuration.digest for t in self.trials}
+
+    def signed(self, value: float) -> float:
+        """Value in canonical minimization orientation."""
+        return value if self.mode == "min" else -value
+
+
+class Optimizer(abc.ABC):
+    """Suggest-only optimizer interface (observation happens via history)."""
+
+    name = "optimizer"
+
+    def __init__(self, seed: int = 0):
+        self.seed = seed
+
+    @abc.abstractmethod
+    def suggest(self, adapter: SearchAdapter, rng: np.random.Generator) -> Optional[Configuration]:
+        """Propose the next configuration (None => space exhausted)."""
+
+    # -- helpers shared by concrete optimizers ---------------------------------
+
+    @staticmethod
+    def _unseen_candidates(adapter: SearchAdapter, rng: np.random.Generator,
+                           max_candidates: int = 512) -> list:
+        """Candidate pool: unsampled configurations of a finite space (or
+        random draws for continuous spaces)."""
+        space = adapter.space
+        seen = adapter.seen_digests()
+        if space.finite and space.size <= 4096:
+            pool = [c for c in space.all_configurations() if c.digest not in seen]
+            if len(pool) > max_candidates:
+                idx = rng.choice(len(pool), size=max_candidates, replace=False)
+                pool = [pool[i] for i in idx]
+            return pool
+        out, tries = [], 0
+        while len(out) < max_candidates and tries < max_candidates * 4:
+            c = space.sample_configuration(rng)
+            if c.digest not in seen:
+                out.append(c)
+            tries += 1
+        return out
+
+    @staticmethod
+    def _history_arrays(adapter: SearchAdapter):
+        """(X, y) over successful trials, y in minimization orientation."""
+        ok = [t for t in adapter.trials if t.value is not None]
+        if not ok:
+            return np.zeros((0, len(adapter.space.dimensions))), np.zeros((0,))
+        X = np.stack([adapter.space.encode(t.configuration) for t in ok])
+        y = np.array([adapter.signed(t.value) for t in ok])
+        return X, y
+
+
+def run_optimizer(
+    optimizer: Optimizer,
+    ds: DiscoverySpace,
+    metric: str,
+    mode: str = "min",
+    max_trials: int = 200,
+    patience: int = 5,
+    rng: Optional[np.random.Generator] = None,
+    min_trials: int = 1,
+) -> OptimizerRun:
+    """Run one optimization operation on a Discovery Space.
+
+    Stopping rule follows the paper (§V-B1): halt when the incumbent best has
+    not improved for ``patience`` consecutive trials (or after ``max_trials``,
+    or when a finite space is exhausted).
+    """
+    rng = rng if rng is not None else np.random.default_rng(optimizer.seed)
+    adapter = SearchAdapter(ds, metric, mode, optimizer_name=optimizer.name)
+    best: Optional[float] = None
+    stall = 0
+    while len(adapter.trials) < max_trials:
+        config = optimizer.suggest(adapter, rng)
+        if config is None:
+            break
+        value = adapter.evaluate(config)
+        if value is not None:
+            sv = adapter.signed(value)
+            if best is None or sv < best - 1e-12:
+                best = sv
+                stall = 0
+            else:
+                stall += 1
+        else:
+            stall += 1
+        if len(adapter.trials) >= min_trials and stall >= patience:
+            break
+    return OptimizerRun(
+        optimizer=optimizer.name,
+        metric=metric,
+        mode=mode,
+        trials=adapter.trials,
+        operation_id=adapter.operation_id,
+    )
+
+
+def hypergeom_p_found(space_size: int, target_count: int, n_draws: int) -> float:
+    """P(≥1 target configuration after n draws without replacement).
+
+    The paper's random-walk baseline (§V-B1) 'analytically described by the
+    hypergeometric distribution':  1 - C(N-K, n) / C(N, n).
+    """
+    n_draws = min(n_draws, space_size)
+    log_p_none = 0.0
+    for i in range(n_draws):
+        good_left = space_size - target_count - i
+        total_left = space_size - i
+        if good_left <= 0:
+            return 1.0
+        log_p_none += math.log(good_left) - math.log(total_left)
+    return 1.0 - math.exp(log_p_none)

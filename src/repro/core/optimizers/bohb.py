@@ -1,0 +1,86 @@
+"""BOHB-lite: TPE model-based suggestion + successive-halving brackets
+(Falkner, Klein & Hutter 2018 — the third optimizer family in paper §V-B1).
+
+Multi-fidelity needs experiments that accept a budget.  In this framework a
+fidelity-aware experiment exposes the budget as an experiment *parameter* —
+so low-fidelity measurements are distinct provenance entries in the common
+context and never contaminate full-fidelity data (TRACE: Encapsulated).
+
+Used as a plain suggester (via :func:`run_optimizer`) BOHB degrades to TPE
+with a more exploratory prior, which matches how BOHB behaves when the
+budget dimension collapses.  :meth:`BOHB.run_brackets` provides the true
+multi-fidelity loop for objectives that support ``evaluate_at(config,
+budget)``.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Callable, Optional
+
+import numpy as np
+
+from ..entities import Configuration
+from .base import Optimizer, SearchAdapter
+from .tpe import TPE
+
+__all__ = ["BOHB"]
+
+
+class BOHB(TPE):
+    name = "bohb"
+
+    def __init__(self, seed: int = 0, n_initial: int = 4, gamma: float = 0.15,
+                 bandwidth: float = 0.18, eta: int = 3, min_budget: float = 1.0,
+                 max_budget: float = 9.0, random_fraction: float = 0.2):
+        super().__init__(seed=seed, n_initial=n_initial, gamma=gamma, bandwidth=bandwidth)
+        self.eta = eta
+        self.min_budget = min_budget
+        self.max_budget = max_budget
+        self.random_fraction = random_fraction
+
+    def suggest(self, adapter: SearchAdapter, rng: np.random.Generator) -> Optional[Configuration]:
+        # BOHB interleaves random configurations for theoretical guarantees.
+        if rng.uniform() < self.random_fraction:
+            candidates = self._unseen_candidates(adapter, rng)
+            if not candidates:
+                return None
+            return candidates[int(rng.integers(len(candidates)))]
+        return super().suggest(adapter, rng)
+
+    # -- true multi-fidelity loop ------------------------------------------------
+
+    def run_brackets(
+        self,
+        evaluate_at: Callable[[Configuration, float], Optional[float]],
+        suggest_pool: Callable[[int], list],
+        n_brackets: int = 2,
+        rng: Optional[np.random.Generator] = None,
+    ) -> list:
+        """Run successive-halving brackets.
+
+        ``evaluate_at(config, budget)`` returns the (minimization) objective at
+        a fidelity; ``suggest_pool(n)`` returns n candidate configurations.
+        Returns ``[(config, best_full_budget_value)]`` for surviving configs.
+        """
+        rng = rng if rng is not None else np.random.default_rng(self.seed)
+        s_max = int(math.floor(math.log(self.max_budget / self.min_budget, self.eta)))
+        results = []
+        for bracket in range(min(n_brackets, s_max + 1)):
+            s = s_max - bracket
+            n0 = int(math.ceil((s_max + 1) / (s + 1) * self.eta ** s))
+            b0 = self.max_budget * self.eta ** (-s)
+            configs = suggest_pool(n0)
+            for i in range(s + 1):
+                budget = b0 * self.eta ** i
+                scored = []
+                for c in configs:
+                    v = evaluate_at(c, budget)
+                    if v is not None:
+                        scored.append((c, v))
+                scored.sort(key=lambda cv: cv[1])
+                keep = max(1, int(len(scored) / self.eta))
+                configs = [c for c, _ in scored[:keep]]
+                if i == s:
+                    results.extend(scored[:keep])
+        return results

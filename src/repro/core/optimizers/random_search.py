@@ -1,0 +1,30 @@
+"""Random-walk baseline: uniform sampling without replacement (paper §V-B1)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from ..entities import Configuration
+from .base import Optimizer, SearchAdapter
+
+__all__ = ["RandomSearch"]
+
+
+class RandomSearch(Optimizer):
+    name = "random"
+
+    def suggest(self, adapter: SearchAdapter, rng: np.random.Generator) -> Optional[Configuration]:
+        space = adapter.space
+        seen = adapter.seen_digests()
+        if space.finite and space.size <= 65536:
+            pool = [c for c in space.all_configurations() if c.digest not in seen]
+            if not pool:
+                return None
+            return pool[int(rng.integers(len(pool)))]
+        for _ in range(1024):
+            c = space.sample_configuration(rng)
+            if c.digest not in seen:
+                return c
+        return None

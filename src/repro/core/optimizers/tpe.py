@@ -1,0 +1,88 @@
+"""Tree-structured Parzen estimator (Bergstra et al. 2011).
+
+The SMBO family behind Optuna's default sampler and BOHB's model.  Splits the
+observation history at the γ-quantile into good/bad sets, builds per-dimension
+Parzen densities l(x) and g(x) for each, and proposes the candidate that
+maximizes l(x)/g(x).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from ..entities import Configuration
+from .base import Optimizer, SearchAdapter
+
+__all__ = ["TPE", "tpe_score"]
+
+
+def _parzen_logpdf_numeric(u_obs: np.ndarray, u_cand: np.ndarray, bw: float) -> np.ndarray:
+    """Log density of a 1-d Parzen (Gaussian KDE) mixture incl. a uniform prior
+    component, evaluated at candidate coordinates (all in [0,1])."""
+    # components: uniform prior + one gaussian per observation
+    n = len(u_obs)
+    dens = np.full(u_cand.shape, 1.0)  # uniform prior on [0,1]
+    if n:
+        d = (u_cand[:, None] - u_obs[None, :]) / bw
+        k = np.exp(-0.5 * d * d) / (bw * np.sqrt(2 * np.pi))
+        dens = (dens + k.sum(axis=1)) / (n + 1)
+    return np.log(np.clip(dens, 1e-12, None))
+
+
+def _parzen_logpmf_categorical(idx_obs: np.ndarray, idx_cand: np.ndarray, k: int) -> np.ndarray:
+    """Smoothed categorical pmf (add-one) evaluated at candidate indices."""
+    counts = np.ones(k)
+    for i in idx_obs:
+        counts[int(i)] += 1.0
+    pmf = counts / counts.sum()
+    return np.log(pmf[idx_cand])
+
+
+def tpe_score(space, good_configs, bad_configs, candidates, bw: float = 0.12) -> np.ndarray:
+    """log l(x) - log g(x) per candidate."""
+    score = np.zeros(len(candidates))
+    for d_i, dim in enumerate(space.dimensions):
+        cand_vals = [c[dim.name] for c in candidates]
+        if dim.kind == "categorical":
+            k = dim.cardinality
+            gi = np.array([dim.values.index(c[dim.name]) for c in good_configs])
+            bi = np.array([dim.values.index(c[dim.name]) for c in bad_configs])
+            ci = np.array([dim.values.index(v) for v in cand_vals])
+            score += _parzen_logpmf_categorical(gi, ci, k)
+            score -= _parzen_logpmf_categorical(bi, ci, k)
+        else:
+            gu = np.array([dim.to_unit(c[dim.name]) for c in good_configs])
+            bu = np.array([dim.to_unit(c[dim.name]) for c in bad_configs])
+            cu = np.array([dim.to_unit(v) for v in cand_vals])
+            score += _parzen_logpdf_numeric(gu, cu, bw)
+            score -= _parzen_logpdf_numeric(bu, cu, bw)
+    return score
+
+
+class TPE(Optimizer):
+    name = "tpe"
+
+    def __init__(self, seed: int = 0, n_initial: int = 4, gamma: float = 0.25,
+                 bandwidth: float = 0.12):
+        super().__init__(seed)
+        self.n_initial = n_initial
+        self.gamma = gamma
+        self.bandwidth = bandwidth
+
+    def suggest(self, adapter: SearchAdapter, rng: np.random.Generator) -> Optional[Configuration]:
+        candidates = self._unseen_candidates(adapter, rng)
+        if not candidates:
+            return None
+        ok = [t for t in adapter.trials if t.value is not None]
+        if len(ok) < self.n_initial:
+            return candidates[int(rng.integers(len(candidates)))]
+
+        values = np.array([adapter.signed(t.value) for t in ok])
+        order = np.argsort(values)
+        n_good = max(1, int(np.ceil(self.gamma * len(ok))))
+        good = [ok[i].configuration for i in order[:n_good]]
+        bad = [ok[i].configuration for i in order[n_good:]] or good
+        score = tpe_score(adapter.space, good, bad, candidates, self.bandwidth)
+        return candidates[int(np.argmax(score))]

@@ -1,0 +1,179 @@
+"""Representative sub-space comparison — RSSC (paper §IV, Fig. 5).
+
+Pipeline:
+  ① source space A (well-sampled) and target space A* (unsampled) are defined,
+    related by a per-dimension value mapping;
+  ② cluster A's samples on the properties to transfer (silhouette k-means) and
+    take cluster representatives → the representative sub-space {e}_a;
+  ③ translate {e}_a through the mapping → {e}_a*;
+  ④ *measure* {e}_a* in A* (real experiments — the only sampling cost);
+  ⑤ apply the transfer criteria (linear fit, r > 0.7, p < 0.01);
+  ⑥/⑦ if met, install the fitted line as a surrogate predictor experiment,
+    producing a new Discovery Space A*_pred (provenance preserved);
+  ⑧ sweep the surrogate over the remaining points of A*_pred.
+"""
+
+from __future__ import annotations
+
+import uuid
+from dataclasses import dataclass, field
+from typing import Mapping, Optional, Sequence
+
+import numpy as np
+
+from .actions import ActionSpace, MeasurementError, SurrogateExperiment
+from .clustering import select_linspace, select_representatives, select_top_k
+from .discovery import DiscoverySpace
+from .entities import Configuration, Sample
+from .transfer import (TransferAssessment, TransferCriteria, assess_transfer)
+
+__all__ = ["RSSCResult", "rssc_transfer"]
+
+
+@dataclass
+class RSSCResult:
+    property_name: str
+    selection: str
+    representatives: list            # source configurations
+    translated: list                 # target configurations
+    source_values: np.ndarray
+    target_values: np.ndarray
+    assessment: TransferAssessment
+    predicted_space: Optional[DiscoverySpace]  # A*_pred (None if not transferable)
+    n_target_measured: int = 0
+
+    @property
+    def transferable(self) -> bool:
+        return self.assessment.transferable
+
+    def summary(self) -> dict:
+        out = {"property": self.property_name, "method": self.selection,
+               "points_selected": len(self.representatives)}
+        out.update(self.assessment.summary())
+        return out
+
+
+def _invert_mapping(mapping: Mapping[str, Mapping]) -> dict:
+    inv: dict = {}
+    for dim, m in mapping.items():
+        inv[dim] = {v: k for k, v in m.items()}
+    return inv
+
+
+def rssc_transfer(
+    source: DiscoverySpace,
+    target: DiscoverySpace,
+    property_name: str,
+    mapping: Optional[Mapping[str, Mapping]] = None,
+    selection: str = "clustering",
+    criteria: TransferCriteria = TransferCriteria(),
+    rng: Optional[np.random.Generator] = None,
+    top_k: int = 5,
+    predict_remaining: bool = True,
+) -> RSSCResult:
+    """Run the full RSSC procedure from source to target Discovery Space.
+
+    ``selection`` ∈ {"clustering", "top5", "linspace"} — the paper's method
+    and its two baselines (§V-B2).
+    """
+    rng = rng if rng is not None else np.random.default_rng(0)
+    mapping = dict(mapping or {})
+    inverse = _invert_mapping(mapping)
+
+    # ② representative sub-space of A
+    samples = [s for s in source.read() if s.has(property_name)]
+    if len(samples) < 3:
+        raise ValueError(f"source space has only {len(samples)} samples with "
+                         f"{property_name!r}; RSSC needs a well-sampled source")
+    values = np.array([s.value(property_name) for s in samples])
+    if selection == "clustering":
+        idx = select_representatives(values, rng)
+    elif selection == "top5":
+        idx = select_top_k(values, k=top_k)
+    elif selection == "linspace":
+        k = len(select_representatives(values, rng))  # match clustering count
+        idx = select_linspace(values, k)
+    else:
+        raise ValueError(f"unknown selection method {selection!r}")
+    reps = [samples[i].configuration for i in idx]
+    source_values = values[np.array(idx)]
+
+    # ③ translate to A*
+    translated = [source.space.translate(c, mapping) for c in reps]
+
+    # ④ measure the representative sub-space in A*
+    op = target.begin_operation("rssc", {"property": property_name,
+                                         "selection": selection})
+    target_values = []
+    kept_src, kept_tgt, kept_src_vals = [], [], []
+    n_measured = 0
+    for src_c, tgt_c, sv in zip(reps, translated, source_values):
+        try:
+            s = target.sample(tgt_c, operation_id=op)
+        except MeasurementError:
+            continue
+        record = target.timeseries(op)[-1]
+        if record.action == "measured":
+            n_measured += 1
+        target_values.append(s.value(property_name))
+        kept_src.append(src_c)
+        kept_tgt.append(tgt_c)
+        kept_src_vals.append(sv)
+    target_values = np.array(target_values)
+    source_values = np.array(kept_src_vals)
+
+    # ⑤ transfer criteria
+    assessment = assess_transfer(source_values, target_values, criteria)
+
+    predicted_space = None
+    if assessment.transferable:
+        # ⑥/⑦ the surrogate experiment: source-value lookup ∘ fitted line.
+        src_lookup = _make_source_lookup(source, property_name, inverse)
+        surrogate = SurrogateExperiment(
+            source=src_lookup,
+            model=assessment.surrogate,
+            property_name=property_name,
+            name=f"rssc-{property_name}",
+            version="1",
+            params={"slope": assessment.surrogate.slope,
+                    "intercept": assessment.surrogate.intercept,
+                    "source_space": source.space_id,
+                    "fit_id": uuid.uuid4().hex[:8]},
+        )
+        predicted_space = target.with_predictor(surrogate)
+        if predict_remaining and target.space.finite:
+            # ⑧ sweep predictions over all not-yet-sampled points
+            pred_op = predicted_space.begin_operation("rssc-predict")
+            for config in list(predicted_space.remaining_configurations()):
+                try:
+                    predicted_space.sample(config, operation_id=pred_op)
+                except MeasurementError:
+                    continue
+
+    return RSSCResult(
+        property_name=property_name,
+        selection=selection,
+        representatives=kept_src,
+        translated=kept_tgt,
+        source_values=source_values,
+        target_values=target_values,
+        assessment=assessment,
+        predicted_space=predicted_space,
+        n_target_measured=n_measured,
+    )
+
+
+def _make_source_lookup(source: DiscoverySpace, property_name: str,
+                        inverse_mapping: Mapping[str, Mapping]):
+    """Map a target configuration to its source-space property value."""
+
+    def lookup(target_config: Configuration) -> float:
+        src_config = source.space.translate(target_config, inverse_mapping)
+        sample = source.read_one(src_config)
+        if sample is None or not sample.has(property_name):
+            raise MeasurementError(
+                f"no source value of {property_name!r} for {src_config!r}"
+            )
+        return sample.value(property_name)
+
+    return lookup

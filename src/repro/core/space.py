@@ -1,0 +1,156 @@
+"""Probability space ``(P, Ω)`` over configuration dimensions (paper §III-B1).
+
+Ω is the cartesian product of the dimensions' value sets; P is the product of
+per-dimension priors (uniform by default).  The event space F is the
+elementary event set (single configurations) and is omitted, as in the paper.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+from typing import Any, Iterator, Mapping, Optional, Sequence
+
+import numpy as np
+
+from .entities import Configuration, Dimension, content_hash
+
+__all__ = ["ProbabilitySpace"]
+
+
+@dataclass(frozen=True)
+class ProbabilitySpace:
+    """The scope + selection criteria of a configuration search study."""
+
+    dimensions: tuple
+
+    def __post_init__(self):
+        names = [d.name for d in self.dimensions]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate dimension names: {names}")
+
+    @staticmethod
+    def make(dims: Sequence[Dimension]) -> "ProbabilitySpace":
+        return ProbabilitySpace(dimensions=tuple(dims))
+
+    # -- structure -----------------------------------------------------------
+
+    @property
+    def names(self) -> tuple:
+        return tuple(d.name for d in self.dimensions)
+
+    def dimension(self, name: str) -> Dimension:
+        for d in self.dimensions:
+            if d.name == name:
+                return d
+        raise KeyError(name)
+
+    @property
+    def finite(self) -> bool:
+        return all(d.finite for d in self.dimensions)
+
+    @property
+    def size(self) -> int:
+        """|Ω| for finite spaces."""
+        if not self.finite:
+            raise ValueError("space has continuous dimensions")
+        n = 1
+        for d in self.dimensions:
+            n *= d.cardinality
+        return n
+
+    @property
+    def digest(self) -> str:
+        return content_hash([d.to_json() for d in self.dimensions])
+
+    # -- membership (the Encapsulated characteristic needs this) -------------
+
+    def contains(self, config: Configuration) -> bool:
+        d = config.as_dict()
+        if set(d) != set(self.names):
+            return False
+        return all(self.dimension(k).contains(v) for k, v in d.items())
+
+    def validate(self, config: Configuration) -> None:
+        if not self.contains(config):
+            raise ValueError(
+                f"configuration {config!r} is not an element of this space "
+                f"(dimensions: {self.names})"
+            )
+
+    # -- enumeration & sampling ----------------------------------------------
+
+    def all_configurations(self) -> Iterator[Configuration]:
+        if not self.finite:
+            raise ValueError("cannot enumerate a continuous space")
+        value_sets = [d.values for d in self.dimensions]
+        for combo in itertools.product(*value_sets):
+            yield Configuration.make(dict(zip(self.names, combo)))
+
+    def sample_configuration(self, rng: np.random.Generator) -> Configuration:
+        """Draw one configuration according to P (per-dimension priors)."""
+        values = {}
+        for d in self.dimensions:
+            if d.kind == "continuous":
+                values[d.name] = float(rng.uniform(d.low, d.high))
+            else:
+                p = None
+                if d.prior:
+                    p = np.asarray(d.prior, dtype=float)
+                    p = p / p.sum()
+                idx = rng.choice(len(d.values), p=p)
+                values[d.name] = d.values[int(idx)]
+        return Configuration.make(values)
+
+    # -- vector encoding for optimizers ---------------------------------------
+
+    def encode(self, config: Configuration) -> np.ndarray:
+        """Configuration -> unit-cube vector (one coordinate per dimension)."""
+        return np.array([d.to_unit(config[d.name]) for d in self.dimensions])
+
+    def decode(self, vec: np.ndarray) -> Configuration:
+        values = {d.name: d.from_unit(u) for d, u in zip(self.dimensions, vec)}
+        return Configuration.make(values)
+
+    # -- derived spaces --------------------------------------------------------
+
+    def map_values(self, mapping: Mapping[str, Mapping[Any, Any]]) -> "ProbabilitySpace":
+        """Build a related space by substituting values on named dimensions.
+
+        This is the paper's §IV-1 configuration-parameter mapping: e.g.
+        ``{"gpu_model": {"A100-PCIE": "A100-SXM4"}}`` builds the target space
+        A* from A.  Dimensions not named are copied unchanged.
+        """
+        new_dims = []
+        for d in self.dimensions:
+            if d.name in mapping and d.finite:
+                m = mapping[d.name]
+                new_vals = tuple(m.get(v, v) for v in d.values)
+                new_dims.append(
+                    Dimension(name=d.name, kind=d.kind, values=new_vals, prior=d.prior,
+                              low=d.low, high=d.high)
+                )
+            else:
+                new_dims.append(d)
+        return ProbabilitySpace(dimensions=tuple(new_dims))
+
+    def translate(self, config: Configuration,
+                  mapping: Mapping[str, Mapping[Any, Any]]) -> Configuration:
+        """Translate a configuration of this space through a value mapping."""
+        d = config.as_dict()
+        out = {}
+        for k, v in d.items():
+            m = mapping.get(k, {})
+            out[k] = m.get(v, v)
+        return Configuration.make(out)
+
+    # -- serialization ---------------------------------------------------------
+
+    def to_json(self) -> dict:
+        return {"dimensions": [d.to_json() for d in self.dimensions]}
+
+    @staticmethod
+    def from_json(d: Mapping[str, Any]) -> "ProbabilitySpace":
+        return ProbabilitySpace(
+            dimensions=tuple(Dimension.from_json(x) for x in d["dimensions"])
+        )

@@ -1,0 +1,278 @@
+"""The common context: a shared, schema'd sample store (paper §III-C3).
+
+One SQLite database holds *all* sample information for *all* Discovery
+Spaces, in one generic schema that mirrors the mathematical structure of a
+Discovery Space:
+
+* ``configurations`` — elements of Ω, keyed by content hash (identity is the
+  configuration's value assignment, NOT which study created it — this is what
+  lets two studies reconcile to the same row, Fig. 4).
+* ``property_values`` — measured/predicted values with experiment provenance.
+* ``spaces`` — registered Discovery Space definitions.
+* ``operations`` — named operations (optimizer runs etc.) on a space.
+* ``records`` — the time-resolved sampling record: one row per sample event
+  per space, with a per-operation sequence number, an action tag
+  (``measured`` / ``reused`` / ``predicted`` / ``failed``) and a timestamp.
+
+WAL mode makes the store safe for concurrent access by multiple processes —
+the "distributed shared sample store" of paper §III-D (the paper used a SQL
+database; so do we).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sqlite3
+import threading
+import time
+from dataclasses import dataclass
+from typing import Any, Iterable, Mapping, Optional, Sequence
+
+from .entities import Configuration, PropertyValue, canonical_json
+
+__all__ = ["SampleStore", "RecordEntry"]
+
+_SCHEMA = """
+CREATE TABLE IF NOT EXISTS configurations (
+    digest     TEXT PRIMARY KEY,
+    config     TEXT NOT NULL,
+    created_at REAL NOT NULL
+);
+CREATE TABLE IF NOT EXISTS property_values (
+    id            INTEGER PRIMARY KEY AUTOINCREMENT,
+    config_digest TEXT NOT NULL,
+    property      TEXT NOT NULL,
+    value         REAL NOT NULL,
+    experiment_id TEXT NOT NULL,
+    predicted     INTEGER NOT NULL DEFAULT 0,
+    created_at    REAL NOT NULL
+);
+CREATE INDEX IF NOT EXISTS pv_config ON property_values(config_digest, experiment_id);
+CREATE TABLE IF NOT EXISTS spaces (
+    space_id   TEXT PRIMARY KEY,
+    space_json TEXT NOT NULL,
+    actions    TEXT NOT NULL,
+    created_at REAL NOT NULL
+);
+CREATE TABLE IF NOT EXISTS operations (
+    operation_id TEXT PRIMARY KEY,
+    space_id     TEXT NOT NULL,
+    kind         TEXT NOT NULL,
+    meta         TEXT NOT NULL DEFAULT '{}',
+    created_at   REAL NOT NULL
+);
+CREATE TABLE IF NOT EXISTS records (
+    id            INTEGER PRIMARY KEY AUTOINCREMENT,
+    space_id      TEXT NOT NULL,
+    operation_id  TEXT NOT NULL,
+    seq           INTEGER NOT NULL,
+    config_digest TEXT NOT NULL,
+    action        TEXT NOT NULL,
+    created_at    REAL NOT NULL
+);
+CREATE INDEX IF NOT EXISTS rec_space ON records(space_id, operation_id, seq);
+"""
+
+
+@dataclass(frozen=True)
+class RecordEntry:
+    """One entry of a space's time-resolved sampling record."""
+
+    space_id: str
+    operation_id: str
+    seq: int
+    config_digest: str
+    action: str
+    created_at: float
+
+
+class SampleStore:
+    """SQLite-backed common context.  Thread-safe; multi-process safe (WAL)."""
+
+    def __init__(self, path: str = ":memory:"):
+        self.path = path
+        self._local = threading.local()
+        self._memory_conn: Optional[sqlite3.Connection] = None
+        if path != ":memory:":
+            d = os.path.dirname(os.path.abspath(path))
+            os.makedirs(d, exist_ok=True)
+        conn = self._connect()
+        with conn:
+            conn.executescript(_SCHEMA)
+
+    # -- connection management ------------------------------------------------
+
+    def _connect(self) -> sqlite3.Connection:
+        if self.path == ":memory:":
+            # a single shared connection (threads serialize on a lock)
+            if self._memory_conn is None:
+                self._memory_conn = sqlite3.connect(
+                    ":memory:", check_same_thread=False, isolation_level=None
+                )
+                self._memory_lock = threading.Lock()
+            return self._memory_conn
+        conn = getattr(self._local, "conn", None)
+        if conn is None:
+            conn = sqlite3.connect(self.path, timeout=60.0, isolation_level=None)
+            conn.execute("PRAGMA journal_mode=WAL")
+            conn.execute("PRAGMA synchronous=NORMAL")
+            self._local.conn = conn
+        return conn
+
+    def _execute(self, sql: str, params: Sequence = ()) -> sqlite3.Cursor:
+        conn = self._connect()
+        if self.path == ":memory:":
+            with self._memory_lock:
+                return conn.execute(sql, params)
+        return conn.execute(sql, params)
+
+    # -- spaces & operations ----------------------------------------------------
+
+    def register_space(self, space_id: str, space_json: Mapping, action_ids: Sequence[str]) -> None:
+        self._execute(
+            "INSERT OR IGNORE INTO spaces(space_id, space_json, actions, created_at)"
+            " VALUES (?,?,?,?)",
+            (space_id, canonical_json(space_json), canonical_json(list(action_ids)), time.time()),
+        )
+
+    def register_operation(self, operation_id: str, space_id: str, kind: str,
+                           meta: Optional[Mapping] = None) -> None:
+        self._execute(
+            "INSERT OR IGNORE INTO operations(operation_id, space_id, kind, meta, created_at)"
+            " VALUES (?,?,?,?,?)",
+            (operation_id, space_id, kind, canonical_json(meta or {}), time.time()),
+        )
+
+    def operations_for(self, space_id: str) -> list:
+        cur = self._execute(
+            "SELECT operation_id, kind, meta, created_at FROM operations"
+            " WHERE space_id=? ORDER BY created_at",
+            (space_id,),
+        )
+        return [
+            {"operation_id": r[0], "kind": r[1], "meta": json.loads(r[2]), "created_at": r[3]}
+            for r in cur.fetchall()
+        ]
+
+    # -- configurations -----------------------------------------------------------
+
+    def put_configuration(self, config: Configuration) -> str:
+        digest = config.digest
+        self._execute(
+            "INSERT OR IGNORE INTO configurations(digest, config, created_at) VALUES (?,?,?)",
+            (digest, canonical_json(config.values), time.time()),
+        )
+        return digest
+
+    def get_configuration(self, digest: str) -> Optional[Configuration]:
+        cur = self._execute("SELECT config FROM configurations WHERE digest=?", (digest,))
+        row = cur.fetchone()
+        if row is None:
+            return None
+        pairs = json.loads(row[0])
+        return Configuration(values=tuple((k, _thaw(v)) for k, v in pairs))
+
+    # -- property values (measurement results) --------------------------------------
+
+    def put_values(self, config_digest: str, values: Iterable[PropertyValue]) -> None:
+        for v in values:
+            self._execute(
+                "INSERT INTO property_values"
+                " (config_digest, property, value, experiment_id, predicted, created_at)"
+                " VALUES (?,?,?,?,?,?)",
+                (config_digest, v.name, float(v.value), v.experiment_id,
+                 1 if v.predicted else 0, v.timestamp),
+            )
+
+    def get_values(self, config_digest: str,
+                   experiment_ids: Optional[Sequence[str]] = None) -> list:
+        sql = ("SELECT property, value, experiment_id, predicted, created_at"
+               " FROM property_values WHERE config_digest=?")
+        params: list = [config_digest]
+        if experiment_ids is not None:
+            marks = ",".join("?" * len(experiment_ids))
+            sql += f" AND experiment_id IN ({marks})"
+            params.extend(experiment_ids)
+        sql += " ORDER BY id"
+        cur = self._execute(sql, params)
+        return [
+            PropertyValue(name=r[0], value=r[1], experiment_id=r[2],
+                          predicted=bool(r[3]), timestamp=r[4])
+            for r in cur.fetchall()
+        ]
+
+    def has_values(self, config_digest: str, experiment_id: str) -> bool:
+        cur = self._execute(
+            "SELECT 1 FROM property_values WHERE config_digest=? AND experiment_id=? LIMIT 1",
+            (config_digest, experiment_id),
+        )
+        return cur.fetchone() is not None
+
+    # -- the time-resolved sampling record --------------------------------------------
+
+    def next_seq(self, space_id: str, operation_id: str) -> int:
+        cur = self._execute(
+            "SELECT COALESCE(MAX(seq), -1) + 1 FROM records WHERE space_id=? AND operation_id=?",
+            (space_id, operation_id),
+        )
+        return int(cur.fetchone()[0])
+
+    def append_record(self, space_id: str, operation_id: str, config_digest: str,
+                      action: str) -> RecordEntry:
+        seq = self.next_seq(space_id, operation_id)
+        now = time.time()
+        self._execute(
+            "INSERT INTO records(space_id, operation_id, seq, config_digest, action, created_at)"
+            " VALUES (?,?,?,?,?,?)",
+            (space_id, operation_id, seq, config_digest, action, now),
+        )
+        return RecordEntry(space_id, operation_id, seq, config_digest, action, now)
+
+    def records_for(self, space_id: str, operation_id: Optional[str] = None) -> list:
+        sql = ("SELECT space_id, operation_id, seq, config_digest, action, created_at"
+               " FROM records WHERE space_id=?")
+        params: list = [space_id]
+        if operation_id is not None:
+            sql += " AND operation_id=?"
+            params.append(operation_id)
+        sql += " ORDER BY id"
+        cur = self._execute(sql, params)
+        return [RecordEntry(*r) for r in cur.fetchall()]
+
+    def sampled_digests(self, space_id: str, include_failed: bool = False) -> list:
+        """Distinct configuration digests in this space's sampling record."""
+        sql = "SELECT DISTINCT config_digest FROM records WHERE space_id=?"
+        if not include_failed:
+            sql += " AND action != 'failed'"
+        cur = self._execute(sql, (space_id,))
+        return [r[0] for r in cur.fetchall()]
+
+    # -- statistics --------------------------------------------------------------------
+
+    def count_measured(self, space_id: Optional[str] = None) -> int:
+        if space_id is None:
+            cur = self._execute("SELECT COUNT(*) FROM records WHERE action='measured'")
+        else:
+            cur = self._execute(
+                "SELECT COUNT(*) FROM records WHERE action='measured' AND space_id=?",
+                (space_id,),
+            )
+        return int(cur.fetchone()[0])
+
+    def close(self) -> None:
+        if self.path == ":memory:":
+            if self._memory_conn is not None:
+                self._memory_conn.close()
+                self._memory_conn = None
+        else:
+            conn = getattr(self._local, "conn", None)
+            if conn is not None:
+                conn.close()
+                self._local.conn = None
+
+
+def _thaw(v: Any) -> Any:
+    if isinstance(v, list):
+        return tuple(_thaw(x) for x in v)
+    return v

@@ -1,0 +1,140 @@
+"""Transfer criteria and surrogate models for RSSC (paper §IV-3, §IV-4).
+
+The criteria: a linear regression between the source and target values of the
+representative sub-space must have correlation ``r > 0.7`` and slope p-value
+``< 0.01`` (null: slope == 0).  When met, the fitted line becomes the
+surrogate model installed in the target's action space.
+
+Also implements the paper's prediction-quality metrics (§V-B2): best%, top5%,
+and rank resolution.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+import numpy as np
+from scipy import stats
+
+__all__ = ["TransferCriteria", "TransferAssessment", "LinearSurrogate",
+           "assess_transfer", "prediction_quality", "PredictionQuality"]
+
+
+@dataclass(frozen=True)
+class TransferCriteria:
+    min_r: float = 0.7
+    max_p: float = 0.01
+
+
+@dataclass
+class LinearSurrogate:
+    slope: float
+    intercept: float
+
+    def __call__(self, source_value: float) -> float:
+        return self.slope * float(source_value) + self.intercept
+
+    def batch(self, source_values: np.ndarray) -> np.ndarray:
+        return self.slope * np.asarray(source_values, dtype=float) + self.intercept
+
+
+@dataclass
+class TransferAssessment:
+    r: float
+    p_value: float
+    transferable: bool
+    surrogate: Optional[LinearSurrogate]
+    n_points: int
+
+    def summary(self) -> dict:
+        return {
+            "r": round(self.r, 4),
+            "p_value": float(f"{self.p_value:.3g}"),
+            "transfer": self.transferable,
+            "n_points": self.n_points,
+        }
+
+
+def assess_transfer(source_values: Sequence[float], target_values: Sequence[float],
+                    criteria: TransferCriteria = TransferCriteria()) -> TransferAssessment:
+    """Apply the paper's go/no-go transfer criteria to paired representative
+    sub-space measurements."""
+    x = np.asarray(source_values, dtype=float)
+    y = np.asarray(target_values, dtype=float)
+    if len(x) != len(y) or len(x) < 3:
+        return TransferAssessment(0.0, 1.0, False, None, len(x))
+    if np.allclose(x, x[0]) or np.allclose(y, y[0]):
+        return TransferAssessment(0.0, 1.0, False, None, len(x))
+    fit = stats.linregress(x, y)
+    # |r| — the paper transfers on strong linear relationships; a strong
+    # negative correlation is equally informative for ranking, and the slope
+    # sign is carried by the surrogate.
+    transferable = abs(fit.rvalue) > criteria.min_r and fit.pvalue < criteria.max_p
+    surrogate = LinearSurrogate(float(fit.slope), float(fit.intercept)) if transferable else None
+    return TransferAssessment(
+        r=float(fit.rvalue), p_value=float(fit.pvalue),
+        transferable=bool(transferable), surrogate=surrogate, n_points=len(x),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Prediction-quality metrics (paper §V-B2)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class PredictionQuality:
+    best_pct: float        # performance percentile of predicted-best config
+    top5_pct: float        # fraction of actual top-5 in predicted top-5
+    rank_resolution: float # avg |error| expressed in rank distance
+    savings_pct: float     # time saved vs brute force = 1 - measured/total
+
+    def summary(self) -> dict:
+        return {
+            "best%": round(100 * self.best_pct, 1),
+            "top5%": round(100 * self.top5_pct, 1),
+            "rank_resolution": round(self.rank_resolution, 1),
+            "%savings": round(100 * self.savings_pct, 1),
+        }
+
+
+def prediction_quality(predicted: np.ndarray, actual: np.ndarray,
+                       n_measured: int, mode: str = "min") -> PredictionQuality:
+    """Score a surrogate's predictions against exhaustive ground truth.
+
+    * best%  — CDF percentile (w.r.t. actual values) of the configuration the
+      predictor ranks best.  100% == the predictor's top pick is the true best.
+    * top5%  — overlap of predicted and actual top-5 sets.
+    * rank resolution — X such that the mean absolute prediction error equals
+      the mean actual-value gap between configurations X ranks apart.
+    * savings — 1 - n_measured / n_total (the brute-force baseline measures
+      everything).
+    """
+    predicted = np.asarray(predicted, dtype=float)
+    actual = np.asarray(actual, dtype=float)
+    n = len(actual)
+    sign = 1.0 if mode == "min" else -1.0
+    pa, aa = sign * predicted, sign * actual
+
+    # best%: percentile of predicted-best in the actual CDF (higher = better)
+    i_pred_best = int(np.argmin(pa))
+    best_pct = float((aa > aa[i_pred_best]).sum() / max(n - 1, 1))
+
+    # top5 overlap
+    k = min(5, n)
+    top_pred = set(np.argsort(pa)[:k].tolist())
+    top_true = set(np.argsort(aa)[:k].tolist())
+    top5_pct = len(top_pred & top_true) / k
+
+    # rank resolution: mean |err| / mean adjacent-rank gap
+    err = np.abs(predicted - actual).mean()
+    sorted_actual = np.sort(actual)
+    gaps = np.diff(sorted_actual)
+    mean_gap = gaps.mean() if len(gaps) else 0.0
+    rank_res = float(err / mean_gap) if mean_gap > 0 else float(n)
+    rank_res = min(rank_res, float(n))
+
+    savings = 1.0 - n_measured / max(n, 1)
+    return PredictionQuality(best_pct=best_pct, top5_pct=top5_pct,
+                             rank_resolution=max(rank_res, 1.0), savings_pct=savings)

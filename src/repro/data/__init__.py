@@ -1,0 +1,5 @@
+"""Data pipeline: deterministic synthetic token streams, sharded + prefetched."""
+
+from .pipeline import DataConfig, TokenPipeline
+
+__all__ = ["DataConfig", "TokenPipeline"]

@@ -1,0 +1,131 @@
+"""Deterministic, restartable, sharded synthetic-token data pipeline.
+
+Design requirements it satisfies (matching what a production loader needs):
+
+* **Deterministic & seekable** — batch ``i`` is a pure function of
+  ``(seed, i)``; restoring a checkpoint at step N resumes the exact stream
+  by setting the cursor (no stateful iterators to persist).
+* **Sharded** — each host materializes only its slice of the global batch
+  (``host_slice``); under pjit the global batch is assembled from per-host
+  shards via ``jax.make_array_from_process_local_data`` on multi-host, or
+  device_put with the batch sharding on single-host.
+* **Prefetch** — a background thread keeps ``prefetch`` batches ready.
+* **Straggler mitigation** — ``skip_to`` lets the fault-tolerance layer skip
+  a slow/poisoned shard window deterministically (all hosts agree on the
+  skip by construction because the stream is stateless).
+
+The synthetic distribution is a Zipf-like unigram mix with a Markov overlay
+— enough structure that a ~100M model's loss visibly decreases within a few
+hundred steps (used by ``examples/train_lm.py``).
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass
+from typing import Iterator, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["DataConfig", "TokenPipeline"]
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    zipf_a: float = 1.2
+    markov_strength: float = 0.7
+    prefetch: int = 2
+
+
+class TokenPipeline:
+    def __init__(self, cfg: DataConfig, host_index: int = 0, host_count: int = 1):
+        self.cfg = cfg
+        if cfg.global_batch % host_count:
+            raise ValueError("global batch must divide host count")
+        self.host_index = host_index
+        self.host_count = host_count
+        self.local_batch = cfg.global_batch // host_count
+        self._cursor = 0
+        self._queue: "queue.Queue" = queue.Queue(maxsize=max(cfg.prefetch, 1))
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+        # fixed unigram distribution + permutation for the Markov overlay
+        base = np.random.default_rng(cfg.seed)
+        ranks = np.arange(1, cfg.vocab_size + 1, dtype=np.float64)
+        self._unigram = ranks ** (-cfg.zipf_a)
+        self._unigram /= self._unigram.sum()
+        self._perm = base.permutation(cfg.vocab_size)
+
+    # -- deterministic batch construction -------------------------------------
+
+    def batch_at(self, index: int) -> dict:
+        """The global batch at cursor ``index`` (host's slice only)."""
+        cfg = self.cfg
+        rng = np.random.default_rng(
+            np.random.SeedSequence([cfg.seed, index, self.host_index]))
+        B, S = self.local_batch, cfg.seq_len
+        draws = rng.choice(cfg.vocab_size, size=(B, S + 1), p=self._unigram)
+        # Markov overlay: with probability markov_strength, token t+1 is a
+        # fixed function (permutation) of the REALIZED token t — a proper
+        # chain, so next-token prediction has learnable structure.
+        follow = rng.uniform(size=(B, S)) < cfg.markov_strength
+        seq = np.empty_like(draws)
+        seq[:, 0] = draws[:, 0]
+        for t in range(1, S + 1):
+            seq[:, t] = np.where(follow[:, t - 1],
+                                 self._perm[seq[:, t - 1]], draws[:, t])
+        return {
+            "tokens": seq[:, :-1].astype(np.int32),
+            "labels": seq[:, 1:].astype(np.int32),
+        }
+
+    # -- iteration with prefetch ------------------------------------------------
+
+    def start(self, cursor: int = 0) -> None:
+        self.stop()
+        self._cursor = cursor
+        self._stop.clear()
+
+        def worker():
+            i = cursor
+            while not self._stop.is_set():
+                batch = self.batch_at(i)
+                while not self._stop.is_set():
+                    try:
+                        self._queue.put((i, batch), timeout=0.2)
+                        break
+                    except queue.Full:
+                        continue
+                i += 1
+
+        self._thread = threading.Thread(target=worker, daemon=True)
+        self._thread.start()
+
+    def stop(self) -> None:
+        if self._thread is not None:
+            self._stop.set()
+            self._thread.join(timeout=2.0)
+            self._thread = None
+            while not self._queue.empty():
+                self._queue.get_nowait()
+
+    def __next__(self) -> Tuple[int, dict]:
+        if self._thread is None:
+            batch = self.batch_at(self._cursor)
+            idx = self._cursor
+            self._cursor += 1
+            return idx, batch
+        return self._queue.get()
+
+    def __iter__(self) -> Iterator:
+        return self
+
+    def skip_to(self, cursor: int) -> None:
+        """Straggler/poison mitigation: jump the stream (deterministic on all
+        hosts)."""
+        self.start(cursor)

@@ -1,0 +1,7 @@
+"""Distributed runtime: sharding rules, compressed collectives, pipelining."""
+
+from .sharding import (DeploymentConfig, batch_specs, cache_specs,
+                       default_deployment, param_specs)
+
+__all__ = ["DeploymentConfig", "batch_specs", "cache_specs",
+           "default_deployment", "param_specs"]

@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for substrate hot-spots, with jit'd dispatch wrappers
+(`ops.py`) and pure-jnp oracles (`ref.py`).
+
+Kernels:
+  * flash_attention — blocked online-softmax GQA attention (causal/window)
+  * rglru_scan      — blocked diagonal linear recurrence with fused gates
+  * gmm             — static-capacity grouped matmul (MoE expert compute)
+
+The paper itself has no kernel-level contribution (it is a data-model /
+infrastructure abstraction); these kernels are the perf-critical compute
+layers of the *workloads* the Discovery Space machinery configures.
+"""
+
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

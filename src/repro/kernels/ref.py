@@ -1,0 +1,145 @@
+"""Pure-jnp reference oracles for every kernel in this package.
+
+These are the ground truth that both the XLA-path implementations and the
+Pallas TPU kernels are tested against (``tests/test_kernels.py`` sweeps
+shapes/dtypes and asserts allclose).  They materialize full intermediates and
+are only meant for small problem sizes.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref", "decode_attention_ref", "rglru_ref", "gmm_ref"]
+
+NEG_INF = -1e30
+
+
+def attention_mask(q_pos: jax.Array, k_pos: jax.Array, causal: bool,
+                   window: Optional[int]) -> jax.Array:
+    """(Sq, Sk) boolean mask of allowed attention pairs."""
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), dtype=bool)
+    if causal:
+        m &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        m &= (q_pos[:, None] - k_pos[None, :]) < window
+        if not causal:  # symmetric local window for encoders
+            m &= (k_pos[None, :] - q_pos[:, None]) < window
+    return m
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: Optional[int] = None,
+                  q_offset: int = 0, scale: Optional[float] = None) -> jax.Array:
+    """Full-materialization GQA attention.
+
+    q: (B, Sq, H, D); k, v: (B, Sk, Hkv, D); H % Hkv == 0.
+    ``q_offset``: absolute position of q[0] (Sk - Sq for a suffix query).
+    Returns (B, Sq, H, D) in q.dtype; softmax in fp32.
+    """
+    B, Sq, H, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    G = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    scale = scale if scale is not None else D ** -0.5
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(Sq) + q_offset
+    k_pos = jnp.arange(Sk)
+    mask = attention_mask(q_pos, k_pos, causal, window)
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def decode_attention_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, *,
+                         index, window: Optional[int] = None,
+                         ring: bool = False,
+                         scale: Optional[float] = None) -> jax.Array:
+    """One-token attention over a KV cache.
+
+    q: (B, 1, H, D); caches: (B, C, Hkv, D).  ``index`` is the absolute
+    position of the query token (traced scalar ok).  Valid cache entries are
+    those with absolute position in [index - window + 1, index] (or [0,
+    index] without a window).  ``ring=True`` means the cache is a ring buffer
+    of capacity C holding positions index-C+1..index at slots pos % C.
+    """
+    B, _, H, D = q.shape
+    _, C, Hkv, _ = k_cache.shape
+    G = H // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    qg = q.reshape(B, Hkv, G, D) if Hkv * G == H else None
+    qg = q[:, 0].reshape(B, Hkv, G, D)
+    scores = jnp.einsum("bhgd,bkhd->bhgk", qg.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) * scale
+    slot = jnp.arange(C)
+    if ring:
+        # slot s holds absolute position p with p % C == s, p in (index-C, index]
+        pos = index - ((index - slot) % C)
+        valid = pos >= 0
+    else:
+        pos = slot
+        valid = pos <= index
+    if window is not None:
+        valid &= (index - pos) < window
+    scores = jnp.where(valid[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+def rglru_ref(x: jax.Array, log_a: jax.Array, gate_a: jax.Array,
+              gate_x: jax.Array, h0: Optional[jax.Array] = None,
+              c: float = 8.0):
+    """RG-LRU reference (RecurrentGemma / Griffin eq. 3-4), sequential scan.
+
+    x, gate_a, gate_x: (B, S, D); log_a: (D,) — the Λ parameter.
+    a_t = exp(-c · softplus(Λ) · σ(gate_a_t));
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (σ(gate_x_t) ⊙ x_t)
+    Returns (h: (B, S, D), h_last: (B, D)); fp32 recurrence.
+    """
+    B, S, D = x.shape
+    xf = x.astype(jnp.float32)
+    log_a = log_a.astype(jnp.float32)
+    a_exponent = -c * jax.nn.softplus(log_a)[None, None, :] * \
+        jax.nn.sigmoid(gate_a.astype(jnp.float32))
+    a = jnp.exp(a_exponent)                       # (B, S, D)
+    gated_x = jax.nn.sigmoid(gate_x.astype(jnp.float32)) * xf
+    beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    bx = beta * gated_x
+
+    h = h0.astype(jnp.float32) if h0 is not None else jnp.zeros((B, D), jnp.float32)
+
+    def step(h, inputs):
+        a_t, bx_t = inputs
+        h = a_t * h + bx_t
+        return h, h
+
+    h_last, hs = jax.lax.scan(step, h, (a.swapaxes(0, 1), bx.swapaxes(0, 1)))
+    return hs.swapaxes(0, 1).astype(x.dtype), h_last
+
+
+def gmm_ref(x: jax.Array, w: jax.Array, group_sizes: jax.Array) -> jax.Array:
+    """Grouped matmul reference: rows of ``x`` are grouped contiguously by
+    expert; row i uses ``w[g(i)]`` where g(i) is its group.
+
+    x: (T, d); w: (E, d, f); group_sizes: (E,) ints summing to <= T (rows
+    beyond the sum produce zeros).  Returns (T, f).
+    """
+    T = x.shape[0]
+    E = w.shape[0]
+    ends = jnp.cumsum(group_sizes)
+    starts = ends - group_sizes
+    row = jnp.arange(T)
+    # group id per row (E is small: one-hot interval membership)
+    in_group = (row[:, None] >= starts[None, :]) & (row[:, None] < ends[None, :])
+    gid = jnp.argmax(in_group, axis=1)
+    valid = in_group.any(axis=1)
+    w_per_row = w[gid]                                   # (T, d, f)
+    out = jnp.einsum("td,tdf->tf", x.astype(jnp.float32),
+                     w_per_row.astype(jnp.float32))
+    return jnp.where(valid[:, None], out, 0.0).astype(x.dtype)

@@ -1,0 +1,247 @@
+"""Banded, chunked flash attention on the XLA path (pure JAX, lax.scan).
+
+This is the memory-bounded attention used by default on every backend: an
+online-softmax sweep over (q-chunk, kv-chunk) *pairs*, where the pair list is
+computed statically and fully-masked pairs are skipped — so causal attention
+costs ~half the FLOPs of the naive path and sliding-window attention costs
+O(S·W) instead of O(S²).  A custom VJP implements the flash-style backward
+(recompute P per pair from saved LSE), so residual memory is O(S) not O(S²).
+
+The Pallas TPU kernel (`flash_attention.py`) implements the same schedule
+with explicit VMEM BlockSpecs; this module is its semantics twin on XLA and
+the production fallback, and both are tested against `ref.attention_ref`.
+
+Chunk sizes are deployment-configuration dimensions (searchable via the
+Discovery Space machinery).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .ref import NEG_INF
+
+__all__ = ["attention_banded", "band_pairs"]
+
+
+def band_pairs(nq: int, nk: int, q_chunk: int, kv_chunk: int, causal: bool,
+               window: Optional[int], q_offset: int, skip: bool = True,
+               kv_len: Optional[int] = None):
+    """Static list of (qi, ki, is_first, is_last) covering all non-fully-masked
+    chunk pairs, grouped by qi in ascending ki order.  ``kv_len``: number of
+    valid (unpadded) keys."""
+    pairs = []
+    for qi in range(nq):
+        q_lo = qi * q_chunk + q_offset
+        q_hi = q_lo + q_chunk - 1
+        cols = []
+        for ki in range(nk):
+            k_lo = ki * kv_chunk
+            k_hi = k_lo + kv_chunk - 1
+            if skip:
+                if kv_len is not None and k_lo >= kv_len:
+                    continue  # entirely padding
+                if causal and k_lo > q_hi:
+                    continue  # entirely in the future
+                if window is not None and k_hi < q_lo - window + 1:
+                    continue  # entirely beyond the lookback window
+                if window is not None and not causal and k_lo > q_hi + window - 1:
+                    continue  # symmetric window (encoder)
+            cols.append(ki)
+        if not cols:
+            cols = [min(nk - 1, max(0, (q_lo // kv_chunk)))]
+        for j, ki in enumerate(cols):
+            pairs.append((qi, ki, j == 0, j == len(cols) - 1))
+    return pairs
+
+
+def _mask_for(q_pos, k_pos, causal: bool, window: Optional[int],
+              kv_len: Optional[int] = None):
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), dtype=bool)
+    if kv_len is not None:
+        m &= k_pos[None, :] < kv_len
+    if causal:
+        m &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        m &= (q_pos[:, None] - k_pos[None, :]) < window
+        if not causal:
+            m &= (k_pos[None, :] - q_pos[:, None]) < window
+    return m
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9)
+)
+def attention_banded(q: jax.Array, k: jax.Array, v: jax.Array,
+                     causal: bool = True, window: Optional[int] = None,
+                     q_offset: int = 0, q_chunk: int = 512,
+                     kv_chunk: int = 512, skip: bool = True,
+                     kv_len: Optional[int] = None) -> jax.Array:
+    """GQA attention, chunked + banded.  q: (B,Sq,H,D); k/v: (B,Sk,Hkv,D).
+    ``kv_len``: number of valid keys (rest is padding)."""
+    out, _ = _banded_fwd_impl(q, k, v, causal, window, q_offset, q_chunk,
+                              kv_chunk, skip, kv_len)
+    return out
+
+
+def _chunks(x, n, c):
+    B, S, H, D = x.shape
+    return x.reshape(B, n, c, H, D)
+
+
+def _banded_fwd_impl(q, k, v, causal, window, q_offset, q_chunk, kv_chunk, skip, kv_len=None):
+    B, Sq, H, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    G = H // Hkv
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Sk)
+    if Sq % q_chunk or Sk % kv_chunk:
+        raise ValueError(f"seq lens ({Sq},{Sk}) must divide chunks "
+                         f"({q_chunk},{kv_chunk})")
+    nq, nk = Sq // q_chunk, Sk // kv_chunk
+    scale = D ** -0.5
+
+    pairs = band_pairs(nq, nk, q_chunk, kv_chunk, causal, window, q_offset,
+                       skip, kv_len)
+    qi_a = jnp.array([p[0] for p in pairs], jnp.int32)
+    ki_a = jnp.array([p[1] for p in pairs], jnp.int32)
+    first_a = jnp.array([p[2] for p in pairs], bool)
+    last_a = jnp.array([p[3] for p in pairs], bool)
+
+    qc_all = _chunks(q, nq, q_chunk).reshape(B, nq, q_chunk, Hkv, G, D)
+    kc_all = _chunks(k, nk, kv_chunk)
+    vc_all = _chunks(v, nk, kv_chunk)
+
+    def body(carry, xs):
+        m, l, acc, O, LSE = carry
+        qi, ki, first, last = xs
+        # reset accumulators at the first pair of each q chunk
+        m = jnp.where(first, jnp.full_like(m, NEG_INF), m)
+        l = jnp.where(first, jnp.zeros_like(l), l)
+        acc = jnp.where(first, jnp.zeros_like(acc), acc)
+
+        qc = jax.lax.dynamic_index_in_dim(qc_all, qi, 1, keepdims=False)
+        kc = jax.lax.dynamic_index_in_dim(kc_all, ki, 1, keepdims=False)
+        vc = jax.lax.dynamic_index_in_dim(vc_all, ki, 1, keepdims=False)
+
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qc.astype(jnp.float32),
+                       kc.astype(jnp.float32)) * scale
+        q_pos = qi * q_chunk + jnp.arange(q_chunk) + q_offset
+        k_pos = ki * kv_chunk + jnp.arange(kv_chunk)
+        s = jnp.where(_mask_for(q_pos, k_pos, causal, window,
+                                kv_len)[None, None, None], s, NEG_INF)
+
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        m_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where((s <= NEG_INF / 2), 0.0, p)
+        corr = jnp.exp(jnp.where(m <= NEG_INF / 2, NEG_INF, m) - m_safe)
+        corr = jnp.where(m <= NEG_INF / 2, 0.0, corr)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p, vc.astype(jnp.float32))
+
+        # finalize (writes are overwritten until the true last pair of qi)
+        l_den = jnp.maximum(l_new, 1e-30)
+        o_chunk = (acc_new / l_den[..., None]).transpose(0, 3, 1, 2, 4)
+        O = jax.lax.dynamic_update_index_in_dim(O, o_chunk.astype(O.dtype), qi, 1)
+        lse_chunk = jnp.where(l_new > 0, m_safe + jnp.log(l_den), NEG_INF)
+        LSE = jax.lax.dynamic_update_index_in_dim(LSE, lse_chunk, qi, 3)
+        return (m_new, l_new, acc_new, O, LSE), None
+
+    m0 = jnp.full((B, Hkv, G, q_chunk), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, q_chunk), jnp.float32)
+    acc0 = jnp.zeros((B, Hkv, G, q_chunk, D), jnp.float32)
+    O0 = jnp.zeros((B, nq, q_chunk, Hkv, G, D), q.dtype)
+    LSE0 = jnp.full((B, Hkv, G, nq, q_chunk), NEG_INF, jnp.float32)
+
+    (_, _, _, O, LSE), _ = jax.lax.scan(
+        body, (m0, l0, acc0, O0, LSE0), (qi_a, ki_a, first_a, last_a))
+    out = O.reshape(B, Sq, H, D)
+    lse = LSE.reshape(B, Hkv, G, Sq)
+    return out, lse
+
+
+def _banded_fwd(q, k, v, causal, window, q_offset, q_chunk, kv_chunk, skip,
+                kv_len=None):
+    out, lse = _banded_fwd_impl(q, k, v, causal, window, q_offset, q_chunk,
+                                kv_chunk, skip, kv_len)
+    return out, (q, k, v, out, lse)
+
+
+def _banded_bwd(causal, window, q_offset, q_chunk, kv_chunk, skip, kv_len,
+                res, dout):
+    q, k, v, out, lse = res
+    B, Sq, H, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    G = H // Hkv
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Sk)
+    nq, nk = Sq // q_chunk, Sk // kv_chunk
+    scale = D ** -0.5
+
+    pairs = band_pairs(nq, nk, q_chunk, kv_chunk, causal, window, q_offset,
+                       skip, kv_len)
+    qi_a = jnp.array([p[0] for p in pairs], jnp.int32)
+    ki_a = jnp.array([p[1] for p in pairs], jnp.int32)
+
+    qg = q.reshape(B, nq, q_chunk, Hkv, G, D)
+    kg = k.reshape(B, nk, kv_chunk, Hkv, D)
+    vg = v.reshape(B, nk, kv_chunk, Hkv, D)
+    og = out.reshape(B, nq, q_chunk, Hkv, G, D)
+    dog = dout.reshape(B, nq, q_chunk, Hkv, G, D)
+    lseg = lse.reshape(B, Hkv, G, nq, q_chunk)
+    # delta_i = rowsum(dO_i * O_i)  (B, Hkv, G, nq, q_chunk)
+    delta = jnp.einsum("bnqhgd,bnqhgd->bhgnq", dog.astype(jnp.float32),
+                       og.astype(jnp.float32))
+
+    def body(carry, xs):
+        dq, dk, dv = carry
+        qi, ki = xs
+        qc = jax.lax.dynamic_index_in_dim(qg, qi, 1, keepdims=False)
+        kc = jax.lax.dynamic_index_in_dim(kg, ki, 1, keepdims=False)
+        vc = jax.lax.dynamic_index_in_dim(vg, ki, 1, keepdims=False)
+        doc = jax.lax.dynamic_index_in_dim(dog, qi, 1, keepdims=False)
+        lsec = jax.lax.dynamic_index_in_dim(lseg, qi, 3, keepdims=False)
+        deltac = jax.lax.dynamic_index_in_dim(delta, qi, 3, keepdims=False)
+
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qc.astype(jnp.float32),
+                       kc.astype(jnp.float32)) * scale
+        q_pos = qi * q_chunk + jnp.arange(q_chunk) + q_offset
+        k_pos = ki * kv_chunk + jnp.arange(kv_chunk)
+        mask = _mask_for(q_pos, k_pos, causal, window, kv_len)[None, None, None]
+        lse_safe = jnp.where(lsec <= NEG_INF / 2, 0.0, lsec)
+        p = jnp.exp(s - lse_safe[..., None])
+        p = jnp.where(mask & (lsec[..., None] > NEG_INF / 2), p, 0.0)
+
+        dp = jnp.einsum("bqhgd,bkhd->bhgqk", doc.astype(jnp.float32),
+                        vc.astype(jnp.float32))
+        ds = p * (dp - deltac[..., None]) * scale
+
+        dq_chunk = jnp.einsum("bhgqk,bkhd->bqhgd", ds, kc.astype(jnp.float32))
+        dk_chunk = jnp.einsum("bhgqk,bqhgd->bkhd", ds, qc.astype(jnp.float32))
+        dv_chunk = jnp.einsum("bhgqk,bqhgd->bkhd", p, doc.astype(jnp.float32))
+
+        dq_old = jax.lax.dynamic_index_in_dim(dq, qi, 1, keepdims=False)
+        dq = jax.lax.dynamic_update_index_in_dim(dq, dq_old + dq_chunk, qi, 1)
+        dk_old = jax.lax.dynamic_index_in_dim(dk, ki, 1, keepdims=False)
+        dk = jax.lax.dynamic_update_index_in_dim(dk, dk_old + dk_chunk, ki, 1)
+        dv_old = jax.lax.dynamic_index_in_dim(dv, ki, 1, keepdims=False)
+        dv = jax.lax.dynamic_update_index_in_dim(dv, dv_old + dv_chunk, ki, 1)
+        return (dq, dk, dv), None
+
+    dq0 = jnp.zeros((B, nq, q_chunk, Hkv, G, D), jnp.float32)
+    dk0 = jnp.zeros((B, nk, kv_chunk, Hkv, D), jnp.float32)
+    dv0 = jnp.zeros((B, nk, kv_chunk, Hkv, D), jnp.float32)
+    (dq, dk, dv), _ = jax.lax.scan(body, (dq0, dk0, dv0), (qi_a, ki_a))
+    return (dq.reshape(B, Sq, H, D).astype(q.dtype),
+            dk.reshape(B, Sk, Hkv, D).astype(k.dtype),
+            dv.reshape(B, Sk, Hkv, D).astype(v.dtype))
+
+
+attention_banded.defvjp(_banded_fwd, _banded_bwd)

@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (not module-level constants) so importing this module
+never touches jax device state — jax locks the device count on first init,
+and only the dry-run entry point is allowed to request 512 placeholder
+devices via XLA_FLAGS.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+
+__all__ = ["make_production_mesh", "make_mesh", "available_devices"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """The target deployment mesh: one v5e pod is 16×16 = 256 chips
+    (data × model); the multi-pod config is 2 pods = 512 chips with a
+    leading 'pod' axis (DP across pods over DCN)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]):
+    """Arbitrary mesh (tests, elastic re-meshing, deployment search)."""
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def available_devices() -> int:
+    return len(jax.devices())

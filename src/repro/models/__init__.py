@@ -1,0 +1,8 @@
+"""Model substrate: composable LM architectures (dense / MoE / hybrid /
+recurrent / encoder-only) defined as parameter-def trees + pure apply
+functions, scanned over superblock patterns for O(1)-in-depth HLO."""
+
+from .config import ModelConfig, LayerSpec, Stage
+from .model import LMModel
+
+__all__ = ["ModelConfig", "LayerSpec", "Stage", "LMModel"]

@@ -1,0 +1,311 @@
+"""Superblock machinery: layer dispatch + scan-over-stacked-parameters.
+
+A stage is ``repeat`` copies of a superblock (tuple of LayerSpecs).  The
+superblock body is traced once and scanned over parameters stacked on a
+leading ``layers`` axis — HLO size is O(superblock), not O(depth), which is
+what keeps 95-layer × 512-device dry-run compiles tractable and is the
+standard production pattern (MaxText does the same).
+
+Rematerialization policy is applied to the scan body and is a
+deployment-configuration dimension.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from . import mlp as mlp_mod
+from . import moe as moe_mod
+from . import rglru as rglru_mod
+from . import xlstm as xlstm_mod
+from .attention import AttnOptions
+from .common import DTypePolicy, ParamDef, rms_norm, stack_defs
+from .config import LayerSpec, ModelConfig, Stage
+from .moe import MoEOptions
+from .rglru import RGLRUOptions
+from .xlstm import XLSTMOptions
+
+__all__ = ["ModelOptions", "layer_defs", "superblock_defs", "stage_defs",
+           "stage_apply", "stage_prefill", "stage_decode", "stage_init_cache"]
+
+
+@dataclass(frozen=True)
+class ModelOptions:
+    """Every compute-level knob, all deployment-searchable."""
+
+    attn: AttnOptions = AttnOptions()
+    moe: MoEOptions = MoEOptions()
+    rglru: RGLRUOptions = RGLRUOptions()
+    xlstm: XLSTMOptions = XLSTMOptions()
+    remat: str = "dots"          # none | full | dots
+    aux_loss_weight: float = 0.01
+    policy: DTypePolicy = DTypePolicy()
+    # activation sharding constraint for the residual stream (batch_axes,
+    # seq_axis); None disables (single-device tests).  Without this, 2-D
+    # (FSDP×TP) weight sharding makes XLA replicate the batch — the classic
+    # propagation failure; constraining the residual stream at every layer
+    # boundary is the standard fix (MaxText does the same).
+    act_sharding: Optional[tuple] = None
+
+
+def constrain_acts(x: jax.Array, opts: "ModelOptions") -> jax.Array:
+    """Pin the residual stream to (batch→DP axes, seq→SP axis, d→None)."""
+    if opts.act_sharding is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+    batch_axes, seq_axis = opts.act_sharding
+    return jax.lax.with_sharding_constraint(
+        x, P(tuple(batch_axes), seq_axis, None))
+
+
+# ---------------------------------------------------------------------------
+# per-layer defs / apply / decode / state
+# ---------------------------------------------------------------------------
+
+
+def _norm_def(cfg: ModelConfig) -> ParamDef:
+    return ParamDef((cfg.d_model,), ("embed",), init="zeros")
+
+
+def layer_defs(cfg: ModelConfig, spec: LayerSpec) -> dict:
+    if spec.kind == "attn":
+        return {"norm1": _norm_def(cfg), "attn": attn_mod.attention_defs(cfg),
+                "norm2": _norm_def(cfg), "mlp": mlp_mod.mlp_defs(cfg)}
+    if spec.kind == "moe":
+        return {"norm1": _norm_def(cfg), "attn": attn_mod.attention_defs(cfg),
+                "norm2": _norm_def(cfg), "moe": moe_mod.moe_defs(cfg)}
+    if spec.kind == "rglru":
+        return {"norm1": _norm_def(cfg), "mix": rglru_mod.rglru_defs(cfg),
+                "norm2": _norm_def(cfg), "mlp": mlp_mod.mlp_defs(cfg)}
+    if spec.kind == "mlstm":
+        return {"norm1": _norm_def(cfg), "mlstm": xlstm_mod.mlstm_defs(cfg)}
+    if spec.kind == "slstm":
+        return {"norm1": _norm_def(cfg), "slstm": xlstm_mod.slstm_defs(cfg)}
+    raise ValueError(spec.kind)
+
+
+def layer_apply(spec: LayerSpec, p: dict, x: jax.Array, cfg: ModelConfig,
+                positions: jax.Array, opts: ModelOptions):
+    """Full-sequence layer.  Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    eps = cfg.norm_eps
+    if spec.kind in ("attn", "moe"):
+        h = attn_mod.attention_apply(p["attn"], rms_norm(x, p["norm1"], eps),
+                                     cfg, positions, spec.window, opts.attn)
+        x = x + h
+        if spec.kind == "attn":
+            x = x + mlp_mod.mlp_apply(p["mlp"], rms_norm(x, p["norm2"], eps), cfg)
+        else:
+            y, aux = moe_mod.moe_apply(p["moe"], rms_norm(x, p["norm2"], eps),
+                                       cfg, opts.moe)
+            x = x + y
+    elif spec.kind == "rglru":
+        x = x + rglru_mod.rglru_apply(p["mix"], rms_norm(x, p["norm1"], eps),
+                                      cfg, opts.rglru)
+        x = x + mlp_mod.mlp_apply(p["mlp"], rms_norm(x, p["norm2"], eps), cfg)
+    elif spec.kind == "mlstm":
+        x = x + xlstm_mod.mlstm_apply(p["mlstm"], rms_norm(x, p["norm1"], eps),
+                                      cfg, opts.xlstm)
+    elif spec.kind == "slstm":
+        x = x + xlstm_mod.slstm_apply(p["slstm"], rms_norm(x, p["norm1"], eps),
+                                      cfg, opts.xlstm)
+    return x, aux
+
+
+def layer_init_cache(spec: LayerSpec, cfg: ModelConfig, batch: int,
+                     capacity: int, dtype) -> dict:
+    if spec.kind in ("attn", "moe"):
+        return attn_mod.init_kv_cache(cfg, batch, capacity, spec.window, dtype)
+    if spec.kind == "rglru":
+        return rglru_mod.init_rglru_state(cfg, batch, dtype)
+    if spec.kind == "mlstm":
+        return xlstm_mod.init_mlstm_state(cfg, batch, dtype)
+    if spec.kind == "slstm":
+        return xlstm_mod.init_slstm_state(cfg, batch, dtype)
+    raise ValueError(spec.kind)
+
+
+def layer_prefill(spec: LayerSpec, p: dict, x: jax.Array, cfg: ModelConfig,
+                  positions: jax.Array, capacity: int, opts: ModelOptions):
+    """Full-sequence layer that also emits its decode cache/state."""
+    eps = cfg.norm_eps
+    if spec.kind in ("attn", "moe"):
+        h, cache = attn_mod.prefill_kv_cache(
+            p["attn"], rms_norm(x, p["norm1"], eps), cfg, positions,
+            spec.window, capacity, opts.attn)
+        x = x + h
+        if spec.kind == "attn":
+            x = x + mlp_mod.mlp_apply(p["mlp"], rms_norm(x, p["norm2"], eps), cfg)
+        else:
+            y, _ = moe_mod.moe_apply(p["moe"], rms_norm(x, p["norm2"], eps),
+                                     cfg, opts.moe)
+            x = x + y
+        return x, cache
+    if spec.kind == "rglru":
+        xin = rms_norm(x, p["norm1"], eps)
+        cdt = x.dtype
+        gate = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", xin,
+                                      p["mix"]["w_gate_branch"].astype(cdt)))
+        u = jnp.einsum("bsd,dr->bsr", xin, p["mix"]["w_rec_branch"].astype(cdt))
+        h, h_last, conv_state = rglru_mod._mix(p["mix"], u, opts.rglru, None, None)
+        x = x + jnp.einsum("bsr,rd->bsd", gate * h, p["mix"]["w_out"].astype(cdt))
+        x = x + mlp_mod.mlp_apply(p["mlp"], rms_norm(x, p["norm2"], eps), cfg)
+        return x, {"h": h_last, "conv": conv_state}
+    if spec.kind == "mlstm":
+        xin = rms_norm(x, p["norm1"], eps)
+        q, k, v, li, lf, z = xlstm_mod._mlstm_qkv_gates(p["mlstm"], xin, cfg)
+        state0 = xlstm_mod.init_mlstm_state(cfg, x.shape[0], x.dtype)
+        h, state = xlstm_mod._mlstm_chunk_scan(q, k, v, li, lf, state0,
+                                               opts.xlstm.chunk)
+        h = h.reshape(x.shape[0], x.shape[1], -1).astype(x.dtype)
+        out = h * jax.nn.silu(z)
+        x = x + jnp.einsum("bse,ed->bsd", out,
+                           p["mlstm"]["w_down"].astype(x.dtype))
+        return x, state
+    if spec.kind == "slstm":
+        xin = rms_norm(x, p["norm1"], eps)
+        cdt = x.dtype
+        wx = jnp.einsum("bsd,de->bse", xin, p["slstm"]["w_zifo"].astype(cdt))
+
+        def step(state, wx_t):
+            new = xlstm_mod._slstm_step(p["slstm"], cfg, wx_t, state)
+            return new, new["h"]
+
+        state0 = xlstm_mod.init_slstm_state(cfg, x.shape[0], cdt)
+        state, hs = jax.lax.scan(step, state0, wx.swapaxes(0, 1))
+        h = hs.swapaxes(0, 1).astype(cdt)
+        up = jax.nn.gelu(jnp.einsum("bsd,df->bsf", h,
+                                    p["slstm"]["w_up"].astype(cdt)))
+        x = x + jnp.einsum("bsf,fd->bsd", up, p["slstm"]["w_down"].astype(cdt))
+        return x, state
+    raise ValueError(spec.kind)
+
+
+def layer_decode(spec: LayerSpec, p: dict, x: jax.Array, cache: dict, index,
+                 cfg: ModelConfig, opts: ModelOptions):
+    """One-token layer step.  Returns (x, new_cache)."""
+    eps = cfg.norm_eps
+    if spec.kind in ("attn", "moe"):
+        h, cache = attn_mod.attention_decode(p["attn"], rms_norm(x, p["norm1"], eps),
+                                             cache, index, cfg, spec.window,
+                                             opts.attn)
+        x = x + h
+        if spec.kind == "attn":
+            x = x + mlp_mod.mlp_apply(p["mlp"], rms_norm(x, p["norm2"], eps), cfg)
+        else:
+            y, _ = moe_mod.moe_apply(p["moe"], rms_norm(x, p["norm2"], eps),
+                                     cfg, opts.moe)
+            x = x + y
+        return x, cache
+    if spec.kind == "rglru":
+        h, cache = rglru_mod.rglru_decode(p["mix"], rms_norm(x, p["norm1"], eps),
+                                          cache, cfg, opts.rglru)
+        x = x + h
+        x = x + mlp_mod.mlp_apply(p["mlp"], rms_norm(x, p["norm2"], eps), cfg)
+        return x, cache
+    if spec.kind == "mlstm":
+        h, cache = xlstm_mod.mlstm_decode(p["mlstm"], rms_norm(x, p["norm1"], eps),
+                                          cache, cfg, opts.xlstm)
+        return x + h, cache
+    if spec.kind == "slstm":
+        h, cache = xlstm_mod.slstm_decode(p["slstm"], rms_norm(x, p["norm1"], eps),
+                                          cache, cfg, opts.xlstm)
+        return x + h, cache
+    raise ValueError(spec.kind)
+
+
+# ---------------------------------------------------------------------------
+# stage = scan over stacked superblocks
+# ---------------------------------------------------------------------------
+
+
+def superblock_defs(cfg: ModelConfig, stage: Stage) -> dict:
+    return {f"l{i}": layer_defs(cfg, spec)
+            for i, spec in enumerate(stage.superblock)}
+
+
+def stage_defs(cfg: ModelConfig, stage: Stage) -> dict:
+    return stack_defs(superblock_defs(cfg, stage), stage.repeat)
+
+
+def _maybe_remat(fn, remat: str):
+    if remat == "none":
+        return fn
+    if remat == "full":
+        return jax.checkpoint(fn, prevent_cse=False)
+    if remat == "dots":
+        return jax.checkpoint(
+            fn, prevent_cse=False,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    raise ValueError(f"unknown remat policy {remat!r}")
+
+
+def stage_apply(stage: Stage, params: dict, x: jax.Array, cfg: ModelConfig,
+                positions: jax.Array, opts: ModelOptions):
+    """Training/inference forward through a stage.  Returns (x, aux)."""
+
+    def body(carry, layer_params):
+        x, aux = carry
+        for i, spec in enumerate(stage.superblock):
+            x, a = layer_apply(spec, layer_params[f"l{i}"], x, cfg, positions, opts)
+            x = constrain_acts(x, opts)
+            aux = aux + a
+        return (x, aux), None
+
+    body = _maybe_remat(body, opts.remat)
+    x = constrain_acts(x, opts)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), params)
+    return x, aux
+
+
+def stage_init_cache(stage: Stage, cfg: ModelConfig, batch: int, capacity: int,
+                     dtype) -> dict:
+    out = {}
+    for i, spec in enumerate(stage.superblock):
+        single = layer_init_cache(spec, cfg, batch, capacity, dtype)
+        out[f"l{i}"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (stage.repeat,) + a.shape), single)
+    return out
+
+
+def stage_prefill(stage: Stage, params: dict, x: jax.Array, cfg: ModelConfig,
+                  positions: jax.Array, capacity: int, opts: ModelOptions):
+    """Forward + emit stacked caches.  Returns (x, caches)."""
+
+    def body(x, layer_params):
+        caches = {}
+        for i, spec in enumerate(stage.superblock):
+            x, c = layer_prefill(spec, layer_params[f"l{i}"], x, cfg, positions,
+                                 capacity, opts)
+            x = constrain_acts(x, opts)
+            caches[f"l{i}"] = c
+        return x, caches
+
+    body = _maybe_remat(body, opts.remat)
+    x = constrain_acts(x, opts)
+    x, caches = jax.lax.scan(body, x, params)
+    return x, caches
+
+
+def stage_decode(stage: Stage, params: dict, caches: dict, x: jax.Array,
+                 index, cfg: ModelConfig, opts: ModelOptions):
+    """One-token step through a stage.  Returns (x, new_caches)."""
+
+    def body(x, xs):
+        layer_params, layer_caches = xs
+        new = {}
+        for i, spec in enumerate(stage.superblock):
+            x, c = layer_decode(spec, layer_params[f"l{i}"], x,
+                                layer_caches[f"l{i}"], index, cfg, opts)
+            x = constrain_acts(x, opts)
+            new[f"l{i}"] = c
+        return x, new
+
+    x, new_caches = jax.lax.scan(body, x, (params, caches))
+    return x, new_caches

@@ -1,0 +1,158 @@
+"""Shared building blocks: parameter definitions (with logical sharding axes),
+norms, rotary embeddings, and initialization.
+
+Every parameter is declared as a :class:`ParamDef` carrying *logical axis
+names*.  Initialization and PartitionSpec generation both traverse the same
+def-tree, so the sharding rules can never drift from the parameter structure
+— and the logical→mesh-axis rule table itself is part of the deployment
+configuration, i.e. searchable by the Discovery Space machinery.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["ParamDef", "init_tree", "spec_tree", "stack_defs", "rms_norm",
+           "make_rope", "apply_rope", "DTypePolicy"]
+
+
+@dataclass(frozen=True)
+class DTypePolicy:
+    """Mixed-precision policy (part of the deployment configuration)."""
+
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    logits_dtype: Any = jnp.float32
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    """Declaration of one parameter tensor.
+
+    ``logical_axes`` name each dimension; the distributed layer maps names to
+    mesh axes (e.g. ``embed -> 'data'`` for FSDP, ``heads -> 'model'`` for TP).
+    """
+
+    shape: Tuple[int, ...]
+    logical_axes: Tuple[Optional[str], ...]
+    init: str = "normal"      # normal | zeros | ones | scaled | lru_lambda
+    scale: float = 1.0
+    fan_axis: int = 0         # which axis is fan-in (shifted by stacking)
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.logical_axes):
+            raise ValueError(f"shape {self.shape} vs axes {self.logical_axes}")
+
+    def initialize(self, key: jax.Array, dtype) -> jax.Array:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, dtype)
+        if self.init in ("normal", "scaled"):
+            fan_in = self.shape[self.fan_axis] if len(self.shape) > self.fan_axis else 1
+            std = self.scale / math.sqrt(max(fan_in, 1))
+            return (jax.random.normal(key, self.shape) * std).astype(dtype)
+        if self.init == "lru_lambda":
+            # RG-LRU recurrence parameter: log(-log λ) with λ ∈ [0.9, 0.999]
+            u = jax.random.uniform(key, self.shape, minval=0.9, maxval=0.999)
+            return jnp.log(-jnp.log(u)).astype(dtype)
+        raise ValueError(f"unknown init {self.init!r}")
+
+
+def init_tree(defs: Mapping, key: jax.Array, dtype) -> dict:
+    """Initialize a (nested) tree of ParamDefs into a matching array tree."""
+    flat = []
+
+    def _collect(d, path):
+        if isinstance(d, ParamDef):
+            flat.append((path, d))
+        else:
+            for k in sorted(d.keys()):
+                _collect(d[k], path + (k,))
+
+    _collect(defs, ())
+    keys = jax.random.split(key, max(len(flat), 1))
+    out: dict = {}
+    for (path, pdef), k in zip(flat, keys):
+        node = out
+        for p in path[:-1]:
+            node = node.setdefault(p, {})
+        node[path[-1]] = pdef.initialize(k, dtype)
+    return out
+
+
+def spec_tree(defs: Mapping) -> dict:
+    """Mirror of the def-tree holding logical-axis tuples."""
+    if isinstance(defs, ParamDef):
+        return defs.logical_axes
+    return {k: spec_tree(v) for k, v in defs.items()}
+
+
+def stack_defs(defs: Mapping, repeat: int) -> dict:
+    """Prepend a scanned 'layers' axis of size `repeat` to every def.
+
+    The fan-in axis shifts with the stacking so per-layer init statistics
+    are identical to the unstacked layer's."""
+    if isinstance(defs, ParamDef):
+        return ParamDef(
+            shape=(repeat,) + defs.shape,
+            logical_axes=("layers",) + defs.logical_axes,
+            init=defs.init,
+            scale=defs.scale,
+            fan_axis=defs.fan_axis + 1,
+        )
+    return {k: stack_defs(v, repeat) for k, v in defs.items()}
+
+
+# ---------------------------------------------------------------------------
+# Norms & rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm with fp32 statistics but WITHOUT materializing an fp32 copy of
+    x: scan autodiff stacks any fp32 intermediate that depends on the carry
+    as a per-layer residual — a (B,S,d) fp32 copy per layer doubles
+    activation memory.  Computing only the (B,S,1) scale in fp32 keeps the
+    stacked residual 1/d the size, at identical statistics precision (the
+    final multiply rounds to compute dtype either way)."""
+    dtype = x.dtype
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jax.lax.rsqrt(var + eps)                     # (B, S, 1) fp32
+    gamma32 = 1.0 + gamma.astype(jnp.float32)            # (d,)
+    return x * (scale.astype(dtype)) * gamma32.astype(dtype)
+
+
+def make_rope(positions: jax.Array, head_dim: int, theta: float = 10000.0,
+              fraction: float = 1.0):
+    """(sin, cos) tables for rotary embedding.
+
+    ``fraction < 1`` applies rotary to the leading ``fraction·head_dim`` dims
+    (ChatGLM-style 2d/partial rotary approximation); the rest pass through.
+    """
+    rot_dim = int(head_dim * fraction)
+    rot_dim -= rot_dim % 2
+    freq = theta ** (-jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim)
+    angles = positions[..., None].astype(jnp.float32) * freq  # (..., S, rot/2)
+    return jnp.sin(angles), jnp.cos(angles), rot_dim
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array, rot_dim: int) -> jax.Array:
+    """x: (B, S, H, D); sin/cos: (B, S, rot_dim//2) (positions always (B, S))."""
+    if rot_dim == 0:
+        return x
+    x_rot, x_pass = x[..., :rot_dim], x[..., rot_dim:]
+    x1, x2 = x_rot[..., ::2], x_rot[..., 1::2]
+    sin = sin[:, :, None, :].astype(jnp.float32)  # (B, S, 1, rot/2)
+    cos = cos[:, :, None, :].astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    r1 = x1f * cos - x2f * sin
+    r2 = x2f * cos + x1f * sin
+    rotated = jnp.stack([r1, r2], axis=-1).reshape(x_rot.shape)
+    return jnp.concatenate([rotated.astype(x.dtype), x_pass], axis=-1)

@@ -1,0 +1,173 @@
+"""Architecture configuration: one dataclass covering all assigned families.
+
+A model is ``embed/frontend -> stages -> final norm -> head`` where each
+:class:`Stage` is ``repeat`` copies of a *superblock* (a short sequence of
+:class:`LayerSpec`), executed as ``lax.scan`` over stacked parameters.  This
+keeps lowered HLO size independent of depth — a 95-layer model compiles the
+superblock body once.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Sequence, Tuple
+
+__all__ = ["LayerSpec", "Stage", "ModelConfig"]
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    """One layer unit inside a superblock.
+
+    kind:
+      * ``attn``   — attention mixer + FFN.  ``window`` None => global.
+      * ``moe``    — attention mixer + MoE FFN.
+      * ``rglru``  — RG-LRU recurrent mixer + FFN (RecurrentGemma).
+      * ``mlstm``  — self-contained mLSTM block (matrix memory).
+      * ``slstm``  — self-contained sLSTM block (scalar memory).
+    """
+
+    kind: str = "attn"
+    window: Optional[int] = None   # sliding-window size for local attention
+
+    def __post_init__(self):
+        if self.kind not in ("attn", "moe", "rglru", "mlstm", "slstm"):
+            raise ValueError(f"unknown layer kind {self.kind!r}")
+
+    @property
+    def has_recurrent_state(self) -> bool:
+        return self.kind in ("rglru", "mlstm", "slstm")
+
+    @property
+    def has_kv_cache(self) -> bool:
+        return self.kind in ("attn", "moe")
+
+
+@dataclass(frozen=True)
+class Stage:
+    superblock: Tuple[LayerSpec, ...]
+    repeat: int
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.superblock) * self.repeat
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                 # dense | moe | hybrid | ssm | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    stages: Tuple[Stage, ...]
+    head_dim: int = 0           # 0 => d_model // num_heads
+    causal: bool = True         # False for encoder-only (hubert)
+    # MoE
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_d_ff: int = 0
+    shared_expert: bool = False
+    # recurrent
+    lru_dim: int = 0            # 0 => d_model
+    conv_width: int = 4
+    # rotary
+    rope_theta: float = 10000.0
+    rotary_fraction: float = 1.0   # chatglm applies rotary to half the dims
+    # frontend stub ('' => token ids; 'patch' / 'frame' => embeddings input)
+    frontend: str = ""
+    frontend_dim: int = 0
+    # misc
+    norm_eps: float = 1e-6
+    mlp_gated: bool = True      # SwiGLU vs GELU-MLP
+    sub_quadratic: bool = False # eligible for long_500k
+    notes: str = ""
+
+    def __post_init__(self):
+        total = sum(s.num_layers for s in self.stages)
+        if total != self.num_layers:
+            raise ValueError(
+                f"{self.name}: stages sum to {total} layers, expected {self.num_layers}"
+            )
+        if self.num_heads % max(self.num_kv_heads, 1) != 0:
+            raise ValueError(f"{self.name}: heads {self.num_heads} not divisible "
+                             f"by kv heads {self.num_kv_heads}")
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def resolved_lru_dim(self) -> int:
+        return self.lru_dim or self.d_model
+
+    @property
+    def is_encoder_only(self) -> bool:
+        return not self.causal
+
+    @property
+    def uses_tokens(self) -> bool:
+        return self.frontend == ""
+
+    def scaled(self, **overrides) -> "ModelConfig":
+        """Build a reduced config of the same family (smoke tests)."""
+        from dataclasses import replace
+        return replace(self, **overrides)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (for 6·N·D model FLOPs)."""
+        d, hd = self.d_model, self.resolved_head_dim
+        h, hkv = self.num_heads, self.num_kv_heads
+        n = 0
+        if self.uses_tokens:
+            n += self.vocab_size * d          # embedding
+        else:
+            n += self.frontend_dim * d        # frontend projection
+        n += d * self.vocab_size              # head
+        for stage in self.stages:
+            for spec in stage.superblock:
+                if spec.kind in ("attn", "moe"):
+                    attn = d * h * hd + 2 * d * hkv * hd + h * hd * d
+                    n_ffn = 0
+                    if spec.kind == "attn":
+                        f = self.d_ff
+                        n_ffn = (3 if self.mlp_gated else 2) * d * f
+                    else:
+                        f = self.moe_d_ff or self.d_ff
+                        n_ffn = self.num_experts * 3 * d * f + d * self.num_experts
+                        if self.shared_expert:
+                            n_ffn += 3 * d * f
+                    n += (attn + n_ffn + 2 * d) * stage.repeat
+                elif spec.kind == "rglru":
+                    r = self.resolved_lru_dim
+                    mix = 2 * d * r + r * self.conv_width + 2 * r * (r // 8) + 2 * r + r * d
+                    ffn = (3 if self.mlp_gated else 2) * d * self.d_ff
+                    n += (mix + ffn + 2 * d) * stage.repeat
+                elif spec.kind == "mlstm":
+                    # up-proj x2 (pf=2), qkv on inner dim, gates, out
+                    inner = 2 * d
+                    n += (2 * d * inner + 3 * inner * inner // 1 + inner * d
+                          + 2 * d) * stage.repeat // 1
+                elif spec.kind == "slstm":
+                    inner = d
+                    n += (4 * d * inner + 4 * inner * (inner // max(self.num_heads, 1))
+                          + (4 * d * inner) // 3 + 2 * d) * stage.repeat
+        n += d  # final norm
+        return n
+
+    def active_param_count(self) -> int:
+        """Active parameters per token (MoE: only routed experts count)."""
+        if self.num_experts == 0:
+            return self.param_count()
+        d = self.d_model
+        f = self.moe_d_ff or self.d_ff
+        total = self.param_count()
+        inactive_experts = self.num_experts - self.experts_per_token
+        moe_layers = sum(
+            stage.repeat * sum(1 for s in stage.superblock if s.kind == "moe")
+            for stage in self.stages
+        )
+        return total - moe_layers * inactive_experts * 3 * d * f

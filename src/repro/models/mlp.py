@@ -1,0 +1,38 @@
+"""Feed-forward layers: gated (SwiGLU) and vanilla (GELU) MLPs."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamDef
+from .config import ModelConfig
+
+__all__ = ["mlp_defs", "mlp_apply"]
+
+
+def mlp_defs(cfg: ModelConfig, d_ff: int = 0) -> dict:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    if cfg.mlp_gated:
+        return {
+            "w_gate": ParamDef((d, f), ("embed", "mlp")),
+            "w_up": ParamDef((d, f), ("embed", "mlp")),
+            "w_down": ParamDef((f, d), ("mlp", "embed"), init="scaled"),
+        }
+    return {
+        "w_up": ParamDef((d, f), ("embed", "mlp")),
+        "w_down": ParamDef((f, d), ("mlp", "embed"), init="scaled"),
+    }
+
+
+def mlp_apply(params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    cdt = x.dtype
+    if cfg.mlp_gated:
+        g = jnp.einsum("bsd,df->bsf", x, params["w_gate"].astype(cdt))
+        u = jnp.einsum("bsd,df->bsf", x, params["w_up"].astype(cdt))
+        h = jax.nn.silu(g) * u
+    else:
+        u = jnp.einsum("bsd,df->bsf", x, params["w_up"].astype(cdt))
+        h = jax.nn.gelu(u)
+    return jnp.einsum("bsf,fd->bsd", h, params["w_down"].astype(cdt))

@@ -1,0 +1,156 @@
+"""LMModel: embed/frontend -> stages -> final norm -> head.
+
+One composable model class covers all ten assigned architectures; the
+architecture is entirely described by :class:`ModelConfig` (stage pattern +
+dimensions) and the compute knobs by :class:`ModelOptions`.
+
+API:
+  * ``init(key)`` / ``param_defs()`` / ``logical_specs()``
+  * ``forward(params, batch)``               — full-sequence logits
+  * ``loss(params, batch)``                  — LM cross-entropy (+ MoE aux)
+  * ``init_cache`` / ``prefill`` / ``decode_step`` — serving path
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .blocks import (ModelOptions, constrain_acts, stage_apply, stage_decode,
+                     stage_defs, stage_init_cache, stage_prefill)
+from .common import DTypePolicy, ParamDef, init_tree, rms_norm, spec_tree
+from .config import ModelConfig
+
+__all__ = ["LMModel", "ModelOptions"]
+
+
+class LMModel:
+    def __init__(self, cfg: ModelConfig, options: Optional[ModelOptions] = None):
+        self.cfg = cfg
+        self.options = options if options is not None else ModelOptions()
+
+    # ------------------------------------------------------------- parameters
+
+    def param_defs(self) -> dict:
+        cfg = self.cfg
+        d = cfg.d_model
+        defs: dict = {}
+        if cfg.uses_tokens:
+            defs["embed"] = ParamDef((cfg.vocab_size, d), ("vocab", "embed"))
+        else:
+            defs["frontend"] = ParamDef((cfg.frontend_dim, d),
+                                        ("frontend", "embed"))
+        for si, stage in enumerate(cfg.stages):
+            defs[f"stage{si}"] = stage_defs(cfg, stage)
+        defs["final_norm"] = ParamDef((d,), ("embed",), init="zeros")
+        defs["head"] = ParamDef((d, cfg.vocab_size), ("embed", "vocab"))
+        return defs
+
+    def init(self, key: jax.Array) -> dict:
+        return init_tree(self.param_defs(), key, self.options.policy.param_dtype)
+
+    def logical_specs(self) -> dict:
+        return spec_tree(self.param_defs())
+
+    # ------------------------------------------------------------ embeddings
+
+    def _embed(self, params: dict, batch: dict) -> jax.Array:
+        cdt = self.options.policy.compute_dtype
+        if self.cfg.uses_tokens:
+            x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        else:
+            x = jnp.einsum("bsf,fd->bsd",
+                           batch["embeds"].astype(cdt),
+                           params["frontend"].astype(cdt))
+        return constrain_acts(x.astype(cdt), self.options)
+
+    @staticmethod
+    def _positions(batch: dict, seq: int, bsz: int) -> jax.Array:
+        if "positions" in batch:
+            return batch["positions"]
+        return jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32)[None], (bsz, seq))
+
+    # ---------------------------------------------------------------- forward
+
+    def forward(self, params: dict, batch: dict):
+        """Returns (logits (B,S,V) in logits_dtype, aux_loss scalar)."""
+        cfg, opts = self.cfg, self.options
+        x = self._embed(params, batch)
+        B, S, _ = x.shape
+        positions = self._positions(batch, S, B)
+        aux = jnp.zeros((), jnp.float32)
+        for si, stage in enumerate(cfg.stages):
+            x, a = stage_apply(stage, params[f"stage{si}"], x, cfg, positions, opts)
+            aux = aux + a
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", x.astype(opts.policy.logits_dtype),
+                            params["head"].astype(opts.policy.logits_dtype))
+        return logits, aux
+
+    def loss(self, params: dict, batch: dict):
+        """LM cross-entropy.  batch: tokens/embeds + labels (B,S) int32;
+        optional loss_mask (B,S).  Returns (loss, metrics dict)."""
+        logits, aux = self.forward(params, batch)
+        labels = batch["labels"]
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        label_logit = jnp.take_along_axis(logits, labels[..., None],
+                                          axis=-1)[..., 0]
+        nll = logz - label_logit
+        mask = batch.get("loss_mask")
+        if mask is not None:
+            nll = nll * mask
+            denom = jnp.maximum(mask.sum(), 1.0)
+        else:
+            denom = float(nll.size)
+        ce = nll.sum() / denom
+        total = ce + self.options.aux_loss_weight * aux
+        return total, {"ce": ce, "aux": aux}
+
+    # ---------------------------------------------------------------- serving
+
+    def init_cache(self, batch_size: int, capacity: int) -> dict:
+        dtype = self.options.policy.compute_dtype
+        return {f"stage{si}": stage_init_cache(stage, self.cfg, batch_size,
+                                               capacity, dtype)
+                for si, stage in enumerate(self.cfg.stages)}
+
+    def prefill(self, params: dict, batch: dict, capacity: int):
+        """Full-sequence forward that also builds decode caches.
+        Returns (last-position logits (B,V), caches)."""
+        cfg, opts = self.cfg, self.options
+        if cfg.is_encoder_only:
+            raise ValueError(f"{cfg.name} is encoder-only: no decode path")
+        x = self._embed(params, batch)
+        B, S, _ = x.shape
+        positions = self._positions(batch, S, B)
+        caches = {}
+        for si, stage in enumerate(cfg.stages):
+            x, c = stage_prefill(stage, params[f"stage{si}"], x, cfg, positions,
+                                 capacity, opts)
+            caches[f"stage{si}"] = c
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        last = x[:, -1]
+        logits = jnp.einsum("bd,dv->bv", last.astype(opts.policy.logits_dtype),
+                            params["head"].astype(opts.policy.logits_dtype))
+        return logits, caches
+
+    def decode_step(self, params: dict, batch: dict, caches: dict, index):
+        """One decode step.  batch: tokens (B,1) or embeds (B,1,F); ``index``
+        is the absolute position of the new token (traced scalar).
+        Returns (logits (B,V), new_caches)."""
+        cfg, opts = self.cfg, self.options
+        if cfg.is_encoder_only:
+            raise ValueError(f"{cfg.name} is encoder-only: no decode path")
+        x = self._embed(params, batch)
+        new_caches = {}
+        for si, stage in enumerate(cfg.stages):
+            x, c = stage_decode(stage, params[f"stage{si}"], caches[f"stage{si}"],
+                                x, index, cfg, opts)
+            new_caches[f"stage{si}"] = c
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", x.astype(opts.policy.logits_dtype),
+                            params["head"].astype(opts.policy.logits_dtype))
+        return logits[:, 0], new_caches

@@ -1,0 +1,263 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+mLSTM is computed in *chunkwise-parallel* form — the TPU-native adaptation:
+within a chunk the (L×L) decay-weighted attention runs on the MXU; across
+chunks a (dk×dv) matrix state is carried by ``lax.scan``.  All gating runs in
+log-space with running stabilizers (the xLSTM paper's m_t), so exp-gates
+never overflow.  Memory is O(S·L) instead of O(S²) and decode is a pure O(1)
+state update — which is what qualifies xlstm for the ``long_500k`` shape.
+
+sLSTM has true nonlinear recurrence (block-diagonal recurrent weights) and is
+inherently sequential: it lowers as ``lax.scan`` over time.  There is no
+parallel form — noted in DESIGN.md; on TPU the per-step work is a small
+per-head matvec, so this layer is latency- not throughput-bound.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamDef
+from .config import ModelConfig
+
+__all__ = ["mlstm_defs", "mlstm_apply", "mlstm_decode", "init_mlstm_state",
+           "slstm_defs", "slstm_apply", "slstm_decode", "init_slstm_state",
+           "XLSTMOptions"]
+
+
+@dataclass(frozen=True)
+class XLSTMOptions:
+    chunk: int = 128  # mLSTM chunk length (deployment-searchable)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di = 2 * d                       # projection factor 2 (xLSTM paper)
+    return {
+        "w_up": ParamDef((d, di), ("embed", "mlp")),
+        "w_z": ParamDef((d, di), ("embed", "mlp")),
+        "w_q": ParamDef((di, di), ("mlp", "mlp_in"), scale=0.5),
+        "w_k": ParamDef((di, di), ("mlp", "mlp_in"), scale=0.5),
+        "w_v": ParamDef((di, di), ("mlp", "mlp_in"), scale=0.5),
+        "w_i": ParamDef((di, cfg.num_heads), ("mlp", "heads_gate")),
+        "b_i": ParamDef((cfg.num_heads,), ("heads_gate",), init="zeros"),
+        "w_f": ParamDef((di, cfg.num_heads), ("mlp", "heads_gate")),
+        "b_f": ParamDef((cfg.num_heads,), ("heads_gate",), init="ones"),
+        "w_down": ParamDef((di, d), ("mlp", "embed"), init="scaled"),
+    }
+
+
+def _mlstm_qkv_gates(params, x, cfg: ModelConfig):
+    """x: (B,S,d) -> q,k,v (B,S,H,dh) and log-gates (B,S,H) fp32."""
+    cdt = x.dtype
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    u = jnp.einsum("bsd,de->bse", x, params["w_up"].astype(cdt))
+    z = jnp.einsum("bsd,de->bse", x, params["w_z"].astype(cdt))
+    di = u.shape[-1]
+    dh = di // H
+    q = jnp.einsum("bse,ef->bsf", u, params["w_q"].astype(cdt)).reshape(B, S, H, dh)
+    k = jnp.einsum("bse,ef->bsf", u, params["w_k"].astype(cdt)).reshape(B, S, H, dh)
+    v = jnp.einsum("bse,ef->bsf", u, params["w_v"].astype(cdt)).reshape(B, S, H, dh)
+    uf = u.astype(jnp.float32)
+    log_i = uf @ params["w_i"].astype(jnp.float32) + params["b_i"].astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(
+        uf @ params["w_f"].astype(jnp.float32) + params["b_f"].astype(jnp.float32))
+    k = k * (dh ** -0.5)
+    return q, k, v, log_i, log_f, z
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int, dtype) -> dict:
+    H = cfg.num_heads
+    dh = (2 * cfg.d_model) // H
+    return {
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+    }
+
+
+def _mlstm_chunk_scan(q, k, v, log_i, log_f, state, chunk: int):
+    """Chunkwise-parallel mLSTM.  q/k/v: (B,S,H,dh); log gates: (B,S,H).
+    Returns (h: (B,S,H,dh) fp32, final state)."""
+    B, S, H, dh = q.shape
+    L = min(chunk, S)
+    if S % L:
+        raise ValueError(f"seq {S} must divide mLSTM chunk {L}")
+    nc = S // L
+
+    def split(x):  # (B,S,...) -> (nc, B, L, ...)
+        return jnp.moveaxis(x.reshape(B, nc, L, *x.shape[2:]), 1, 0)
+
+    qs, ks, vs = split(q.astype(jnp.float32)), split(k.astype(jnp.float32)), \
+        split(v.astype(jnp.float32))
+    lis, lfs = split(log_i), split(log_f)
+
+    tri = jnp.tril(jnp.ones((L, L), bool))            # s <= t
+    tri_strict = jnp.tril(jnp.ones((L, L), bool), -1)
+
+    def body(carry, xs):
+        C, n, m = carry                                # (B,H,dh,dh) (B,H,dh) (B,H)
+        qc, kc, vc, lic, lfc = xs                      # (B,L,H,dh) / (B,L,H)
+        b = jnp.cumsum(lfc, axis=1)                    # (B,L,H) cumulative log-f
+        # intra-chunk log weights: w(t,s) = b_t - b_s + li_s  (s <= t)
+        lw = b[:, :, None, :] - b[:, None, :, :] + lic[:, None, :, :]
+        lw = jnp.where(tri[None, :, :, None], lw, -jnp.inf)  # (B,t,s,H)
+        g = jnp.max(lw, axis=2)                        # (B,L,H) running intra max
+        m_inter = b + m[:, None, :]                    # (B,L,H)
+        m_t = jnp.maximum(m_inter, g)
+        m_t = jnp.maximum(m_t, -1e30)
+
+        # inter-chunk contribution
+        scale_inter = jnp.exp(m_inter - m_t)           # (B,L,H)
+        h_inter = jnp.einsum("blhd,bhde->blhe", qc, C) * scale_inter[..., None]
+        n_inter = jnp.einsum("blhd,bhd->blh", qc, n) * scale_inter
+
+        # intra-chunk contribution
+        w = jnp.exp(lw - m_t[:, :, None, :])           # (B,t,s,H)
+        scores = jnp.einsum("blhd,bshd->blsh", qc, kc) * w
+        h_intra = jnp.einsum("blsh,bshe->blhe", scores, vc)
+        # normalizer: qn_t = q_t·n_t = Σ_s w(t,s)·(q_t·k_s)
+        qn = n_inter + scores.sum(axis=2)
+        h_num = h_inter + h_intra
+        denom = jnp.maximum(jnp.abs(qn), jnp.exp(-m_t))
+        h = h_num / denom[..., None]
+
+        # state update to end of chunk
+        b_L = b[:, -1, :]                              # (B,H)
+        m_state_cand = jnp.max(lic + b_L[:, None, :] - b, axis=1)  # (B,H)
+        m_new = jnp.maximum(m + b_L, m_state_cand)
+        m_new = jnp.maximum(m_new, -1e30)
+        decay_old = jnp.exp(m + b_L - m_new)           # (B,H)
+        wk = jnp.exp(lic + b_L[:, None, :] - b - m_new[:, None, :])  # (B,L,H)
+        C_new = C * decay_old[..., None, None] + \
+            jnp.einsum("blh,blhd,blhe->bhde", wk, kc, vc)
+        n_new = n * decay_old[..., None] + jnp.einsum("blh,blhd->bhd", wk, kc)
+        return (C_new, n_new, m_new), h
+
+    (C, n, m), hs = jax.lax.scan(body, (state["C"], state["n"], state["m"]),
+                                 (qs, ks, vs, lis, lfs))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, H, dh)
+    return h, {"C": C, "n": n, "m": m}
+
+
+def mlstm_apply(params, x: jax.Array, cfg: ModelConfig, opts: XLSTMOptions) -> jax.Array:
+    B, S, d = x.shape
+    q, k, v, log_i, log_f, z = _mlstm_qkv_gates(params, x, cfg)
+    state = init_mlstm_state(cfg, B, x.dtype)
+    h, _ = _mlstm_chunk_scan(q, k, v, log_i, log_f, state, opts.chunk)
+    h = h.reshape(B, S, -1).astype(x.dtype)
+    out = h * jax.nn.silu(z)
+    return jnp.einsum("bse,ed->bsd", out, params["w_down"].astype(x.dtype))
+
+
+def mlstm_decode(params, x: jax.Array, state: dict, cfg: ModelConfig,
+                 opts: XLSTMOptions):
+    """One-token recurrent update (O(dh²) per head)."""
+    B = x.shape[0]
+    q, k, v, log_i, log_f, z = _mlstm_qkv_gates(params, x, cfg)
+    q1, k1, v1 = q[:, 0], k[:, 0], v[:, 0]            # (B,H,dh)
+    li, lf = log_i[:, 0], log_f[:, 0]                 # (B,H)
+    C, n, m = state["C"], state["n"], state["m"]
+    m_new = jnp.maximum(lf + m, li)
+    m_new = jnp.maximum(m_new, -1e30)
+    f_s = jnp.exp(lf + m - m_new)
+    i_s = jnp.exp(li - m_new)
+    C_new = C * f_s[..., None, None] + \
+        i_s[..., None, None] * (k1[..., :, None] * v1[..., None, :])
+    n_new = n * f_s[..., None] + i_s[..., None] * k1
+    h_num = jnp.einsum("bhd,bhde->bhe", q1, C_new)
+    qn = jnp.einsum("bhd,bhd->bh", q1, n_new)
+    denom = jnp.maximum(jnp.abs(qn), jnp.exp(-m_new))
+    h = (h_num / denom[..., None]).reshape(B, 1, -1).astype(x.dtype)
+    out = h * jax.nn.silu(z)
+    y = jnp.einsum("bse,ed->bsd", out, params["w_down"].astype(x.dtype))
+    return y, {"C": C_new, "n": n_new, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    H = cfg.num_heads
+    dh = d // H
+    f = max(1, (4 * d) // 3)        # projection factor 4/3 (xLSTM paper)
+    return {
+        "w_zifo": ParamDef((d, 4 * d), ("embed", "mlp")),
+        "r_zifo": ParamDef((H, dh, 4 * dh), ("heads", "head_dim", "mlp_in"), scale=0.5),
+        "b_zifo": ParamDef((4 * d,), ("mlp",), init="zeros"),
+        "w_up": ParamDef((d, f), ("embed", "mlp")),
+        "w_down": ParamDef((f, d), ("mlp", "embed"), init="scaled"),
+    }
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int, dtype) -> dict:
+    d = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.ones((batch, d), jnp.float32),
+        "m": jnp.zeros((batch, d), jnp.float32),
+        "h": jnp.zeros((batch, d), jnp.float32),
+    }
+
+
+def _slstm_step(params, cfg: ModelConfig, wx_t, state):
+    """wx_t: (B, 4d) precomputed input projection at time t."""
+    B = wx_t.shape[0]
+    d = cfg.d_model
+    H = cfg.num_heads
+    dh = d // H
+    h_prev = state["h"]                                # (B,d) fp32
+    hh = h_prev.reshape(B, H, dh)
+    rec = jnp.einsum("bhd,hde->bhe", hh,
+                     params["r_zifo"].astype(jnp.float32)).reshape(B, 4 * d)
+    pre = wx_t.astype(jnp.float32) + rec + params["b_zifo"].astype(jnp.float32)
+    z, i_t, f_t, o_t = jnp.split(pre, 4, axis=-1)
+    z = jnp.tanh(z)
+    log_f = jax.nn.log_sigmoid(f_t)
+    m_new = jnp.maximum(log_f + state["m"], i_t)
+    i_s = jnp.exp(i_t - m_new)
+    f_s = jnp.exp(log_f + state["m"] - m_new)
+    c_new = f_s * state["c"] + i_s * z
+    n_new = f_s * state["n"] + i_s
+    h_tilde = c_new / jnp.maximum(n_new, 1e-6)
+    h_new = jax.nn.sigmoid(o_t) * h_tilde
+    return {"c": c_new, "n": n_new, "m": m_new, "h": h_new}
+
+
+def slstm_apply(params, x: jax.Array, cfg: ModelConfig, opts: XLSTMOptions) -> jax.Array:
+    B, S, d = x.shape
+    cdt = x.dtype
+    wx = jnp.einsum("bsd,de->bse", x, params["w_zifo"].astype(cdt))
+
+    def step(state, wx_t):
+        new = _slstm_step(params, cfg, wx_t, state)
+        return new, new["h"]
+
+    state0 = init_slstm_state(cfg, B, cdt)
+    _, hs = jax.lax.scan(step, state0, wx.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1).astype(cdt)                  # (B,S,d)
+    up = jax.nn.gelu(jnp.einsum("bsd,df->bsf", h, params["w_up"].astype(cdt)))
+    return jnp.einsum("bsf,fd->bsd", up, params["w_down"].astype(cdt))
+
+
+def slstm_decode(params, x: jax.Array, state: dict, cfg: ModelConfig,
+                 opts: XLSTMOptions):
+    cdt = x.dtype
+    wx = jnp.einsum("bsd,de->bse", x, params["w_zifo"].astype(cdt))
+    new = _slstm_step(params, cfg, wx[:, 0], state)
+    h = new["h"][:, None, :].astype(cdt)
+    up = jax.nn.gelu(jnp.einsum("bsd,df->bsf", h, params["w_up"].astype(cdt)))
+    y = jnp.einsum("bsf,fd->bsd", up, params["w_down"].astype(cdt))
+    return y, new

@@ -1,0 +1,38 @@
+"""Hardware constants for roofline terms (task-specified TPU v5e numbers)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+__all__ = ["HWSpec", "HW_V5E", "HW_V4_LIKE"]
+
+
+@dataclass(frozen=True)
+class HWSpec:
+    name: str
+    peak_flops_bf16: float      # per chip, FLOP/s
+    hbm_bw: float               # per chip, B/s
+    ici_link_bw: float          # per link, B/s
+    ici_links: int = 4          # usable links per chip in a 2-D torus
+    hbm_bytes: float = 16e9
+
+
+HW_V5E = HWSpec(
+    name="tpu-v5e",
+    peak_flops_bf16=197e12,
+    hbm_bw=819e9,
+    ici_link_bw=50e9,
+    ici_links=4,
+    hbm_bytes=16e9,
+)
+
+# A v4-like point used by the RSSC hardware-transfer experiment: same roofline
+# structure, different constants.
+HW_V4_LIKE = HWSpec(
+    name="tpu-v4-like",
+    peak_flops_bf16=275e12,
+    hbm_bw=1228e9,
+    ici_link_bw=45e9,
+    ici_links=6,
+    hbm_bytes=32e9,
+)

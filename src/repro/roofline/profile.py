@@ -1,0 +1,125 @@
+"""Top-contributor profiling over compiled HLO (the dry-run 'profiler').
+
+Given compiled HLO text, attribute trip-scaled FLOPs and HBM traffic to
+individual ops, so §Perf iterations can target the dominant roofline term's
+largest contributors (the CPU-container analogue of reading an XProf trace).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import List, Tuple
+
+from . import hlo_parse as hp
+
+__all__ = ["top_traffic", "top_flops"]
+
+
+def _multipliers(comps):
+    """(trip multipliers, fusion-internal computation names).
+
+    Fusion-internal ops stay in registers — they are excluded from traffic
+    attribution (only the fusion boundary moves HBM bytes)."""
+    mult = {"__entry__": 1.0}
+    fusion_internal = set()
+
+    def walk(name, m):
+        for op in comps.get(name, []):
+            if op.opcode in ("fusion", "call"):
+                mc = hp._CALLS_RE.search(op.rest)
+                if mc:
+                    mult[mc.group(1)] = mult.get(mc.group(1), 0) + m
+                    if op.opcode == "fusion":
+                        fusion_internal.add(mc.group(1))
+                    walk(mc.group(1), m)
+            elif op.opcode == "while":
+                mb = hp._BODY_RE.search(op.rest)
+                mcnd = hp._COND_RE.search(op.rest)
+                trips = 1
+                if mcnd:
+                    consts = []
+                    for o in comps.get(mcnd.group(1), []):
+                        consts += [int(c) for c in hp._CONST_RE.findall(
+                            o.type_str + " " + o.opcode + "(" + o.rest)]
+                    trips = max(consts) if consts else 1
+                if mb:
+                    mult[mb.group(1)] = mult.get(mb.group(1), 0) + m * trips
+                    walk(mb.group(1), m * trips)
+
+    walk("__entry__", 1.0)
+    return mult, fusion_internal
+
+
+def _op_traffic(op, symtab, comps) -> float:
+    if op.opcode in hp._SKIP_TRAFFIC:
+        return 0.0
+    _, ob = hp._shape_elems_bytes(op.type_str)
+    if op.opcode == "fusion":
+        mc = hp._CALLS_RE.search(op.rest)
+        dus = hp._dus_update_bytes(comps.get(mc.group(1), [])) if mc else None
+        return float(dus if dus is not None else ob)
+    if op.opcode == "dynamic-update-slice":
+        opr = hp._OPERAND_RE.findall(op.rest)
+        if len(opr) > 1:
+            return float(hp._shape_elems_bytes(symtab.get(opr[1], ""))[1] or ob)
+    if op.opcode == "dot":
+        opr = hp._OPERAND_RE.findall(op.rest)
+        extra = sum(hp._shape_elems_bytes(symtab.get(o, ""))[1]
+                    for o in opr[:2])
+        return float(ob + extra)
+    if op.opcode == "while":
+        return 0.0  # attributed to body ops
+    return float(ob)
+
+
+def top_traffic(hlo_text: str, k: int = 12) -> List[Tuple[float, str, str, str]]:
+    """[(bytes_total, opcode, computation, op metadata)] sorted desc."""
+    comps = hp._parse_computations(hlo_text)
+    mult, fusion_internal = _multipliers(comps)
+    rows = []
+    for name, ops in comps.items():
+        if name == "__entry__" or name in fusion_internal:
+            continue
+        m = mult.get(name, 0.0)
+        if m == 0:
+            continue
+        symtab = {op.name: op.type_str for op in ops}
+        for op in ops:
+            b = _op_traffic(op, symtab, comps)
+            if b <= 0:
+                continue
+            meta = re.search(r'op_name="([^"]+)"', op.rest)
+            rows.append((b * m, op.opcode, name,
+                         (meta.group(1)[-90:] if meta else op.name)))
+    rows.sort(key=lambda r: -r[0])
+    return rows[:k]
+
+
+def top_flops(hlo_text: str, k: int = 12) -> List[Tuple[float, str, str]]:
+    comps = hp._parse_computations(hlo_text)
+    mult, _fusion_internal = _multipliers(comps)
+    rows = []
+    for name, ops in comps.items():
+        if name == "__entry__":
+            continue
+        m = mult.get(name, 0.0)
+        if m == 0:
+            continue
+        symtab = {op.name: op.type_str for op in ops}
+        for op in ops:
+            if op.opcode != "dot":
+                continue
+            out_elems, _ = hp._shape_elems_bytes(op.type_str)
+            opr = hp._OPERAND_RE.findall(op.rest)
+            lhs = hp._first_shape_dims(symtab.get(opr[0], "")) if opr else []
+            mc = hp._LHS_CONTRACT_RE.search(op.rest)
+            contract = 1
+            if mc and lhs:
+                for idx in hp._dims(mc.group(1)):
+                    if idx < len(lhs):
+                        contract *= lhs[idx]
+            meta = re.search(r'op_name="([^"]+)"', op.rest)
+            rows.append((2.0 * out_elems * contract * m, name,
+                         (meta.group(1)[-90:] if meta else op.name)))
+    rows.sort(key=lambda r: -r[0])
+    return rows[:k]

@@ -1,0 +1,5 @@
+"""Serving stack: sharded prefill and decode steps with KV caches."""
+
+from .serve_step import make_decode_step, make_prefill_step
+
+__all__ = ["make_decode_step", "make_prefill_step"]

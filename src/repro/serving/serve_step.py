@@ -1,0 +1,90 @@
+"""Sharded serving steps.
+
+``prefill``: full-sequence forward emitting sharded KV caches.
+``decode``:  one new token against a seq_len KV cache (ring buffers for
+window layers, recurrent state for RG-LRU/xLSTM layers).
+
+Cache shardings come from ``distributed.sharding.cache_specs``: KV heads TP
+when they divide the model axis; otherwise the cache *length* is split over
+the model axis (flash-decode style split-KV) so decode attention still
+parallelizes 16-way.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..distributed.sharding import (DeploymentConfig, batch_specs, cache_specs,
+                                    param_specs)
+from ..models.model import LMModel
+
+__all__ = ["make_prefill_step", "make_decode_step"]
+
+
+def _ns(mesh, tree):
+    return jax.tree.map(lambda p: NamedSharding(mesh, p), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def make_prefill_step(model: LMModel, deployment: DeploymentConfig, mesh: Mesh,
+                      capacity: int, jit: bool = True):
+    """prefill(params, batch) -> (last-token logits (B,V), caches).
+
+    Encoder-only models have no decode caches: their "prefill" is the
+    encoder forward, returning full-sequence logits and no cache."""
+    pspecs = param_specs(model.logical_specs(), deployment)
+    bspecs = batch_specs(model.cfg, deployment, kind="prefill")
+    bt = tuple(deployment.batch_axes)
+
+    if model.cfg.is_encoder_only:
+        logit_spec = P(bt, deployment.seq_axis, deployment.rule("vocab"))
+
+        def encode(params, batch):
+            logits, _ = model.forward(params, batch)
+            return logits, ()
+
+        if not jit:
+            return encode, (pspecs, bspecs), (logit_spec, ())
+        fn = jax.jit(encode,
+                     in_shardings=(_ns(mesh, pspecs), _ns(mesh, bspecs)),
+                     out_shardings=(_ns(mesh, logit_spec), ()))
+        return fn, (pspecs, bspecs), (logit_spec, ())
+
+    cspecs = cache_specs(model.cfg, deployment)
+    logit_spec = P(bt, deployment.rule("vocab"))
+
+    def prefill(params, batch):
+        return model.prefill(params, batch, capacity)
+
+    if not jit:
+        return prefill, (pspecs, bspecs), (logit_spec, cspecs)
+    fn = jax.jit(prefill,
+                 in_shardings=(_ns(mesh, pspecs), _ns(mesh, bspecs)),
+                 out_shardings=(_ns(mesh, logit_spec), _ns(mesh, cspecs)))
+    return fn, (pspecs, bspecs), (logit_spec, cspecs)
+
+
+def make_decode_step(model: LMModel, deployment: DeploymentConfig, mesh: Mesh,
+                     jit: bool = True):
+    """decode(params, batch, caches, index) -> (logits (B,V), new caches)."""
+    pspecs = param_specs(model.logical_specs(), deployment)
+    bspecs = batch_specs(model.cfg, deployment, kind="decode")
+    cspecs = cache_specs(model.cfg, deployment)
+    bt = tuple(deployment.batch_axes)
+    logit_spec = P(bt, deployment.rule("vocab"))
+
+    def decode(params, batch, caches, index):
+        return model.decode_step(params, batch, caches, index)
+
+    if not jit:
+        return decode, (pspecs, bspecs, cspecs, P()), (logit_spec, cspecs)
+    fn = jax.jit(decode,
+                 in_shardings=(_ns(mesh, pspecs), _ns(mesh, bspecs),
+                               _ns(mesh, cspecs), NamedSharding(mesh, P())),
+                 out_shardings=(_ns(mesh, logit_spec), _ns(mesh, cspecs)),
+                 donate_argnums=(2,))
+    return fn, (pspecs, bspecs, cspecs, P()), (logit_spec, cspecs)

@@ -1,0 +1,7 @@
+"""Training stack: optimizer, schedules, train step."""
+
+from .optimizer import AdamWConfig, adamw_init, adamw_update, lr_at
+from .train_step import make_train_step, train_state_specs
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "lr_at",
+           "make_train_step", "train_state_specs"]

@@ -1,0 +1,79 @@
+"""AdamW with warmup+cosine schedule, pure JAX (no optax dependency).
+
+Optimizer moments are plain pytrees mirroring the parameters, so they
+inherit the parameters' sharding (ZeRO: FSDP-sharded params => FSDP-sharded
+moments, no extra code).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "lr_at"]
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+
+
+def lr_at(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup then cosine decay to min_lr_ratio·lr."""
+    step = step.astype(jnp.float32)
+    warm = cfg.lr * step / max(cfg.warmup_steps, 1)
+    t = jnp.clip((step - cfg.warmup_steps) /
+                 max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_ratio * cfg.lr + 0.5 * (1 - cfg.min_lr_ratio) * cfg.lr * \
+        (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def adamw_init(params) -> dict:
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def adamw_update(grads, opt_state: dict, params, cfg: AdamWConfig):
+    """Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+
+    lr = lr_at(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(m.dtype),
+                     opt_state["m"], grads)
+    v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) *
+                     jnp.square(g.astype(v.dtype)), opt_state["v"], grads)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, m_, v_):
+        mhat = m_ / bc1
+        vhat = v_ / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p
+        return (p - lr * delta).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "step": step}, \
+        {"grad_norm": gnorm, "lr": lr}

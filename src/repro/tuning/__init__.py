@@ -1,0 +1,10 @@
+"""The paper's technique as a first-class framework feature: TPU deployment-
+configuration search through Discovery Spaces."""
+
+from .deployment import (deployment_dimensions, deployment_from_configuration,
+                         deployment_space)
+from .experiments import DryrunRooflineExperiment, WalltimeExperiment
+
+__all__ = ["deployment_dimensions", "deployment_from_configuration",
+           "deployment_space", "DryrunRooflineExperiment",
+           "WalltimeExperiment"]

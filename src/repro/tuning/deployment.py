@@ -1,0 +1,106 @@
+"""The deployment Discovery Space: TPU deployment knobs as (P, Ω).
+
+This is the direct analogue of the paper's cloud configuration spaces
+(Table III): where the paper searched {GPU model, #GPUs, CPU cores, batch
+limits}, the framework searches {sharding rules, remat policy, microbatches,
+attention chunk sizes, MoE capacity, sequence sharding}.  Each architecture
+family contributes its own dimensions (§Arch-applicability in DESIGN.md).
+
+``deployment_space`` builds the ProbabilitySpace; ``deployment_from_
+configuration`` maps a sampled Configuration back onto a DeploymentConfig so
+the Action-space experiments (`experiments.py`) can deploy it.
+"""
+
+from __future__ import annotations
+
+from dataclasses import replace
+from typing import Optional, Sequence
+
+from ..core import Configuration, Dimension, ProbabilitySpace
+from ..distributed.sharding import DeploymentConfig, default_deployment
+from ..models.config import ModelConfig
+
+__all__ = ["deployment_dimensions", "deployment_space",
+           "deployment_from_configuration"]
+
+
+def deployment_dimensions(cfg: ModelConfig, mesh, shape_kind: str = "train",
+                          global_batch: int = 256) -> list:
+    """Architecture- and shape-aware deployment dimensions."""
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model_n = axis_sizes.get("model", 1)
+    dp = axis_sizes.get("data", 1) * axis_sizes.get("pod", 1)
+    local_batch = max(global_batch // dp, 1)
+
+    dims = [
+        Dimension.categorical("remat", ["none", "dots", "full"]),
+        Dimension.discrete("attn_q_chunk", [256, 512, 1024]),
+        Dimension.discrete("attn_kv_chunk", [256, 512, 1024]),
+        Dimension.categorical("band_skip", [False, True]),
+        Dimension.categorical("embed_rule", ["none", "data"]),
+    ]
+    if shape_kind == "train":
+        micro_opts = sorted({m for m in (1, 2, 4, 8, 16)
+                             if m <= local_batch and local_batch % m == 0})
+        dims.append(Dimension.discrete("microbatches", micro_opts or [1]))
+        dims.append(Dimension.categorical("param_cast",
+                                          ["per_microbatch", "once"]))
+    if cfg.num_experts:
+        dims.append(Dimension.discrete(
+            "moe_capacity_factor", [1.0, 1.25, 1.5, 2.0]))
+        choices = ["replicate"]
+        if cfg.num_experts % model_n == 0:
+            choices.append("expert_parallel")
+        f = cfg.moe_d_ff or cfg.d_ff
+        if f % model_n == 0:
+            choices.append("hidden_tp")
+        dims.append(Dimension.categorical("moe_shard", choices))
+    if cfg.family == "ssm":
+        dims.append(Dimension.discrete("mlstm_chunk", [64, 128, 256]))
+    return dims
+
+
+def deployment_space(cfg: ModelConfig, mesh, shape_kind: str = "train",
+                     global_batch: int = 256) -> ProbabilitySpace:
+    return ProbabilitySpace.make(
+        deployment_dimensions(cfg, mesh, shape_kind, global_batch))
+
+
+def deployment_from_configuration(
+        config: Configuration, cfg: ModelConfig, mesh,
+        shape_kind: str = "train", global_batch: int = 256,
+        seq_len: int = 4096) -> DeploymentConfig:
+    """Materialize a sampled point of Ω as a DeploymentConfig."""
+    dep = default_deployment(cfg, mesh, shape_kind=shape_kind,
+                             global_batch=global_batch, seq_len=seq_len)
+    updates = {}
+    d = config.as_dict()
+    if "remat" in d:
+        updates["remat"] = d["remat"]
+    if "microbatches" in d:
+        updates["microbatches"] = int(d["microbatches"])
+    if "attn_q_chunk" in d:
+        updates["attn_q_chunk"] = int(d["attn_q_chunk"])
+    if "attn_kv_chunk" in d:
+        updates["attn_kv_chunk"] = int(d["attn_kv_chunk"])
+    if "band_skip" in d:
+        updates["band_skip"] = bool(d["band_skip"])
+    if "moe_capacity_factor" in d:
+        updates["moe_capacity_factor"] = float(d["moe_capacity_factor"])
+    if "mlstm_chunk" in d:
+        updates["mlstm_chunk"] = int(d["mlstm_chunk"])
+    if "param_cast" in d:
+        updates["cast_params_once"] = d["param_cast"] == "once"
+    dep = replace(dep, **updates)
+    if d.get("embed_rule") == "none":
+        dep = dep.with_rule("embed", None)
+    elif d.get("embed_rule") == "data":
+        dep = dep.with_rule("embed", "data")
+    moe_shard = d.get("moe_shard")
+    if moe_shard == "replicate":
+        dep = dep.with_rule("experts", None).with_rule("moe_mlp", None)
+    elif moe_shard == "expert_parallel":
+        dep = dep.with_rule("experts", "model").with_rule("moe_mlp", None)
+    elif moe_shard == "hidden_tp":
+        dep = dep.with_rule("experts", None).with_rule("moe_mlp", "model")
+    return dep

@@ -1,0 +1,170 @@
+"""Action-space experiments over deployment configurations.
+
+* :class:`DryrunRooflineExperiment` — deploy = ``jit(step).lower().compile()``
+  on the production mesh; measure = trip-corrected roofline terms from the
+  compiled artifact (the honest measurement available on this CPU-only
+  container; identical interface to a wall-clock experiment on real TPUs).
+  Non-compiling or over-HBM configurations raise :class:`MeasurementError`
+  — the paper's "non-deployable points".
+* :class:`WalltimeExperiment` — real wall-clock timing of a reduced-config
+  step on the local device (used by the optimizer benchmarks so that the
+  paper-validation spaces contain genuinely *measured* data).
+
+Both are hermetic: identity = (name, version, parameterization) where the
+parameterization pins (arch, shape, mesh, hw) — so samples reconcile across
+processes through the common context, and a different mesh or hardware is a
+*different* Discovery Space (which is exactly what RSSC then bridges).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Mapping, Optional, Sequence
+
+from ..core.actions import Experiment, MeasurementError
+from ..core.entities import Configuration
+from ..roofline.hw import HWSpec, HW_V5E
+
+__all__ = ["DryrunRooflineExperiment", "WalltimeExperiment"]
+
+
+class DryrunRooflineExperiment(Experiment):
+    name = "dryrun-roofline"
+    version = "1"
+
+    def __init__(self, arch: str, shape_name: str, mesh, hw: HWSpec = HW_V5E,
+                 hbm_limit: Optional[float] = None):
+        self.arch = arch
+        self.shape_name = shape_name
+        self.mesh = mesh
+        self.hw = hw
+        self.hbm_limit = hbm_limit
+
+    @property
+    def parameterization(self) -> Mapping[str, Any]:
+        return {"arch": self.arch, "shape": self.shape_name,
+                "mesh": "x".join(map(str, self.mesh.devices.shape)),
+                "hw": self.hw.name}
+
+    @property
+    def observed_properties(self) -> Sequence[str]:
+        return ("compute_s", "memory_s", "collective_s", "step_time_s",
+                "roofline_fraction", "hlo_flops", "bytes_per_device",
+                "compile_s")
+
+    def measure(self, configuration: Configuration) -> Mapping[str, float]:
+        # imports deferred: this experiment requires the dry-run device env
+        from ..configs import SHAPES, get_config
+        from ..launch.dryrun import lower_cell, model_flops_for
+        from ..roofline.analysis import analyze_compiled
+        from .deployment import deployment_from_configuration
+
+        cfg = get_config(self.arch)
+        shape = SHAPES[self.shape_name]
+        dep = deployment_from_configuration(
+            configuration, cfg, self.mesh, shape_kind=shape.kind,
+            global_batch=shape.global_batch, seq_len=shape.seq_len)
+        t0 = time.time()
+        try:
+            with self.mesh:
+                lowered, _ = lower_cell(self.arch, self.shape_name, self.mesh,
+                                        dep)
+                compiled = lowered.compile()
+        except Exception as e:
+            raise MeasurementError(f"non-deployable: {type(e).__name__}: {e}")
+        compile_s = time.time() - t0
+        chips = self.mesh.devices.size
+        groups = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        report = analyze_compiled(
+            compiled, self.arch, self.shape_name,
+            "x".join(map(str, self.mesh.devices.shape)), chips, groups,
+            model_flops=model_flops_for(cfg, shape), hw=self.hw)
+        if (self.hbm_limit is not None and report.bytes_per_device is not None
+                and report.bytes_per_device > self.hbm_limit):
+            raise MeasurementError(
+                f"over HBM: {report.bytes_per_device / 1e9:.1f} GB "
+                f"> {self.hbm_limit / 1e9:.1f} GB")
+        return {
+            "compute_s": report.compute_s,
+            "memory_s": report.memory_s,
+            "collective_s": report.collective_s,
+            "step_time_s": report.step_time_s,
+            "roofline_fraction": report.roofline_fraction,
+            "hlo_flops": report.hlo_flops,
+            "bytes_per_device": report.bytes_per_device or 0.0,
+            "compile_s": compile_s,
+        }
+
+
+class WalltimeExperiment(Experiment):
+    """Wall-clock step timing of a reduced config on the local device(s).
+
+    The configuration space maps to real compute knobs (batch, seq, chunk
+    sizes, remat) — this produces genuinely measured performance surfaces
+    for the optimizer/RSSC validation benchmarks.
+    """
+
+    name = "walltime"
+    version = "1"
+
+    def __init__(self, arch: str, repeats: int = 3, compute_dtype="float32",
+                 arch_scale: float = 1.0):
+        self.arch = arch
+        self.repeats = repeats
+        self.compute_dtype = compute_dtype
+        self.arch_scale = arch_scale
+
+    @property
+    def parameterization(self) -> Mapping[str, Any]:
+        return {"arch": self.arch, "repeats": self.repeats,
+                "scale": self.arch_scale, "dtype": str(self.compute_dtype)}
+
+    @property
+    def observed_properties(self) -> Sequence[str]:
+        return ("step_ms", "tokens_per_s")
+
+    def measure(self, configuration: Configuration) -> Mapping[str, float]:
+        import jax
+        import numpy as np
+
+        from ..configs import get_config
+        from ..models.attention import AttnOptions
+        from ..models.blocks import ModelOptions
+        from ..models.model import LMModel
+
+        d = configuration.as_dict()
+        batch = int(d.get("batch", 2))
+        seq = int(d.get("seq", 64))
+        q_chunk = int(d.get("attn_q_chunk", 64))
+        remat = str(d.get("remat", "none"))
+        cfg = get_config(self.arch, smoke=True)
+        model = LMModel(cfg, ModelOptions(
+            attn=AttnOptions(impl="xla", q_chunk=q_chunk, kv_chunk=q_chunk),
+            remat=remat))
+        params = model.init(jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        b = {"labels": rng.integers(0, cfg.vocab_size, (batch, seq))}
+        if cfg.uses_tokens:
+            b["tokens"] = rng.integers(0, cfg.vocab_size, (batch, seq))
+        else:
+            b["embeds"] = rng.normal(size=(batch, seq, cfg.frontend_dim)) \
+                .astype("float32")
+        b = {k: jax.numpy.asarray(v) for k, v in b.items()}
+
+        @jax.jit
+        def step(params, batch):
+            loss, m = model.loss(params, batch)
+            return loss
+
+        try:
+            step(params, b).block_until_ready()  # compile
+            times = []
+            for _ in range(self.repeats):
+                t0 = time.perf_counter()
+                step(params, b).block_until_ready()
+                times.append(time.perf_counter() - t0)
+        except Exception as e:
+            raise MeasurementError(f"non-deployable: {e}")
+        best = min(times)
+        return {"step_ms": best * 1e3,
+                "tokens_per_s": batch * seq / best}

@@ -1,0 +1,190 @@
+"""§Perf hillclimbing driven by the framework's own Discovery Space search.
+
+This is the paper's technique eating its own dogfood: the deployment space
+of a (arch × shape) cell is a Discovery Space; the experiment is the dry-run
+roofline measurement; the optimizers are the paper's optimizer suite; the
+sample store is persistent, so successive hillclimb sessions (and different
+optimizers) transparently reuse each other's compilations — incremental
+sampling exactly as in paper Fig. 7, but over *compile minutes* instead of
+cloud dollars.
+
+``hillclimb_cell`` records:
+  1. the paper-faithful BASELINE (default deployment) measurement,
+  2. every (configuration → roofline terms) sample in the common context,
+  3. the best configuration found and its terms,
+returning a log suitable for EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Optional
+
+import numpy as np
+
+from ..core import (ActionSpace, Configuration, DiscoverySpace, SampleStore)
+from ..core.optimizers import OPTIMIZER_REGISTRY, run_optimizer
+from ..core.rssc import rssc_transfer
+from .deployment import deployment_space
+from .experiments import DryrunRooflineExperiment
+
+__all__ = ["baseline_configuration", "hillclimb_cell", "transfer_tuning"]
+
+
+def baseline_configuration(space, cfg, mesh, shape) -> Configuration:
+    """The default deployment expressed as a point of the deployment space."""
+    from ..distributed.sharding import default_deployment
+
+    dep = default_deployment(cfg, mesh, shape_kind=shape.kind,
+                             global_batch=shape.global_batch,
+                             seq_len=shape.seq_len)
+    values = {}
+    for dim in space.dimensions:
+        if dim.name == "remat":
+            values[dim.name] = dep.remat
+        elif dim.name == "microbatches":
+            m = dep.microbatches
+            opts = [v for v in dim.values if v <= m]
+            values[dim.name] = max(opts) if opts else dim.values[0]
+        elif dim.name == "attn_q_chunk":
+            values[dim.name] = dep.attn_q_chunk
+        elif dim.name == "attn_kv_chunk":
+            values[dim.name] = dep.attn_kv_chunk
+        elif dim.name == "band_skip":
+            values[dim.name] = dep.band_skip
+        elif dim.name == "embed_rule":
+            values[dim.name] = "data" if dep.rule("embed") == "data" else "none"
+        elif dim.name == "moe_capacity_factor":
+            values[dim.name] = dep.moe_capacity_factor
+        elif dim.name == "moe_shard":
+            if dep.rule("experts") == "model":
+                values[dim.name] = "expert_parallel"
+            elif dep.rule("moe_mlp") == "model":
+                values[dim.name] = "hidden_tp"
+            else:
+                values[dim.name] = "replicate"
+        elif dim.name == "mlstm_chunk":
+            values[dim.name] = dep.mlstm_chunk
+        elif dim.name == "param_cast":
+            values[dim.name] = "once" if dep.cast_params_once \
+                else "per_microbatch"
+        else:  # pragma: no cover
+            values[dim.name] = dim.values[0]
+    return Configuration.make(values)
+
+
+def hillclimb_cell(arch: str, shape_name: str, mesh, *,
+                   optimizer: str = "tpe", trials: int = 14,
+                   metric: str = "step_time_s",
+                   store_path: Optional[str] = None,
+                   hbm_limit: Optional[float] = None,
+                   seed: int = 0, verbose: bool = True) -> dict:
+    from ..configs import SHAPES, get_config
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    space = deployment_space(cfg, mesh, shape_kind=shape.kind,
+                             global_batch=shape.global_batch)
+    exp = DryrunRooflineExperiment(arch, shape_name, mesh,
+                                   hbm_limit=hbm_limit)
+    store = SampleStore(store_path or ":memory:")
+    ds = DiscoverySpace(space=space, actions=ActionSpace.make([exp]),
+                        store=store)
+
+    # 1. paper-faithful baseline
+    base_cfg = baseline_configuration(space, cfg, mesh, shape)
+    t0 = time.time()
+    base = ds.sample(base_cfg, operation_id=ds.begin_operation(
+        "baseline", {"arch": arch, "shape": shape_name}))
+    if verbose:
+        print(f"[hillclimb] {arch} × {shape_name} baseline: "
+              f"{metric}={base.value(metric):.4g}s "
+              f"(compute={base.value('compute_s'):.4g} "
+              f"memory={base.value('memory_s'):.4g} "
+              f"collective={base.value('collective_s'):.4g}) "
+              f"[{time.time() - t0:.0f}s]")
+
+    # 2. search
+    opt = OPTIMIZER_REGISTRY[optimizer](seed=seed)
+    run = run_optimizer(opt, ds, metric, "min", max_trials=trials,
+                        patience=max(trials // 2, 5),
+                        rng=np.random.default_rng(seed))
+    log = []
+    for t in run.trials:
+        entry = {"config": t.configuration.as_dict(), "action": t.action}
+        if t.value is not None:
+            s = ds.read_one(t.configuration)
+            entry.update({metric: t.value,
+                          "compute_s": s.value("compute_s"),
+                          "memory_s": s.value("memory_s"),
+                          "collective_s": s.value("collective_s"),
+                          "roofline_fraction": s.value("roofline_fraction")})
+        log.append(entry)
+        if verbose and t.value is not None:
+            print(f"  trial {entry['config']}: {metric}={t.value:.4g} "
+                  f"({t.action})")
+        elif verbose:
+            print(f"  trial {entry['config']}: non-deployable")
+
+    best = run.best
+    best_sample = ds.read_one(best.configuration) if best else None
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "x".join(map(str, mesh.devices.shape)),
+        "metric": metric,
+        "baseline": {
+            "config": base_cfg.as_dict(),
+            metric: base.value(metric),
+            "compute_s": base.value("compute_s"),
+            "memory_s": base.value("memory_s"),
+            "collective_s": base.value("collective_s"),
+            "roofline_fraction": base.value("roofline_fraction"),
+        },
+        "best": None if best is None else {
+            "config": best.configuration.as_dict(),
+            metric: best.value,
+            "compute_s": best_sample.value("compute_s"),
+            "memory_s": best_sample.value("memory_s"),
+            "collective_s": best_sample.value("collective_s"),
+            "roofline_fraction": best_sample.value("roofline_fraction"),
+        },
+        "trials": log,
+        "num_measured": run.num_measured,
+        "num_reused": run.num_reused,
+    }
+    if best is not None and verbose:
+        b, o = base.value(metric), best.value
+        print(f"[hillclimb] best {metric}={o:.4g}s vs baseline {b:.4g}s "
+              f"({100 * (1 - o / b):.1f}% better), reused "
+              f"{run.num_reused}/{run.num_trials} samples")
+    return result
+
+
+def transfer_tuning(src_arch: str, dst_arch: str, shape_name: str, mesh, *,
+                    store_path: Optional[str] = None, verbose: bool = True):
+    """RSSC across architectures: reuse one arch's deployment-tuning samples
+    to predict another's (identity mapping — the change is the experiment's
+    arch parameter, i.e. the action space)."""
+    from ..configs import SHAPES, get_config
+
+    cfg_s = get_config(src_arch)
+    cfg_d = get_config(dst_arch)
+    shape = SHAPES[shape_name]
+    store = SampleStore(store_path or ":memory:")
+    space_s = deployment_space(cfg_s, mesh, shape.kind, shape.global_batch)
+    space_d = deployment_space(cfg_d, mesh, shape.kind, shape.global_batch)
+    if space_s.names != space_d.names:
+        raise ValueError(f"deployment spaces differ: {space_s.names} vs "
+                         f"{space_d.names} — pick same-family archs")
+    ds_src = DiscoverySpace(space=space_s, actions=ActionSpace.make(
+        [DryrunRooflineExperiment(src_arch, shape_name, mesh)]), store=store)
+    ds_dst = DiscoverySpace(space=space_d, actions=ActionSpace.make(
+        [DryrunRooflineExperiment(dst_arch, shape_name, mesh)]), store=store)
+    res = rssc_transfer(ds_src, ds_dst, "step_time_s", mapping=None,
+                        rng=np.random.default_rng(0), predict_remaining=True)
+    if verbose:
+        print(f"[transfer] {src_arch} → {dst_arch} ({shape_name}): "
+              f"{res.summary()}")
+    return res

@@ -1,0 +1,140 @@
+"""Per-architecture smoke tests: reduced config of the same family, one
+forward + one train-gradient step + (for decoders) prefill/decode on CPU,
+asserting shapes and no NaNs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHITECTURES, get_config
+from repro.models import LMModel
+from repro.models.blocks import ModelOptions
+from repro.models.attention import AttnOptions
+from repro.models.common import DTypePolicy
+
+ARCH_IDS = sorted(ARCHITECTURES)
+
+B, S = 2, 32
+
+SMOKE_OPTIONS = ModelOptions(
+    attn=AttnOptions(impl="xla", q_chunk=16, kv_chunk=16),
+    policy=DTypePolicy(param_dtype=jnp.float32, compute_dtype=jnp.float32),
+    remat="none",
+)
+
+
+def make_batch(cfg, batch=B, seq=S, seed=0):
+    rng = np.random.default_rng(seed)
+    out = {"labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (batch, seq)))}
+    if cfg.uses_tokens:
+        out["tokens"] = jnp.asarray(rng.integers(0, cfg.vocab_size, (batch, seq)))
+    else:
+        out["embeds"] = jnp.asarray(
+            rng.normal(size=(batch, seq, cfg.frontend_dim)), jnp.float32)
+    return out
+
+
+@pytest.fixture(scope="module")
+def models():
+    cache = {}
+
+    def get(arch_id):
+        if arch_id not in cache:
+            cfg = get_config(arch_id, smoke=True)
+            model = LMModel(cfg, SMOKE_OPTIONS)
+            params = model.init(jax.random.PRNGKey(0))
+            cache[arch_id] = (model, params)
+        return cache[arch_id]
+
+    return get
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_forward_shapes_and_finite(models, arch_id):
+    model, params = models(arch_id)
+    batch = make_batch(model.cfg)
+    logits, aux = jax.jit(model.forward)(params, batch)
+    assert logits.shape == (B, S, model.cfg.vocab_size)
+    assert jnp.isfinite(logits).all()
+    assert jnp.isfinite(aux)
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_train_gradient_step(models, arch_id):
+    model, params = models(arch_id)
+    batch = make_batch(model.cfg)
+
+    @jax.jit
+    def step(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(model.loss, has_aux=True)(
+            params, batch)
+        new_params = jax.tree.map(lambda p, g: p - 2e-4 * g, params, grads)
+        return loss, metrics, new_params
+
+    loss, metrics, new_params = step(params, batch)
+    assert jnp.isfinite(loss)
+    assert loss > 0  # CE against random labels
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g))
+                         for g in jax.tree.leaves(new_params)))
+    assert jnp.isfinite(gnorm)
+    # loss decreases after one SGD step on the same batch (sanity)
+    loss2, _, _ = step(new_params, batch)
+    assert loss2 < loss + 1e-3
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_prefill_decode_consistency(models, arch_id):
+    """Prefill + decode of token S must match full forward at position S.
+
+    MoE archs use drop-free capacity here: capacity token-dropping is batch-
+    size dependent by design, so consistency is only defined without drops."""
+    from dataclasses import replace
+    from repro.models.moe import MoEOptions
+
+    model, params = models(arch_id)
+    cfg = model.cfg
+    if cfg.is_encoder_only:
+        pytest.skip("encoder-only: no decode path")
+    if cfg.num_experts:
+        opts = replace(SMOKE_OPTIONS,
+                       moe=MoEOptions(capacity_factor=50.0, min_capacity=128))
+        model = LMModel(cfg, opts)
+    capacity = S + 4
+    batch = make_batch(cfg)
+    logits_last, caches = jax.jit(
+        lambda p, b: model.prefill(p, b, capacity))(params, batch)
+    assert logits_last.shape == (B, cfg.vocab_size)
+    assert jnp.isfinite(logits_last).all()
+
+    # extend the sequence by one token; decode must equal full forward
+    batch2 = make_batch(cfg, seq=S + 1, seed=0)
+    if cfg.uses_tokens:
+        batch2["tokens"] = jnp.concatenate(
+            [batch["tokens"], batch2["tokens"][:, -1:]], axis=1)
+        step_input = {"tokens": batch2["tokens"][:, -1:]}
+    else:
+        batch2["embeds"] = jnp.concatenate(
+            [batch["embeds"], batch2["embeds"][:, -1:]], axis=1)
+        step_input = {"embeds": batch2["embeds"][:, -1:]}
+
+    logits_dec, _ = jax.jit(
+        lambda p, b, c: model.decode_step(p, b, c, S))(params, step_input, caches)
+    logits_full, _ = jax.jit(model.forward)(params, batch2)
+    np.testing.assert_allclose(np.asarray(logits_dec),
+                               np.asarray(logits_full[:, -1]),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_full_config_structure(arch_id):
+    """The FULL configs are structurally valid (layer math checks out) —
+    they are only lowered via the dry-run, never allocated here."""
+    cfg = get_config(arch_id)
+    assert sum(s.num_layers for s in cfg.stages) == cfg.num_layers
+    assert cfg.param_count() > 0
+    assert cfg.active_param_count() <= cfg.param_count()
+    model = LMModel(cfg)
+    defs = model.param_defs()
+    specs = model.logical_specs()
+    assert set(defs) == set(specs)

@@ -1,0 +1,267 @@
+"""Unit + property tests for the Discovery Space data model (TRACE)."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (ActionSpace, Configuration, Dimension, DiscoverySpace,
+                        FunctionExperiment, MeasurementError, ProbabilitySpace,
+                        SampleStore)
+
+
+def make_space():
+    return ProbabilitySpace.make([
+        Dimension.categorical("gpu_model", ["A100", "V100", "T4"]),
+        Dimension.discrete("batch_size", [2, 4, 8]),
+        Dimension.discrete("cores", [1, 2, 4, 8]),
+    ])
+
+
+CALLS = []
+
+
+def make_experiment(name="gpu_flops", noise=0.0):
+    def fn(config):
+        CALLS.append(config.digest)
+        base = {"A100": 3.0, "V100": 2.0, "T4": 1.0}[config["gpu_model"]]
+        return {"tflops": base * math.log2(config["batch_size"]) + 0.1 * config["cores"]}
+    return FunctionExperiment(fn=fn, properties=("tflops",), name=name)
+
+
+def make_ds(store=None):
+    return DiscoverySpace(
+        space=make_space(),
+        actions=ActionSpace.make([make_experiment()]),
+        store=store or SampleStore(":memory:"),
+    )
+
+
+# ---------------------------------------------------------------- basic model
+
+
+def test_space_size_and_enumeration():
+    space = make_space()
+    assert space.size == 3 * 3 * 4
+    assert len(list(space.all_configurations())) == space.size
+
+
+def test_configuration_identity_is_content_hash():
+    a = Configuration.make({"x": 1, "y": "b"})
+    b = Configuration.make({"y": "b", "x": 1})
+    assert a.digest == b.digest
+    c = Configuration.make({"x": 2, "y": "b"})
+    assert a.digest != c.digest
+
+
+def test_sample_and_read_roundtrip():
+    ds = make_ds()
+    config = Configuration.make({"gpu_model": "A100", "batch_size": 4, "cores": 2})
+    s = ds.sample(config)
+    assert s.has("tflops")
+    assert s.value("tflops") == pytest.approx(3.0 * 2 + 0.2)
+    read = ds.read()
+    assert len(read) == 1
+    assert read[0].configuration.digest == config.digest
+
+
+# ----------------------------------------------------------------- Encapsulated
+
+
+def test_encapsulated_rejects_foreign_configuration():
+    ds = make_ds()
+    bad = Configuration.make({"gpu_model": "H100", "batch_size": 4, "cores": 2})
+    with pytest.raises(ValueError):
+        ds.sample(bad)
+    bad_dims = Configuration.make({"gpu_model": "A100", "batch_size": 4})
+    with pytest.raises(ValueError):
+        ds.sample(bad_dims)
+
+
+def test_encapsulated_read_filters_by_action_space():
+    """Values from experiments NOT in this space's action space are invisible."""
+    store = SampleStore(":memory:")
+    ds1 = make_ds(store)
+    config = Configuration.make({"gpu_model": "A100", "batch_size": 4, "cores": 2})
+    ds1.sample(config)
+
+    other_exp = FunctionExperiment(
+        fn=lambda c: {"watts": 400.0}, properties=("watts",), name="power")
+    ds2 = DiscoverySpace(space=make_space(), actions=ActionSpace.make([other_exp]),
+                         store=store)
+    s2 = ds2.sample(config)
+    assert s2.has("watts") and not s2.has("tflops")
+    # and ds1 never sees watts
+    s1 = ds1.read()[0]
+    assert s1.has("tflops") and not s1.has("watts")
+
+
+# ----------------------------------------------------------------- Reconcilable
+
+
+def test_reconcilable_foreign_data_invisible_until_sampled():
+    """Paper §III-C4: data written via space B is not readable via space A
+    until A's sample() generates that configuration; then it is reused."""
+    store = SampleStore(":memory:")
+    ds_a = make_ds(store)
+    ds_b = DiscoverySpace(space=make_space(),
+                          actions=ActionSpace.make([make_experiment()]),
+                          store=store, space_id="space-b")
+    config = Configuration.make({"gpu_model": "V100", "batch_size": 8, "cores": 4})
+
+    CALLS.clear()
+    ds_b.sample(config)
+    assert len(CALLS) == 1
+    # A cannot read it yet
+    assert ds_a.read() == []
+    assert ds_a.read_one(config) is None
+    # A samples it -> REUSED from the common context, not re-measured
+    s = ds_a.sample(config)
+    assert len(CALLS) == 1  # no second measurement
+    assert s.value("tflops") == pytest.approx(2.0 * 3 + 0.4)
+    assert ds_a.timeseries()[-1].action == "reused"
+
+
+def test_reuse_within_same_space():
+    ds = make_ds()
+    config = Configuration.make({"gpu_model": "T4", "batch_size": 2, "cores": 1})
+    CALLS.clear()
+    ds.sample(config)
+    ds.sample(config)
+    assert len(CALLS) == 1
+    actions = [r.action for r in ds.timeseries()]
+    assert actions == ["measured", "reused"]
+
+
+# ----------------------------------------------------------------- Time-Resolved
+
+
+def test_time_resolved_record_sequence():
+    ds = make_ds()
+    op = ds.begin_operation("exploration")
+    rng = np.random.default_rng(0)
+    for _ in range(5):
+        ds.sample(rng=rng, operation_id=op)
+    records = ds.timeseries(op)
+    assert [r.seq for r in records] == list(range(len(records)))
+    times = [r.created_at for r in records]
+    assert times == sorted(times)
+    # distinct operations have independent sequences
+    op2 = ds.begin_operation("exploration")
+    ds.sample(rng=rng, operation_id=op2)
+    assert ds.timeseries(op2)[0].seq == 0
+
+
+# ----------------------------------------------------------------- Actionable
+
+
+def test_actionable_remaining_configurations():
+    ds = make_ds()
+    total = ds.space.size
+    rng = np.random.default_rng(1)
+    for _ in range(7):
+        ds.sample(rng=rng)
+    sampled = ds.count_sampled()
+    remaining = list(ds.remaining_configurations())
+    assert sampled + len(remaining) == total
+    digs = {c.digest for c in remaining} | {c.digest for c in ds.sampled_configurations()}
+    assert len(digs) == total
+
+
+def test_failed_measurements_recorded():
+    def fn(config):
+        if config["gpu_model"] == "T4":
+            raise MeasurementError("OOM on T4")
+        return {"tflops": 1.0}
+
+    exp = FunctionExperiment(fn=fn, properties=("tflops",), name="flaky")
+    ds = DiscoverySpace(space=make_space(), actions=ActionSpace.make([exp]))
+    good = Configuration.make({"gpu_model": "A100", "batch_size": 2, "cores": 1})
+    bad = Configuration.make({"gpu_model": "T4", "batch_size": 2, "cores": 1})
+    ds.sample(good)
+    with pytest.raises(MeasurementError):
+        ds.sample(bad)
+    assert ds.count_sampled() == 1  # failed points excluded from {x}
+    assert [r.action for r in ds.timeseries()] == ["measured", "failed"]
+    # failed points are not retried as 'remaining'
+    assert bad.digest not in {c.digest for c in ds.remaining_configurations()}
+
+
+# ----------------------------------------------------------------- Common Context
+
+
+def test_common_context_shared_store_file(tmp_path):
+    path = str(tmp_path / "store.db")
+    store1 = SampleStore(path)
+    ds1 = make_ds(store1)
+    config = Configuration.make({"gpu_model": "A100", "batch_size": 8, "cores": 8})
+    ds1.sample(config)
+    store1.close()
+    # a different process/session opens the same common context
+    store2 = SampleStore(path)
+    ds2 = make_ds(store2)  # same (Ω, A) => same space_id => same study
+    assert ds2.count_sampled() == 1
+    assert ds2.read()[0].value("tflops") == pytest.approx(3.0 * 3 + 0.8)
+    store2.close()
+
+
+# ----------------------------------------------------------------- property tests
+
+
+finite_dims = st.lists(
+    st.sampled_from([
+        Dimension.categorical("a", ["x", "y", "z"]),
+        Dimension.discrete("b", [1, 2, 3, 4]),
+        Dimension.discrete("c", [10, 20]),
+        Dimension.categorical("d", ["p", "q"]),
+    ]),
+    min_size=1, max_size=4, unique_by=lambda d: d.name,
+)
+
+
+@given(dims=finite_dims, seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_property_sampling_stays_in_space(dims, seed):
+    space = ProbabilitySpace.make(dims)
+    rng = np.random.default_rng(seed)
+    for _ in range(5):
+        c = space.sample_configuration(rng)
+        assert space.contains(c)
+        # encode/decode roundtrip is identity for finite dims
+        assert space.decode(space.encode(c)).digest == c.digest
+
+
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 20))
+@settings(max_examples=20, deadline=None)
+def test_property_measure_count_equals_distinct_configs(seed, n):
+    """Invariant: #measurements == #distinct configurations ever sampled,
+    regardless of how many times or through which spaces they were drawn
+    (transparent reuse never re-measures)."""
+    store = SampleStore(":memory:")
+    ds_a = make_ds(store)
+    ds_b = DiscoverySpace(space=make_space(),
+                          actions=ActionSpace.make([make_experiment()]),
+                          store=store, space_id="b")
+    CALLS.clear()
+    rng = np.random.default_rng(seed)
+    seen = set()
+    for i in range(n):
+        ds = ds_a if rng.uniform() < 0.5 else ds_b
+        c = ds.space.sample_configuration(rng)
+        seen.add(c.digest)
+        ds.sample(c)
+    assert len(CALLS) == len(seen)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_property_read_is_stateless_and_idempotent(seed):
+    ds = make_ds()
+    rng = np.random.default_rng(seed)
+    for _ in range(6):
+        ds.sample(rng=rng)
+    r1 = {s.configuration.digest: s.value("tflops") for s in ds.read()}
+    r2 = {s.configuration.digest: s.value("tflops") for s in ds.read()}
+    assert r1 == r2

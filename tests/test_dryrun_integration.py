@@ -1,0 +1,51 @@
+"""Integration: the multi-pod dry-run entry point runs end-to-end.
+
+The dry-run needs 512 placeholder devices via XLA_FLAGS *before* jax
+initializes, so it must run in a subprocess (this test process already owns
+a 1-device jax).
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_dryrun(*args):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", *args],
+        capture_output=True, text=True, timeout=420, env=env, cwd=REPO)
+
+
+@pytest.mark.slow
+def test_dryrun_single_pod_cell():
+    p = _run_dryrun("--arch", "xlstm-125m", "--shape", "decode_32k",
+                    "--mesh", "single")
+    assert p.returncode == 0, p.stdout + p.stderr
+    assert "OK" in p.stdout
+    assert "memory_analysis" in p.stdout and "cost_analysis" in p.stdout
+
+
+@pytest.mark.slow
+def test_dryrun_multi_pod_cell_and_skip_reasons():
+    p = _run_dryrun("--arch", "hubert-xlarge", "--shape", "all",
+                    "--mesh", "multi")
+    assert p.returncode == 0, p.stdout + p.stderr
+    assert "SKIP — encoder-only" in p.stdout       # decode shapes skipped
+    assert p.stdout.count("OK") == 2               # train_4k + prefill_32k
+    # artifact written with roofline terms
+    path = os.path.join(REPO, "experiments", "dryrun",
+                        "hubert-xlarge__train_4k__2x16x16.json")
+    assert os.path.exists(path)
+    with open(path) as f:
+        r = json.load(f)
+    assert r["status"] == "ok"
+    for key in ("compute_s", "memory_s", "collective_s", "dominant"):
+        assert key in r["roofline"]

@@ -1,0 +1,137 @@
+"""Tests for the optimizer suite over Discovery Spaces."""
+
+import numpy as np
+import pytest
+
+from repro.core import (ActionSpace, Configuration, Dimension, DiscoverySpace,
+                        FunctionExperiment, ProbabilitySpace, SampleStore)
+from repro.core.optimizers import (BOHB, OPTIMIZER_REGISTRY, GPBayesOpt,
+                                   RandomSearch, TPE, hypergeom_p_found,
+                                   run_optimizer)
+
+
+def quadratic_space(n_per_dim=8):
+    vals = [round(v, 3) for v in np.linspace(-2, 2, n_per_dim)]
+    return ProbabilitySpace.make([
+        Dimension.discrete("x", vals),
+        Dimension.discrete("y", vals),
+        Dimension.categorical("mode", ["slow", "fast"]),
+    ])
+
+
+def quadratic_ds(store=None):
+    def fn(c):
+        penalty = 0.0 if c["mode"] == "fast" else 1.0
+        return {"loss": (c["x"] - 0.5) ** 2 + (c["y"] + 0.5) ** 2 + penalty}
+    exp = FunctionExperiment(fn=fn, properties=("loss",), name="quad")
+    return DiscoverySpace(space=quadratic_space(),
+                          actions=ActionSpace.make([exp]),
+                          store=store or SampleStore(":memory:"))
+
+
+@pytest.mark.parametrize("name", list(OPTIMIZER_REGISTRY))
+def test_optimizer_finds_good_region(name):
+    ds = quadratic_ds()
+    opt = OPTIMIZER_REGISTRY[name](seed=0)
+    run = run_optimizer(opt, ds, metric="loss", mode="min", max_trials=60,
+                        patience=8, rng=np.random.default_rng(0))
+    assert run.best is not None
+    # model-based optimizers should land well inside the bowl within 60
+    # trials; the random baseline just needs to beat the bulk of the space
+    threshold = 1.5 if name == "random" else 0.6
+    assert run.best.value < threshold
+    assert run.num_trials <= 60
+
+
+def test_model_based_beats_random_on_average():
+    """GP-BO should reach a better median best-value than random at equal
+    trial counts on a smooth surface."""
+    def best_after(opt_cls, seed, n=25):
+        ds = quadratic_ds()
+        run = run_optimizer(opt_cls(seed=seed), ds, "loss", "min",
+                            max_trials=n, patience=n,  # no early stop
+                            rng=np.random.default_rng(seed))
+        return run.best.value
+
+    bo = np.median([best_after(GPBayesOpt, s) for s in range(6)])
+    rnd = np.median([best_after(RandomSearch, s) for s in range(6)])
+    assert bo <= rnd + 1e-9
+
+
+def test_early_stop_patience():
+    ds = quadratic_ds()
+    run = run_optimizer(RandomSearch(seed=0), ds, "loss", "min",
+                        max_trials=500, patience=5,
+                        rng=np.random.default_rng(3))
+    # paper §V-B1 stopping rule: must stop well before exhausting the space
+    assert run.num_trials < ds.space.size
+
+
+def test_optimizers_share_store_and_reuse():
+    """Two sequential optimizer runs on the same Discovery Space: the second
+    transparently reuses overlapping samples (paper Fig. 7 mechanism)."""
+    store = SampleStore(":memory:")
+    ds = quadratic_ds(store)
+    r1 = run_optimizer(RandomSearch(seed=0), ds, "loss", "min", max_trials=40,
+                       patience=40, rng=np.random.default_rng(0))
+    assert r1.num_measured == r1.num_trials  # cold store: everything measured
+    r2 = run_optimizer(RandomSearch(seed=1), ds, "loss", "min", max_trials=40,
+                       patience=40, rng=np.random.default_rng(0))
+    # identical rng stream => same draws => full reuse
+    assert r2.num_measured == 0
+    assert r2.normalized_cost == 0.0
+    r3 = run_optimizer(TPE(seed=2), ds, "loss", "min", max_trials=40,
+                       patience=40, rng=np.random.default_rng(7))
+    assert r3.num_reused > 0 or r3.num_measured < r3.num_trials
+
+
+def test_optimizer_exhausts_finite_space():
+    space = ProbabilitySpace.make([Dimension.discrete("x", [1, 2, 3])])
+    exp = FunctionExperiment(fn=lambda c: {"m": float(c["x"])},
+                             properties=("m",), name="tiny")
+    ds = DiscoverySpace(space=space, actions=ActionSpace.make([exp]))
+    run = run_optimizer(RandomSearch(seed=0), ds, "m", "min",
+                        max_trials=100, patience=100)
+    assert run.num_trials == 3
+    assert run.best.value == 1.0
+
+
+def test_maximization_mode():
+    ds = quadratic_ds()
+    run = run_optimizer(GPBayesOpt(seed=0), ds, "loss", "max", max_trials=40,
+                        patience=40, rng=np.random.default_rng(0))
+    assert run.best.value > 5.0  # corners of the bowl + slow penalty
+
+
+def test_hypergeometric_baseline():
+    # drawing everything finds a target with certainty
+    assert hypergeom_p_found(100, 5, 100) == pytest.approx(1.0)
+    # analytic value for small case: N=10, K=2, n=3 -> 1 - C(8,3)/C(10,3)
+    assert hypergeom_p_found(10, 2, 3) == pytest.approx(1 - (8 * 7 * 6) / (10 * 9 * 8))
+    assert hypergeom_p_found(1000, 50, 0) == 0.0
+
+
+def test_bohb_brackets_multifidelity():
+    """BOHB successive halving: low-fidelity evals are noisy, full fidelity
+    exact; the surviving config should be near-optimal."""
+    space = quadratic_space(10)
+    rng_noise = np.random.default_rng(0)
+
+    def evaluate_at(config, budget):
+        exact = (config["x"] - 0.5) ** 2 + (config["y"] + 0.5) ** 2 \
+            + (0.0 if config["mode"] == "fast" else 1.0)
+        noise = rng_noise.normal(0, 1.0 / budget)
+        return exact + noise
+
+    bohb = BOHB(seed=0, min_budget=1, max_budget=9, eta=3)
+    pool_rng = np.random.default_rng(1)
+
+    def suggest_pool(n):
+        return [space.sample_configuration(pool_rng) for _ in range(n)]
+
+    results = bohb.run_brackets(evaluate_at, suggest_pool, n_brackets=2)
+    assert results
+    best_cfg, best_val = min(results, key=lambda cv: cv[1])
+    exact_best = (best_cfg["x"] - 0.5) ** 2 + (best_cfg["y"] + 0.5) ** 2 \
+        + (0.0 if best_cfg["mode"] == "fast" else 1.0)
+    assert exact_best < 2.0

@@ -1,0 +1,168 @@
+"""Tests for representative sub-space comparison (RSSC) knowledge transfer."""
+
+import numpy as np
+import pytest
+
+from repro.core import (ActionSpace, Configuration, Dimension, DiscoverySpace,
+                        FunctionExperiment, ProbabilitySpace, SampleStore,
+                        assess_transfer, prediction_quality, rssc_transfer,
+                        select_linspace, select_representatives, select_top_k)
+from repro.core.transfer import TransferCriteria
+
+
+def make_pair(relation="linear", noise=0.0, seed=0):
+    """Source space on gpu A100-PCIE, target on A100-SXM4; target metric is a
+    function of the source metric controlled by `relation`."""
+    rng = np.random.default_rng(seed)
+    space_src = ProbabilitySpace.make([
+        Dimension.categorical("gpu", ["A100-PCIE"]),
+        Dimension.discrete("batch", [2, 4, 8, 16, 32, 64]),
+        Dimension.discrete("cores", [1, 2, 4, 8]),
+    ])
+    mapping = {"gpu": {"A100-PCIE": "A100-SXM4"}}
+
+    def src_fn(c):
+        return {"latency": 100.0 / np.log2(c["batch"]) + 5.0 * c["cores"]}
+
+    def tgt_fn(c):
+        src = 100.0 / np.log2(c["batch"]) + 5.0 * c["cores"]
+        if relation == "linear":
+            val = 0.6 * src + 10.0
+        elif relation == "negative":
+            val = -0.8 * src + 200.0
+        else:  # 'unrelated'
+            val = float(rng.uniform(50, 150))
+        return {"latency": val + (rng.normal(0, noise) if noise else 0.0)}
+
+    store = SampleStore(":memory:")
+    src_exp = FunctionExperiment(fn=src_fn, properties=("latency",), name="src-bench")
+    tgt_exp = FunctionExperiment(fn=tgt_fn, properties=("latency",), name="tgt-bench")
+    ds_src = DiscoverySpace(space=space_src, actions=ActionSpace.make([src_exp]),
+                            store=store)
+    ds_tgt = DiscoverySpace(space=space_src.map_values(mapping),
+                            actions=ActionSpace.make([tgt_exp]), store=store)
+    return ds_src, ds_tgt, mapping, tgt_fn
+
+
+def exhaust(ds):
+    for c in list(ds.remaining_configurations()):
+        ds.sample(c)
+
+
+# ---------------------------------------------------------------- point selection
+
+
+def test_select_representatives_spans_value_range():
+    rng = np.random.default_rng(0)
+    values = np.concatenate([np.full(20, 1.0), np.full(20, 10.0), np.full(20, 100.0)])
+    values = values + rng.normal(0, 0.05, size=60)
+    reps = select_representatives(values, rng)
+    picked = values[reps]
+    assert len(reps) >= 2
+    assert picked.min() < 5 and picked.max() > 50  # spans the clusters
+
+
+def test_select_top_k_and_linspace():
+    v = np.arange(20.0)
+    assert select_top_k(v, 5, "min") == [0, 1, 2, 3, 4]
+    assert select_top_k(v, 5, "max") == [19, 18, 17, 16, 15]
+    ls = select_linspace(v, 5)
+    assert 0 in ls and 19 in ls and len(ls) == 5
+
+
+# ---------------------------------------------------------------- transfer criteria
+
+
+def test_assess_transfer_criteria():
+    x = np.linspace(1, 10, 12)
+    ok = assess_transfer(x, 2 * x + 1)
+    assert ok.transferable and ok.r > 0.99
+    neg = assess_transfer(x, -2 * x + 100)
+    assert neg.transferable and neg.r < -0.99  # |r| criterion
+    rng = np.random.default_rng(0)
+    bad = assess_transfer(x, rng.uniform(size=12))
+    assert not bad.transferable
+    few = assess_transfer(x[:2], x[:2])
+    assert not few.transferable  # too few points
+
+
+# ---------------------------------------------------------------- full RSSC flow
+
+
+def test_rssc_transfers_linear_relationship():
+    ds_src, ds_tgt, mapping, tgt_fn = make_pair("linear")
+    exhaust(ds_src)
+    res = rssc_transfer(ds_src, ds_tgt, "latency", mapping,
+                        rng=np.random.default_rng(0))
+    assert res.transferable
+    assert res.assessment.r > 0.95
+    assert res.predicted_space is not None
+    # the predictor swept the remaining points -> target space fully covered
+    preds = res.predicted_space.read()
+    assert len(preds) == ds_tgt.space.size
+    # predictions carry provenance: predicted flag set, distinct experiment
+    predicted = [s for s in preds if s.properties["latency"].predicted]
+    assert len(predicted) == ds_tgt.space.size - len(res.translated)
+    # prediction quality against ground truth
+    configs = [s.configuration for s in preds]
+    pred_vals = np.array([s.value("latency") for s in preds])
+    true_vals = np.array([tgt_fn(c)["latency"] for c in configs])
+    q = prediction_quality(pred_vals, true_vals, n_measured=res.n_target_measured)
+    assert q.best_pct > 0.95
+    assert q.top5_pct >= 0.6
+    assert q.savings_pct > 0.5
+
+
+def test_rssc_rejects_unrelated_spaces():
+    ds_src, ds_tgt, mapping, _ = make_pair("unrelated")
+    exhaust(ds_src)
+    res = rssc_transfer(ds_src, ds_tgt, "latency", mapping,
+                        rng=np.random.default_rng(0))
+    assert not res.transferable
+    assert res.predicted_space is None
+    # only the representative points were measured in the target
+    assert ds_tgt.count_sampled() == len(res.translated)
+
+
+def test_rssc_negative_correlation_transfers():
+    ds_src, ds_tgt, mapping, tgt_fn = make_pair("negative")
+    exhaust(ds_src)
+    res = rssc_transfer(ds_src, ds_tgt, "latency", mapping,
+                        rng=np.random.default_rng(0))
+    assert res.transferable and res.assessment.r < -0.9
+    preds = res.predicted_space.read()
+    pred_vals = np.array([s.value("latency") for s in preds])
+    true_vals = np.array([tgt_fn(s.configuration)["latency"] for s in preds])
+    # surrogate carries the negative slope, so predictions still rank well
+    q = prediction_quality(pred_vals, true_vals, res.n_target_measured)
+    assert q.best_pct > 0.9
+
+
+@pytest.mark.parametrize("method", ["clustering", "top5", "linspace"])
+def test_rssc_point_selection_methods(method):
+    ds_src, ds_tgt, mapping, _ = make_pair("linear")
+    exhaust(ds_src)
+    res = rssc_transfer(ds_src, ds_tgt, "latency", mapping, selection=method,
+                        rng=np.random.default_rng(0))
+    assert res.transferable
+    assert len(res.representatives) >= 3
+
+
+def test_rssc_identity_mapping():
+    """No mapping: {e}_a == {e}_a* (paper §IV-1). The change is in the action
+    space (new measurement infrastructure), not the configuration space."""
+    ds_src, _, _, _ = make_pair("linear")
+    exhaust(ds_src)
+    # target over the SAME configuration space, different experiment
+    tgt_exp = FunctionExperiment(
+        fn=lambda c: {"latency": 0.5 * (100.0 / np.log2(c["batch"]) + 5.0 * c["cores"]) + 3.0},
+        properties=("latency",), name="new-infra-bench")
+    ds_tgt = DiscoverySpace(space=ds_src.space,
+                            actions=ActionSpace.make([tgt_exp]),
+                            store=ds_src.store)
+    res = rssc_transfer(ds_src, ds_tgt, "latency", mapping=None,
+                        rng=np.random.default_rng(0))
+    # mapping None is allowed; configs translate to themselves
+    assert [c.digest for c in res.representatives] == \
+           [c.digest for c in res.translated]
+    assert res.transferable
