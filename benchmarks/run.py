@@ -4,6 +4,7 @@
   * Fig. 6   — P(95th pctile) vs samples            (optimizers_bench)
   * Fig. 7   — incremental-sampling savings         (incremental)
   * Table VI — RSSC transfer quality                (rssc_bench)
+  * §III-D   — batched engine serial vs 4 workers   (parallel_bench)
   * §Roofline — aggregated dry-run baselines        (roofline_bench)
 
 Prints one CSV block per benchmark: ``name,us_per_call,derived``, where
@@ -30,7 +31,8 @@ def main() -> None:
     n_runs = 3 if quick else 10
     results = {}
 
-    from . import incremental, optimizers_bench, roofline_bench, rssc_bench
+    from . import (incremental, optimizers_bench, parallel_bench,
+                   roofline_bench, rssc_bench)
 
     # ---------------- Table V
     t0 = time.time()
@@ -83,6 +85,14 @@ def main() -> None:
              f"r={real.get('r')};transfer={real.get('transfer')};"
              f"best%={real.get('best%')}")
         results["real_transfer"] = real
+
+    # ---------------- parallel engine (serial vs 4 workers, same seed)
+    t0 = time.time()
+    par = parallel_bench.run_parallel_bench()
+    dt = time.time() - t0
+    _csv("parallel_engine", 1e6 * dt / max(par["trials"] * 2, 1),
+         f"speedup={par['speedup']};identical={par['identical_sample_set']}")
+    results["parallel_engine"] = par
 
     # ---------------- roofline aggregation
     t0 = time.time()

@@ -1,0 +1,9 @@
+"""Compatibility shims for optional third-party dependencies.
+
+The reproduction targets a hermetic container: everything needed to run the
+tier-1 suite must either be baked into the image or degrade gracefully.
+Modules here provide small, behavior-compatible fallbacks that are only used
+when the real dependency is absent (see ``tests/conftest.py`` and
+``repro.checkpoint.checkpoint``); with a full ``pip install -e .[test]`` the
+real libraries win.
+"""

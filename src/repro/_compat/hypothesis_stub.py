@@ -1,0 +1,261 @@
+"""A minimal, API-compatible fallback for the ``hypothesis`` library.
+
+Loaded by ``tests/conftest.py`` (as ``sys.modules['hypothesis']``) ONLY when
+the real library is not installed, so the property-based tests still collect
+and exercise their invariants offline.  It implements the subset the suite
+uses — ``given``/``settings``/``assume`` and the ``strategies`` combinators
+``integers``, ``booleans``, ``floats``, ``sampled_from``, ``just``,
+``one_of``, ``tuples``, ``lists``, ``text`` — with deterministic
+pseudo-random example generation (seeded per test) instead of the real
+library's coverage-guided search and shrinking.
+
+It is NOT hypothesis: no shrinking, no example database, no health checks.
+On failure it prints the falsifying example and re-raises the original
+error.  Install ``hypothesis`` (see ``pyproject.toml`` extras) to get the
+real engine; nothing here is imported when it is available.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import string
+import sys
+import types
+from typing import Any, Callable, Optional, Sequence
+
+__all__ = ["given", "settings", "assume", "strategies", "HealthCheck",
+           "UnsatisfiedAssumption"]
+
+_MAX_DRAW_ATTEMPTS = 8  # retries for filtered/unique draws before giving up
+
+
+class UnsatisfiedAssumption(Exception):
+    """Raised by :func:`assume` to discard the current example."""
+
+
+def assume(condition: Any) -> bool:
+    if not condition:
+        raise UnsatisfiedAssumption()
+    return True
+
+
+class HealthCheck:
+    """Placeholder namespace so ``suppress_health_check`` lists type-check."""
+
+    function_scoped_fixture = "function_scoped_fixture"
+    too_slow = "too_slow"
+    filter_too_much = "filter_too_much"
+
+    @classmethod
+    def all(cls) -> list:
+        return [cls.function_scoped_fixture, cls.too_slow, cls.filter_too_much]
+
+
+class settings:
+    """Decorator + profile registry mirroring ``hypothesis.settings``.
+
+    Only ``max_examples`` and ``deadline`` are honored (``deadline`` is
+    accepted and ignored — the stub never times examples out, which is
+    exactly the CPU-safe behavior the suite's profiles ask for).
+    """
+
+    _profiles: dict = {"default": {"max_examples": 25, "deadline": None}}
+    _current: str = "default"
+
+    def __init__(self, parent: Optional["settings"] = None, **kwargs: Any):
+        self._kwargs = dict(parent._kwargs) if isinstance(parent, settings) else {}
+        self._kwargs.update(kwargs)
+
+    def __call__(self, fn: Callable) -> Callable:
+        fn._stub_settings = dict(self._kwargs)
+        return fn
+
+    @classmethod
+    def register_profile(cls, name: str, parent: Optional["settings"] = None,
+                         **kwargs: Any) -> None:
+        base = dict(cls._profiles.get("default", {}))
+        if isinstance(parent, settings):
+            base.update(parent._kwargs)
+        base.update(kwargs)
+        cls._profiles[name] = base
+
+    @classmethod
+    def load_profile(cls, name: str) -> None:
+        if name not in cls._profiles:
+            raise KeyError(f"unknown settings profile {name!r}")
+        cls._current = name
+
+    @classmethod
+    def current(cls) -> dict:
+        return cls._profiles[cls._current]
+
+
+class SearchStrategy:
+    """A value generator.  ``draw(rnd)`` returns one example."""
+
+    def __init__(self, draw_fn: Callable[[random.Random], Any], label: str = "strategy"):
+        self._draw = draw_fn
+        self.label = label
+
+    def draw(self, rnd: random.Random) -> Any:
+        return self._draw(rnd)
+
+    def map(self, fn: Callable[[Any], Any]) -> "SearchStrategy":
+        return SearchStrategy(lambda rnd: fn(self.draw(rnd)), f"{self.label}.map")
+
+    def filter(self, pred: Callable[[Any], bool]) -> "SearchStrategy":
+        def draw(rnd: random.Random) -> Any:
+            for _ in range(_MAX_DRAW_ATTEMPTS * 16):
+                value = self.draw(rnd)
+                if pred(value):
+                    return value
+            raise UnsatisfiedAssumption(f"filter on {self.label} rejected everything")
+        return SearchStrategy(draw, f"{self.label}.filter")
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"<{self.label}>"
+
+
+def _integers(min_value: int = 0, max_value: int = 2 ** 31 - 1) -> SearchStrategy:
+    return SearchStrategy(lambda rnd: rnd.randint(min_value, max_value),
+                          f"integers({min_value},{max_value})")
+
+
+def _booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rnd: rnd.random() < 0.5, "booleans()")
+
+
+def _floats(min_value: float = 0.0, max_value: float = 1.0,
+            allow_nan: bool = False, allow_infinity: bool = False) -> SearchStrategy:
+    return SearchStrategy(lambda rnd: rnd.uniform(min_value, max_value),
+                          f"floats({min_value},{max_value})")
+
+
+def _sampled_from(elements: Sequence[Any]) -> SearchStrategy:
+    elements = list(elements)
+    if not elements:
+        raise ValueError("sampled_from requires a non-empty sequence")
+    return SearchStrategy(lambda rnd: elements[rnd.randrange(len(elements))],
+                          f"sampled_from(<{len(elements)}>)")
+
+
+def _just(value: Any) -> SearchStrategy:
+    return SearchStrategy(lambda rnd: value, "just")
+
+
+def _one_of(*strategies_: SearchStrategy) -> SearchStrategy:
+    opts = list(strategies_)
+    return SearchStrategy(lambda rnd: opts[rnd.randrange(len(opts))].draw(rnd),
+                          "one_of")
+
+
+def _tuples(*strategies_: SearchStrategy) -> SearchStrategy:
+    return SearchStrategy(lambda rnd: tuple(s.draw(rnd) for s in strategies_),
+                          "tuples")
+
+
+def _lists(elements: SearchStrategy, min_size: int = 0, max_size: int = 8,
+           unique_by: Optional[Callable[[Any], Any]] = None,
+           unique: bool = False) -> SearchStrategy:
+    if unique and unique_by is None:
+        unique_by = lambda x: x
+
+    def draw(rnd: random.Random) -> list:
+        size = rnd.randint(min_size, max_size)
+        out: list = []
+        keys: set = set()
+        attempts = 0
+        while len(out) < size and attempts < max(1, size) * _MAX_DRAW_ATTEMPTS * 4:
+            attempts += 1
+            value = elements.draw(rnd)
+            if unique_by is not None:
+                key = unique_by(value)
+                if key in keys:
+                    continue
+                keys.add(key)
+            out.append(value)
+        if len(out) < min_size:
+            raise UnsatisfiedAssumption("could not draw enough unique elements")
+        return out
+
+    return SearchStrategy(draw, f"lists(min={min_size},max={max_size})")
+
+
+def _text(alphabet: str = string.ascii_letters + string.digits,
+          min_size: int = 0, max_size: int = 16) -> SearchStrategy:
+    def draw(rnd: random.Random) -> str:
+        size = rnd.randint(min_size, max_size)
+        return "".join(rnd.choice(alphabet) for _ in range(size))
+    return SearchStrategy(draw, "text")
+
+
+def _dictionaries(keys: SearchStrategy, values: SearchStrategy,
+                  min_size: int = 0, max_size: int = 8) -> SearchStrategy:
+    pairs = _lists(_tuples(keys, values), min_size=min_size, max_size=max_size,
+                   unique_by=lambda kv: kv[0])
+    return pairs.map(dict)
+
+
+# The ``hypothesis.strategies`` facade, importable both as an attribute and
+# as a registered submodule (conftest puts it in sys.modules).
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.SearchStrategy = SearchStrategy
+strategies.integers = _integers
+strategies.booleans = _booleans
+strategies.floats = _floats
+strategies.sampled_from = _sampled_from
+strategies.just = _just
+strategies.one_of = _one_of
+strategies.tuples = _tuples
+strategies.lists = _lists
+strategies.text = _text
+strategies.dictionaries = _dictionaries
+
+
+def given(*args: Any, **strategy_kwargs: Any) -> Callable:
+    """Run the wrapped test over deterministically generated examples."""
+    if args:
+        raise TypeError("the hypothesis stub supports keyword strategies only; "
+                        "write @given(x=st.integers()) instead of @given(st.integers())")
+
+    def decorate(fn: Callable) -> Callable:
+        local = getattr(fn, "_stub_settings", {})
+
+        @functools.wraps(fn)
+        def wrapper(*wargs: Any, **wkwargs: Any) -> None:
+            conf = dict(settings.current())
+            conf.update(local)
+            max_examples = int(conf.get("max_examples", 25))
+            # Deterministic per-test stream: same examples every run.
+            rnd = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+            ran = 0
+            attempts = 0
+            while ran < max_examples and attempts < max_examples * 8:
+                attempts += 1
+                try:
+                    drawn = {k: s.draw(rnd) for k, s in strategy_kwargs.items()}
+                    fn(*wargs, **{**wkwargs, **drawn})
+                except UnsatisfiedAssumption:
+                    continue
+                except BaseException:
+                    example = {k: repr(v)[:200] for k, v in drawn.items()}
+                    print(f"Falsifying example ({fn.__qualname__}): {example}",
+                          file=sys.stderr)
+                    raise
+                ran += 1
+            if ran == 0:
+                raise UnsatisfiedAssumption(
+                    f"{fn.__qualname__}: no example satisfied the assumptions")
+
+        # Hide the strategy-supplied parameters from pytest's fixture
+        # resolution (real hypothesis rewrites the signature the same way).
+        params = [p for name, p in inspect.signature(fn).parameters.items()
+                  if name not in strategy_kwargs]
+        wrapper.__signature__ = inspect.Signature(params)
+        del wrapper.__wrapped__
+        wrapper.hypothesis_stub = True
+        return wrapper
+
+    return decorate

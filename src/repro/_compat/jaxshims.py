@@ -1,0 +1,27 @@
+"""Shims over JAX API drift, so one codebase spans jaxlib generations.
+
+* ``shard_map`` — promoted from ``jax.experimental.shard_map`` to
+  ``jax.shard_map`` in newer releases; we resolve whichever exists.
+* ``pcast`` — ``jax.lax.pcast`` exists only in releases with the
+  varying-manual-axes (vma) checker.  On older releases values inside
+  ``shard_map`` are device-varying by construction and there is nothing to
+  mark, so the shim is the identity there.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map", "pcast"]
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # pre-promotion releases
+    from jax.experimental.shard_map import shard_map  # type: ignore[no-redef]
+
+
+def pcast(x, axes, to: str = "varying"):
+    fn = getattr(jax.lax, "pcast", None)
+    if fn is None:
+        return x
+    return fn(x, axes, to=to)

@@ -1,7 +1,10 @@
 """Mesh-independent checkpointing: msgpack + zstd, async save, resharding load.
 
 Layout: a checkpoint is a directory with
-  * ``manifest.json``      — step, flat key list, shapes/dtypes, metadata
+  * ``manifest.json``      — step, flat key list, shapes/dtypes, metadata,
+    and the compression ``codec`` (``zstd`` when the ``zstandard`` package is
+    available, stdlib ``zlib`` otherwise — loaders dispatch on the manifest,
+    so checkpoints move between environments with either codec)
   * ``arrays.msgpack.zst`` — flat {path: raw bytes} (host-gathered numpy)
 
 Arrays are stored UNSHARDED (gathered to host), keyed by tree path — so a
@@ -27,9 +30,36 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+import zlib
 
-__all__ = ["save_checkpoint", "load_checkpoint", "CheckpointManager"]
+try:
+    import zstandard
+except ModuleNotFoundError:
+    zstandard = None
+
+__all__ = ["save_checkpoint", "load_checkpoint", "CheckpointManager",
+           "compress_payload", "decompress_payload"]
+
+_ARRAYS_FILE = "arrays.msgpack.zst"
+
+
+def compress_payload(raw: bytes) -> "tuple[bytes, str]":
+    """Compress a checkpoint payload; returns (blob, codec name)."""
+    if zstandard is not None:
+        return zstandard.ZstdCompressor(level=3).compress(raw), "zstd"
+    return zlib.compress(raw, level=6), "zlib"
+
+
+def decompress_payload(blob: bytes, codec: str = "zstd") -> bytes:
+    """Invert :func:`compress_payload` given the manifest's codec tag."""
+    if codec == "zstd":
+        if zstandard is None:
+            raise ModuleNotFoundError(
+                "checkpoint was written with zstd; install 'zstandard' to load it")
+        return zstandard.ZstdDecompressor().decompress(blob)
+    if codec == "zlib":
+        return zlib.decompress(blob)
+    raise ValueError(f"unknown checkpoint codec {codec!r}")
 
 
 def _flatten(tree) -> dict:
@@ -65,8 +95,9 @@ def save_checkpoint(directory: str, step: int, tree, metadata: Optional[dict] = 
                                    "dtype": str(arr.dtype)}
         payload[key] = arr.tobytes()
     raw = msgpack.packb(payload, use_bin_type=True)
-    with open(os.path.join(tmp, "arrays.msgpack.zst"), "wb") as f:
-        f.write(zstandard.ZstdCompressor(level=3).compress(raw))
+    blob, manifest["codec"] = compress_payload(raw)
+    with open(os.path.join(tmp, _ARRAYS_FILE), "wb") as f:
+        f.write(blob)
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
     if os.path.exists(path):
@@ -85,8 +116,8 @@ def load_checkpoint(directory: str, template, step: Optional[int] = None,
     path = os.path.join(directory, f"step_{step:08d}")
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
-    with open(os.path.join(path, "arrays.msgpack.zst"), "rb") as f:
-        raw = zstandard.ZstdDecompressor().decompress(f.read())
+    with open(os.path.join(path, _ARRAYS_FILE), "rb") as f:
+        raw = decompress_payload(f.read(), manifest.get("codec", "zstd"))
     payload = msgpack.unpackb(raw, raw=False)
     flat = {}
     for key, info in manifest["arrays"].items():

@@ -18,6 +18,11 @@ TRACE characteristics, and where they live:
   (:meth:`timeseries`).
 * **Common Context** — all values go through the shared store in the generic
   schema; nothing is kept privately on the object (operations are stateless).
+  :meth:`sample_batch` exploits this: because the store is the only state,
+  experiment execution fans out over a worker pool — and over independent
+  worker *processes* sharing one database (§III-D) — with per-cell
+  measurement claims guaranteeing each (configuration, experiment) is
+  measured exactly once no matter how many investigators race for it.
 * **Reconcilable** — data written by *another* space for the same
   configuration is invisible here until *this* space's :meth:`sample`
   generates that configuration; at that point the stored values are reused
@@ -27,7 +32,11 @@ TRACE characteristics, and where they live:
 
 from __future__ import annotations
 
+import os
+import threading
 import uuid
+from concurrent.futures import Executor, ThreadPoolExecutor
+from dataclasses import dataclass
 from typing import Iterator, Mapping, Optional, Sequence
 
 import numpy as np
@@ -37,7 +46,26 @@ from .entities import Configuration, PropertyValue, Sample, content_hash
 from .space import ProbabilitySpace
 from .store import RecordEntry, SampleStore
 
-__all__ = ["DiscoverySpace"]
+__all__ = ["DiscoverySpace", "BatchResult"]
+
+
+@dataclass
+class BatchResult:
+    """Outcome of one slot of a :meth:`DiscoverySpace.sample_batch` call.
+
+    ``action`` is the sampling-record tag (``measured`` / ``reused`` /
+    ``predicted`` / ``failed``); ``sample`` is None iff the measurement
+    failed, in which case ``error`` holds the :class:`MeasurementError`.
+    """
+
+    configuration: Configuration
+    sample: Optional[Sample]
+    action: str
+    error: Optional[MeasurementError] = None
+
+    @property
+    def ok(self) -> bool:
+        return self.sample is not None
 
 
 class DiscoverySpace:
@@ -49,10 +77,16 @@ class DiscoverySpace:
         actions: ActionSpace,
         store: Optional[SampleStore] = None,
         space_id: Optional[str] = None,
+        claim_timeout_s: float = 60.0,
     ):
         self.space = space
         self.actions = actions
         self.store = store if store is not None else SampleStore(":memory:")
+        # How long a concurrent investigator's in-flight measurement of the
+        # same cell is waited for before its claim is presumed abandoned.
+        # Size this to the action space: it should exceed the slowest
+        # experiment's expected duration (cloud deployments: minutes).
+        self.claim_timeout_s = claim_timeout_s
         # Identity: the space is defined by (Ω, A).  Two DiscoverySpace objects
         # over the same store with the same (Ω, A) are views of the same study.
         self.space_id = space_id or content_hash(
@@ -82,50 +116,157 @@ class DiscoverySpace:
         if configuration is None:
             rng = rng if rng is not None else np.random.default_rng()
             configuration = self.space.sample_configuration(rng)
-        # Encapsulated: reject configurations outside Ω.
-        self.space.validate(configuration)
-        digest = self.store.put_configuration(configuration)
+        result = self.sample_batch([configuration], operation_id=operation_id)[0]
+        if not result.ok:
+            raise result.error
+        return result.sample
 
-        measured_any = False
-        reused_any = False
-        predicted_any = False
-        try:
-            for exp in self.actions.experiments:
-                if self.store.has_values(digest, exp.identifier):
-                    reused_any = True
-                    continue
-                if exp.deferred:
-                    # apply-on-demand (A*_pred semantics, paper §IV-4)
-                    continue
-                values = exp.measure(configuration)
-                self.store.put_values(
-                    digest,
-                    [
-                        PropertyValue(
-                            name=k,
-                            value=float(v),
-                            experiment_id=exp.identifier,
-                            predicted=exp.predicted,
+    def sample_batch(
+        self,
+        configurations: Sequence[Configuration],
+        operation_id: str = "adhoc",
+        workers: int = 1,
+        executor: Optional[Executor] = None,
+    ) -> list:
+        """Sample a batch of points, fanning experiment execution out over a
+        worker pool (paper §III-D: distributed investigation through the
+        shared sample store).
+
+        Semantics are *serial-equivalent*: the reconciled sample set and the
+        sampling record are identical to sampling the same configurations one
+        by one — duplicates within the batch are measured once and recorded
+        as ``reused`` thereafter, reuse/measure decisions go through the
+        common context, and record events are appended in submission order
+        (atomic per-operation ``seq`` allocation makes this safe alongside
+        concurrent writers in other threads or processes).
+
+        Only experiment execution is parallel: each distinct configuration's
+        measure+store work is one task on ``executor`` (or a transient
+        :class:`~concurrent.futures.ThreadPoolExecutor` with ``workers``
+        threads).  Failed measurements do not abort the batch; they yield a
+        :class:`BatchResult` with ``action='failed'`` carrying the error.
+        """
+        configs = list(configurations)
+        if not configs:
+            return []
+        # Encapsulated: reject configurations outside Ω before any work runs.
+        for config in configs:
+            self.space.validate(config)
+        digests = [self.store.put_configuration(c) for c in configs]
+
+        # Duplicates measure once: the first slot of each digest does the
+        # experiment work, later slots transparently reuse (§III-C5).
+        first_slot: dict = {}
+        for i, digest in enumerate(digests):
+            first_slot.setdefault(digest, i)
+        unique = [i for i, digest in enumerate(digests) if first_slot[digest] == i]
+
+        owner = f"{os.getpid()}"
+
+        def run_one(i: int):
+            config, digest = configs[i], digests[i]
+            measured_any = reused_any = predicted_any = False
+            try:
+                for exp in self.actions.experiments:
+                    if self.store.has_values(digest, exp.identifier):
+                        reused_any = True
+                        continue
+                    if exp.deferred:
+                        # apply-on-demand (A*_pred semantics, paper §IV-4)
+                        continue
+                    who = f"{owner}:{threading.get_ident()}"
+                    claimed = self.store.claim_experiment(digest, exp.identifier, who)
+                    while not claimed:
+                        # Another investigator (thread or process) is already
+                        # measuring this cell: wait and reuse their result —
+                        # the measure-once guarantee across concurrent
+                        # writers.  Measure ONLY after winning a claim.
+                        if self.store.wait_for_values(
+                                digest, exp.identifier,
+                                timeout_s=self.claim_timeout_s):
+                            break
+                        if self.store.claim_exists(digest, exp.identifier):
+                            # timed out on a still-standing claim: the owner
+                            # is presumed dead — exactly one waiter steals it
+                            claimed = self.store.steal_claim(
+                                digest, exp.identifier, who,
+                                older_than_s=self.claim_timeout_s)
+                        else:
+                            # owner failed and released: race for the re-claim
+                            claimed = self.store.claim_experiment(
+                                digest, exp.identifier, who)
+                    if not claimed:
+                        reused_any = True
+                        continue
+                    try:
+                        # the claim is held until values durably land: any
+                        # failure in measuring, converting, or storing them
+                        # must free the cell so waiters take over instead of
+                        # stalling until their timeout
+                        values = exp.measure(config)
+                        self.store.put_values(
+                            digest,
+                            [
+                                PropertyValue(
+                                    name=k,
+                                    value=float(v),
+                                    experiment_id=exp.identifier,
+                                    predicted=exp.predicted,
+                                )
+                                for k, v in values.items()
+                            ],
                         )
-                        for k, v in values.items()
-                    ],
-                )
-                if exp.predicted:
-                    predicted_any = True
-                else:
-                    measured_any = True
-        except MeasurementError:
-            self.store.append_record(self.space_id, operation_id, digest, "failed")
-            raise
+                    except BaseException:
+                        self.store.release_claim(digest, exp.identifier)
+                        raise
+                    if exp.predicted:
+                        predicted_any = True
+                    else:
+                        measured_any = True
+            except MeasurementError as err:
+                return "failed", err
+            except BaseException as err:
+                # unexpected (an experiment bug, a store error): poison only
+                # this slot — the batch's other slots keep their records
+                return "crashed", err
+            if measured_any:
+                return "measured", None
+            if predicted_any and not reused_any:
+                return "predicted", None
+            return "reused", None
 
-        if measured_any:
-            action = "measured"
-        elif predicted_any and not reused_any:
-            action = "predicted"
+        if executor is not None:
+            outcomes = list(executor.map(run_one, unique))
+        elif workers > 1 and len(unique) > 1:
+            with ThreadPoolExecutor(max_workers=workers) as pool:
+                outcomes = list(pool.map(run_one, unique))
         else:
-            action = "reused"
-        self.store.append_record(self.space_id, operation_id, digest, action)
-        return self._reconstruct(digest, configuration)
+            outcomes = [run_one(i) for i in unique]
+        by_digest = {digests[i]: out for i, out in zip(unique, outcomes)}
+
+        # Time-Resolved: record events in submission order, one transaction.
+        # Like the serial loop, a slot that crashed with a non-measurement
+        # error gets no record; every other slot's event still lands before
+        # the error propagates (its values are already durable).
+        results, events, recorded = [], [], []
+        crash: Optional[BaseException] = None
+        for i, (config, digest) in enumerate(zip(configs, digests)):
+            action, err = by_digest[digest]
+            if action == "crashed":
+                crash = crash if crash is not None else err
+                continue
+            if err is None and first_slot[digest] != i:
+                action = "reused"
+            events.append((digest, action))
+            recorded.append(digest)
+            results.append(BatchResult(config, None, action, err))
+        self.store.append_records(self.space_id, operation_id, events)
+        if crash is not None:
+            raise crash
+        for result, digest in zip(results, recorded):
+            if result.error is None:
+                result.sample = self._reconstruct(digest, result.configuration)
+        return results
 
     # -------------------------------------------------------------------- read
 

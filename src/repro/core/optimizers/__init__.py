@@ -10,9 +10,12 @@ distribution (paper §V-B1).
 
 All optimizers interact with a study exclusively through
 :class:`~repro.core.optimizers.base.SearchAdapter` — the analogue of the
-paper's Ray Tune wrapper: they see ``suggest``/``observe`` over (Ω, P) and
-never touch experiments directly, which is what makes the framework
-workload-agnostic and lets multiple optimizers share one sample store.
+paper's Ray Tune wrapper — via the batched ask/tell protocol: ``ask(n)``
+proposes a candidate batch over (Ω, P), the adapter evaluates it through
+``DiscoverySpace.sample_batch`` (fanning experiments over a worker pool) and
+tells the trials back.  Optimizers never touch experiments directly, which
+is what makes the framework workload-agnostic and lets multiple optimizers —
+in one process or many — share one sample store (§III-D).
 """
 
 from .base import OptimizerRun, SearchAdapter, Trial, run_optimizer, hypergeom_p_found

@@ -7,14 +7,28 @@ the paper's stopping rule (§V-B1: stop when the incumbent has not improved
 for five consecutive trials) and reports, per trial, whether the sample was
 *measured* or transparently *reused* from the common context — the raw data
 behind the paper's Fig. 7 incremental-sampling evaluation.
+
+Ask/tell protocol
+-----------------
+
+Optimizers implement ``ask(adapter, rng, n) -> [Configuration]``: propose up
+to ``n`` distinct unsampled candidates *without* evaluating them.  Evaluation
+is the driver's job: :meth:`SearchAdapter.evaluate_batch` routes the batch
+through ``DiscoverySpace.sample_batch`` (fanning experiments over a worker
+pool) and *tells* the resulting :class:`Trial` list back into the adapter's
+history, which is the only state optimizers observe.  ``ask`` with ``n=1``
+is the classic suggest step — :meth:`Optimizer.suggest` remains as that thin
+wrapper, and :func:`run_optimizer` with ``batch_size=1`` reproduces the
+serial trajectory draw-for-draw.
 """
 
 from __future__ import annotations
 
 import abc
 import math
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
-from typing import Callable, Optional, Sequence
+from typing import Callable, List, Optional, Sequence
 
 import numpy as np
 
@@ -41,6 +55,7 @@ class OptimizerRun:
     mode: str
     trials: list = field(default_factory=list)
     operation_id: str = ""
+    batch_size: int = 1
 
     @property
     def num_trials(self) -> int:
@@ -83,9 +98,13 @@ class OptimizerRun:
 class SearchAdapter:
     """The 'Ray Tune wrapper' of §III-D: optimizer-facing view of a study.
 
-    Optimizers call :meth:`evaluate` with a configuration; the adapter routes
-    it through ``DiscoverySpace.sample`` (so all TRACE bookkeeping happens),
-    extracts the target metric, and translates minimize/maximize.
+    The driver asks an optimizer for a candidate batch, evaluates it here
+    (:meth:`evaluate_batch` routes everything through
+    ``DiscoverySpace.sample_batch`` so all TRACE bookkeeping happens — with
+    ``workers > 1`` the experiments run on a thread pool), and the resulting
+    trials are *told* back into :attr:`trials`, the only optimizer-visible
+    state.  :meth:`evaluate` is the batch-of-one convenience used by legacy
+    serial loops.
     """
 
     def __init__(self, ds: DiscoverySpace, metric: str, mode: str = "min",
@@ -104,21 +123,45 @@ class SearchAdapter:
     def space(self):
         return self.ds.space
 
+    # -- ask/tell -----------------------------------------------------------
+
+    def tell(self, trials: Sequence[Trial]) -> None:
+        """Record externally-evaluated trials into the optimizer-visible
+        history (the 'tell' half of the protocol)."""
+        self.trials.extend(trials)
+
+    def evaluate_batch(self, configurations: Sequence[Configuration],
+                       workers: int = 1, executor=None) -> List[Optional[float]]:
+        """Evaluate a candidate batch and tell the results.
+
+        Experiments fan out over ``workers`` threads (or a caller-owned
+        ``executor``, reused across batches to avoid per-batch pool setup);
+        trials are appended in submission order so the history (and
+        therefore every subsequent ``ask``) is deterministic regardless of
+        completion order.  Failed measurements become ``action='failed'``
+        trials with value None.
+        """
+        results = self.ds.sample_batch(
+            configurations, operation_id=self.operation_id, workers=workers,
+            executor=executor)
+        batch: list = []
+        for result in results:
+            seq = len(self.trials) + len(batch)
+            if not result.ok:
+                batch.append(Trial(result.configuration, None, "failed", seq))
+                continue
+            if not result.sample.has(self.metric):
+                raise KeyError(
+                    f"metric {self.metric!r} not among action-space properties "
+                    f"{self.ds.actions.observed_properties}"
+                )
+            batch.append(Trial(result.configuration, result.sample.value(self.metric),
+                               result.action, seq))
+        self.tell(batch)
+        return [t.value for t in batch]
+
     def evaluate(self, configuration: Configuration) -> Optional[float]:
-        try:
-            sample = self.ds.sample(configuration, operation_id=self.operation_id)
-        except MeasurementError:
-            self.trials.append(Trial(configuration, None, "failed", len(self.trials)))
-            return None
-        record = self.ds.timeseries(self.operation_id)[-1]
-        if not sample.has(self.metric):
-            raise KeyError(
-                f"metric {self.metric!r} not among action-space properties "
-                f"{self.ds.actions.observed_properties}"
-            )
-        value = sample.value(self.metric)
-        self.trials.append(Trial(configuration, value, record.action, len(self.trials)))
-        return value
+        return self.evaluate_batch([configuration])[0]
 
     def seen_digests(self) -> set:
         return {t.configuration.digest for t in self.trials}
@@ -129,7 +172,21 @@ class SearchAdapter:
 
 
 class Optimizer(abc.ABC):
-    """Suggest-only optimizer interface (observation happens via history)."""
+    """Ask-only optimizer interface (observation happens via history).
+
+    Implementations propose candidate *batches*; they never evaluate.  The
+    contract for :meth:`ask`:
+
+    * return up to ``n`` configurations, all distinct and none already in the
+      adapter's history (an exhausted finite space returns fewer, possibly
+      ``[]`` which stops the run);
+    * with ``n=1`` the rng consumption must match the classic one-step
+      suggest exactly, so serial trajectories are reproducible;
+    * model state must come from ``adapter.trials`` only — pending proposals
+      within the batch are accounted for by excluding them from the pool, not
+      by mutating shared state (the paper's multi-worker setting: another
+      process may append to the store between ask and tell).
+    """
 
     name = "optimizer"
 
@@ -137,18 +194,28 @@ class Optimizer(abc.ABC):
         self.seed = seed
 
     @abc.abstractmethod
+    def ask(self, adapter: SearchAdapter, rng: np.random.Generator,
+            n: int = 1) -> List[Configuration]:
+        """Propose up to ``n`` next configurations ([] => space exhausted)."""
+
     def suggest(self, adapter: SearchAdapter, rng: np.random.Generator) -> Optional[Configuration]:
-        """Propose the next configuration (None => space exhausted)."""
+        """Single-candidate convenience wrapper over :meth:`ask`."""
+        batch = self.ask(adapter, rng, n=1)
+        return batch[0] if batch else None
 
     # -- helpers shared by concrete optimizers ---------------------------------
 
     @staticmethod
     def _unseen_candidates(adapter: SearchAdapter, rng: np.random.Generator,
-                           max_candidates: int = 512) -> list:
+                           max_candidates: int = 512,
+                           exclude: Optional[set] = None) -> list:
         """Candidate pool: unsampled configurations of a finite space (or
-        random draws for continuous spaces)."""
+        random draws for continuous spaces).  ``exclude`` removes candidates
+        already proposed earlier in the current batch."""
         space = adapter.space
         seen = adapter.seen_digests()
+        if exclude:
+            seen |= exclude
         if space.finite and space.size <= 4096:
             pool = [c for c in space.all_configurations() if c.digest not in seen]
             if len(pool) > max_candidates:
@@ -173,6 +240,25 @@ class Optimizer(abc.ABC):
         y = np.array([adapter.signed(t.value) for t in ok])
         return X, y
 
+    @staticmethod
+    def _top_n(candidates: list, score: np.ndarray, n: int) -> list:
+        """The n best-scoring candidates, in score order.  Stable on ties so
+        ``_top_n(c, s, 1)[0] == c[np.argmax(s)]`` exactly."""
+        order = np.argsort(-score, kind="stable")
+        return [candidates[i] for i in order[:n]]
+
+    @staticmethod
+    def _random_n(pool: Sequence[Configuration], rng: np.random.Generator,
+                  n: int) -> List[Configuration]:
+        """Up to n draws without replacement, one ``rng.integers`` call per
+        pick — the shared init-phase sampler, draw-for-draw identical to the
+        classic single-suggest draw at n=1."""
+        pool = list(pool)
+        out: List[Configuration] = []
+        for _ in range(min(n, len(pool))):
+            out.append(pool.pop(int(rng.integers(len(pool)))))
+        return out
+
 
 def run_optimizer(
     optimizer: Optimizer,
@@ -183,39 +269,60 @@ def run_optimizer(
     patience: int = 5,
     rng: Optional[np.random.Generator] = None,
     min_trials: int = 1,
+    batch_size: int = 1,
+    workers: int = 1,
 ) -> OptimizerRun:
     """Run one optimization operation on a Discovery Space.
 
+    Each step asks the optimizer for a ``batch_size`` candidate batch and
+    evaluates it with ``workers`` parallel experiment workers — the batched
+    ask/tell engine (paper §III-D's distributed investigation; with the
+    defaults this is the classic serial loop, draw-for-draw).
+
     Stopping rule follows the paper (§V-B1): halt when the incumbent best has
     not improved for ``patience`` consecutive trials (or after ``max_trials``,
-    or when a finite space is exhausted).
+    or when the space is exhausted).  Trials within a batch are assessed in
+    submission order, so the stopping decision is identical for serial and
+    parallel execution of the same proposals.
     """
+    if batch_size < 1:
+        raise ValueError(f"batch_size must be >= 1, got {batch_size}")
     rng = rng if rng is not None else np.random.default_rng(optimizer.seed)
     adapter = SearchAdapter(ds, metric, mode, optimizer_name=optimizer.name)
     best: Optional[float] = None
     stall = 0
-    while len(adapter.trials) < max_trials:
-        config = optimizer.suggest(adapter, rng)
-        if config is None:
-            break
-        value = adapter.evaluate(config)
-        if value is not None:
-            sv = adapter.signed(value)
-            if best is None or sv < best - 1e-12:
-                best = sv
-                stall = 0
-            else:
-                stall += 1
-        else:
-            stall += 1
-        if len(adapter.trials) >= min_trials and stall >= patience:
-            break
+    stop = False
+    # one worker pool for the whole run, not one per batch
+    pool = ThreadPoolExecutor(max_workers=workers) if workers > 1 else None
+    try:
+        while not stop and len(adapter.trials) < max_trials:
+            n = min(batch_size, max_trials - len(adapter.trials))
+            batch = optimizer.ask(adapter, rng, n=n)
+            if not batch:
+                break
+            values = adapter.evaluate_batch(batch, executor=pool)
+            for value in values:
+                if value is not None:
+                    sv = adapter.signed(value)
+                    if best is None or sv < best - 1e-12:
+                        best = sv
+                        stall = 0
+                    else:
+                        stall += 1
+                else:
+                    stall += 1
+                if len(adapter.trials) >= min_trials and stall >= patience:
+                    stop = True
+    finally:
+        if pool is not None:
+            pool.shutdown(wait=False)
     return OptimizerRun(
         optimizer=optimizer.name,
         metric=metric,
         mode=mode,
         trials=adapter.trials,
         operation_id=adapter.operation_id,
+        batch_size=batch_size,
     )
 
 

@@ -7,7 +7,7 @@ acquisition maximized over the pool of unsampled configurations.
 
 from __future__ import annotations
 
-from typing import Optional
+from typing import List, Optional
 
 import numpy as np
 from scipy.linalg import cho_factor, cho_solve
@@ -52,15 +52,18 @@ class GPBayesOpt(Optimizer):
         var = np.clip(1.0 - np.einsum("ij,ji->i", Ks, v), 1e-12, None)
         return mean * sd_y + mu_y, np.sqrt(var) * sd_y
 
-    # -- suggestion ---------------------------------------------------------------
+    # -- proposal -----------------------------------------------------------------
 
-    def suggest(self, adapter: SearchAdapter, rng: np.random.Generator) -> Optional[Configuration]:
+    def ask(self, adapter: SearchAdapter, rng: np.random.Generator,
+            n: int = 1) -> List[Configuration]:
+        """Top-n expected improvement over one GP fit (the model only changes
+        on tell, so one posterior serves the whole batch)."""
         candidates = self._unseen_candidates(adapter, rng)
         if not candidates:
-            return None
+            return []
         X, y = self._history_arrays(adapter)
         if len(y) < self.n_initial:
-            return candidates[int(rng.integers(len(candidates)))]
+            return self._random_n(candidates, rng, n)
 
         Xc = np.stack([adapter.space.encode(c) for c in candidates])
         mean, std = self._fit_predict(X, y, Xc)
@@ -68,4 +71,4 @@ class GPBayesOpt(Optimizer):
         # expected improvement for minimization
         z = (best - self.xi - mean) / std
         ei = (best - self.xi - mean) * norm.cdf(z) + std * norm.pdf(z)
-        return candidates[int(np.argmax(ei))]
+        return self._top_n(candidates, ei, n)

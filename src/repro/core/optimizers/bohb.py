@@ -16,7 +16,7 @@ budget)``.
 from __future__ import annotations
 
 import math
-from typing import Callable, Optional
+from typing import Callable, List, Optional
 
 import numpy as np
 
@@ -39,14 +39,27 @@ class BOHB(TPE):
         self.max_budget = max_budget
         self.random_fraction = random_fraction
 
-    def suggest(self, adapter: SearchAdapter, rng: np.random.Generator) -> Optional[Configuration]:
-        # BOHB interleaves random configurations for theoretical guarantees.
-        if rng.uniform() < self.random_fraction:
-            candidates = self._unseen_candidates(adapter, rng)
-            if not candidates:
-                return None
-            return candidates[int(rng.integers(len(candidates)))]
-        return super().suggest(adapter, rng)
+    def ask(self, adapter: SearchAdapter, rng: np.random.Generator,
+            n: int = 1, exclude: Optional[set] = None) -> List[Configuration]:
+        # BOHB interleaves random configurations for theoretical guarantees —
+        # per batch *slot*, so a batch mixes model and random picks in the
+        # same proportion as the serial loop (and draw-for-draw at n=1).
+        out: List[Configuration] = []
+        exclude = set(exclude) if exclude else set()
+        for _ in range(n):
+            if rng.uniform() < self.random_fraction:
+                candidates = self._unseen_candidates(adapter, rng, exclude=exclude)
+                if not candidates:
+                    break
+                pick = candidates[int(rng.integers(len(candidates)))]
+            else:
+                model = super().ask(adapter, rng, n=1, exclude=exclude)
+                if not model:
+                    break
+                pick = model[0]
+            out.append(pick)
+            exclude.add(pick.digest)
+        return out
 
     # -- true multi-fidelity loop ------------------------------------------------
 

@@ -2,7 +2,7 @@
 
 from __future__ import annotations
 
-from typing import Optional
+from typing import List
 
 import numpy as np
 
@@ -15,16 +15,23 @@ __all__ = ["RandomSearch"]
 class RandomSearch(Optimizer):
     name = "random"
 
-    def suggest(self, adapter: SearchAdapter, rng: np.random.Generator) -> Optional[Configuration]:
+    def ask(self, adapter: SearchAdapter, rng: np.random.Generator,
+            n: int = 1) -> List[Configuration]:
         space = adapter.space
         seen = adapter.seen_digests()
         if space.finite and space.size <= 65536:
             pool = [c for c in space.all_configurations() if c.digest not in seen]
-            if not pool:
-                return None
-            return pool[int(rng.integers(len(pool)))]
-        for _ in range(1024):
-            c = space.sample_configuration(rng)
-            if c.digest not in seen:
-                return c
-        return None
+            return self._random_n(pool, rng, n)
+        # continuous / huge spaces: rejection-sample the batch
+        out: List[Configuration] = []
+        exclude: set = set()
+        for _ in range(n):
+            for _ in range(1024):
+                c = space.sample_configuration(rng)
+                if c.digest not in seen and c.digest not in exclude:
+                    out.append(c)
+                    exclude.add(c.digest)
+                    break
+            else:
+                break
+        return out

@@ -8,7 +8,7 @@ maximizes l(x)/g(x).
 
 from __future__ import annotations
 
-from typing import Optional
+from typing import List, Optional
 
 import numpy as np
 
@@ -71,13 +71,17 @@ class TPE(Optimizer):
         self.gamma = gamma
         self.bandwidth = bandwidth
 
-    def suggest(self, adapter: SearchAdapter, rng: np.random.Generator) -> Optional[Configuration]:
-        candidates = self._unseen_candidates(adapter, rng)
+    def ask(self, adapter: SearchAdapter, rng: np.random.Generator,
+            n: int = 1, exclude: Optional[set] = None) -> List[Configuration]:
+        """Propose the batch maximizing l(x)/g(x) (top-n of one scored pool;
+        the model only updates on tell, so scoring once per ask is exact).
+        ``exclude`` lets BOHB thread its interleaved batch picks through."""
+        candidates = self._unseen_candidates(adapter, rng, exclude=exclude)
         if not candidates:
-            return None
+            return []
         ok = [t for t in adapter.trials if t.value is not None]
         if len(ok) < self.n_initial:
-            return candidates[int(rng.integers(len(candidates)))]
+            return self._random_n(candidates, rng, n)
 
         values = np.array([adapter.signed(t.value) for t in ok])
         order = np.argsort(values)
@@ -85,4 +89,4 @@ class TPE(Optimizer):
         good = [ok[i].configuration for i in order[:n_good]]
         bad = [ok[i].configuration for i in order[n_good:]] or good
         score = tpe_score(adapter.space, good, bad, candidates, self.bandwidth)
-        return candidates[int(np.argmax(score))]
+        return self._top_n(candidates, score, n)

@@ -6,7 +6,9 @@ Pipeline:
   ② cluster A's samples on the properties to transfer (silhouette k-means) and
     take cluster representatives → the representative sub-space {e}_a;
   ③ translate {e}_a through the mapping → {e}_a*;
-  ④ *measure* {e}_a* in A* (real experiments — the only sampling cost);
+  ④ *measure* {e}_a* in A* (real experiments — the only sampling cost;
+    fanned out over ``workers`` parallel experiment workers via
+    ``DiscoverySpace.sample_batch``);
   ⑤ apply the transfer criteria (linear fit, r > 0.7, p < 0.01);
   ⑥/⑦ if met, install the fitted line as a surrogate predictor experiment,
     producing a new Discovery Space A*_pred (provenance preserved);
@@ -70,11 +72,15 @@ def rssc_transfer(
     rng: Optional[np.random.Generator] = None,
     top_k: int = 5,
     predict_remaining: bool = True,
+    workers: int = 1,
 ) -> RSSCResult:
     """Run the full RSSC procedure from source to target Discovery Space.
 
     ``selection`` ∈ {"clustering", "top5", "linspace"} — the paper's method
-    and its two baselines (§V-B2).
+    and its two baselines (§V-B2).  ``workers`` parallelizes the target-space
+    measurements of step ④ (and the step-⑧ surrogate sweep): representative
+    measurement is the only real sampling cost of the procedure, so that is
+    where the batch engine pays off.
     """
     rng = rng if rng is not None else np.random.default_rng(0)
     mapping = dict(mapping or {})
@@ -101,21 +107,19 @@ def rssc_transfer(
     # ③ translate to A*
     translated = [source.space.translate(c, mapping) for c in reps]
 
-    # ④ measure the representative sub-space in A*
+    # ④ measure the representative sub-space in A* (batched, parallel)
     op = target.begin_operation("rssc", {"property": property_name,
                                          "selection": selection})
+    results = target.sample_batch(translated, operation_id=op, workers=workers)
     target_values = []
     kept_src, kept_tgt, kept_src_vals = [], [], []
     n_measured = 0
-    for src_c, tgt_c, sv in zip(reps, translated, source_values):
-        try:
-            s = target.sample(tgt_c, operation_id=op)
-        except MeasurementError:
+    for src_c, tgt_c, sv, result in zip(reps, translated, source_values, results):
+        if not result.ok:
             continue
-        record = target.timeseries(op)[-1]
-        if record.action == "measured":
+        if result.action == "measured":
             n_measured += 1
-        target_values.append(s.value(property_name))
+        target_values.append(result.sample.value(property_name))
         kept_src.append(src_c)
         kept_tgt.append(tgt_c)
         kept_src_vals.append(sv)
@@ -142,13 +146,13 @@ def rssc_transfer(
         )
         predicted_space = target.with_predictor(surrogate)
         if predict_remaining and target.space.finite:
-            # ⑧ sweep predictions over all not-yet-sampled points
+            # ⑧ sweep predictions over all not-yet-sampled points (batched;
+            # failed predictions are recorded and skipped, as in the serial
+            # sweep)
             pred_op = predicted_space.begin_operation("rssc-predict")
-            for config in list(predicted_space.remaining_configurations()):
-                try:
-                    predicted_space.sample(config, operation_id=pred_op)
-                except MeasurementError:
-                    continue
+            predicted_space.sample_batch(
+                list(predicted_space.remaining_configurations()),
+                operation_id=pred_op, workers=workers)
 
     return RSSCResult(
         property_name=property_name,

@@ -17,6 +17,22 @@ Discovery Space:
 WAL mode makes the store safe for concurrent access by multiple processes —
 the "distributed shared sample store" of paper §III-D (the paper used a SQL
 database; so do we).
+
+Concurrent writers
+------------------
+
+The store is written to from worker threads (``DiscoverySpace.sample_batch``)
+and from independent worker processes sharing one database file.  Two
+invariants make that safe:
+
+* every statement runs — and its result rows are fully fetched — while
+  holding the connection (a per-thread connection for file-backed stores, a
+  single lock-guarded connection for ``:memory:``), so cursors never escape
+  to racing threads;
+* per-operation sequence numbers are allocated *inside* the insert statement
+  (``INSERT ... SELECT COALESCE(MAX(seq),-1)+1``), which executes atomically
+  under SQLite's single-writer lock: concurrent appenders get gapless,
+  non-duplicated ``seq`` values with no read-modify-write window.
 """
 
 from __future__ import annotations
@@ -26,6 +42,7 @@ import os
 import sqlite3
 import threading
 import time
+from contextlib import contextmanager
 from dataclasses import dataclass
 from typing import Any, Iterable, Mapping, Optional, Sequence
 
@@ -72,7 +89,23 @@ CREATE TABLE IF NOT EXISTS records (
     created_at    REAL NOT NULL
 );
 CREATE INDEX IF NOT EXISTS rec_space ON records(space_id, operation_id, seq);
+CREATE TABLE IF NOT EXISTS value_claims (
+    config_digest TEXT NOT NULL,
+    experiment_id TEXT NOT NULL,
+    owner         TEXT NOT NULL,
+    created_at    REAL NOT NULL,
+    PRIMARY KEY (config_digest, experiment_id)
+);
 """
+
+# Allocates the next per-operation sequence number and inserts the record in
+# ONE statement: atomic under SQLite's writer lock, so concurrent appenders
+# (threads or processes) can never observe the same MAX(seq).
+_APPEND_SQL = (
+    "INSERT INTO records(space_id, operation_id, seq, config_digest, action, created_at)"
+    " SELECT ?, ?, COALESCE(MAX(seq), -1) + 1, ?, ?, ?"
+    " FROM records WHERE space_id=? AND operation_id=?"
+)
 
 
 @dataclass(frozen=True)
@@ -94,43 +127,72 @@ class SampleStore:
         self.path = path
         self._local = threading.local()
         self._memory_conn: Optional[sqlite3.Connection] = None
+        self._memory_lock = threading.Lock()
         if path != ":memory:":
             d = os.path.dirname(os.path.abspath(path))
             os.makedirs(d, exist_ok=True)
-        conn = self._connect()
-        with conn:
+        with self._conn() as conn:
             conn.executescript(_SCHEMA)
 
     # -- connection management ------------------------------------------------
 
-    def _connect(self) -> sqlite3.Connection:
+    @contextmanager
+    def _conn(self):
+        """Yield a connection that is exclusively ours for the duration.
+
+        ``:memory:`` stores share one connection across threads, serialized
+        by a lock; file-backed stores get one connection per thread (SQLite
+        WAL serializes writers itself).  All statement execution AND row
+        fetching must happen inside this context.
+        """
         if self.path == ":memory:":
-            # a single shared connection (threads serialize on a lock)
-            if self._memory_conn is None:
-                self._memory_conn = sqlite3.connect(
-                    ":memory:", check_same_thread=False, isolation_level=None
-                )
-                self._memory_lock = threading.Lock()
-            return self._memory_conn
+            with self._memory_lock:
+                if self._memory_conn is None:
+                    self._memory_conn = sqlite3.connect(
+                        ":memory:", check_same_thread=False, isolation_level=None
+                    )
+                yield self._memory_conn
+            return
         conn = getattr(self._local, "conn", None)
         if conn is None:
             conn = sqlite3.connect(self.path, timeout=60.0, isolation_level=None)
             conn.execute("PRAGMA journal_mode=WAL")
             conn.execute("PRAGMA synchronous=NORMAL")
+            conn.execute("PRAGMA busy_timeout=60000")
             self._local.conn = conn
-        return conn
+        yield conn
 
-    def _execute(self, sql: str, params: Sequence = ()) -> sqlite3.Cursor:
-        conn = self._connect()
-        if self.path == ":memory:":
-            with self._memory_lock:
-                return conn.execute(sql, params)
-        return conn.execute(sql, params)
+    def _write(self, sql: str, params: Sequence = ()) -> int:
+        """Execute a write statement; returns the last inserted rowid."""
+        with self._conn() as conn:
+            return conn.execute(sql, params).lastrowid
+
+    def _rows(self, sql: str, params: Sequence = ()) -> list:
+        """Execute a query and fetch all rows while holding the connection."""
+        with self._conn() as conn:
+            return conn.execute(sql, params).fetchall()
+
+    @contextmanager
+    def transaction(self):
+        """Group writes into one SQLite transaction (``BEGIN IMMEDIATE``).
+
+        Used by the batch write paths so N inserts hit the WAL once; the
+        IMMEDIATE lock also gives multi-statement atomicity to concurrent
+        writer processes.
+        """
+        with self._conn() as conn:
+            conn.execute("BEGIN IMMEDIATE")
+            try:
+                yield conn
+            except BaseException:
+                conn.execute("ROLLBACK")
+                raise
+            conn.execute("COMMIT")
 
     # -- spaces & operations ----------------------------------------------------
 
     def register_space(self, space_id: str, space_json: Mapping, action_ids: Sequence[str]) -> None:
-        self._execute(
+        self._write(
             "INSERT OR IGNORE INTO spaces(space_id, space_json, actions, created_at)"
             " VALUES (?,?,?,?)",
             (space_id, canonical_json(space_json), canonical_json(list(action_ids)), time.time()),
@@ -138,51 +200,58 @@ class SampleStore:
 
     def register_operation(self, operation_id: str, space_id: str, kind: str,
                            meta: Optional[Mapping] = None) -> None:
-        self._execute(
+        self._write(
             "INSERT OR IGNORE INTO operations(operation_id, space_id, kind, meta, created_at)"
             " VALUES (?,?,?,?,?)",
             (operation_id, space_id, kind, canonical_json(meta or {}), time.time()),
         )
 
     def operations_for(self, space_id: str) -> list:
-        cur = self._execute(
+        rows = self._rows(
             "SELECT operation_id, kind, meta, created_at FROM operations"
             " WHERE space_id=? ORDER BY created_at",
             (space_id,),
         )
         return [
             {"operation_id": r[0], "kind": r[1], "meta": json.loads(r[2]), "created_at": r[3]}
-            for r in cur.fetchall()
+            for r in rows
         ]
 
     # -- configurations -----------------------------------------------------------
 
     def put_configuration(self, config: Configuration) -> str:
         digest = config.digest
-        self._execute(
+        self._write(
             "INSERT OR IGNORE INTO configurations(digest, config, created_at) VALUES (?,?,?)",
             (digest, canonical_json(config.values), time.time()),
         )
         return digest
 
     def get_configuration(self, digest: str) -> Optional[Configuration]:
-        cur = self._execute("SELECT config FROM configurations WHERE digest=?", (digest,))
-        row = cur.fetchone()
-        if row is None:
+        rows = self._rows("SELECT config FROM configurations WHERE digest=?", (digest,))
+        if not rows:
             return None
-        pairs = json.loads(row[0])
+        pairs = json.loads(rows[0][0])
         return Configuration(values=tuple((k, _thaw(v)) for k, v in pairs))
 
     # -- property values (measurement results) --------------------------------------
 
     def put_values(self, config_digest: str, values: Iterable[PropertyValue]) -> None:
-        for v in values:
-            self._execute(
+        """Insert one experiment's values in a single transaction, so a
+        concurrent reader can never observe a half-written measurement."""
+        rows = [
+            (config_digest, v.name, float(v.value), v.experiment_id,
+             1 if v.predicted else 0, v.timestamp)
+            for v in values
+        ]
+        if not rows:
+            return
+        with self.transaction() as conn:
+            conn.executemany(
                 "INSERT INTO property_values"
                 " (config_digest, property, value, experiment_id, predicted, created_at)"
                 " VALUES (?,?,?,?,?,?)",
-                (config_digest, v.name, float(v.value), v.experiment_id,
-                 1 if v.predicted else 0, v.timestamp),
+                rows,
             )
 
     def get_values(self, config_digest: str,
@@ -195,39 +264,149 @@ class SampleStore:
             sql += f" AND experiment_id IN ({marks})"
             params.extend(experiment_ids)
         sql += " ORDER BY id"
-        cur = self._execute(sql, params)
         return [
             PropertyValue(name=r[0], value=r[1], experiment_id=r[2],
                           predicted=bool(r[3]), timestamp=r[4])
-            for r in cur.fetchall()
+            for r in self._rows(sql, params)
         ]
 
     def has_values(self, config_digest: str, experiment_id: str) -> bool:
-        cur = self._execute(
+        rows = self._rows(
             "SELECT 1 FROM property_values WHERE config_digest=? AND experiment_id=? LIMIT 1",
             (config_digest, experiment_id),
         )
-        return cur.fetchone() is not None
+        return bool(rows)
+
+    # -- measurement claims (measure-once across concurrent investigators) -----
+
+    def claim_experiment(self, config_digest: str, experiment_id: str,
+                         owner: str = "") -> bool:
+        """Atomically claim the right to measure (configuration, experiment).
+
+        Concurrent investigators sharing one store race through
+        ``has_values -> measure``; without arbitration both deploy the same
+        experiment (paying twice).  ``INSERT OR IGNORE`` on the primary key
+        decides a single winner: True means *we* measure, False means someone
+        else is (or already did) — wait via :meth:`wait_for_values`.
+
+        Claims persist after a successful measurement (the values themselves
+        make re-claiming moot) and are :meth:`release_claim`-ed on failure so
+        waiters can take over instead of stalling.
+        """
+        with self._conn() as conn:
+            cur = conn.execute(
+                "INSERT OR IGNORE INTO value_claims"
+                "(config_digest, experiment_id, owner, created_at) VALUES (?,?,?,?)",
+                (config_digest, experiment_id, owner, time.time()),
+            )
+            return cur.rowcount == 1
+
+    def release_claim(self, config_digest: str, experiment_id: str) -> None:
+        self._write(
+            "DELETE FROM value_claims WHERE config_digest=? AND experiment_id=?",
+            (config_digest, experiment_id),
+        )
+
+    def steal_claim(self, config_digest: str, experiment_id: str,
+                    owner: str, older_than_s: float) -> bool:
+        """Atomically take over a claim whose owner is presumed dead.
+
+        Succeeds only if the claim row is older than ``older_than_s`` — a
+        single UPDATE under the writer lock, so of N waiters racing to steal
+        the same stale claim exactly one wins (the winner refreshes
+        ``created_at``, which falsifies the WHERE clause for the rest).
+        """
+        with self._conn() as conn:
+            cur = conn.execute(
+                "UPDATE value_claims SET owner=?, created_at=?"
+                " WHERE config_digest=? AND experiment_id=? AND created_at < ?",
+                (owner, time.time(), config_digest, experiment_id,
+                 time.time() - older_than_s),
+            )
+            return cur.rowcount == 1
+
+    def claim_exists(self, config_digest: str, experiment_id: str) -> bool:
+        rows = self._rows(
+            "SELECT 1 FROM value_claims WHERE config_digest=? AND experiment_id=? LIMIT 1",
+            (config_digest, experiment_id),
+        )
+        return bool(rows)
+
+    def wait_for_values(self, config_digest: str, experiment_id: str,
+                        timeout_s: float = 60.0) -> bool:
+        """Wait for another investigator's in-flight measurement to land.
+
+        Returns True when values appeared (reuse them), False when the claim
+        vanished without values (the owner failed — take over) or the timeout
+        expired (the owner is presumed dead — take over).
+        """
+        deadline = time.monotonic() + timeout_s
+        poll = 0.005
+        while time.monotonic() < deadline:
+            if self.has_values(config_digest, experiment_id):
+                return True
+            if not self.claim_exists(config_digest, experiment_id):
+                return False
+            time.sleep(poll)
+            poll = min(poll * 2, 0.1)
+        return False
 
     # -- the time-resolved sampling record --------------------------------------------
 
     def next_seq(self, space_id: str, operation_id: str) -> int:
-        cur = self._execute(
+        """The sequence number the next append would get.  Informational only:
+        appenders must NOT pre-compute this — :meth:`append_record` allocates
+        atomically inside its insert."""
+        rows = self._rows(
             "SELECT COALESCE(MAX(seq), -1) + 1 FROM records WHERE space_id=? AND operation_id=?",
             (space_id, operation_id),
         )
-        return int(cur.fetchone()[0])
+        return int(rows[0][0])
 
     def append_record(self, space_id: str, operation_id: str, config_digest: str,
                       action: str) -> RecordEntry:
-        seq = self.next_seq(space_id, operation_id)
+        """Append one sampling event, allocating its per-operation ``seq``
+        atomically (safe under concurrent threads and processes)."""
         now = time.time()
-        self._execute(
-            "INSERT INTO records(space_id, operation_id, seq, config_digest, action, created_at)"
-            " VALUES (?,?,?,?,?,?)",
-            (space_id, operation_id, seq, config_digest, action, now),
+        rowid = self._write(
+            _APPEND_SQL,
+            (space_id, operation_id, config_digest, action, now,
+             space_id, operation_id),
         )
-        return RecordEntry(space_id, operation_id, seq, config_digest, action, now)
+        rows = self._rows("SELECT seq FROM records WHERE id=?", (rowid,))
+        return RecordEntry(space_id, operation_id, int(rows[0][0]), config_digest, action, now)
+
+    def append_records(self, space_id: str, operation_id: str,
+                       events: Sequence[Sequence[str]]) -> list:
+        """Append ``[(config_digest, action), ...]`` in order, as one
+        transaction.  Returns the created :class:`RecordEntry` list.
+
+        This is the deterministic-ordering write path of
+        ``DiscoverySpace.sample_batch``: results gathered from a worker pool
+        are recorded in submission order regardless of completion order.
+        """
+        if not events:
+            return []
+        now = time.time()
+        first_rowid = None
+        with self.transaction() as conn:
+            for digest, action in events:
+                cur = conn.execute(
+                    _APPEND_SQL,
+                    (space_id, operation_id, digest, action, now,
+                     space_id, operation_id),
+                )
+                if first_rowid is None:
+                    first_rowid = cur.lastrowid
+            rows = conn.execute(
+                "SELECT seq FROM records WHERE id>=? AND space_id=? AND operation_id=?"
+                " ORDER BY id",
+                (first_rowid, space_id, operation_id),
+            ).fetchall()
+        return [
+            RecordEntry(space_id, operation_id, int(r[0]), digest, action, now)
+            for r, (digest, action) in zip(rows, events)
+        ]
 
     def records_for(self, space_id: str, operation_id: Optional[str] = None) -> list:
         sql = ("SELECT space_id, operation_id, seq, config_digest, action, created_at"
@@ -237,34 +416,35 @@ class SampleStore:
             sql += " AND operation_id=?"
             params.append(operation_id)
         sql += " ORDER BY id"
-        cur = self._execute(sql, params)
-        return [RecordEntry(*r) for r in cur.fetchall()]
+        return [RecordEntry(*r) for r in self._rows(sql, params)]
 
     def sampled_digests(self, space_id: str, include_failed: bool = False) -> list:
-        """Distinct configuration digests in this space's sampling record."""
-        sql = "SELECT DISTINCT config_digest FROM records WHERE space_id=?"
-        if not include_failed:
-            sql += " AND action != 'failed'"
-        cur = self._execute(sql, (space_id,))
-        return [r[0] for r in cur.fetchall()]
+        """Distinct configuration digests in this space's sampling record,
+        ordered by first appearance (deterministic across serial/parallel
+        runs that recorded the same event sequence)."""
+        sql = ("SELECT config_digest FROM records WHERE space_id=?"
+               "{} GROUP BY config_digest ORDER BY MIN(id)")
+        sql = sql.format("" if include_failed else " AND action != 'failed'")
+        return [r[0] for r in self._rows(sql, (space_id,))]
 
     # -- statistics --------------------------------------------------------------------
 
     def count_measured(self, space_id: Optional[str] = None) -> int:
         if space_id is None:
-            cur = self._execute("SELECT COUNT(*) FROM records WHERE action='measured'")
+            rows = self._rows("SELECT COUNT(*) FROM records WHERE action='measured'")
         else:
-            cur = self._execute(
+            rows = self._rows(
                 "SELECT COUNT(*) FROM records WHERE action='measured' AND space_id=?",
                 (space_id,),
             )
-        return int(cur.fetchone()[0])
+        return int(rows[0][0])
 
     def close(self) -> None:
         if self.path == ":memory:":
-            if self._memory_conn is not None:
-                self._memory_conn.close()
-                self._memory_conn = None
+            with self._memory_lock:
+                if self._memory_conn is not None:
+                    self._memory_conn.close()
+                    self._memory_conn = None
         else:
             conn = getattr(self._local, "conn", None)
             if conn is not None:

@@ -119,14 +119,22 @@ def main(argv=None) -> dict:
                 mgr.save(step + 1, state, {"loss": loss})
             if args.stop_after and (step + 1 - start_step) >= args.stop_after:
                 # simulated hard failure: NO final checkpoint — restart must
-                # recover from the last periodic one
+                # recover from the last periodic one.  The failure loses
+                # future work, not durability: an in-flight async save of an
+                # *earlier* step still lands (atomic tmp+rename), so drain it
+                # before "crashing" — otherwise resume races the save thread.
+                if mgr is not None:
+                    mgr.wait()
                 print(f"[train] simulated failure after {args.stop_after} steps")
                 data.stop()
                 return {"first_loss": losses[0], "last_loss": losses[-1],
                         "steps_run": len(losses), "resumed_from": start_step}
         data.stop()
-        if mgr is not None:
-            mgr.save(step + 1, state, {"loss": losses[-1]}, async_=False)
+        # `losses` is empty when resuming a run that already completed
+        # (start_step == steps): nothing ran, nothing new to checkpoint.
+        if mgr is not None and losses:
+            mgr.save(start_step + len(losses), state, {"loss": losses[-1]},
+                     async_=False)
             mgr.wait()
     return {"first_loss": losses[0] if losses else None,
             "last_loss": losses[-1] if losses else None,

@@ -1,0 +1,36 @@
+"""Worker functions for the store-concurrency tests.
+
+Kept in their own module (no hypothesis import, no fixtures) so spawn-based
+``multiprocessing`` children can re-import them without pulling in test-only
+dependencies or pytest configuration.
+"""
+
+import os
+import sys
+
+# Children must resolve `repro` even when launched without PYTHONPATH=src.
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+if _SRC not in sys.path:  # pragma: no cover - depends on launcher env
+    sys.path.insert(0, _SRC)
+
+from repro.core import Configuration, SampleStore
+from repro.core.entities import PropertyValue
+
+SPACE_ID = "conc-space"
+OP_ID = "conc-op"
+
+
+def hammer(store: SampleStore, worker: int, iterations: int) -> None:
+    """One writer's workload: new configuration, values, record — repeatedly."""
+    for i in range(iterations):
+        config = Configuration.make({"worker": worker, "i": i})
+        digest = store.put_configuration(config)
+        store.put_values(digest, [
+            PropertyValue(name="m", value=float(worker * 1000 + i),
+                          experiment_id=f"exp-{worker}"),
+        ])
+        store.append_record(SPACE_ID, OP_ID, digest, "measured")
+
+
+def hammer_process(path: str, worker: int, iterations: int) -> None:
+    hammer(SampleStore(path), worker, iterations)

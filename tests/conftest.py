@@ -1,0 +1,38 @@
+"""Shared pytest configuration for the tier-1 suite.
+
+* Puts ``src/`` on ``sys.path`` so the suite runs with or without
+  ``PYTHONPATH=src`` / an editable install.
+* Registers the ``slow`` marker (long-running integration tests; CI
+  deselects them with ``-m "not slow"``).
+* Sets a CPU-safe hypothesis profile: bounded examples, no deadline —
+  compiled-code tests easily blow hypothesis' default 200 ms deadline on
+  CPU.  When the real ``hypothesis`` package is not installed, the
+  API-compatible fallback in :mod:`repro._compat.hypothesis_stub` is
+  registered in its place so the property tests still collect and run.
+"""
+
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+try:
+    from hypothesis import settings
+except ModuleNotFoundError:
+    from repro._compat import hypothesis_stub
+
+    sys.modules["hypothesis"] = hypothesis_stub
+    sys.modules["hypothesis.strategies"] = hypothesis_stub.strategies
+    from hypothesis import settings  # now resolves to the stub
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running integration test (deselect with -m 'not slow')",
+    )

@@ -1,0 +1,211 @@
+"""Tests for the batched ask/tell evaluation engine (paper §III-D).
+
+Two guarantees matter:
+
+* **serial equivalence** — the engine with ``workers=4`` produces the same
+  reconciled sample set, sampling record, and trial sequence as ``workers=1``
+  for a fixed seed (parallelism changes wall-clock, never results);
+* **protocol fidelity** — each ported optimizer's ``ask``/``tell`` path at
+  batch size 1 reproduces the classic one-step suggest/evaluate loop
+  draw-for-draw (same rng stream, same trials).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (ActionSpace, Configuration, Dimension, DiscoverySpace,
+                        FunctionExperiment, MeasurementError, ProbabilitySpace,
+                        SampleStore)
+from repro.core.entities import canonical_json
+from repro.core.optimizers import OPTIMIZER_REGISTRY, run_optimizer
+from repro.core.optimizers.base import SearchAdapter
+
+
+def make_space(n=8):
+    vals = [round(v, 3) for v in np.linspace(-2, 2, n)]
+    return ProbabilitySpace.make([
+        Dimension.discrete("x", vals),
+        Dimension.discrete("y", vals),
+        Dimension.categorical("mode", ["slow", "fast"]),
+    ])
+
+
+def make_ds(store=None, noise=0.0):
+    def fn(c):
+        penalty = 0.0 if c["mode"] == "fast" else 1.0
+        return {"loss": (c["x"] - 0.5) ** 2 + (c["y"] + 0.5) ** 2 + penalty}
+    exp = FunctionExperiment(fn=fn, properties=("loss",), name="quad")
+    return DiscoverySpace(space=make_space(), actions=ActionSpace.make([exp]),
+                          store=store or SampleStore(":memory:"))
+
+
+def reconciled(ds):
+    payload = sorted(
+        (s.configuration.digest,
+         sorted((v.name, v.value, v.experiment_id, v.predicted)
+                for v in s.properties.values()))
+        for s in ds.read()
+    )
+    return canonical_json(payload)
+
+
+def trail(run):
+    return [(t.configuration.digest, t.value, t.action) for t in run.trials]
+
+
+# ------------------------------------------------------------ ask() contract
+
+
+@pytest.mark.parametrize("name", list(OPTIMIZER_REGISTRY))
+@pytest.mark.parametrize("n", [1, 4, 7])
+def test_ask_proposes_distinct_unseen_batches(name, n):
+    ds = make_ds()
+    opt = OPTIMIZER_REGISTRY[name](seed=0)
+    rng = np.random.default_rng(0)
+    adapter = SearchAdapter(ds, "loss", "min", optimizer_name=opt.name)
+    # warm the history so model-based optimizers leave their init phase
+    warm = opt.ask(adapter, rng, n=5)
+    adapter.evaluate_batch(warm)
+    batch = opt.ask(adapter, rng, n=n)
+    assert len(batch) == n
+    digests = [c.digest for c in batch]
+    assert len(set(digests)) == n, "batch must not contain duplicates"
+    assert not set(digests) & adapter.seen_digests(), "batch must be unseen"
+
+
+@pytest.mark.parametrize("name", list(OPTIMIZER_REGISTRY))
+def test_ask_exhausts_finite_space(name):
+    space = ProbabilitySpace.make([Dimension.discrete("x", [1, 2, 3])])
+    exp = FunctionExperiment(fn=lambda c: {"m": float(c["x"])},
+                             properties=("m",), name="tiny")
+    ds = DiscoverySpace(space=space, actions=ActionSpace.make([exp]))
+    opt = OPTIMIZER_REGISTRY[name](seed=0)
+    run = run_optimizer(opt, ds, "m", "min", max_trials=50, patience=50,
+                        batch_size=4)
+    assert run.num_trials == 3  # ask returns a short batch, then []
+
+
+# ------------------------------------- batch size 1 == classic one-step loop
+
+
+@pytest.mark.parametrize("name", list(OPTIMIZER_REGISTRY))
+def test_batch1_reproduces_single_step_loop(name, max_trials=20):
+    """run_optimizer(batch_size=1) must equal a hand-rolled suggest/evaluate
+    loop with the same seed: same configurations, values, actions, and the
+    same rng stream consumption throughout."""
+    cls = OPTIMIZER_REGISTRY[name]
+
+    # reference: classic serial loop via the suggest() wrapper
+    ds_ref = make_ds()
+    opt = cls(seed=0)
+    rng = np.random.default_rng(42)
+    adapter = SearchAdapter(ds_ref, "loss", "min", optimizer_name=opt.name)
+    while len(adapter.trials) < max_trials:
+        config = opt.suggest(adapter, rng)
+        if config is None:
+            break
+        adapter.evaluate(config)
+    ref = [(t.configuration.digest, t.value, t.action) for t in adapter.trials]
+
+    # engine: batched ask/tell with batch_size=1, no early stop
+    ds_new = make_ds()
+    run = run_optimizer(cls(seed=0), ds_new, "loss", "min",
+                        max_trials=max_trials, patience=max_trials + 1,
+                        rng=np.random.default_rng(42), batch_size=1)
+    assert trail(run) == ref
+    assert reconciled(ds_ref) == reconciled(ds_new)
+
+
+# --------------------------------------------- parallel == serial, same seed
+
+
+@pytest.mark.parametrize("name", list(OPTIMIZER_REGISTRY))
+def test_parallel_workers_match_serial(name):
+    """4 experiment workers vs 1, same seed and batch plan: identical trial
+    sequence, sampling record, and reconciled sample set."""
+    cls = OPTIMIZER_REGISTRY[name]
+
+    def run_with(workers):
+        ds = make_ds()
+        run = run_optimizer(cls(seed=0), ds, "loss", "min", max_trials=24,
+                            patience=25, rng=np.random.default_rng(7),
+                            batch_size=6, workers=workers)
+        records = [(r.seq, r.config_digest, r.action)
+                   for r in ds.timeseries(run.operation_id)]
+        return trail(run), records, reconciled(ds)
+
+    t1, r1, s1 = run_with(1)
+    t4, r4, s4 = run_with(4)
+    assert t1 == t4
+    assert r1 == r4
+    assert s1 == s4  # byte-identical reconciled sample set
+
+
+def test_sample_batch_duplicates_measure_once():
+    ds = make_ds()
+    c = Configuration.make({"x": -2.0, "y": 2.0, "mode": "fast"})
+    results = ds.sample_batch([c, c, c], workers=3)
+    assert [r.action for r in results] == ["measured", "reused", "reused"]
+    assert ds.store.count_measured(ds.space_id) == 1
+
+
+def test_sample_batch_failures_do_not_abort():
+    def fn(c):
+        if c["x"] > 1:
+            raise MeasurementError("OOM")
+        return {"m": float(c["x"])}
+
+    space = ProbabilitySpace.make([Dimension.discrete("x", [0, 1, 2, 3])])
+    ds = DiscoverySpace(space=space, actions=ActionSpace.make(
+        [FunctionExperiment(fn=fn, properties=("m",), name="flaky")]))
+    configs = [Configuration.make({"x": v}) for v in (0, 2, 1, 3)]
+    results = ds.sample_batch(configs, workers=2)
+    assert [r.action for r in results] == ["measured", "failed", "measured", "failed"]
+    assert [r.ok for r in results] == [True, False, True, False]
+    assert all(isinstance(r.error, MeasurementError) for r in results if not r.ok)
+    assert ds.count_sampled() == 2  # failed points excluded from {x}
+    # failed trials surface as value-None in the adapter
+    adapter = SearchAdapter(ds, "m", "min")
+    values = adapter.evaluate_batch(configs, workers=2)
+    assert [v is None for v in values] == [False, True, False, True]
+    assert [t.action for t in adapter.trials] == ["reused", "failed", "reused", "failed"]
+
+
+def test_crashed_slot_keeps_other_records_and_releases_claim():
+    """A non-MeasurementError in one slot (experiment bug) must not lose the
+    other slots' sampling records, must release the crashed cell's claim so
+    other investigators don't stall, and must re-raise."""
+    def fn(c):
+        if c["x"] == 2:
+            return {"m": "not-a-number"}  # float() will raise TypeError-ish
+        return {"m": float(c["x"])}
+
+    space = ProbabilitySpace.make([Dimension.discrete("x", [0, 1, 2, 3])])
+    exp = FunctionExperiment(fn=fn, properties=("m",), name="buggy")
+    ds = DiscoverySpace(space=space, actions=ActionSpace.make([exp]))
+    configs = [Configuration.make({"x": v}) for v in (0, 1, 2, 3)]
+    with pytest.raises(ValueError):
+        ds.sample_batch(configs, operation_id="op", workers=2)
+    # the three healthy slots' events landed despite the crash
+    recs = [(r.config_digest, r.action) for r in ds.timeseries("op")]
+    good = [c.digest for c in configs if c["x"] != 2]
+    assert recs == [(d, "measured") for d in good]
+    # the crashed cell's claim was released: nobody stalls on it
+    assert not ds.store.claim_exists(configs[2].digest, exp.identifier)
+
+
+def test_reuse_across_batched_runs():
+    """Two batched runs over one store: the second fully reuses the first's
+    measurements (paper Fig. 7 mechanism, now through the parallel path)."""
+    store = SampleStore(":memory:")
+    ds = make_ds(store)
+    cls = OPTIMIZER_REGISTRY["random"]
+    r1 = run_optimizer(cls(seed=0), ds, "loss", "min", max_trials=24,
+                       patience=25, rng=np.random.default_rng(0),
+                       batch_size=6, workers=4)
+    assert r1.num_measured == r1.num_trials
+    r2 = run_optimizer(cls(seed=1), ds, "loss", "min", max_trials=24,
+                       patience=25, rng=np.random.default_rng(0),
+                       batch_size=6, workers=4)
+    assert r2.num_measured == 0  # same rng stream => full transparent reuse
+    assert r2.normalized_cost == 0.0

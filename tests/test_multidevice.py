@@ -1,8 +1,13 @@
 """Multi-device integration tests (subprocess with 8 placeholder devices):
 pipeline parallelism, compressed cross-pod gradient sync, elastic-mesh
 checkpoint restore.  Each runs in its own process because jax device count
-locks at first init."""
+locks at first init.
 
+On hosts where the forced-host-platform flag cannot provide the devices
+(e.g. a GPU/TPU backend pinned by env), the tests SKIP rather than fail —
+probed once per session below."""
+
+import functools
 import os
 import subprocess
 import sys
@@ -11,21 +16,50 @@ import textwrap
 import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+REQUIRED_DEVICES = 8
 
 
-def _run(code: str, devices: int = 8):
+def _env(devices: int) -> dict:
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(REPO, "src")
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    return env
+
+
+@functools.lru_cache(maxsize=None)
+def _forced_device_count(devices: int = REQUIRED_DEVICES) -> int:
+    """How many devices a fresh subprocess actually gets under the flag.
+
+    Cached, and only probed from inside a test body (not at collection) so
+    deselected runs (``-m "not slow"``) never pay for the subprocess.
+    """
+    try:
+        p = subprocess.run(
+            [sys.executable, "-c", "import jax; print(jax.device_count())"],
+            capture_output=True, text=True, timeout=120, env=_env(devices))
+        return int(p.stdout.strip()) if p.returncode == 0 else 0
+    except (subprocess.SubprocessError, ValueError):
+        return 0
+
+
+def _require_devices() -> None:
+    count = _forced_device_count()
+    if count < REQUIRED_DEVICES:
+        pytest.skip(f"host provides {count} < {REQUIRED_DEVICES} "
+                    "(placeholder) jax devices")
+
+
+def _run(code: str, devices: int = REQUIRED_DEVICES):
     p = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                       capture_output=True, text=True, timeout=420, env=env,
-                       cwd=REPO)
+                       capture_output=True, text=True, timeout=420,
+                       env=_env(devices), cwd=REPO)
     assert p.returncode == 0, p.stdout + "\n" + p.stderr
     return p.stdout
 
 
 @pytest.mark.slow
 def test_pipeline_parallel_matches_sequential():
+    _require_devices()
     out = _run("""
         import jax, jax.numpy as jnp, numpy as np
         from repro.distributed.pipeline import pipeline_forward
@@ -55,17 +89,19 @@ def test_pipeline_parallel_matches_sequential():
 
 @pytest.mark.slow
 def test_compressed_psum_across_real_pod_axis():
+    _require_devices()
     out = _run("""
         import jax, jax.numpy as jnp, numpy as np
         from functools import partial
         from jax.sharding import PartitionSpec as P
+        from repro._compat.jaxshims import shard_map
         from repro.distributed.collectives import compressed_psum
 
         mesh = jax.make_mesh((8,), ("pod",))
         rng = np.random.default_rng(0)
         g_all = jnp.asarray(rng.normal(size=(8, 64)), jnp.float32)
 
-        @partial(jax.shard_map, mesh=mesh, in_specs=(P("pod"), P("pod")),
+        @partial(shard_map, mesh=mesh, in_specs=(P("pod"), P("pod")),
                  out_specs=(P("pod"), P("pod")))
         def step(g, err):
             m, ne = compressed_psum(g[0], "pod", err[0])
@@ -90,6 +126,7 @@ def test_compressed_psum_across_real_pod_axis():
 def test_elastic_remesh_checkpoint_restore():
     """A checkpoint written on an 8-device (4×2) mesh restores onto the
     6-device (3×2) mesh chosen by the failure planner after losing a host."""
+    _require_devices()
     out = _run("""
         import jax, jax.numpy as jnp, numpy as np, tempfile
         from jax.sharding import NamedSharding, PartitionSpec as P

@@ -113,6 +113,27 @@ def test_rssc_transfers_linear_relationship():
     assert q.savings_pct > 0.5
 
 
+def test_rssc_parallel_workers_match_serial():
+    """Step ④ (representative measurement) and step ⑧ (surrogate sweep)
+    through 4 workers: same assessment, predictions, and measurement count
+    as the serial run."""
+    def run_with(workers):
+        ds_src, ds_tgt, mapping, _ = make_pair("linear")
+        exhaust(ds_src)
+        res = rssc_transfer(ds_src, ds_tgt, "latency", mapping,
+                            rng=np.random.default_rng(0), workers=workers)
+        preds = {s.configuration.digest: s.value("latency")
+                 for s in res.predicted_space.read()}
+        return res, preds
+
+    serial, preds_1 = run_with(1)
+    parallel, preds_4 = run_with(4)
+    assert parallel.transferable == serial.transferable
+    assert parallel.assessment.r == pytest.approx(serial.assessment.r)
+    assert parallel.n_target_measured == serial.n_target_measured
+    assert preds_4 == preds_1
+
+
 def test_rssc_rejects_unrelated_spaces():
     ds_src, ds_tgt, mapping, _ = make_pair("unrelated")
     exhaust(ds_src)

@@ -1,0 +1,202 @@
+"""Concurrency tests for the common-context SampleStore (paper §III-D).
+
+The distributed-investigation claim rests on many writers sharing one store:
+N threads in one process (the ``sample_batch`` worker pool) and N separate
+processes (independent investigators) hammer the same space/operation and
+must come out with gapless, non-duplicated per-operation ``seq`` numbers and
+a reconciled ``read()`` identical to a serial run of the same work.
+"""
+
+import multiprocessing
+import os
+import threading
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (ActionSpace, Configuration, Dimension, DiscoverySpace,
+                        FunctionExperiment, ProbabilitySpace, SampleStore)
+from repro.core.entities import canonical_json, content_hash
+
+from _store_workers import OP_ID, SPACE_ID, hammer as _hammer, \
+    hammer_process as _hammer_process
+
+
+def _assert_record_invariants(store: SampleStore, n_events: int) -> None:
+    records = store.records_for(SPACE_ID, OP_ID)
+    assert len(records) == n_events
+    seqs = sorted(r.seq for r in records)
+    assert seqs == list(range(n_events)), "per-operation seq must be gapless/unique"
+
+
+@pytest.mark.parametrize("n_workers,iterations", [(8, 25)])
+def test_threads_hammering_one_store(tmp_path, n_workers, iterations):
+    store = SampleStore(str(tmp_path / "store.db"))
+    threads = [threading.Thread(target=_hammer, args=(store, w, iterations))
+               for w in range(n_workers)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    _assert_record_invariants(store, n_workers * iterations)
+    # every write landed exactly once
+    digests = store.sampled_digests(SPACE_ID)
+    assert len(digests) == n_workers * iterations
+    for w in range(n_workers):
+        d = Configuration.make({"worker": w, "i": 0}).digest
+        vals = store.get_values(d)
+        assert [v.value for v in vals] == [float(w * 1000)]
+
+
+def test_memory_store_threads():
+    """The lock-serialized :memory: path upholds the same invariants."""
+    store = SampleStore(":memory:")
+    threads = [threading.Thread(target=_hammer, args=(store, w, 10))
+               for w in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    _assert_record_invariants(store, 60)
+
+
+def test_processes_hammering_one_store(tmp_path):
+    path = str(tmp_path / "store.db")
+    SampleStore(path).close()  # create schema before forking
+    ctx = multiprocessing.get_context("spawn")
+    procs = [ctx.Process(target=_hammer_process, args=(path, w, 15))
+             for w in range(4)]
+    for p in procs:
+        p.start()
+    for p in procs:
+        p.join(timeout=120)
+    assert all(p.exitcode == 0 for p in procs), [p.exitcode for p in procs]
+    store = SampleStore(path)
+    _assert_record_invariants(store, 60)
+    assert store.count_measured(SPACE_ID) == 60
+
+
+def _reconciled(ds: DiscoverySpace) -> str:
+    """Canonical serialization of the reconciled sample set {x} — the
+    byte-comparable artifact of a run (timestamps excluded)."""
+    payload = sorted(
+        (s.configuration.digest,
+         sorted((v.name, v.value, v.experiment_id, v.predicted)
+                for v in s.properties.values()))
+        for s in ds.read()
+    )
+    return canonical_json(payload)
+
+
+def _counter_ds(store):
+    space = ProbabilitySpace.make([
+        Dimension.discrete("x", list(range(8))),
+        Dimension.discrete("y", list(range(4))),
+    ])
+    exp = FunctionExperiment(
+        fn=lambda c: {"m": c["x"] * 10.0 + c["y"]}, properties=("m",), name="grid")
+    return DiscoverySpace(space=space, actions=ActionSpace.make([exp]), store=store)
+
+
+def test_concurrent_read_matches_serial_run():
+    """Same configurations through 4 workers and serially: identical
+    reconciled sample set and identical sampling record actions/seqs."""
+    serial = _counter_ds(SampleStore(":memory:"))
+    parallel = _counter_ds(SampleStore(":memory:"))
+    configs = list(serial.space.all_configurations())
+
+    for c in configs:
+        serial.sample(c, operation_id="run")
+    parallel.sample_batch(configs, operation_id="run", workers=4)
+
+    assert _reconciled(serial) == _reconciled(parallel)
+    rs, rp = serial.timeseries("run"), parallel.timeseries("run")
+    assert [(r.seq, r.config_digest, r.action) for r in rs] \
+        == [(r.seq, r.config_digest, r.action) for r in rp]
+
+
+def test_claim_experiment_single_winner_and_takeover():
+    """The measure-once arbitration: one winner per (configuration,
+    experiment); waiters reuse landed values or take over released claims."""
+    from repro.core.entities import PropertyValue
+
+    store = SampleStore(":memory:")
+    assert store.claim_experiment("d", "e", "alice")
+    assert not store.claim_experiment("d", "e", "bob")
+    # owner failed and released: waiter returns False (take over) quickly
+    store.release_claim("d", "e")
+    assert store.wait_for_values("d", "e", timeout_s=0.5) is False
+    assert store.claim_experiment("d", "e", "bob")
+    # once values land, waiters come back True (reuse)
+    store.put_values("d", [PropertyValue(name="m", value=1.0, experiment_id="e")])
+    assert store.wait_for_values("d", "e", timeout_s=0.5) is True
+    store.close()
+
+
+def test_steal_claim_stale_owner_single_winner():
+    """A stale claim (presumed-dead owner) is stolen by exactly one waiter;
+    fresh claims cannot be stolen."""
+    import time as _time
+
+    store = SampleStore(":memory:")
+    assert store.claim_experiment("d", "e", "dead-owner")
+    assert not store.steal_claim("d", "e", "w0", older_than_s=60.0)
+    # age the claim past the timeout, then race two stealers
+    store._write("UPDATE value_claims SET created_at=? WHERE config_digest=?",
+                 (_time.time() - 120.0, "d"))
+    wins = [store.steal_claim("d", "e", f"w{i}", older_than_s=60.0)
+            for i in range(2)]
+    assert wins == [True, False]
+    store.close()
+
+
+def test_sample_batch_cross_store_measures_once(tmp_path):
+    """Two DiscoverySpace handles (same space, same on-disk store) sampling
+    the same batch concurrently: every configuration measured exactly once."""
+    path = str(tmp_path / "store.db")
+    ds1 = _counter_ds(SampleStore(path))
+    ds2 = _counter_ds(SampleStore(path))
+    configs = list(ds1.space.all_configurations())
+
+    out = []
+    t1 = threading.Thread(
+        target=lambda: out.append(ds1.sample_batch(configs, "op-a", workers=4)))
+    t2 = threading.Thread(
+        target=lambda: out.append(ds2.sample_batch(configs, "op-b", workers=4)))
+    t1.start(); t2.start(); t1.join(); t2.join()
+
+    assert ds1.store.count_measured(ds1.space_id) == len(configs)
+    assert all(r.ok for results in out for r in results)
+    assert _reconciled(ds1) == _reconciled(ds2)
+
+
+# ----------------------------------------------------------- digest stability
+
+
+config_values = st.dictionaries(
+    st.text(min_size=1, max_size=8),
+    st.one_of(st.integers(-2 ** 31, 2 ** 31), st.booleans(),
+              st.text(max_size=12),
+              st.floats(min_value=-1e6, max_value=1e6)),
+    min_size=1, max_size=6,
+)
+
+
+@given(mapping=config_values)
+@settings(max_examples=50, deadline=None)
+def test_property_configuration_digest_roundtrip(mapping):
+    """Store round-trip preserves identity: put → get returns a configuration
+    with the same canonical_json and the same content-hash digest, and the
+    digest is insertion-order independent."""
+    store = SampleStore(":memory:")
+    config = Configuration.make(mapping)
+    reordered = Configuration.make(dict(reversed(list(mapping.items()))))
+    assert config.digest == reordered.digest
+
+    digest = store.put_configuration(config)
+    restored = store.get_configuration(digest)
+    assert restored is not None
+    assert canonical_json(restored.values) == canonical_json(config.values)
+    assert restored.digest == config.digest == content_hash(config.values)
+    store.close()

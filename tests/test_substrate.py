@@ -152,13 +152,14 @@ def test_train_restart_bit_exact(tmp_path):
 def _load_raw(directory, step):
     import json
     import msgpack
-    import zstandard
+
+    from repro.checkpoint.checkpoint import decompress_payload
 
     path = os.path.join(directory, f"step_{step:08d}")
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
     with open(os.path.join(path, "arrays.msgpack.zst"), "rb") as f:
-        raw = zstandard.ZstdDecompressor().decompress(f.read())
+        raw = decompress_payload(f.read(), manifest.get("codec", "zstd"))
     payload = msgpack.unpackb(raw, raw=False)
     out = {}
     for key, info in manifest["arrays"].items():
@@ -228,6 +229,7 @@ def test_quantize_roundtrip_exact_for_representable():
 def test_compressed_psum_error_feedback_converges():
     """Mean of a constant gradient over repeated steps: error feedback makes
     the time-averaged compressed mean converge to the true mean."""
+    from repro._compat.jaxshims import shard_map
     from repro.distributed.collectives import compressed_psum
 
     mesh = jax.make_mesh((1,), ("pod",))
@@ -235,8 +237,8 @@ def test_compressed_psum_error_feedback_converges():
 
     from functools import partial
 
-    @partial(jax.shard_map, mesh=mesh, in_specs=(jax.sharding.PartitionSpec(),
-                                                 jax.sharding.PartitionSpec()),
+    @partial(shard_map, mesh=mesh, in_specs=(jax.sharding.PartitionSpec(),
+                                             jax.sharding.PartitionSpec()),
              out_specs=(jax.sharding.PartitionSpec(),
                         jax.sharding.PartitionSpec()))
     def step(x, err):
