@@ -1,23 +1,26 @@
-"""Two worker *processes* sharing one on-disk sample store (paper Fig. 4).
+"""One investigator + two remote measurement workers, one shared store.
 
-The paper's §III-D claim is that investigation can be distributed: several
-optimizers/investigators run against the same Discovery Space through a
-shared SQL store, reusing each other's measurements transparently.  This
-demo makes that concrete — and actually concurrent:
+The paper's §III-D claim is that investigation can be distributed through a
+shared SQL sample store.  This demo takes it literally with the
+``QueueBackend``: the investigator process never executes an experiment —
+it runs the pipelined ask/tell optimizer and submits work items as rows in
+the store's ``work_items`` table, while two separate
+``python -m repro.core.execution.worker`` processes (started here exactly
+as you would start them on other hosts sharing the database) pull items,
+run the measurement state machine, and land values through the
+measurement-claim arbitration.  The store is the *only* coordination point:
 
-* two OS processes open the same SQLite (WAL) store;
-* each runs a batched random search over the SAME space with a different
-  seed, 4 experiment-worker threads each, overlapping in time;
-* measurements by one process are transparent *reuses* for the other —
-  total measurement count stays == distinct configurations sampled;
-* the per-operation sampling records come out gapless, and both processes
-  reconcile to one consistent sample set.
+* every configuration is measured exactly once, no matter which worker
+  races to it;
+* the investigator's sampling record comes out gapless;
+* the sum of the workers' processed items equals the measurements made.
 
     PYTHONPATH=src python examples/shared_store_workers.py
 """
 
-import multiprocessing
 import os
+import subprocess
+import sys
 import tempfile
 import time
 
@@ -26,77 +29,88 @@ import numpy as np
 MEASURE_LATENCY_S = 0.005
 
 
-def build_space():
-    from repro.core import Dimension, ProbabilitySpace
+def build_ds(store_path):
+    """Worker factory (``--factory shared_store_workers:build_ds``): every
+    process rebuilds the same (Ω, A) => same space_id => one shared study."""
+    from repro.core import (ActionSpace, Dimension, DiscoverySpace,
+                            FunctionExperiment, ProbabilitySpace, SampleStore)
 
-    return ProbabilitySpace.make([
+    space = ProbabilitySpace.make([
         Dimension.categorical("instance", ["m5.large", "m5.xlarge", "c5.xlarge"]),
         Dimension.discrete("workers", [1, 2, 4, 8]),
         Dimension.discrete("batch_size", [16, 32, 64]),
     ])
-
-
-def build_ds(store_path):
-    """Same (Ω, A) in every process => same space_id => one shared study."""
-    from repro.core import ActionSpace, DiscoverySpace, FunctionExperiment, SampleStore
-
-    def deploy_and_measure(c):
-        time.sleep(MEASURE_LATENCY_S)  # pretend this deploys to a cloud
-        rate = {"m5.large": 90.0, "m5.xlarge": 170.0, "c5.xlarge": 210.0}[c["instance"]]
-        eff = min(1.0, 0.4 + 0.15 * np.log2(c["workers"] * c["batch_size"] / 16))
-        return {"tokens_per_s": rate * c["workers"] * eff}
-
     exp = FunctionExperiment(fn=deploy_and_measure, properties=("tokens_per_s",),
                              name="cloud-deploy")
-    return DiscoverySpace(space=build_space(), actions=ActionSpace.make([exp]),
-                          store=SampleStore(store_path))
+    return DiscoverySpace(space=space, actions=ActionSpace.make([exp]),
+                          store=SampleStore(store_path), claim_timeout_s=30.0)
 
 
-def investigate(store_path: str, seed: int, tag: str) -> None:
-    """One investigator: batched ask/tell search, 4 experiment workers."""
-    from repro.core.optimizers import RandomSearch, run_optimizer
+def deploy_and_measure(c):
+    time.sleep(MEASURE_LATENCY_S)  # pretend this deploys to a cloud
+    rate = {"m5.large": 90.0, "m5.xlarge": 170.0, "c5.xlarge": 210.0}[c["instance"]]
+    eff = min(1.0, 0.4 + 0.15 * np.log2(c["workers"] * c["batch_size"] / 16))
+    return {"tokens_per_s": rate * c["workers"] * eff}
 
-    ds = build_ds(store_path)
-    run = run_optimizer(RandomSearch(seed=seed), ds, "tokens_per_s", "max",
-                        max_trials=24, patience=25,
-                        rng=np.random.default_rng(seed),
-                        batch_size=6, workers=4)
-    print(f"  [{tag}] pid={os.getpid()} trials={run.num_trials} "
-          f"measured={run.num_measured} reused={run.num_reused} "
-          f"best={run.best.value:.1f} tokens/s")
+
+def start_worker(store_path: str, tag: str) -> subprocess.Popen:
+    """Launch ``python -m repro.core.execution.worker`` against the shared
+    store — on a real deployment this line runs on another machine."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    src = os.path.join(os.path.dirname(here), "src")
+    env = dict(os.environ, PYTHONPATH=os.pathsep.join(
+        [src, here, os.environ.get("PYTHONPATH", "")]))
+    return subprocess.Popen(
+        [sys.executable, "-m", "repro.core.execution.worker",
+         "--store", store_path,
+         "--factory", "shared_store_workers:build_ds",
+         "--idle-timeout", "3", "--owner", tag],
+        env=env, stdout=subprocess.PIPE, text=True)
 
 
 def main() -> None:
+    from repro.core.optimizers import RandomSearch, run_optimizer
+
     with tempfile.TemporaryDirectory() as d:
         store_path = os.path.join(d, "common_context.db")
-        build_ds(store_path).store.close()  # create schema up front
+        ds = build_ds(store_path)  # also creates the schema up front
 
-        print("Two investigator processes, one common context:")
-        ctx = multiprocessing.get_context("spawn")
-        procs = [ctx.Process(target=investigate, args=(store_path, seed, tag))
-                 for seed, tag in ((0, "worker-A"), (1, "worker-B"))]
-        for p in procs:
-            p.start()
-        for p in procs:
-            p.join()
-        assert all(p.exitcode == 0 for p in procs)
+        print("Starting two measurement workers against the shared store:")
+        workers = [start_worker(store_path, tag)
+                   for tag in ("worker-A", "worker-B")]
 
-        # Reconcile from a THIRD process's point of view (fresh handles).
-        ds = build_ds(store_path)
+        # The investigator: pipelined ask/tell, execution via the store's
+        # work-item queue.  This process never runs an experiment itself.
+        run = run_optimizer(RandomSearch(seed=0), ds, "tokens_per_s", "max",
+                            max_trials=24, patience=25,
+                            rng=np.random.default_rng(0),
+                            max_inflight=6, backend="queue")
+        print(f"  [investigator] pid={os.getpid()} trials={run.num_trials} "
+              f"measured={run.num_measured} reused={run.num_reused} "
+              f"best={run.best.value:.1f} tokens/s")
+
+        processed = 0
+        for proc, tag in zip(workers, ("worker-A", "worker-B")):
+            out, _ = proc.communicate(timeout=60)
+            assert proc.returncode == 0, (tag, proc.returncode)
+            print(f"  [{tag}] {out.strip()}")
+            processed += int(out.split("processed")[1].split()[0])
+
         samples = ds.read()
         measured = ds.store.count_measured(ds.space_id)
         print(f"\nReconciled: {len(samples)} distinct configurations, "
-              f"{measured} measurements total")
-        print("  => every configuration was measured exactly once; overlap "
-              "between the workers was reused, not re-measured")
+              f"{measured} measurements total, "
+              f"{processed} work items executed by the workers")
         assert measured == len(samples) <= 36
+        assert processed == run.num_trials
+        assert ds.store.pending_work(ds.space_id) == 0
+        print("  => every configuration was measured exactly once, and every "
+              "measurement ran in a worker process")
 
-        ops = ds.store.operations_for(ds.space_id)
-        for op in ops:
-            records = ds.timeseries(op["operation_id"])
-            seqs = [r.seq for r in records]
-            assert seqs == sorted(seqs) and len(set(seqs)) == len(seqs)
-        print(f"  => {len(ops)} operations, all sampling records gapless")
+        records = ds.timeseries(run.operation_id)
+        seqs = [r.seq for r in records]
+        assert seqs == sorted(seqs) and len(set(seqs)) == len(seqs)
+        print("  => the sampling record is gapless despite remote execution")
 
         best = max(samples, key=lambda s: s.value("tokens_per_s"))
         print(f"  best: {dict(best.configuration.values)} "

@@ -12,6 +12,8 @@ from .clustering import (select_linspace, select_representatives, select_top_k,
                          silhouette_clusters)
 from .discovery import DiscoverySpace
 from .entities import Configuration, Dimension, PropertyValue, Sample
+from .execution import (ExecutionBackend, ProcessBackend, QueueBackend,
+                        SerialBackend, ThreadBackend, WorkerCrashError)
 from .rssc import RSSCResult, rssc_transfer
 from .space import ProbabilitySpace
 from .store import RecordEntry, SampleStore
@@ -25,5 +27,7 @@ __all__ = [
     "RSSCResult", "rssc_transfer", "LinearSurrogate", "PredictionQuality",
     "TransferAssessment", "TransferCriteria", "assess_transfer",
     "prediction_quality", "select_representatives", "select_top_k",
-    "select_linspace", "silhouette_clusters",
+    "select_linspace", "silhouette_clusters", "ExecutionBackend",
+    "SerialBackend", "ThreadBackend", "ProcessBackend", "QueueBackend",
+    "WorkerCrashError",
 ]

@@ -32,17 +32,17 @@ TRACE characteristics, and where they live:
 
 from __future__ import annotations
 
-import os
-import threading
+import time
 import uuid
-from concurrent.futures import Executor, ThreadPoolExecutor
+from concurrent.futures import Executor
 from dataclasses import dataclass
-from typing import Iterator, Mapping, Optional, Sequence
+from typing import Iterator, Mapping, Optional, Sequence, Union
 
 import numpy as np
 
 from .actions import ActionSpace, Experiment, MeasurementError, SurrogateExperiment
-from .entities import Configuration, PropertyValue, Sample, content_hash
+from .entities import Configuration, Sample, content_hash
+from .execution import ExecutionBackend, ExecutionContext, WorkItem, make_backend
 from .space import ProbabilitySpace
 from .store import RecordEntry, SampleStore
 
@@ -95,6 +95,46 @@ class DiscoverySpace:
         self.store.register_space(
             self.space_id, space.to_json(), actions.identifiers
         )
+        # Stale-claim GC pacing: the batch/pipelined drivers sweep at most
+        # once per claim-timeout interval (see _maybe_sweep_claims).
+        self._last_claim_sweep = time.monotonic()
+
+    # -------------------------------------------------------------- execution
+
+    def execution_context(self) -> ExecutionContext:
+        """What a backend needs to execute this space's measurements."""
+        return ExecutionContext(
+            store=self.store,
+            experiments=self.actions.experiments,
+            claim_timeout_s=self.claim_timeout_s,
+            space_id=self.space_id,
+        )
+
+    def execution_backend(
+        self,
+        backend: Union[ExecutionBackend, str, None] = None,
+        workers: int = 1,
+        executor: Optional[Executor] = None,
+    ) -> ExecutionBackend:
+        """Resolve an execution backend bound to this space.
+
+        ``backend`` is an :class:`ExecutionBackend` instance (used as-is; the
+        caller keeps ownership), one of ``"serial" | "thread" | "process" |
+        "queue"``, or None — then the legacy ``workers``/``executor`` knobs
+        pick serial vs thread execution, matching the pre-backend engine.
+        """
+        return make_backend(backend, self.execution_context(),
+                            workers=workers, executor=executor)
+
+    def _maybe_sweep_claims(self) -> None:
+        """Periodic stale-claim GC (ROADMAP item): reap claims from crashed
+        investigators up front instead of making every waiter burn its full
+        timeout.  Paced to at most one sweep per claim-timeout interval so
+        the hot path stays one cheap clock read."""
+        now = time.monotonic()
+        if now - self._last_claim_sweep >= self.claim_timeout_s:
+            self._last_claim_sweep = now
+            self.store.sweep_stale_claims(self.claim_timeout_s)
 
     # ------------------------------------------------------------------ sample
 
@@ -127,10 +167,11 @@ class DiscoverySpace:
         operation_id: str = "adhoc",
         workers: int = 1,
         executor: Optional[Executor] = None,
+        backend: Union[ExecutionBackend, str, None] = None,
     ) -> list:
-        """Sample a batch of points, fanning experiment execution out over a
-        worker pool (paper §III-D: distributed investigation through the
-        shared sample store).
+        """Sample a batch of points, fanning experiment execution out over an
+        execution backend (paper §III-D: distributed investigation through
+        the shared sample store).
 
         Semantics are *serial-equivalent*: the reconciled sample set and the
         sampling record are identical to sampling the same configurations one
@@ -140,11 +181,16 @@ class DiscoverySpace:
         (atomic per-operation ``seq`` allocation makes this safe alongside
         concurrent writers in other threads or processes).
 
-        Only experiment execution is parallel: each distinct configuration's
-        measure+store work is one task on ``executor`` (or a transient
-        :class:`~concurrent.futures.ThreadPoolExecutor` with ``workers``
-        threads).  Failed measurements do not abort the batch; they yield a
+        Only experiment execution is parallel: each distinct configuration is
+        one :class:`~repro.core.execution.WorkItem` on the resolved backend —
+        ``backend`` names one of ``serial | thread | process | queue`` or is
+        a ready :class:`~repro.core.execution.ExecutionBackend`; with None
+        the legacy ``workers``/``executor`` knobs pick serial vs thread
+        execution.  Failed measurements do not abort the batch; they yield a
         :class:`BatchResult` with ``action='failed'`` carrying the error.
+        Crash-isolating backends (process, queue) also contain *unexpected*
+        experiment errors and worker deaths to their own slot as ``failed``
+        results, instead of re-raising from the batch.
         """
         configs = list(configurations)
         if not configs:
@@ -152,6 +198,7 @@ class DiscoverySpace:
         # Encapsulated: reject configurations outside Ω before any work runs.
         for config in configs:
             self.space.validate(config)
+        self._maybe_sweep_claims()
         digests = [self.store.put_configuration(c) for c in configs]
 
         # Duplicates measure once: the first slot of each digest does the
@@ -161,88 +208,18 @@ class DiscoverySpace:
             first_slot.setdefault(digest, i)
         unique = [i for i, digest in enumerate(digests) if first_slot[digest] == i]
 
-        owner = f"{os.getpid()}"
-
-        def run_one(i: int):
-            config, digest = configs[i], digests[i]
-            measured_any = reused_any = predicted_any = False
-            try:
-                for exp in self.actions.experiments:
-                    if self.store.has_values(digest, exp.identifier):
-                        reused_any = True
-                        continue
-                    if exp.deferred:
-                        # apply-on-demand (A*_pred semantics, paper §IV-4)
-                        continue
-                    who = f"{owner}:{threading.get_ident()}"
-                    claimed = self.store.claim_experiment(digest, exp.identifier, who)
-                    while not claimed:
-                        # Another investigator (thread or process) is already
-                        # measuring this cell: wait and reuse their result —
-                        # the measure-once guarantee across concurrent
-                        # writers.  Measure ONLY after winning a claim.
-                        if self.store.wait_for_values(
-                                digest, exp.identifier,
-                                timeout_s=self.claim_timeout_s):
-                            break
-                        if self.store.claim_exists(digest, exp.identifier):
-                            # timed out on a still-standing claim: the owner
-                            # is presumed dead — exactly one waiter steals it
-                            claimed = self.store.steal_claim(
-                                digest, exp.identifier, who,
-                                older_than_s=self.claim_timeout_s)
-                        else:
-                            # owner failed and released: race for the re-claim
-                            claimed = self.store.claim_experiment(
-                                digest, exp.identifier, who)
-                    if not claimed:
-                        reused_any = True
-                        continue
-                    try:
-                        # the claim is held until values durably land: any
-                        # failure in measuring, converting, or storing them
-                        # must free the cell so waiters take over instead of
-                        # stalling until their timeout
-                        values = exp.measure(config)
-                        self.store.put_values(
-                            digest,
-                            [
-                                PropertyValue(
-                                    name=k,
-                                    value=float(v),
-                                    experiment_id=exp.identifier,
-                                    predicted=exp.predicted,
-                                )
-                                for k, v in values.items()
-                            ],
-                        )
-                    except BaseException:
-                        self.store.release_claim(digest, exp.identifier)
-                        raise
-                    if exp.predicted:
-                        predicted_any = True
-                    else:
-                        measured_any = True
-            except MeasurementError as err:
-                return "failed", err
-            except BaseException as err:
-                # unexpected (an experiment bug, a store error): poison only
-                # this slot — the batch's other slots keep their records
-                return "crashed", err
-            if measured_any:
-                return "measured", None
-            if predicted_any and not reused_any:
-                return "predicted", None
-            return "reused", None
-
-        if executor is not None:
-            outcomes = list(executor.map(run_one, unique))
-        elif workers > 1 and len(unique) > 1:
-            with ThreadPoolExecutor(max_workers=workers) as pool:
-                outcomes = list(pool.map(run_one, unique))
-        else:
-            outcomes = [run_one(i) for i in unique]
-        by_digest = {digests[i]: out for i, out in zip(unique, outcomes)}
+        owned = not isinstance(backend, ExecutionBackend)
+        engine = self.execution_backend(backend, workers=workers,
+                                        executor=executor)
+        try:
+            for i in unique:
+                engine.submit(WorkItem(configs[i], digests[i], i))
+            completed = engine.drain()
+        finally:
+            if owned:
+                engine.close()
+        by_digest = {digests[r.item.tag]: (r.action, r.error)
+                     for r in completed}
 
         # Time-Resolved: record events in submission order, one transaction.
         # Like the serial loop, a slot that crashed with a non-measurement
@@ -268,6 +245,23 @@ class DiscoverySpace:
                 result.sample = self._reconstruct(digest, result.configuration)
         return results
 
+    def record_result(self, configuration: Configuration, digest: str,
+                      action: str, error: Optional[MeasurementError],
+                      operation_id: str) -> BatchResult:
+        """Record ONE completed work item and reconstruct its sample.
+
+        The pipelined ask/tell driver's tell path: unlike
+        :meth:`sample_batch`, which barriers and records a whole batch in
+        submission order, the pipelined engine records each trial the moment
+        its backend reports completion — so events land in completion order,
+        which *is* the submission order when ``max_inflight=1``.
+        """
+        self.store.append_record(self.space_id, operation_id, digest, action)
+        result = BatchResult(configuration, None, action, error)
+        if error is None:
+            result.sample = self._reconstruct(digest, configuration)
+        return result
+
     # -------------------------------------------------------------------- read
 
     def read(self) -> list:
@@ -284,7 +278,9 @@ class DiscoverySpace:
 
     def read_one(self, configuration: Configuration) -> Optional[Sample]:
         digest = configuration.digest
-        if digest not in set(self.store.sampled_digests(self.space_id)):
+        # indexed point query — not a rebuild of the full sampled-digest set
+        # (RSSC's surrogate lookup calls this once per predicted point)
+        if not self.store.has_record(self.space_id, digest):
             return None
         return self._reconstruct(digest, configuration)
 

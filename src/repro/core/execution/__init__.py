@@ -1,0 +1,119 @@
+"""Pluggable execution backends for Discovery Space measurements.
+
+Architecture
+------------
+
+Every measurement in the system — serial ``sample``, barrier-synchronized
+``sample_batch``, the pipelined ask/tell optimizer engine, RSSC's
+representative measurement (④) and surrogate sweep (⑧) — executes through
+one state machine and one interface:
+
+* :func:`~repro.core.execution.base.run_measurement` is the claim/wait/steal
+  state machine (extracted from the pre-backend ``sample_batch``): reuse
+  stored values, else win a per-cell measurement claim and measure, else
+  wait on the winner / steal from the dead.  It is the single code path that
+  upholds the measure-once guarantee of paper §III-D, no matter where it
+  runs.
+* :class:`~repro.core.execution.base.ExecutionBackend` is an asynchronous
+  work pool — ``submit(work_item) -> tag``, ``poll() -> completed results``
+  (completion order, for pipelined drivers), ``drain() -> all results``
+  (for barrier drivers).
+
+Four backends implement the interface:
+
+===================  ==========================================================
+:class:`SerialBackend`   execute at submit time on the caller's thread (the
+                         classic engine; byte-identical records)
+:class:`ThreadBackend`   thread pool in the investigator process (today's
+                         ``workers=N`` semantics; byte-identical records)
+:class:`ProcessBackend`  one child process per measurement — a segfaulting or
+                         leaking experiment poisons only its slot: its claims
+                         are released, the slot records ``failed``, and the
+                         investigator survives
+:class:`QueueBackend`    store-rendezvous: work items are rows in the shared
+                         SQLite store's ``work_items`` table; any number of
+                         ``python -m repro.core.execution.worker`` processes
+                         on any host pull items and land values through the
+                         same claim arbitration (§III-D taken literally —
+                         the store is the *only* coordination point), with
+                         silent-worker re-queueing for crash tolerance
+===================  ==========================================================
+
+Layering: drivers (``DiscoverySpace.sample_batch``, the pipelined
+``run_optimizer``) own *recording* — sampling-record events are appended by
+the investigator, in submission order for the batch driver and completion
+order for the pipelined driver — while backends own *execution*.  Workers
+never write records; they only measure and land values, which is what lets
+N investigators share one worker fleet without entangling their records.
+"""
+
+from .backends import ProcessBackend, SerialBackend, ThreadBackend
+from .base import (ExecutionBackend, ExecutionContext, WorkItem, WorkResult,
+                   WorkerCrashError, run_measurement)
+from .queue import QueueBackend
+
+__all__ = [
+    "ExecutionBackend", "ExecutionContext", "WorkItem", "WorkResult",
+    "WorkerCrashError", "run_measurement", "SerialBackend", "ThreadBackend",
+    "ProcessBackend", "QueueBackend", "run_worker", "make_backend",
+]
+
+def __getattr__(name):
+    # lazy: importing .worker eagerly would shadow `python -m
+    # repro.core.execution.worker` (runpy's found-in-sys.modules warning)
+    if name == "run_worker":
+        from .worker import run_worker
+        return run_worker
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+_BACKENDS = {
+    "serial": SerialBackend,
+    "thread": ThreadBackend,
+    "process": ProcessBackend,
+    "queue": QueueBackend,
+}
+
+
+def make_backend(spec, ctx: ExecutionContext, workers: int = 1,
+                 executor=None) -> ExecutionBackend:
+    """Resolve a backend from a name, an instance, or legacy knobs.
+
+    ``spec`` may be an :class:`ExecutionBackend` (returned as-is), one of
+    ``"serial" | "thread" | "process" | "queue"``, or None — in which case
+    the legacy ``workers``/``executor`` arguments pick serial vs thread
+    exactly as the pre-backend engine did.
+    """
+    if isinstance(spec, ExecutionBackend):
+        held = getattr(spec, "_ctx", None)
+        if held is not None and ctx.space_id and held.space_id != ctx.space_id:
+            # an instance carries its construction-time experiments; reusing
+            # it on another space would execute the WRONG action space
+            # (e.g. a surrogate sweep running the real experiments)
+            raise ValueError(
+                "execution backend was built for a different Discovery "
+                "Space; resolve a fresh backend for this space (pass a "
+                "backend name instead of an instance)")
+        return spec
+    if spec is None:
+        if executor is not None:
+            return ThreadBackend(ctx, executor=executor)
+        if workers > 1:
+            return ThreadBackend(ctx, workers=workers)
+        return SerialBackend(ctx)
+    if isinstance(spec, str):
+        try:
+            cls = _BACKENDS[spec]
+        except KeyError:
+            raise ValueError(
+                f"unknown execution backend {spec!r}; "
+                f"choose from {sorted(_BACKENDS)}") from None
+        if cls is ThreadBackend:
+            return ThreadBackend(ctx, workers=workers, executor=executor)
+        if cls is ProcessBackend:
+            return ProcessBackend(ctx, workers=workers)
+        if cls is SerialBackend:
+            return SerialBackend(ctx)
+        return QueueBackend(ctx)
+    raise TypeError(f"backend must be a name, ExecutionBackend, or None; "
+                    f"got {type(spec).__name__}")

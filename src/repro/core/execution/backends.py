@@ -1,0 +1,285 @@
+"""In-process and process-isolated execution backends.
+
+* :class:`SerialBackend` — executes at submit time on the calling thread;
+  the classic serial engine re-hosted behind the backend interface.
+* :class:`ThreadBackend` — a thread pool (owned, or a caller-provided
+  executor reused across batches); experiments share the interpreter, so a
+  crashing experiment propagates like the pre-backend engine.
+* :class:`ProcessBackend` — a persistent pool of worker processes.  A
+  segfaulting, ``os._exit``-ing, or memory-leaking experiment poisons only
+  its own slot: the worker's death is detected and attributed, its claims
+  are released so waiters take over, the slot comes back as a ``failed``
+  :class:`~repro.core.execution.base.WorkerCrashError` sample, and a
+  replacement worker is respawned while the investigator (and the batch's
+  other slots) keep going.
+"""
+
+from __future__ import annotations
+
+import multiprocessing
+import threading
+import time
+from collections import deque
+from concurrent.futures import Executor, ThreadPoolExecutor
+from typing import List, Optional
+
+from ..actions import MeasurementError
+from .base import (ExecutionBackend, ExecutionContext, WorkItem, WorkResult,
+                   WorkerCrashError, run_measurement)
+
+__all__ = ["SerialBackend", "ThreadBackend", "ProcessBackend"]
+
+
+class SerialBackend(ExecutionBackend):
+    """Execute each work item synchronously at submit time."""
+
+    def __init__(self, ctx: ExecutionContext):
+        self._ctx = ctx
+        self._done: deque = deque()
+
+    def submit(self, item: WorkItem) -> int:
+        action, err = run_measurement(
+            self._ctx.store, self._ctx.experiments, item.configuration,
+            item.digest, self._ctx.claim_timeout_s)
+        self._done.append(WorkResult(item, action, err))
+        return item.tag
+
+    def poll(self) -> List[WorkResult]:
+        out = list(self._done)
+        self._done.clear()
+        return out
+
+    @property
+    def outstanding(self) -> int:
+        return len(self._done)
+
+
+class ThreadBackend(ExecutionBackend):
+    """Fan work out over a thread pool (today's ``workers=N`` semantics)."""
+
+    def __init__(self, ctx: ExecutionContext, workers: int = 4,
+                 executor: Optional[Executor] = None):
+        self._ctx = ctx
+        self._borrowed = executor is not None
+        self._pool = executor if executor is not None else ThreadPoolExecutor(
+            max_workers=max(1, workers))
+        self._lock = threading.Lock()
+        self._done: deque = deque()
+        self._inflight = 0
+
+    def submit(self, item: WorkItem) -> int:
+        with self._lock:
+            self._inflight += 1
+        fut = self._pool.submit(
+            run_measurement, self._ctx.store, self._ctx.experiments,
+            item.configuration, item.digest, self._ctx.claim_timeout_s)
+        fut.add_done_callback(lambda f, item=item: self._finish(item, f))
+        return item.tag
+
+    def _finish(self, item: WorkItem, fut) -> None:
+        action, err = fut.result()
+        with self._lock:
+            self._inflight -= 1
+            self._done.append(WorkResult(item, action, err))
+
+    def poll(self) -> List[WorkResult]:
+        with self._lock:
+            out = list(self._done)
+            self._done.clear()
+        return out
+
+    @property
+    def outstanding(self) -> int:
+        with self._lock:
+            return self._inflight + len(self._done)
+
+    def close(self) -> None:
+        if not self._borrowed:
+            self._pool.shutdown(wait=False)
+
+
+def _pool_worker(worker_id: int, task_queue, result_queue, store_path: str,
+                 experiments, claim_timeout_s: float) -> None:
+    """Worker-process main loop: serve the parent-assigned queue until the
+    None sentinel.
+
+    Opens its OWN store handle (processes must never share a SQLite
+    connection).  The parent records each assignment *before* enqueueing it
+    here, so an abrupt death (segfault, ``os._exit``, OOM-kill) at any point
+    of the loop is attributable to exactly one item.  Never re-raises: an
+    unexpected experiment error is reported as a crash outcome and the
+    worker lives on to serve the next item.
+    """
+    from ..store import SampleStore
+
+    store = SampleStore(store_path)
+    while True:
+        task = task_queue.get()
+        if task is None:
+            break
+        tag, configuration, digest = task
+        try:
+            action, err = run_measurement(store, experiments, configuration,
+                                          digest, claim_timeout_s)
+        except BaseException as exc:  # pragma: no cover - run_measurement catches
+            action, err = "crashed", exc
+        if action == "crashed":
+            result_queue.put(("done", worker_id, tag, "failed", "crash", repr(err)))
+        elif err is not None:
+            result_queue.put(("done", worker_id, tag, action, "measurement", str(err)))
+        else:
+            result_queue.put(("done", worker_id, tag, action, None, None))
+    store.close()
+
+
+class ProcessBackend(ExecutionBackend):
+    """A persistent, crash-tolerant pool of worker processes.
+
+    Crash isolation for hostile experiments: a segfaulting, ``os._exit``-ing,
+    or OOM-killed experiment takes down one pool worker, not the
+    investigator.  Items are dispatched parent-side — the assignment is
+    recorded before the item reaches the worker's queue — so a death at any
+    point is attributed to exactly one item: the parent releases the dead
+    worker's measurement claims (so nobody stalls waiting on them), fails
+    that one slot, and the next dispatch respawns replacement capacity — the
+    ExpoCloud recipe, scaled to a local fleet.
+
+    Workers are forked once and reused, so the per-measurement overhead is a
+    queue hop, not a process launch.  Requires a file-backed store (children
+    rendezvous through the database, never through a shared connection).
+    Uses the ``fork`` start method where available — experiment callables
+    need not be picklable — falling back to ``spawn`` elsewhere (experiments
+    must then be importable/picklable, as with any ``multiprocessing`` use).
+    """
+
+    isolates_crashes = True
+
+    def __init__(self, ctx: ExecutionContext, workers: int = 4,
+                 mp_context=None):
+        if ctx.store_path == ":memory:":
+            raise ValueError(
+                "ProcessBackend needs a file-backed SampleStore: worker "
+                "processes rendezvous through the database file")
+        self._ctx = ctx
+        self._workers = max(1, workers)
+        if mp_context is None:
+            methods = multiprocessing.get_all_start_methods()
+            mp_context = multiprocessing.get_context(
+                "fork" if "fork" in methods else "spawn")
+        self._mp = mp_context
+        self._results = self._mp.SimpleQueue()
+        self._pending: deque = deque()  # submitted, not yet assigned
+        self._items: dict = {}          # tag -> WorkItem (outstanding)
+        self._queues: dict = {}         # worker_id -> its task queue
+        self._procs: dict = {}          # worker_id -> Process
+        self._busy: dict = {}           # worker_id -> assigned tag
+        self._idle: list = []           # worker_ids awaiting an assignment
+        self._next_worker = 0
+        self._closed = False
+
+    def _spawn_worker(self) -> None:
+        worker_id = self._next_worker
+        self._next_worker += 1
+        queue = self._mp.SimpleQueue()
+        proc = self._mp.Process(
+            target=_pool_worker,
+            args=(worker_id, queue, self._results, self._ctx.store_path,
+                  tuple(self._ctx.experiments), self._ctx.claim_timeout_s),
+            daemon=True,
+        )
+        proc.start()
+        self._queues[worker_id] = queue
+        self._procs[worker_id] = proc
+        self._idle.append(worker_id)
+
+    def _dispatch(self) -> None:
+        """Assign pending items to idle workers, growing the pool up to
+        capacity.  The parent records the assignment BEFORE enqueueing, so a
+        worker death at *any* point is attributable to exactly one item —
+        nothing can be silently consumed and lost."""
+        while (self._pending and not self._idle
+               and len(self._procs) < self._workers):
+            self._spawn_worker()
+        while self._pending and self._idle:
+            worker_id = self._idle.pop()
+            item = self._pending.popleft()
+            self._busy[worker_id] = item.tag
+            self._queues[worker_id].put(
+                (item.tag, item.configuration, item.digest))
+
+    def submit(self, item: WorkItem) -> int:
+        if self._closed:
+            raise RuntimeError("backend is closed")
+        self._items[item.tag] = item
+        self._pending.append(item)
+        self._dispatch()
+        return item.tag
+
+    def _drain_results(self, out: List[WorkResult]) -> None:
+        while not self._results.empty():
+            _, worker_id, tag, action, err_kind, message = self._results.get()
+            if self._busy.get(worker_id) == tag:
+                del self._busy[worker_id]
+                self._idle.append(worker_id)
+            item = self._items.pop(tag)
+            if err_kind == "crash":
+                err: Optional[BaseException] = WorkerCrashError(
+                    f"experiment crashed in worker process: {message}")
+            elif err_kind == "measurement":
+                err = MeasurementError(message)
+            else:
+                err = None
+            out.append(WorkResult(item, action, err))
+
+    def poll(self) -> List[WorkResult]:
+        out: List[WorkResult] = []
+        self._drain_results(out)
+        dead = [w for w, p in self._procs.items() if not p.is_alive()]
+        if dead:
+            # a worker may have reported its item *then* exited between the
+            # two checks — drain again before attributing deaths
+            self._drain_results(out)
+            for worker_id in dead:
+                proc = self._procs.pop(worker_id)
+                self._queues.pop(worker_id).close()
+                if worker_id in self._idle:
+                    self._idle.remove(worker_id)
+                proc.join()
+                tag = self._busy.pop(worker_id, None)
+                if tag is not None and tag in self._items:
+                    # the assigned item died with its worker: release the
+                    # dead pid's claims so waiters take over, poison only
+                    # this slot
+                    self._ctx.store.release_claims_owned_by(str(proc.pid))
+                    item = self._items.pop(tag)
+                    out.append(WorkResult(item, "failed", WorkerCrashError(
+                        f"worker process pid={proc.pid} died with exit code "
+                        f"{proc.exitcode} mid-measurement")))
+        self._dispatch()
+        return out
+
+    @property
+    def outstanding(self) -> int:
+        return len(self._items)
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        for worker_id in self._procs:
+            self._queues[worker_id].put(None)
+        deadline = time.monotonic() + 5.0
+        for proc in self._procs.values():
+            proc.join(timeout=max(0.0, deadline - time.monotonic()))
+            if proc.is_alive():
+                proc.terminate()
+                proc.join()
+        for queue in self._queues.values():
+            queue.close()
+        self._procs.clear()
+        self._queues.clear()
+        self._items.clear()
+        self._busy.clear()
+        self._idle.clear()
+        self._pending.clear()
+        self._results.close()

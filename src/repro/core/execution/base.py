@@ -1,0 +1,232 @@
+"""Execution-backend interface + the measurement state machine.
+
+``run_measurement`` is the claim/wait/steal state machine that used to live
+inline in ``DiscoverySpace.sample_batch``: it is the *only* code path through
+which an experiment is ever executed, regardless of backend, so the
+measure-once guarantee (paper §III-D) holds identically for a thread in the
+investigator, a forked child process, and a remote worker on another host.
+
+An :class:`ExecutionBackend` is a small asynchronous work pool:
+
+* :meth:`~ExecutionBackend.submit` accepts a :class:`WorkItem` and returns
+  immediately (work may be queued internally until a slot frees);
+* :meth:`~ExecutionBackend.poll` returns the :class:`WorkResult` list
+  completed since the last poll, in completion order — the pipelined
+  ask/tell driver consumes this;
+* :meth:`~ExecutionBackend.drain` blocks until everything outstanding has
+  completed — the barrier-synchronized batch driver consumes this.
+"""
+
+from __future__ import annotations
+
+import abc
+import os
+import threading
+import time
+from dataclasses import dataclass
+from typing import List, Optional, Sequence
+
+from ..actions import MeasurementError
+from ..entities import Configuration, PropertyValue
+
+__all__ = ["WorkItem", "WorkResult", "ExecutionBackend", "ExecutionContext",
+           "WorkerCrashError", "run_measurement"]
+
+
+class WorkerCrashError(MeasurementError):
+    """A worker process died (or raised an unexpected error) mid-measurement.
+
+    Subclasses :class:`MeasurementError` on purpose: under process isolation
+    a crashing experiment poisons only its own slot — the driver records the
+    slot as ``failed`` and the investigator survives, which is the point of
+    running experiments out-of-process.
+    """
+
+
+@dataclass(frozen=True)
+class WorkItem:
+    """One unit of execution: measure all of A's experiments for a configuration."""
+
+    configuration: Configuration
+    digest: str
+    tag: int  # submission index; the driver maps results back through it
+
+
+@dataclass
+class WorkResult:
+    """Outcome of one work item: a sampling-record action tag + optional error.
+
+    ``action`` follows the sampling-record vocabulary (``measured`` /
+    ``reused`` / ``predicted`` / ``failed``) plus ``crashed`` for unexpected
+    non-measurement errors, which in-process backends propagate to the caller
+    exactly like the pre-backend engine did.
+    """
+
+    item: WorkItem
+    action: str
+    error: Optional[BaseException] = None
+
+
+@dataclass
+class ExecutionContext:
+    """What a backend needs to execute work: the common context and A.
+
+    ``store`` is the investigator's handle; ``store_path`` is what
+    out-of-process backends hand to children so they open their *own*
+    connections (forked/spawned processes must never share a SQLite handle).
+    """
+
+    store: "SampleStore"  # noqa: F821 - circular import avoided
+    experiments: Sequence
+    claim_timeout_s: float = 60.0
+    space_id: str = ""
+
+    @property
+    def store_path(self) -> str:
+        return self.store.path
+
+
+class ExecutionBackend(abc.ABC):
+    """Asynchronous work pool with submit/poll/drain semantics."""
+
+    #: True when a crashing experiment is contained to its slot (the driver
+    #: then never sees ``crashed`` results from this backend).
+    isolates_crashes = False
+
+    @abc.abstractmethod
+    def submit(self, item: WorkItem) -> int:
+        """Accept a work item; returns its tag.  Never blocks on execution."""
+
+    @abc.abstractmethod
+    def poll(self) -> List[WorkResult]:
+        """Results completed since the last poll, in completion order."""
+
+    @property
+    @abc.abstractmethod
+    def outstanding(self) -> int:
+        """Submitted items whose results have not been returned yet."""
+
+    def drain(self, timeout_s: Optional[float] = None) -> List[WorkResult]:
+        """Block until every outstanding item completes; return all results.
+
+        Raises :class:`TimeoutError` when ``timeout_s`` elapses first (e.g. a
+        queue backend with no live workers) — results gathered so far are
+        attached to the exception as ``partial``.
+        """
+        deadline = None if timeout_s is None else time.monotonic() + timeout_s
+        out: List[WorkResult] = []
+        pause = 0.001
+        while self.outstanding:
+            got = self.poll()
+            if got:
+                out.extend(got)
+                pause = 0.001
+                continue
+            if deadline is not None and time.monotonic() > deadline:
+                err = TimeoutError(
+                    f"drain timed out with {self.outstanding} work items outstanding"
+                )
+                err.partial = out  # type: ignore[attr-defined]
+                raise err
+            time.sleep(pause)
+            pause = min(pause * 2, 0.05)
+        out.extend(self.poll())
+        return out
+
+    def close(self) -> None:
+        """Release pool resources (idempotent)."""
+
+    def __enter__(self) -> "ExecutionBackend":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def run_measurement(store, experiments, configuration: Configuration,
+                    digest: str, claim_timeout_s: float = 60.0,
+                    owner: Optional[str] = None):
+    """Measure every experiment in A for one configuration — the state machine.
+
+    Returns ``(action, error)`` where ``action`` is the sampling-record tag.
+    Reuse/measure decisions go through the common context; per-cell
+    measurement claims arbitrate measure-once across every concurrent
+    investigator (threads, processes, remote hosts) sharing ``store``:
+
+    * win the claim → measure, land values, keep the claim (values make
+      re-claiming moot);
+    * lose it → wait for the winner's values; if the claim is released
+      (owner failed) race to re-claim; if it goes stale (owner presumed
+      dead) exactly one waiter steals it.
+
+    Any failure between claiming and durably landing values releases the
+    claim so waiters take over instead of stalling until their timeout.
+    """
+    owner = owner or str(os.getpid())
+    measured_any = reused_any = predicted_any = False
+    try:
+        for exp in experiments:
+            if store.has_values(digest, exp.identifier):
+                reused_any = True
+                continue
+            if exp.deferred:
+                # apply-on-demand (A*_pred semantics, paper §IV-4)
+                continue
+            who = f"{owner}:{threading.get_ident()}"
+            claimed = store.claim_experiment(digest, exp.identifier, who)
+            while not claimed:
+                # Another investigator (thread or process) is already
+                # measuring this cell: wait and reuse their result — the
+                # measure-once guarantee.  Measure ONLY after winning a claim.
+                if store.wait_for_values(digest, exp.identifier,
+                                         timeout_s=claim_timeout_s):
+                    break
+                if store.claim_exists(digest, exp.identifier):
+                    # timed out on a still-standing claim: the owner is
+                    # presumed dead — exactly one waiter steals it
+                    claimed = store.steal_claim(
+                        digest, exp.identifier, who,
+                        older_than_s=claim_timeout_s)
+                else:
+                    # owner failed and released: race for the re-claim
+                    claimed = store.claim_experiment(
+                        digest, exp.identifier, who)
+            if not claimed:
+                reused_any = True
+                continue
+            try:
+                # the claim is held until values durably land: any failure in
+                # measuring, converting, or storing them must free the cell
+                # so waiters take over instead of stalling until their timeout
+                values = exp.measure(configuration)
+                store.put_values(
+                    digest,
+                    [
+                        PropertyValue(
+                            name=k,
+                            value=float(v),
+                            experiment_id=exp.identifier,
+                            predicted=exp.predicted,
+                        )
+                        for k, v in values.items()
+                    ],
+                )
+            except BaseException:
+                store.release_claim(digest, exp.identifier)
+                raise
+            if exp.predicted:
+                predicted_any = True
+            else:
+                measured_any = True
+    except MeasurementError as err:
+        return "failed", err
+    except BaseException as err:
+        # unexpected (an experiment bug, a store error): poison only this
+        # slot — in-process backends re-raise it from the driver, isolating
+        # backends convert it to a failed slot
+        return "crashed", err
+    if measured_any:
+        return "measured", None
+    if predicted_any and not reused_any:
+        return "predicted", None
+    return "reused", None

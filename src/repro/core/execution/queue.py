@@ -1,0 +1,95 @@
+"""Store-rendezvous execution: the ``work_items`` queue (paper §III-D).
+
+The paper's distributed-investigation claim is that the shared sample store
+is the *only* coordination point between investigators.  :class:`QueueBackend`
+takes that literally for execution too: ``submit`` writes a row to the
+``work_items`` table of the SQLite :class:`~repro.core.store.SampleStore`,
+and any number of worker processes — on this host or on any host sharing the
+database — pull items with ``python -m repro.core.execution.worker``, run the
+measurement state machine, and land values through the existing
+measurement-claim arbitration.  The investigator polls the table for
+outcomes; it never talks to a worker directly.
+
+Crash tolerance (ExpoCloud-style): a worker that dies mid-item leaves the
+row ``running``; the backend periodically re-queues rows whose claim went
+silent for longer than the claim timeout, so the surviving fleet redoes the
+work, and sweeps the dead worker's stale measurement claims so nobody stalls
+waiting on them.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from typing import List, Optional
+
+from ..actions import MeasurementError
+from .base import (ExecutionBackend, ExecutionContext, WorkItem, WorkResult,
+                   WorkerCrashError)
+
+__all__ = ["QueueBackend"]
+
+
+class QueueBackend(ExecutionBackend):
+    """Dispatch work through the store's ``work_items`` table to remote workers.
+
+    Requires a file-backed store and at least one live worker process (see
+    :mod:`repro.core.execution.worker`); with none, :meth:`drain` blocks
+    until ``drain_timeout_s`` and raises :class:`TimeoutError` — set it
+    whenever the worker fleet is not under this process's control (the
+    default None waits forever, on the §III-D premise that workers may join
+    late).  Results carry the action tag the remote state machine reported;
+    a crash on the worker side surfaces as a ``failed`` slot with
+    :class:`WorkerCrashError`.
+    """
+
+    isolates_crashes = True
+
+    def __init__(self, ctx: ExecutionContext, requeue_after_s: Optional[float] = None,
+                 drain_timeout_s: Optional[float] = None):
+        if ctx.store_path == ":memory:":
+            raise ValueError(
+                "QueueBackend needs a file-backed SampleStore: remote "
+                "workers rendezvous through the database file")
+        self._ctx = ctx
+        self._requeue_after_s = (requeue_after_s if requeue_after_s is not None
+                                 else ctx.claim_timeout_s)
+        self._drain_timeout_s = drain_timeout_s
+        self._open: dict = {}  # item_id -> WorkItem
+        self._last_sweep = time.monotonic()
+
+    def drain(self, timeout_s: Optional[float] = None):
+        return super().drain(timeout_s if timeout_s is not None
+                             else self._drain_timeout_s)
+
+    def submit(self, item: WorkItem) -> int:
+        item_id = self._ctx.store.enqueue_work(self._ctx.space_id, item.digest)
+        self._open[item_id] = item
+        return item.tag
+
+    def poll(self) -> List[WorkResult]:
+        results = self._ctx.store.fetch_work_results(list(self._open))
+        out: List[WorkResult] = []
+        for item_id, (action, error) in results.items():
+            item = self._open.pop(item_id)
+            err: Optional[BaseException] = None
+            if action == "failed" and error is not None:
+                err = (WorkerCrashError(error) if error.startswith("crash:")
+                       else MeasurementError(error))
+            out.append(WorkResult(item, action, err))
+        self._maybe_gc()
+        return out
+
+    def _maybe_gc(self) -> None:
+        """Periodic fleet hygiene while waiting: re-queue items whose worker
+        went silent and reap its stale measurement claims."""
+        now = time.monotonic()
+        if now - self._last_sweep < min(1.0, self._requeue_after_s / 2):
+            return
+        self._last_sweep = now
+        self._ctx.store.requeue_stale_work(self._requeue_after_s)
+        self._ctx.store.sweep_stale_claims(self._ctx.claim_timeout_s)
+
+    @property
+    def outstanding(self) -> int:
+        return len(self._open)

@@ -1,0 +1,113 @@
+"""Remote measurement worker: ``python -m repro.core.execution.worker``.
+
+One worker process serving the ``work_items`` queue of a shared sample
+store.  Start any number of these — on the investigator's host or on any
+machine sharing the database file — and point them at a *factory* that
+rebuilds the Discovery Space (the store only persists Ω and experiment
+identifiers; the experiment *code* must come from your module, exactly like
+any ``multiprocessing`` target)::
+
+    python -m repro.core.execution.worker \
+        --store /mnt/shared/common_context.db \
+        --factory mypackage.study:build_ds \
+        --idle-timeout 30
+
+The factory is ``module:callable`` taking the store path and returning a
+:class:`~repro.core.discovery.DiscoverySpace`.  The worker claims queued
+items for that space, runs the measurement state machine (values land
+through the normal measurement-claim arbitration, so racing workers still
+measure each cell exactly once), reports each outcome, and exits after
+``--idle-timeout`` seconds without work (or after ``--max-items``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import importlib
+import os
+import time
+from typing import Optional
+
+from .base import run_measurement
+
+__all__ = ["run_worker", "main"]
+
+
+def run_worker(ds, owner: Optional[str] = None, idle_timeout_s: float = 10.0,
+               max_items: Optional[int] = None,
+               poll_interval_s: float = 0.05) -> int:
+    """Serve the work-item queue of ``ds``'s store until idle; returns the
+    number of items processed.  Importable directly so tests and embedded
+    fleets can host the loop in a thread instead of a process."""
+    owner = owner or f"worker-{os.getpid()}"
+    store = ds.store
+    processed = 0
+    idle_since = time.monotonic()
+    while max_items is None or processed < max_items:
+        claim = store.claim_work(owner, space_id=ds.space_id)
+        if claim is None:
+            if time.monotonic() - idle_since >= idle_timeout_s:
+                break
+            time.sleep(poll_interval_s)
+            continue
+        digest = claim["config_digest"]
+        config = store.get_configuration(digest)
+        if config is None:
+            store.finish_work(claim["item_id"], "failed",
+                              f"no stored configuration for digest {digest}",
+                              owner=owner)
+            continue
+        action, err = run_measurement(store, ds.actions.experiments, config,
+                                      digest, ds.claim_timeout_s, owner=owner)
+        # guarded finish: if this item went silent long enough to be
+        # re-queued (and re-claimed by the surviving fleet), our late
+        # outcome is stale and must not overwrite the re-execution's
+        if action == "crashed":
+            # contain the experiment bug to this item; the worker survives
+            store.finish_work(claim["item_id"], "failed", f"crash: {err!r}",
+                              owner=owner)
+        else:
+            store.finish_work(claim["item_id"], action,
+                              None if err is None else str(err), owner=owner)
+        processed += 1
+        idle_since = time.monotonic()
+    return processed
+
+
+def _load_factory(spec: str):
+    module_name, _, attr = spec.partition(":")
+    if not attr:
+        raise SystemExit(f"--factory must be module:callable, got {spec!r}")
+    return getattr(importlib.import_module(module_name), attr)
+
+
+def main(argv: Optional[list] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.core.execution.worker",
+        description="Serve a shared sample store's work-item queue.")
+    parser.add_argument("--store", required=True,
+                        help="path to the shared SampleStore database file")
+    parser.add_argument("--factory", required=True,
+                        help="module:callable rebuilding the DiscoverySpace "
+                             "from the store path")
+    parser.add_argument("--idle-timeout", type=float, default=10.0,
+                        help="exit after this many seconds without work")
+    parser.add_argument("--max-items", type=int, default=None,
+                        help="exit after processing this many items")
+    parser.add_argument("--poll-interval", type=float, default=0.05,
+                        help="queue poll period in seconds")
+    parser.add_argument("--owner", default=None,
+                        help="worker identity for claims (default: worker-<pid>)")
+    args = parser.parse_args(argv)
+
+    ds = _load_factory(args.factory)(args.store)
+    processed = run_worker(ds, owner=args.owner,
+                           idle_timeout_s=args.idle_timeout,
+                           max_items=args.max_items,
+                           poll_interval_s=args.poll_interval)
+    print(f"[worker pid={os.getpid()}] processed {processed} work items")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

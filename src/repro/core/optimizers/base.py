@@ -26,15 +26,17 @@ from __future__ import annotations
 
 import abc
 import math
+import time
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional, Sequence
+from typing import Callable, List, Optional, Sequence, Union
 
 import numpy as np
 
 from ..actions import MeasurementError
-from ..discovery import DiscoverySpace
+from ..discovery import BatchResult, DiscoverySpace
 from ..entities import Configuration
+from ..execution import ExecutionBackend, WorkItem
 
 __all__ = ["Trial", "OptimizerRun", "SearchAdapter", "Optimizer", "run_optimizer",
            "hypergeom_p_found"]
@@ -56,6 +58,7 @@ class OptimizerRun:
     trials: list = field(default_factory=list)
     operation_id: str = ""
     batch_size: int = 1
+    max_inflight: Optional[int] = None  # set when the pipelined engine ran
 
     @property
     def num_trials(self) -> int:
@@ -118,6 +121,10 @@ class SearchAdapter:
             "optimization", {"optimizer": optimizer_name, "metric": metric, "mode": mode}
         )
         self.trials: list = []
+        # Digests proposed but not yet told (in-flight on an execution
+        # backend).  The pipelined driver marks/clears these so ``ask`` never
+        # re-proposes an outstanding candidate.
+        self.pending: set = set()
 
     @property
     def space(self):
@@ -127,36 +134,45 @@ class SearchAdapter:
 
     def tell(self, trials: Sequence[Trial]) -> None:
         """Record externally-evaluated trials into the optimizer-visible
-        history (the 'tell' half of the protocol)."""
+        history (the 'tell' half of the protocol).  Partial batches are fine:
+        the pipelined engine tells each trial as its backend completes it,
+        without waiting for stragglers."""
         self.trials.extend(trials)
 
+    def _make_trial(self, result: BatchResult, seq: int) -> Trial:
+        if not result.ok:
+            return Trial(result.configuration, None, "failed", seq)
+        if not result.sample.has(self.metric):
+            raise KeyError(
+                f"metric {self.metric!r} not among action-space properties "
+                f"{self.ds.actions.observed_properties}"
+            )
+        return Trial(result.configuration, result.sample.value(self.metric),
+                     result.action, seq)
+
+    def tell_result(self, result: BatchResult) -> Trial:
+        """Tell ONE completed evaluation (the pipelined engine's tell path)."""
+        trial = self._make_trial(result, len(self.trials))
+        self.tell([trial])
+        return trial
+
     def evaluate_batch(self, configurations: Sequence[Configuration],
-                       workers: int = 1, executor=None) -> List[Optional[float]]:
+                       workers: int = 1, executor=None,
+                       backend=None) -> List[Optional[float]]:
         """Evaluate a candidate batch and tell the results.
 
-        Experiments fan out over ``workers`` threads (or a caller-owned
-        ``executor``, reused across batches to avoid per-batch pool setup);
-        trials are appended in submission order so the history (and
-        therefore every subsequent ``ask``) is deterministic regardless of
-        completion order.  Failed measurements become ``action='failed'``
-        trials with value None.
+        Experiments fan out over an execution backend (``workers`` threads,
+        a caller-owned ``executor`` reused across batches, or any backend
+        accepted by ``DiscoverySpace.sample_batch``); trials are appended in
+        submission order so the history (and therefore every subsequent
+        ``ask``) is deterministic regardless of completion order.  Failed
+        measurements become ``action='failed'`` trials with value None.
         """
         results = self.ds.sample_batch(
             configurations, operation_id=self.operation_id, workers=workers,
-            executor=executor)
-        batch: list = []
-        for result in results:
-            seq = len(self.trials) + len(batch)
-            if not result.ok:
-                batch.append(Trial(result.configuration, None, "failed", seq))
-                continue
-            if not result.sample.has(self.metric):
-                raise KeyError(
-                    f"metric {self.metric!r} not among action-space properties "
-                    f"{self.ds.actions.observed_properties}"
-                )
-            batch.append(Trial(result.configuration, result.sample.value(self.metric),
-                               result.action, seq))
+            executor=executor, backend=backend)
+        batch = [self._make_trial(result, len(self.trials) + i)
+                 for i, result in enumerate(results)]
         self.tell(batch)
         return [t.value for t in batch]
 
@@ -164,7 +180,7 @@ class SearchAdapter:
         return self.evaluate_batch([configuration])[0]
 
     def seen_digests(self) -> set:
-        return {t.configuration.digest for t in self.trials}
+        return {t.configuration.digest for t in self.trials} | self.pending
 
     def signed(self, value: float) -> float:
         """Value in canonical minimization orientation."""
@@ -260,6 +276,110 @@ class Optimizer(abc.ABC):
         return out
 
 
+class _StoppingRule:
+    """The paper's §V-B1 stopping rule, shared by both engines: halt when the
+    incumbent best has not improved for ``patience`` consecutive trials."""
+
+    def __init__(self, adapter: SearchAdapter, patience: int, min_trials: int):
+        self.adapter = adapter
+        self.patience = patience
+        self.min_trials = min_trials
+        self.best: Optional[float] = None
+        self.stall = 0
+        self.stop = False
+
+    def observe(self, value: Optional[float]) -> None:
+        if value is not None:
+            sv = self.adapter.signed(value)
+            if self.best is None or sv < self.best - 1e-12:
+                self.best = sv
+                self.stall = 0
+            else:
+                self.stall += 1
+        else:
+            self.stall += 1
+        if len(self.adapter.trials) >= self.min_trials and self.stall >= self.patience:
+            self.stop = True
+
+
+def _run_pipelined(
+    optimizer: Optimizer,
+    adapter: SearchAdapter,
+    rng: np.random.Generator,
+    max_trials: int,
+    rule: _StoppingRule,
+    max_inflight: int,
+    backend,
+) -> None:
+    """The Lynceus-style pipelined ask/tell engine.
+
+    Keeps up to ``max_inflight`` trials outstanding on an execution backend;
+    every completion is told immediately (a partial tell) and its slot is
+    refilled by asking the optimizer for ONE replacement — no barrier, so a
+    straggling experiment never stalls the next ask.  In-flight candidates
+    are visible to ``ask`` through ``adapter.pending``, which keeps proposals
+    distinct without mutating optimizer state.
+
+    Records land in completion order; with ``max_inflight=1`` completion
+    order *is* submission order and the run reproduces the serial
+    ``batch_size=1`` trajectory draw-for-draw (same rng stream, same record).
+    """
+    ds = adapter.ds
+    owned = not isinstance(backend, ExecutionBackend)
+    engine = ds.execution_backend(backend, workers=max_inflight)
+    inflight: dict = {}  # tag -> (configuration, digest)
+    tag = 0
+    exhausted = False
+    crash: Optional[BaseException] = None
+    pause = 0.0005
+    try:
+        while True:
+            while (not rule.stop and crash is None and not exhausted
+                   and len(inflight) < max_inflight
+                   and len(adapter.trials) + len(inflight) < max_trials):
+                batch = optimizer.ask(adapter, rng, n=1)
+                if not batch:
+                    exhausted = True
+                    break
+                config = batch[0]
+                digest = ds.store.put_configuration(config)
+                adapter.pending.add(digest)
+                engine.submit(WorkItem(config, digest, tag))
+                inflight[tag] = (config, digest)
+                tag += 1
+            if not inflight:
+                break
+            completed = engine.poll()
+            if not completed:
+                ds._maybe_sweep_claims()
+                time.sleep(pause)
+                pause = min(pause * 2, 0.005)
+                continue
+            pause = 0.0005
+            for res in completed:
+                config, digest = inflight.pop(res.item.tag)
+                adapter.pending.discard(digest)
+                if res.action == "crashed":
+                    # an in-process backend surfaced an experiment bug:
+                    # propagate like the batch engine — but only after the
+                    # remaining in-flight trials drain, so their records and
+                    # tells land first (their values are already durable)
+                    crash = crash if crash is not None else res.error
+                    continue
+                result = ds.record_result(config, digest, res.action,
+                                          res.error, adapter.operation_id)
+                trial = adapter.tell_result(result)
+                rule.observe(trial.value)
+            # once stopping (or a crash) triggers we submit nothing new, but
+            # trials already in flight are drained and told — they are paid
+            # for, and the batch engine likewise tells its full final batch
+        if crash is not None:
+            raise crash
+    finally:
+        if owned:
+            engine.close()
+
+
 def run_optimizer(
     optimizer: Optimizer,
     ds: DiscoverySpace,
@@ -271,51 +391,64 @@ def run_optimizer(
     min_trials: int = 1,
     batch_size: int = 1,
     workers: int = 1,
+    max_inflight: Optional[int] = None,
+    backend: Union[ExecutionBackend, str, None] = None,
 ) -> OptimizerRun:
     """Run one optimization operation on a Discovery Space.
 
-    Each step asks the optimizer for a ``batch_size`` candidate batch and
-    evaluates it with ``workers`` parallel experiment workers — the batched
-    ask/tell engine (paper §III-D's distributed investigation; with the
-    defaults this is the classic serial loop, draw-for-draw).
+    Two engines share the ask/tell protocol and the stopping rule:
+
+    * **batched** (default): each step asks for a ``batch_size`` candidate
+      batch and evaluates it with ``workers`` parallel experiment workers,
+      barrier-synchronizing per batch (with the defaults this is the classic
+      serial loop, draw-for-draw);
+    * **pipelined** (``max_inflight=N``): up to N trials stay outstanding on
+      an execution backend; completed trials are told and replaced
+      immediately, so slow experiments never stall the next ask.
+      ``max_inflight=1`` reproduces the serial trajectory draw-for-draw.
+
+    ``backend`` routes experiment execution (``serial | thread | process |
+    queue`` or an :class:`~repro.core.execution.ExecutionBackend`); None
+    keeps thread execution sized to the engine's parallelism.
 
     Stopping rule follows the paper (§V-B1): halt when the incumbent best has
     not improved for ``patience`` consecutive trials (or after ``max_trials``,
-    or when the space is exhausted).  Trials within a batch are assessed in
-    submission order, so the stopping decision is identical for serial and
-    parallel execution of the same proposals.
+    or when the space is exhausted).  Trials are assessed in tell order, so
+    the stopping decision is identical for serial and parallel execution of
+    the same proposals.
     """
     if batch_size < 1:
         raise ValueError(f"batch_size must be >= 1, got {batch_size}")
+    if max_inflight is not None and max_inflight < 1:
+        raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
     rng = rng if rng is not None else np.random.default_rng(optimizer.seed)
     adapter = SearchAdapter(ds, metric, mode, optimizer_name=optimizer.name)
-    best: Optional[float] = None
-    stall = 0
-    stop = False
-    # one worker pool for the whole run, not one per batch
-    pool = ThreadPoolExecutor(max_workers=workers) if workers > 1 else None
-    try:
-        while not stop and len(adapter.trials) < max_trials:
-            n = min(batch_size, max_trials - len(adapter.trials))
-            batch = optimizer.ask(adapter, rng, n=n)
-            if not batch:
-                break
-            values = adapter.evaluate_batch(batch, executor=pool)
-            for value in values:
-                if value is not None:
-                    sv = adapter.signed(value)
-                    if best is None or sv < best - 1e-12:
-                        best = sv
-                        stall = 0
-                    else:
-                        stall += 1
-                else:
-                    stall += 1
-                if len(adapter.trials) >= min_trials and stall >= patience:
-                    stop = True
-    finally:
-        if pool is not None:
-            pool.shutdown(wait=False)
+    rule = _StoppingRule(adapter, patience, min_trials)
+    if max_inflight is not None:
+        _run_pipelined(optimizer, adapter, rng, max_trials, rule,
+                       max_inflight, backend)
+    else:
+        # one worker pool / backend for the whole run, not one per batch
+        owned = not isinstance(backend, ExecutionBackend)
+        pool = (ThreadPoolExecutor(max_workers=workers)
+                if workers > 1 and backend is None else None)
+        engine = (ds.execution_backend(backend, workers=workers)
+                  if backend is not None else None)
+        try:
+            while not rule.stop and len(adapter.trials) < max_trials:
+                n = min(batch_size, max_trials - len(adapter.trials))
+                batch = optimizer.ask(adapter, rng, n=n)
+                if not batch:
+                    break
+                values = adapter.evaluate_batch(batch, workers=workers,
+                                                executor=pool, backend=engine)
+                for value in values:
+                    rule.observe(value)
+        finally:
+            if pool is not None:
+                pool.shutdown(wait=False)
+            if engine is not None and owned:
+                engine.close()
     return OptimizerRun(
         optimizer=optimizer.name,
         metric=metric,
@@ -323,6 +456,7 @@ def run_optimizer(
         trials=adapter.trials,
         operation_id=adapter.operation_id,
         batch_size=batch_size,
+        max_inflight=max_inflight,
     )
 
 

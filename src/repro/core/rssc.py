@@ -73,14 +73,17 @@ def rssc_transfer(
     top_k: int = 5,
     predict_remaining: bool = True,
     workers: int = 1,
+    backend=None,
 ) -> RSSCResult:
     """Run the full RSSC procedure from source to target Discovery Space.
 
     ``selection`` ∈ {"clustering", "top5", "linspace"} — the paper's method
-    and its two baselines (§V-B2).  ``workers`` parallelizes the target-space
-    measurements of step ④ (and the step-⑧ surrogate sweep): representative
-    measurement is the only real sampling cost of the procedure, so that is
-    where the batch engine pays off.
+    and its two baselines (§V-B2).  ``workers``/``backend`` route the
+    target-space measurements of step ④ (and the step-⑧ surrogate sweep)
+    through an execution backend (``DiscoverySpace.sample_batch``):
+    representative measurement is the only real sampling cost of the
+    procedure, so that is where parallel — or process-isolated, or remote —
+    execution pays off.
     """
     rng = rng if rng is not None else np.random.default_rng(0)
     mapping = dict(mapping or {})
@@ -110,7 +113,8 @@ def rssc_transfer(
     # ④ measure the representative sub-space in A* (batched, parallel)
     op = target.begin_operation("rssc", {"property": property_name,
                                          "selection": selection})
-    results = target.sample_batch(translated, operation_id=op, workers=workers)
+    results = target.sample_batch(translated, operation_id=op, workers=workers,
+                                  backend=backend)
     target_values = []
     kept_src, kept_tgt, kept_src_vals = [], [], []
     n_measured = 0
@@ -148,11 +152,17 @@ def rssc_transfer(
         if predict_remaining and target.space.finite:
             # ⑧ sweep predictions over all not-yet-sampled points (batched;
             # failed predictions are recorded and skipped, as in the serial
-            # sweep)
+            # sweep).  A caller-provided backend *instance* is bound to the
+            # target's action space, not A*_pred's (it would execute the
+            # real experiments instead of the surrogate) — re-resolve by
+            # name/None for the predicted space instead.
+            from .execution import ExecutionBackend
+            pred_backend = (None if isinstance(backend, ExecutionBackend)
+                            else backend)
             pred_op = predicted_space.begin_operation("rssc-predict")
             predicted_space.sample_batch(
                 list(predicted_space.remaining_configurations()),
-                operation_id=pred_op, workers=workers)
+                operation_id=pred_op, workers=workers, backend=pred_backend)
 
     return RSSCResult(
         property_name=property_name,

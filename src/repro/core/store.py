@@ -42,6 +42,7 @@ import os
 import sqlite3
 import threading
 import time
+import uuid
 from contextlib import contextmanager
 from dataclasses import dataclass
 from typing import Any, Iterable, Mapping, Optional, Sequence
@@ -96,6 +97,20 @@ CREATE TABLE IF NOT EXISTS value_claims (
     created_at    REAL NOT NULL,
     PRIMARY KEY (config_digest, experiment_id)
 );
+CREATE INDEX IF NOT EXISTS rec_digest ON records(space_id, config_digest);
+CREATE TABLE IF NOT EXISTS work_items (
+    item_id       TEXT PRIMARY KEY,
+    space_id      TEXT NOT NULL,
+    config_digest TEXT NOT NULL,
+    status        TEXT NOT NULL DEFAULT 'queued',
+    owner         TEXT,
+    action        TEXT,
+    error         TEXT,
+    created_at    REAL NOT NULL,
+    claimed_at    REAL,
+    finished_at   REAL
+);
+CREATE INDEX IF NOT EXISTS wi_queue ON work_items(space_id, status, created_at);
 """
 
 # Allocates the next per-operation sequence number and inserts the record in
@@ -332,6 +347,35 @@ class SampleStore:
         )
         return bool(rows)
 
+    def sweep_stale_claims(self, older_than_s: float) -> int:
+        """Reap claims older than ``older_than_s`` (presumed-crashed owners).
+
+        Complements :meth:`steal_claim`, which only fires once a waiter has
+        burned its full timeout on that specific cell: the periodic sweep
+        clears *all* stale claims up front, so waiters that arrive later race
+        a fresh :meth:`claim_experiment` instead of a dead owner's row.
+        Deleting the claim of a *successful* measurement is harmless — the
+        landed values short-circuit re-claiming.  Returns the reap count.
+        """
+        with self._conn() as conn:
+            cur = conn.execute(
+                "DELETE FROM value_claims WHERE created_at < ?",
+                (time.time() - older_than_s,),
+            )
+            return cur.rowcount
+
+    def release_claims_owned_by(self, owner: str) -> int:
+        """Release every claim held by ``owner`` (exact match or
+        ``owner:<thread>`` children) — the cleanup path when an investigator
+        observes one of its worker processes die mid-measurement.  Returns
+        the number of claims released."""
+        with self._conn() as conn:
+            cur = conn.execute(
+                "DELETE FROM value_claims WHERE owner = ? OR owner LIKE ?",
+                (owner, owner + ":%"),
+            )
+            return cur.rowcount
+
     def wait_for_values(self, config_digest: str, experiment_id: str,
                         timeout_s: float = 60.0) -> bool:
         """Wait for another investigator's in-flight measurement to land.
@@ -350,6 +394,114 @@ class SampleStore:
             time.sleep(poll)
             poll = min(poll * 2, 0.1)
         return False
+
+    # -- the work-item queue (store-rendezvous execution, paper §III-D) ---------
+
+    def enqueue_work(self, space_id: str, config_digest: str) -> str:
+        """Queue one (space, configuration) measurement for remote workers.
+
+        The shared store is the *only* coordination point (§III-D): any
+        worker process on any host holding this database file (or a network
+        mount of it) can claim the item, run the experiments, and land values
+        through the normal measurement-claim arbitration.  Returns the item
+        id used to poll for completion.
+        """
+        item_id = uuid.uuid4().hex
+        self._write(
+            "INSERT INTO work_items(item_id, space_id, config_digest, status, created_at)"
+            " VALUES (?,?,?,'queued',?)",
+            (item_id, space_id, config_digest, time.time()),
+        )
+        return item_id
+
+    def claim_work(self, owner: str, space_id: Optional[str] = None) -> Optional[dict]:
+        """Atomically pop the oldest queued work item (None when idle).
+
+        Claiming is an ``UPDATE ... WHERE status='queued'`` on a specific
+        item id: under SQLite's single-writer lock exactly one of N racing
+        workers flips the row to ``running``; the losers retry on the next
+        oldest item.
+        """
+        for _ in range(16):
+            rows = self._rows(
+                "SELECT item_id, space_id, config_digest FROM work_items"
+                " WHERE status='queued'" +
+                (" AND space_id=?" if space_id is not None else "") +
+                " ORDER BY created_at, item_id LIMIT 1",
+                (space_id,) if space_id is not None else (),
+            )
+            if not rows:
+                return None
+            item_id = rows[0][0]
+            with self._conn() as conn:
+                cur = conn.execute(
+                    "UPDATE work_items SET status='running', owner=?, claimed_at=?"
+                    " WHERE item_id=? AND status='queued'",
+                    (owner, time.time(), item_id),
+                )
+                if cur.rowcount == 1:
+                    return {"item_id": item_id, "space_id": rows[0][1],
+                            "config_digest": rows[0][2]}
+        return None
+
+    def finish_work(self, item_id: str, action: str,
+                    error: Optional[str] = None,
+                    owner: Optional[str] = None) -> bool:
+        """Land a claimed work item's outcome for the enqueuer to collect.
+
+        Guarded: only a ``running`` item is finished, and when ``owner`` is
+        given it must still hold the claim — a stale worker whose item was
+        re-queued (and possibly re-claimed by the surviving fleet) cannot
+        overwrite the re-execution's outcome.  Returns False for such stale
+        finishes (the caller should simply move on).
+        """
+        sql = ("UPDATE work_items SET status='done', action=?, error=?,"
+               " finished_at=? WHERE item_id=? AND status='running'")
+        params: list = [action, error, time.time(), item_id]
+        if owner is not None:
+            sql += " AND owner=?"
+            params.append(owner)
+        with self._conn() as conn:
+            return conn.execute(sql, params).rowcount == 1
+
+    def fetch_work_results(self, item_ids: Sequence[str]) -> dict:
+        """``{item_id: (action, error)}`` for the finished subset of ids.
+
+        Chunked so huge in-flight batches stay under SQLite's
+        bound-parameter limit (999 on older builds).
+        """
+        out: dict = {}
+        item_ids = list(item_ids)
+        for i in range(0, len(item_ids), 500):
+            chunk = item_ids[i:i + 500]
+            marks = ",".join("?" * len(chunk))
+            rows = self._rows(
+                f"SELECT item_id, action, error FROM work_items"
+                f" WHERE status='done' AND item_id IN ({marks})",
+                chunk,
+            )
+            out.update({r[0]: (r[1], r[2]) for r in rows})
+        return out
+
+    def requeue_stale_work(self, older_than_s: float) -> int:
+        """Re-queue running items whose worker went silent (crash tolerance):
+        an item claimed more than ``older_than_s`` ago without a result goes
+        back to ``queued`` for the surviving fleet.  Returns the count."""
+        with self._conn() as conn:
+            cur = conn.execute(
+                "UPDATE work_items SET status='queued', owner=NULL, claimed_at=NULL"
+                " WHERE status='running' AND claimed_at < ?",
+                (time.time() - older_than_s,),
+            )
+            return cur.rowcount
+
+    def pending_work(self, space_id: Optional[str] = None) -> int:
+        sql = "SELECT COUNT(*) FROM work_items WHERE status IN ('queued','running')"
+        params: tuple = ()
+        if space_id is not None:
+            sql += " AND space_id=?"
+            params = (space_id,)
+        return int(self._rows(sql, params)[0][0])
 
     # -- the time-resolved sampling record --------------------------------------------
 
@@ -417,6 +569,16 @@ class SampleStore:
             params.append(operation_id)
         sql += " ORDER BY id"
         return [RecordEntry(*r) for r in self._rows(sql, params)]
+
+    def has_record(self, space_id: str, config_digest: str,
+                   include_failed: bool = False) -> bool:
+        """Point query: is this configuration in the space's sampling record?
+        Indexed (``rec_digest``), so membership checks don't rebuild the full
+        sampled-digest set the way :meth:`sampled_digests` does."""
+        sql = "SELECT 1 FROM records WHERE space_id=? AND config_digest=?"
+        if not include_failed:
+            sql += " AND action != 'failed'"
+        return bool(self._rows(sql + " LIMIT 1", (space_id, config_digest)))
 
     def sampled_digests(self, space_id: str, include_failed: bool = False) -> list:
         """Distinct configuration digests in this space's sampling record,

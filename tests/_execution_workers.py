@@ -1,0 +1,74 @@
+"""Module-level experiment functions for the execution-backend tests.
+
+Process backends may run under the ``spawn`` start method (and the queue
+worker is a separate interpreter entirely), so everything a child needs to
+import lives here, free of pytest/hypothesis dependencies — the
+``_store_workers`` pattern.
+"""
+
+import os
+import sys
+
+# Children must resolve `repro` even when launched without PYTHONPATH=src.
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+if _SRC not in sys.path:  # pragma: no cover - depends on launcher env
+    sys.path.insert(0, _SRC)
+
+from repro.core import (ActionSpace, DiscoverySpace, Dimension,
+                        FunctionExperiment, MeasurementError, ProbabilitySpace,
+                        SampleStore)
+
+POISON_X = 2  # the configuration coordinate that triggers hostile behavior
+
+
+def grid_fn(c):
+    return {"m": c["x"] * 10.0 + c["y"]}
+
+
+def exit_fn(c):
+    """A hostile experiment: hard-kills its process mid-measurement (the
+    no-cleanup analogue of a segfault) for the poison configuration."""
+    if c["x"] == POISON_X:
+        os._exit(42)
+    return {"m": float(c["x"])}
+
+
+def raise_fn(c):
+    """An experiment bug: raises a non-MeasurementError for the poison
+    configuration."""
+    if c["x"] == POISON_X:
+        raise RuntimeError("experiment bug: wild pointer")
+    return {"m": float(c["x"])}
+
+
+def flaky_fn(c):
+    """A non-deployable configuration: raises MeasurementError."""
+    if c["x"] == POISON_X:
+        raise MeasurementError("insufficient quota")
+    return {"m": float(c["x"])}
+
+
+def line_space(n=4):
+    return ProbabilitySpace.make([Dimension.discrete("x", list(range(n)))])
+
+
+def make_line_ds(fn, store):
+    return DiscoverySpace(
+        space=line_space(),
+        actions=ActionSpace.make([FunctionExperiment(
+            fn=fn, properties=("m",), name="line")]),
+        store=store,
+        claim_timeout_s=2.0,
+    )
+
+
+def build_queue_ds(store_path):
+    """Worker factory (``--factory _execution_workers:build_queue_ds``):
+    rebuild the same (Ω, A) from the store path — same space_id, one study."""
+    space = ProbabilitySpace.make([
+        Dimension.discrete("x", list(range(8))),
+        Dimension.discrete("y", list(range(4))),
+    ])
+    exp = FunctionExperiment(fn=grid_fn, properties=("m",), name="grid")
+    return DiscoverySpace(space=space, actions=ActionSpace.make([exp]),
+                          store=SampleStore(store_path), claim_timeout_s=5.0)

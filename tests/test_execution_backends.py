@@ -1,0 +1,387 @@
+"""Tests for the pluggable execution-backend subsystem.
+
+Three pillars:
+
+* **equivalence** — ``SerialBackend``/``ThreadBackend`` re-host the classic
+  engine byte-identically, and the pipelined engine at ``max_inflight=1``
+  reproduces the serial trajectory draw-for-draw;
+* **crash isolation** — a ``ProcessBackend`` worker that ``os._exit``-s (or
+  raises an unexpected error) mid-measurement poisons only its own slot:
+  its claims are released so nobody stalls, and the surviving slots'
+  sampling records are serial-equivalent;
+* **store rendezvous** — ``QueueBackend`` work items are executed by worker
+  loops (threads here, ``python -m repro.core.execution.worker`` processes
+  in the example) that coordinate exclusively through the shared store.
+"""
+
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (Configuration, DiscoverySpace, MeasurementError,
+                        SampleStore, WorkerCrashError)
+from repro.core.entities import canonical_json
+from repro.core.execution import WorkItem, make_backend
+from repro.core.execution.worker import run_worker
+from repro.core.optimizers import OPTIMIZER_REGISTRY, run_optimizer
+
+from _execution_workers import (build_queue_ds, exit_fn, flaky_fn,
+                                make_line_ds, raise_fn)
+
+
+def reconciled(ds: DiscoverySpace) -> str:
+    payload = sorted(
+        (s.configuration.digest,
+         sorted((v.name, v.value, v.experiment_id, v.predicted)
+                for v in s.properties.values()))
+        for s in ds.read()
+    )
+    return canonical_json(payload)
+
+
+def records(ds: DiscoverySpace, op: str) -> list:
+    return [(r.seq, r.config_digest, r.action) for r in ds.timeseries(op)]
+
+
+def line_configs(n=4):
+    return [Configuration.make({"x": x}) for x in range(n)]
+
+
+# ----------------------------------------------------- backend equivalence
+
+
+@pytest.mark.parametrize("backend,workers", [
+    ("serial", 1), ("thread", 4), (None, 4),
+])
+def test_serial_thread_backends_byte_identical(tmp_path, backend, workers):
+    """Every in-process backend spelling produces the same reconciled sample
+    set and sampling record as the plain serial loop."""
+    fn = lambda c: {"m": float(c["x"])}  # noqa: E731
+    ref = make_line_ds(fn, SampleStore(":memory:"))
+    for c in line_configs():
+        ref.sample(c, operation_id="op")
+
+    ds = make_line_ds(fn, SampleStore(":memory:"))
+    results = ds.sample_batch(line_configs(), operation_id="op",
+                              workers=workers, backend=backend)
+    assert [r.action for r in results] == ["measured"] * 4
+    assert reconciled(ds) == reconciled(ref)
+    assert records(ds, "op") == records(ref, "op")
+
+
+def test_backend_instance_is_reusable_and_caller_owned(tmp_path):
+    ds = make_line_ds(lambda c: {"m": float(c["x"])}, SampleStore(":memory:"))
+    with ds.execution_backend("thread", workers=2) as engine:
+        ds.sample_batch(line_configs(2), operation_id="a", backend=engine)
+        ds.sample_batch(line_configs(4), operation_id="b", backend=engine)
+        assert len(records(ds, "a")) == 2 and len(records(ds, "b")) == 4
+
+
+def test_unknown_backend_name_rejected():
+    ds = make_line_ds(lambda c: {"m": 0.0}, SampleStore(":memory:"))
+    with pytest.raises(ValueError, match="unknown execution backend"):
+        ds.sample_batch(line_configs(1), backend="carrier-pigeon")
+
+
+def test_process_backend_requires_file_store():
+    ds = make_line_ds(lambda c: {"m": 0.0}, SampleStore(":memory:"))
+    with pytest.raises(ValueError, match="file-backed"):
+        ds.sample_batch(line_configs(1), backend="process")
+
+
+# ------------------------------------------------- process crash isolation
+
+
+def _crash_isolation_check(tmp_path, hostile_fn, crashed_kind):
+    """Shared body: one poison slot among four; the batch must survive."""
+    ds = make_line_ds(hostile_fn, SampleStore(str(tmp_path / "store.db")))
+    configs = line_configs()
+    poison = configs[2].digest
+    results = ds.sample_batch(configs, operation_id="op", workers=4,
+                              backend="process")
+    assert [r.action for r in results] == \
+        ["measured", "measured", "failed", "measured"]
+    bad = results[2]
+    assert isinstance(bad.error, crashed_kind)
+    assert isinstance(bad.error, MeasurementError)  # never kills the batch
+    # the poison cell's claim is gone: waiters re-claim instead of stalling
+    exp_id = ds.actions.experiments[0].identifier
+    assert not ds.store.claim_exists(poison, exp_id)
+
+    # surviving slots are serial-equivalent: same record events as a serial
+    # run of the same surviving configurations
+    ref = make_line_ds(lambda c: {"m": float(c["x"])}, SampleStore(":memory:"))
+    for c in configs:
+        if c.digest != poison:
+            ref.sample(c, operation_id="op")
+    survivors = [(d, a) for _, d, a in records(ds, "op") if d != poison]
+    assert survivors == [(d, a) for _, d, a in records(ref, "op")]
+    assert sorted(s.configuration.digest for s in ds.read()) == \
+        sorted(s.configuration.digest for s in ref.read())
+
+
+def test_process_worker_hard_exit_poisons_only_its_slot(tmp_path):
+    _crash_isolation_check(tmp_path, exit_fn, WorkerCrashError)
+
+
+def test_process_worker_unexpected_raise_poisons_only_its_slot(tmp_path):
+    _crash_isolation_check(tmp_path, raise_fn, WorkerCrashError)
+
+
+def test_process_worker_measurement_error_is_plain_failed(tmp_path):
+    ds = make_line_ds(flaky_fn, SampleStore(str(tmp_path / "store.db")))
+    results = ds.sample_batch(line_configs(), workers=4, backend="process")
+    assert [r.ok for r in results] == [True, True, False, True]
+    assert isinstance(results[2].error, MeasurementError)
+    assert not isinstance(results[2].error, WorkerCrashError)
+
+
+def test_pipelined_process_backend_survives_crashes(tmp_path):
+    """The pipelined engine over ProcessBackend: poison trials come back as
+    failed, the run continues to exhaustion."""
+    ds = make_line_ds(exit_fn, SampleStore(str(tmp_path / "store.db")))
+    run = run_optimizer(OPTIMIZER_REGISTRY["random"](seed=0), ds, "m", "min",
+                        max_trials=4, patience=99,
+                        rng=np.random.default_rng(0),
+                        max_inflight=2, backend="process")
+    assert run.num_trials == 4
+    actions = sorted(t.action for t in run.trials)
+    assert actions == ["failed", "measured", "measured", "measured"]
+
+
+# ------------------------------------------------------- pipelined ask/tell
+
+
+@pytest.mark.parametrize("name", list(OPTIMIZER_REGISTRY))
+def test_max_inflight_1_reproduces_serial_trajectory(name):
+    """run_optimizer(max_inflight=1) == run_optimizer(batch_size=1): same
+    configurations, values, actions, records — draw-for-draw."""
+    def one(max_inflight=None, batch_size=1):
+        ds = make_line_ds(lambda c: {"m": (c["x"] - 1.3) ** 2},
+                          SampleStore(":memory:"))
+        run = run_optimizer(OPTIMIZER_REGISTRY[name](seed=0), ds, "m", "min",
+                            max_trials=4, patience=2,
+                            rng=np.random.default_rng(3),
+                            batch_size=batch_size, max_inflight=max_inflight)
+        return ([(t.configuration.digest, t.value, t.action, t.seq)
+                 for t in run.trials], records(ds, run.operation_id))
+
+    serial_trail, serial_recs = one()
+    pipe_trail, pipe_recs = one(max_inflight=1)
+    assert pipe_trail == serial_trail
+    assert pipe_recs == serial_recs
+
+
+def test_pipelined_keeps_max_inflight_and_exhausts_space():
+    """With max_inflight=3 over a 4-point space the pipelined engine still
+    visits every point exactly once (pending digests keep asks distinct)."""
+    ds = make_line_ds(lambda c: {"m": float(c["x"])}, SampleStore(":memory:"))
+    run = run_optimizer(OPTIMIZER_REGISTRY["random"](seed=0), ds, "m", "min",
+                        max_trials=50, patience=99,
+                        rng=np.random.default_rng(0), max_inflight=3)
+    assert run.num_trials == 4
+    assert len({t.configuration.digest for t in run.trials}) == 4
+    assert run.max_inflight == 3
+    seqs = [r.seq for r in ds.timeseries(run.operation_id)]
+    assert sorted(seqs) == list(range(4))
+
+
+def test_pipelined_tells_stragglers_after_stop():
+    """Once the stopping rule fires, in-flight trials are drained and told —
+    the history matches the number of sampling-record events."""
+    ds = make_line_ds(lambda c: {"m": 1.0 + c["x"] * 0}, SampleStore(":memory:"))
+    run = run_optimizer(OPTIMIZER_REGISTRY["random"](seed=0), ds, "m", "min",
+                        max_trials=50, patience=2,
+                        rng=np.random.default_rng(0), max_inflight=2)
+    assert len(records(ds, run.operation_id)) == run.num_trials
+
+
+def test_pipelined_crash_propagates_in_process():
+    """In-process backends keep the pre-backend contract: an unexpected
+    experiment error reaches the caller — after the surviving in-flight
+    trials' records land (their values are already durable)."""
+    ds = make_line_ds(raise_fn, SampleStore(":memory:"))
+    with pytest.raises(RuntimeError, match="wild pointer"):
+        run_optimizer(OPTIMIZER_REGISTRY["random"](seed=0), ds, "m", "min",
+                      max_trials=8, patience=99,
+                      rng=np.random.default_rng(0), max_inflight=2)
+    # every healthy trial in flight alongside the poison point must be
+    # recorded despite the raise (how many were asked before the crash
+    # stopped submission depends on scheduling, but at least one of the
+    # max_inflight=2 initial slots was healthy)
+    op = ds.store.operations_for(ds.space_id)[0]["operation_id"]
+    actions = [r.action for r in ds.timeseries(op)]
+    assert actions and set(actions) == {"measured"}
+
+
+# --------------------------------------------------------- queue rendezvous
+
+
+def test_queue_backend_executes_through_worker_loops(tmp_path):
+    """Investigator + two worker loops sharing one store: all work lands,
+    every configuration measured exactly once."""
+    path = str(tmp_path / "store.db")
+    ds = build_queue_ds(path)
+    workers = [threading.Thread(target=run_worker, args=(build_queue_ds(path),),
+                                kwargs={"idle_timeout_s": 1.0,
+                                        "owner": f"w{i}"})
+               for i in range(2)]
+    for t in workers:
+        t.start()
+    configs = list(ds.space.all_configurations())
+    results = ds.sample_batch(configs, operation_id="op", backend="queue")
+    for t in workers:
+        t.join()
+    assert all(r.ok for r in results)
+    assert ds.store.count_measured(ds.space_id) == len(configs)
+    assert len(records(ds, "op")) == len(configs)
+    assert ds.store.pending_work(ds.space_id) == 0
+
+
+def test_queue_backend_drain_timeout_without_workers(tmp_path):
+    ds = make_line_ds(lambda c: {"m": 0.0}, SampleStore(str(tmp_path / "s.db")))
+    engine = ds.execution_backend("queue")
+    engine.submit(WorkItem(line_configs(1)[0], line_configs(1)[0].digest, 0))
+    with pytest.raises(TimeoutError):
+        engine.drain(timeout_s=0.3)
+
+
+def test_worker_cli_subprocess(tmp_path):
+    """The real thing: a ``python -m repro.core.execution.worker`` process
+    serves the queue while the investigator samples through it."""
+    import os
+    path = str(tmp_path / "store.db")
+    ds = build_queue_ds(path)
+    here = os.path.dirname(os.path.abspath(__file__))
+    src = os.path.join(os.path.dirname(here), "src")
+    env = dict(os.environ, PYTHONPATH=os.pathsep.join([src, here]))
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.core.execution.worker",
+         "--store", path, "--factory", "_execution_workers:build_queue_ds",
+         "--idle-timeout", "10", "--max-items", "6"],
+        env=env, stdout=subprocess.PIPE, text=True)
+    try:
+        configs = list(ds.space.all_configurations())[:6]
+        results = ds.sample_batch(configs, operation_id="op", backend="queue")
+        assert all(r.ok for r in results)
+        assert [r.action for r in results] == ["measured"] * 6
+    finally:
+        out, _ = proc.communicate(timeout=60)
+    assert proc.returncode == 0
+    assert "processed 6 work items" in out
+
+
+def test_queue_worker_contains_experiment_bugs(tmp_path):
+    """A worker hitting an experiment bug reports a failed item (with the
+    crash marker) and keeps serving the queue."""
+    path = str(tmp_path / "store.db")
+    ds = make_line_ds(raise_fn, SampleStore(path))
+    worker_ds = make_line_ds(raise_fn, SampleStore(path))
+    t = threading.Thread(target=run_worker, args=(worker_ds,),
+                         kwargs={"idle_timeout_s": 1.0})
+    t.start()
+    results = ds.sample_batch(line_configs(), operation_id="op", backend="queue")
+    t.join()
+    assert [r.ok for r in results] == [True, True, False, True]
+    assert isinstance(results[2].error, WorkerCrashError)
+
+
+# ------------------------------------------------- store GC / point queries
+
+
+def test_sweep_stale_claims():
+    store = SampleStore(":memory:")
+    store.claim_experiment("d1", "e", "dead")
+    store.claim_experiment("d2", "e", "alive")
+    store._write("UPDATE value_claims SET created_at=? WHERE config_digest='d1'",
+                 (time.time() - 120.0,))
+    assert store.sweep_stale_claims(60.0) == 1
+    assert not store.claim_exists("d1", "e")
+    assert store.claim_exists("d2", "e")
+    store.close()
+
+
+def test_release_claims_owned_by():
+    store = SampleStore(":memory:")
+    store.claim_experiment("d1", "e", "1234:567")
+    store.claim_experiment("d2", "e", "1234")
+    store.claim_experiment("d3", "e", "12345:9")
+    assert store.release_claims_owned_by("1234") == 2
+    assert store.claim_exists("d3", "e")
+    store.close()
+
+
+def test_requeue_stale_work(tmp_path):
+    store = SampleStore(str(tmp_path / "s.db"))
+    item = store.enqueue_work("space", "digest")
+    claim = store.claim_work("w0")
+    assert claim["item_id"] == item
+    assert store.claim_work("w1") is None  # nothing else queued
+    store._write("UPDATE work_items SET claimed_at=? WHERE item_id=?",
+                 (time.time() - 120.0, item))
+    assert store.requeue_stale_work(60.0) == 1
+    again = store.claim_work("w1")
+    assert again["item_id"] == item  # the surviving fleet redoes the work
+    store.finish_work(item, "measured")
+    assert store.fetch_work_results([item]) == {item: ("measured", None)}
+    assert store.pending_work("space") == 0
+    store.close()
+
+
+def test_has_record_point_query():
+    ds = make_line_ds(flaky_fn, SampleStore(":memory:"))
+    configs = line_configs()
+    ds.sample_batch(configs, operation_id="op")
+    assert ds.store.has_record(ds.space_id, configs[0].digest)
+    assert ds.read_one(configs[0]) is not None
+    # the poison configuration failed: excluded from {x} unless asked for
+    assert not ds.store.has_record(ds.space_id, configs[2].digest)
+    assert ds.store.has_record(ds.space_id, configs[2].digest,
+                               include_failed=True)
+    assert ds.read_one(configs[2]) is None
+    # never sampled at all
+    unseen = Configuration.make({"x": 99})
+    assert not ds.store.has_record(ds.space_id, unseen.digest,
+                                   include_failed=True)
+    assert ds.read_one(unseen) is None
+
+
+def test_stale_finish_cannot_overwrite_reexecution(tmp_path):
+    """A worker that went silent long enough for its item to be re-queued
+    must not land its late outcome over the re-executing worker's claim."""
+    store = SampleStore(str(tmp_path / "s.db"))
+    item = store.enqueue_work("space", "digest")
+    store.claim_work("worker-A")
+    store._write("UPDATE work_items SET claimed_at=? WHERE item_id=?",
+                 (time.time() - 120.0, item))
+    assert store.requeue_stale_work(60.0) == 1
+    store.claim_work("worker-B")
+    # A comes back from the dead with a failure: ignored, B still owns it
+    assert store.finish_work(item, "failed", "crash: ...", owner="worker-A") is False
+    assert store.fetch_work_results([item]) == {}
+    assert store.finish_work(item, "measured", owner="worker-B") is True
+    assert store.fetch_work_results([item]) == {item: ("measured", None)}
+    store.close()
+
+
+def test_backend_instance_rejected_on_foreign_space(tmp_path):
+    """A backend instance is bound to its construction-time action space;
+    using it on a different space must be a loud error, not a silent sweep
+    with the wrong experiments."""
+    ds_a = make_line_ds(flaky_fn, SampleStore(str(tmp_path / "s.db")))
+    ds_b = build_queue_ds(str(tmp_path / "s.db"))
+    engine = ds_a.execution_backend("thread", workers=2)
+    with pytest.raises(ValueError, match="different Discovery Space"):
+        ds_b.sample_batch(list(ds_b.space.all_configurations())[:1],
+                          backend=engine)
+    engine.close()
+
+
+def test_make_backend_type_error():
+    ds = make_line_ds(lambda c: {"m": 0.0}, SampleStore(":memory:"))
+    with pytest.raises(TypeError):
+        make_backend(42, ds.execution_context())
