@@ -15,6 +15,13 @@ measurement-claim arbitration.  The store is the *only* coordination point:
 * the investigator's sampling record comes out gapless;
 * the sum of the workers' processed items equals the measurements made.
 
+The workers run the full distributed-queue machinery: they pop queued items
+*best-acquisition-first* (``--claim-batch 3`` items per store round-trip, to
+amortize slow-link latency), and they heartbeat their claim + work-item
+leases — ``claim_timeout_s`` can be minutes for real cloud deployments
+while a worker that dies silently is reaped within seconds of its
+``lease_s`` horizon.
+
     PYTHONPATH=src python examples/shared_store_workers.py
 """
 
@@ -42,8 +49,11 @@ def build_ds(store_path):
     ])
     exp = FunctionExperiment(fn=deploy_and_measure, properties=("tokens_per_s",),
                              name="cloud-deploy")
+    # claim_timeout_s is the slow-experiment horizon; lease_s is the fast
+    # death-detection horizon the workers heartbeat against
     return DiscoverySpace(space=space, actions=ActionSpace.make([exp]),
-                          store=SampleStore(store_path), claim_timeout_s=30.0)
+                          store=SampleStore(store_path), claim_timeout_s=30.0,
+                          lease_s=5.0)
 
 
 def deploy_and_measure(c):
@@ -64,7 +74,7 @@ def start_worker(store_path: str, tag: str) -> subprocess.Popen:
         [sys.executable, "-m", "repro.core.execution.worker",
          "--store", store_path,
          "--factory", "shared_store_workers:build_ds",
-         "--idle-timeout", "3", "--owner", tag],
+         "--idle-timeout", "3", "--claim-batch", "3", "--owner", tag],
         env=env, stdout=subprocess.PIPE, text=True)
 
 

@@ -8,12 +8,14 @@ related spaces via RSSC.
 
 from .actions import (ActionSpace, Experiment, FunctionExperiment,
                       MeasurementError, SurrogateExperiment)
+from .clock import Clock, FakeClock, SYSTEM_CLOCK
 from .clustering import (select_linspace, select_representatives, select_top_k,
                          silhouette_clusters)
 from .discovery import DiscoverySpace
 from .entities import Configuration, Dimension, PropertyValue, Sample
-from .execution import (ExecutionBackend, ProcessBackend, QueueBackend,
-                        SerialBackend, ThreadBackend, WorkerCrashError)
+from .execution import (AutoscalePolicy, ExecutionBackend, LeasePacer,
+                        ProcessBackend, QueueBackend, SerialBackend,
+                        ThreadBackend, WorkerCrashError)
 from .rssc import RSSCResult, rssc_transfer
 from .space import ProbabilitySpace
 from .store import RecordEntry, SampleStore
@@ -29,5 +31,6 @@ __all__ = [
     "prediction_quality", "select_representatives", "select_top_k",
     "select_linspace", "silhouette_clusters", "ExecutionBackend",
     "SerialBackend", "ThreadBackend", "ProcessBackend", "QueueBackend",
-    "WorkerCrashError",
+    "WorkerCrashError", "AutoscalePolicy", "LeasePacer", "Clock", "FakeClock",
+    "SYSTEM_CLOCK",
 ]

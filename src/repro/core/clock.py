@@ -1,0 +1,77 @@
+"""Injectable time source for every timing-dependent subsystem.
+
+Leases, stale-claim sweeps, queue-item re-queueing, autoscaling decisions,
+and wait-for-values polling all read time through a :class:`Clock` instead
+of the ``time`` module, so every timing behavior in the execution subsystem
+is deterministically testable: the fault-injection and autoscaling suites
+drive a :class:`FakeClock` forward by hand and observe reaping/scale
+decisions without a single real sleep.
+
+* :data:`SYSTEM_CLOCK` — the production clock (``time.time`` /
+  ``time.monotonic`` / ``time.sleep``); a shared stateless singleton.
+* :class:`FakeClock` — a thread-safe manual clock whose ``sleep`` *advances*
+  virtual time instead of blocking, which makes timeout loops (e.g.
+  ``SampleStore.wait_for_values``) terminate deterministically in tests.
+
+Wall time (``time()``) stamps durable rows — claim leases, queue items —
+because those timestamps must be comparable across processes and hosts
+sharing one store.  Monotonic time (``monotonic()``) paces purely local
+decisions: GC intervals, idle-worker retirement, latency EWMAs.
+"""
+
+from __future__ import annotations
+
+import threading
+import time as _time
+
+__all__ = ["Clock", "FakeClock", "SYSTEM_CLOCK"]
+
+
+class Clock:
+    """The production time source; subclass to inject virtual time."""
+
+    def time(self) -> float:
+        """Wall-clock seconds (stamps rows shared across processes)."""
+        return _time.time()
+
+    def monotonic(self) -> float:
+        """Monotonic seconds (paces local periodic decisions)."""
+        return _time.monotonic()
+
+    def sleep(self, seconds: float) -> None:
+        _time.sleep(seconds)
+
+
+SYSTEM_CLOCK = Clock()
+
+
+class FakeClock(Clock):
+    """A manual clock for deterministic timing tests.
+
+    ``advance`` moves both wall and monotonic time forward; ``sleep``
+    advances instead of blocking, so polling loops written against a
+    :class:`Clock` run to their timeout instantly and deterministically.
+    Thread-safe: worker threads in the property/fault suites share one
+    instance with the test body.
+    """
+
+    def __init__(self, start: float = 1_000_000.0):
+        self._lock = threading.Lock()
+        self._now = float(start)
+
+    def time(self) -> float:
+        with self._lock:
+            return self._now
+
+    def monotonic(self) -> float:
+        with self._lock:
+            return self._now
+
+    def sleep(self, seconds: float) -> None:
+        self.advance(max(0.0, seconds))
+
+    def advance(self, seconds: float) -> float:
+        """Move virtual time forward; returns the new now."""
+        with self._lock:
+            self._now += float(seconds)
+            return self._now

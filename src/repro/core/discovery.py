@@ -32,7 +32,6 @@ TRACE characteristics, and where they live:
 
 from __future__ import annotations
 
-import time
 import uuid
 from concurrent.futures import Executor
 from dataclasses import dataclass
@@ -41,8 +40,10 @@ from typing import Iterator, Mapping, Optional, Sequence, Union
 import numpy as np
 
 from .actions import ActionSpace, Experiment, MeasurementError, SurrogateExperiment
+from .clock import Clock
 from .entities import Configuration, Sample, content_hash
-from .execution import ExecutionBackend, ExecutionContext, WorkItem, make_backend
+from .execution import (AutoscalePolicy, ExecutionBackend, ExecutionContext,
+                        WorkItem, make_backend)
 from .space import ProbabilitySpace
 from .store import RecordEntry, SampleStore
 
@@ -78,6 +79,9 @@ class DiscoverySpace:
         store: Optional[SampleStore] = None,
         space_id: Optional[str] = None,
         claim_timeout_s: float = 60.0,
+        lease_s: float = 15.0,
+        clock: Optional[Clock] = None,
+        autoscale: Optional[AutoscalePolicy] = None,
     ):
         self.space = space
         self.actions = actions
@@ -87,6 +91,19 @@ class DiscoverySpace:
         # Size this to the action space: it should exceed the slowest
         # experiment's expected duration (cloud deployments: minutes).
         self.claim_timeout_s = claim_timeout_s
+        # Heartbeat-lease horizon for owners that renew (queue/process
+        # workers): their death is detected within ~lease_s even when
+        # claim_timeout_s is minutes.  Compared across hosts' wall clocks —
+        # on multi-machine deployments size it above the worst expected
+        # clock skew (see ExecutionContext).
+        self.lease_s = lease_s
+        # Injectable time source for every timing decision (leases, sweeps,
+        # autoscaling); defaults to the store's clock so one FakeClock at
+        # the store flows through the whole stack.
+        self.clock = clock if clock is not None else self.store.clock
+        # Fleet-sizing policy applied by autoscaling backends (None => each
+        # backend's default).
+        self.autoscale = autoscale
         # Identity: the space is defined by (Ω, A).  Two DiscoverySpace objects
         # over the same store with the same (Ω, A) are views of the same study.
         self.space_id = space_id or content_hash(
@@ -96,8 +113,10 @@ class DiscoverySpace:
             self.space_id, space.to_json(), actions.identifiers
         )
         # Stale-claim GC pacing: the batch/pipelined drivers sweep at most
-        # once per claim-timeout interval (see _maybe_sweep_claims).
-        self._last_claim_sweep = time.monotonic()
+        # once per lease interval — and the FIRST call always sweeps, so
+        # short-lived runs (CI smoke, --quick benches) get at least one GC
+        # pass instead of skipping it entirely (see _maybe_sweep_claims).
+        self._last_claim_sweep: Optional[float] = None
 
     # -------------------------------------------------------------- execution
 
@@ -108,6 +127,9 @@ class DiscoverySpace:
             experiments=self.actions.experiments,
             claim_timeout_s=self.claim_timeout_s,
             space_id=self.space_id,
+            lease_s=self.lease_s,
+            clock=self.clock,
+            autoscale=self.autoscale,
         )
 
     def execution_backend(
@@ -129,12 +151,16 @@ class DiscoverySpace:
     def _maybe_sweep_claims(self) -> None:
         """Periodic stale-claim GC (ROADMAP item): reap claims from crashed
         investigators up front instead of making every waiter burn its full
-        timeout.  Paced to at most one sweep per claim-timeout interval so
-        the hot path stays one cheap clock read."""
-        now = time.monotonic()
-        if now - self._last_claim_sweep >= self.claim_timeout_s:
+        timeout.  Lease-based — a heartbeating owner is never reaped; a dead
+        one is gone within its lease — and paced off the *injected* clock at
+        one sweep per lease interval, with the first call sweeping
+        unconditionally (wall-clock pacing used to skip GC entirely on runs
+        shorter than the claim timeout, e.g. ``--quick`` CI benches)."""
+        now = self.clock.monotonic()
+        if (self._last_claim_sweep is None
+                or now - self._last_claim_sweep >= self.lease_s):
             self._last_claim_sweep = now
-            self.store.sweep_stale_claims(self.claim_timeout_s)
+            self.store.sweep_stale_claims()
 
     # ------------------------------------------------------------------ sample
 
@@ -168,6 +194,7 @@ class DiscoverySpace:
         workers: int = 1,
         executor: Optional[Executor] = None,
         backend: Union[ExecutionBackend, str, None] = None,
+        priorities: Optional[Sequence[float]] = None,
     ) -> list:
         """Sample a batch of points, fanning experiment execution out over an
         execution backend (paper §III-D: distributed investigation through
@@ -186,7 +213,11 @@ class DiscoverySpace:
         ``backend`` names one of ``serial | thread | process | queue`` or is
         a ready :class:`~repro.core.execution.ExecutionBackend`; with None
         the legacy ``workers``/``executor`` knobs pick serial vs thread
-        execution.  Failed measurements do not abort the batch; they yield a
+        execution.  ``priorities`` (optional, one score per configuration —
+        the optimizer's acquisition) rides on the work items: scheduling
+        backends measure best-first, while results, records, and the
+        reconciled sample set stay in submission order regardless.  Failed
+        measurements do not abort the batch; they yield a
         :class:`BatchResult` with ``action='failed'`` carrying the error.
         Crash-isolating backends (process, queue) also contain *unexpected*
         experiment errors and worker deaths to their own slot as ``failed``
@@ -195,6 +226,10 @@ class DiscoverySpace:
         configs = list(configurations)
         if not configs:
             return []
+        if priorities is not None and len(priorities) != len(configs):
+            raise ValueError(
+                f"priorities must match configurations: "
+                f"{len(priorities)} != {len(configs)}")
         # Encapsulated: reject configurations outside Ω before any work runs.
         for config in configs:
             self.space.validate(config)
@@ -213,7 +248,10 @@ class DiscoverySpace:
                                         executor=executor)
         try:
             for i in unique:
-                engine.submit(WorkItem(configs[i], digests[i], i))
+                engine.submit(WorkItem(
+                    configs[i], digests[i], i,
+                    priority=(float(priorities[i]) if priorities is not None
+                              else 0.0)))
             completed = engine.drain()
         finally:
             if owned:
@@ -339,6 +377,10 @@ class DiscoverySpace:
             space=self.space,
             actions=ActionSpace(experiments=(surrogate,) + deferred),
             store=self.store,
+            claim_timeout_s=self.claim_timeout_s,
+            lease_s=self.lease_s,
+            clock=self.clock,
+            autoscale=self.autoscale,
         )
 
     def related(self, mapping: Mapping[str, Mapping], actions: Optional[ActionSpace] = None,
@@ -348,6 +390,10 @@ class DiscoverySpace:
             space=self.space.map_values(mapping),
             actions=actions if actions is not None else self.actions,
             store=self.store,
+            claim_timeout_s=self.claim_timeout_s,
+            lease_s=self.lease_s,
+            clock=self.clock,
+            autoscale=self.autoscale,
         )
 
     def __repr__(self) -> str:  # pragma: no cover

@@ -26,18 +26,49 @@ Four backends implement the interface:
                          classic engine; byte-identical records)
 :class:`ThreadBackend`   thread pool in the investigator process (today's
                          ``workers=N`` semantics; byte-identical records)
-:class:`ProcessBackend`  one child process per measurement — a segfaulting or
-                         leaking experiment poisons only its slot: its claims
-                         are released, the slot records ``failed``, and the
-                         investigator survives
+:class:`ProcessBackend`  a persistent, *autoscaling* pool of worker
+                         processes — a segfaulting or leaking experiment
+                         poisons only its slot: its claims are released, the
+                         slot records ``failed``, and the investigator
+                         survives; the fleet grows under backlog and shrinks
+                         back to ``min_workers`` when drained
 :class:`QueueBackend`    store-rendezvous: work items are rows in the shared
                          SQLite store's ``work_items`` table; any number of
                          ``python -m repro.core.execution.worker`` processes
                          on any host pull items and land values through the
                          same claim arbitration (§III-D taken literally —
                          the store is the *only* coordination point), with
-                         silent-worker re-queueing for crash tolerance
+                         lease-based re-queueing for crash tolerance
 ===================  ==========================================================
+
+Priorities, leases, autoscaling
+-------------------------------
+
+Three cooperating mechanisms turn the queue into a scheduler rather than a
+pipe:
+
+* **Priorities** — every :class:`WorkItem` carries the optimizer's
+  acquisition score; ``QueueBackend`` writes it into the ``work_items`` row
+  and workers pop best-first (FIFO within ties), so the most informative
+  configurations are measured earliest (Lynceus-style early convergence).
+  Workers claim up to N items per store round-trip and land the batch's
+  outcomes in one transaction, amortizing slow-link latency.
+* **Leases** — claims and running work items are heartbeat-leased: the
+  owner renews via :meth:`SampleStore.renew_lease` on a
+  :class:`~repro.core.execution.base.LeasePacer` thread, so
+  ``claim_timeout_s`` can be minutes for long cloud measurements while a
+  silently dead owner is reaped within seconds by ``sweep_stale_claims`` /
+  ``requeue_stale_work``.  A reaped owner's late ``finish_work`` is
+  rejected by the owner guard, so re-executions are never overwritten.
+* **Autoscaling** — an :class:`~repro.core.execution.base.AutoscalePolicy`
+  (exposed on :class:`ExecutionContext`) maps observed backlog + EWMA
+  per-item latency to a fleet size; ``ProcessBackend`` applies it to its
+  own pool and :class:`~repro.core.execution.fleet.FleetSupervisor` applies
+  it to a store-rendezvous queue fleet (ExpoCloud-style).
+
+Every timing decision reads the injectable
+:class:`~repro.core.clock.Clock` on the context, which is what makes the
+lease fault-injection and autoscaling suites deterministic.
 
 Layering: drivers (``DiscoverySpace.sample_batch``, the pipelined
 ``run_optimizer``) own *recording* — sampling-record events are appended by
@@ -48,22 +79,28 @@ N investigators share one worker fleet without entangling their records.
 """
 
 from .backends import ProcessBackend, SerialBackend, ThreadBackend
-from .base import (ExecutionBackend, ExecutionContext, WorkItem, WorkResult,
-                   WorkerCrashError, run_measurement)
+from .base import (AutoscalePolicy, ExecutionBackend, ExecutionContext,
+                   LeasePacer, WorkItem, WorkResult, WorkerCrashError,
+                   run_measurement)
 from .queue import QueueBackend
 
 __all__ = [
     "ExecutionBackend", "ExecutionContext", "WorkItem", "WorkResult",
-    "WorkerCrashError", "run_measurement", "SerialBackend", "ThreadBackend",
-    "ProcessBackend", "QueueBackend", "run_worker", "make_backend",
+    "WorkerCrashError", "AutoscalePolicy", "LeasePacer", "run_measurement",
+    "SerialBackend", "ThreadBackend", "ProcessBackend", "QueueBackend",
+    "run_worker", "FleetSupervisor", "make_backend",
 ]
 
 def __getattr__(name):
-    # lazy: importing .worker eagerly would shadow `python -m
-    # repro.core.execution.worker` (runpy's found-in-sys.modules warning)
+    # lazy: importing .worker (or .fleet, which imports it) eagerly would
+    # shadow `python -m repro.core.execution.worker` (runpy's
+    # found-in-sys.modules warning)
     if name == "run_worker":
         from .worker import run_worker
         return run_worker
+    if name == "FleetSupervisor":
+        from .fleet import FleetSupervisor
+        return FleetSupervisor
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 

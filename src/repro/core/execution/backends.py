@@ -5,18 +5,22 @@
 * :class:`ThreadBackend` — a thread pool (owned, or a caller-provided
   executor reused across batches); experiments share the interpreter, so a
   crashing experiment propagates like the pre-backend engine.
-* :class:`ProcessBackend` — a persistent pool of worker processes.  A
-  segfaulting, ``os._exit``-ing, or memory-leaking experiment poisons only
-  its own slot: the worker's death is detected and attributed, its claims
-  are released so waiters take over, the slot comes back as a ``failed``
-  :class:`~repro.core.execution.base.WorkerCrashError` sample, and a
-  replacement worker is respawned while the investigator (and the batch's
-  other slots) keep going.
+* :class:`ProcessBackend` — a persistent, *autoscaling* pool of worker
+  processes.  A segfaulting, ``os._exit``-ing, or memory-leaking experiment
+  poisons only its own slot: the worker's death is detected and attributed,
+  its claims are released so waiters take over, the slot comes back as a
+  ``failed`` :class:`~repro.core.execution.base.WorkerCrashError` sample,
+  and replacement capacity is respawned while the investigator (and the
+  batch's other slots) keep going.  The fleet grows and shrinks between
+  ``policy.min_workers`` and ``policy.max_workers`` from the observed
+  backlog and the EWMA per-item latency (ExpoCloud-style), paced off the
+  injected clock so scaling decisions are deterministically testable.
 """
 
 from __future__ import annotations
 
 import multiprocessing
+import os
 import threading
 import time
 from collections import deque
@@ -24,8 +28,9 @@ from concurrent.futures import Executor, ThreadPoolExecutor
 from typing import List, Optional
 
 from ..actions import MeasurementError
-from .base import (ExecutionBackend, ExecutionContext, WorkItem, WorkResult,
-                   WorkerCrashError, run_measurement)
+from .base import (AutoscalePolicy, ExecutionBackend, ExecutionContext,
+                   LeasePacer, WorkItem, WorkResult, WorkerCrashError,
+                   run_measurement)
 
 __all__ = ["SerialBackend", "ThreadBackend", "ProcessBackend"]
 
@@ -99,20 +104,27 @@ class ThreadBackend(ExecutionBackend):
 
 
 def _pool_worker(worker_id: int, task_queue, result_queue, store_path: str,
-                 experiments, claim_timeout_s: float) -> None:
+                 experiments, claim_timeout_s: float,
+                 lease_s: Optional[float] = None) -> None:
     """Worker-process main loop: serve the parent-assigned queue until the
     None sentinel.
 
     Opens its OWN store handle (processes must never share a SQLite
-    connection).  The parent records each assignment *before* enqueueing it
-    here, so an abrupt death (segfault, ``os._exit``, OOM-kill) at any point
-    of the loop is attributable to exactly one item.  Never re-raises: an
-    unexpected experiment error is reported as a crash outcome and the
-    worker lives on to serve the next item.
+    connection) and heartbeats its measurement-claim leases on a
+    :class:`LeasePacer`, so a worker that dies silently is reaped within
+    ``lease_s`` even when ``claim_timeout_s`` is minutes.  The parent
+    records each assignment *before* enqueueing it here, so an abrupt death
+    (segfault, ``os._exit``, OOM-kill) at any point of the loop is
+    attributable to exactly one item.  Never re-raises: an unexpected
+    experiment error is reported as a crash outcome and the worker lives on
+    to serve the next item.
     """
     from ..store import SampleStore
 
     store = SampleStore(store_path)
+    pacer = (LeasePacer(store, str(os.getpid()), lease_s,
+                        max_age_s=claim_timeout_s).start()
+             if lease_s is not None else None)
     while True:
         task = task_queue.get()
         if task is None:
@@ -120,7 +132,8 @@ def _pool_worker(worker_id: int, task_queue, result_queue, store_path: str,
         tag, configuration, digest = task
         try:
             action, err = run_measurement(store, experiments, configuration,
-                                          digest, claim_timeout_s)
+                                          digest, claim_timeout_s,
+                                          lease_s=lease_s)
         except BaseException as exc:  # pragma: no cover - run_measurement catches
             action, err = "crashed", exc
         if action == "crashed":
@@ -129,11 +142,13 @@ def _pool_worker(worker_id: int, task_queue, result_queue, store_path: str,
             result_queue.put(("done", worker_id, tag, action, "measurement", str(err)))
         else:
             result_queue.put(("done", worker_id, tag, action, None, None))
+    if pacer is not None:
+        pacer.stop()
     store.close()
 
 
 class ProcessBackend(ExecutionBackend):
-    """A persistent, crash-tolerant pool of worker processes.
+    """A persistent, crash-tolerant, autoscaling pool of worker processes.
 
     Crash isolation for hostile experiments: a segfaulting, ``os._exit``-ing,
     or OOM-killed experiment takes down one pool worker, not the
@@ -143,6 +158,16 @@ class ProcessBackend(ExecutionBackend):
     worker's measurement claims (so nobody stalls waiting on them), fails
     that one slot, and the next dispatch respawns replacement capacity — the
     ExpoCloud recipe, scaled to a local fleet.
+
+    Autoscaling: the fleet is sized by an
+    :class:`~repro.core.execution.base.AutoscalePolicy` (from
+    ``ctx.autoscale``, or min 1 / max ``workers`` by default).  Sustained
+    backlog grows the pool toward the policy target — latency-aware when
+    the policy sets a drain horizon, using the EWMA per-item latency
+    observed at dispatch/completion — and a worker idle longer than
+    ``idle_retire_s`` is retired down to ``min_workers``.  All scaling
+    decisions read ``ctx.clock``, so tests drive them with a fake clock:
+    no sleeps, no flakes.
 
     Workers are forked once and reused, so the per-measurement overhead is a
     queue hop, not a process launch.  Requires a file-backed store (children
@@ -155,13 +180,18 @@ class ProcessBackend(ExecutionBackend):
     isolates_crashes = True
 
     def __init__(self, ctx: ExecutionContext, workers: int = 4,
-                 mp_context=None):
+                 mp_context=None, policy: Optional[AutoscalePolicy] = None):
         if ctx.store_path == ":memory:":
             raise ValueError(
                 "ProcessBackend needs a file-backed SampleStore: worker "
                 "processes rendezvous through the database file")
         self._ctx = ctx
-        self._workers = max(1, workers)
+        self._clock = ctx.clock
+        if policy is None:
+            policy = ctx.autoscale
+        if policy is None:
+            policy = AutoscalePolicy(min_workers=1, max_workers=max(1, workers))
+        self._policy = policy
         if mp_context is None:
             methods = multiprocessing.get_all_start_methods()
             mp_context = multiprocessing.get_context(
@@ -174,8 +204,17 @@ class ProcessBackend(ExecutionBackend):
         self._procs: dict = {}          # worker_id -> Process
         self._busy: dict = {}           # worker_id -> assigned tag
         self._idle: list = []           # worker_ids awaiting an assignment
+        self._idle_since: dict = {}     # worker_id -> clock.monotonic()
+        self._assigned_at: dict = {}    # worker_id -> clock.monotonic()
+        self._retiring: list = []       # (proc, queue) sentinel sent, reaping
+        self.ewma_latency_s: Optional[float] = None
         self._next_worker = 0
         self._closed = False
+
+    @property
+    def num_workers(self) -> int:
+        """Live fleet size (observability + the autoscaling tests)."""
+        return len(self._procs)
 
     def _spawn_worker(self) -> None:
         worker_id = self._next_worker
@@ -184,28 +223,63 @@ class ProcessBackend(ExecutionBackend):
         proc = self._mp.Process(
             target=_pool_worker,
             args=(worker_id, queue, self._results, self._ctx.store_path,
-                  tuple(self._ctx.experiments), self._ctx.claim_timeout_s),
+                  tuple(self._ctx.experiments), self._ctx.claim_timeout_s,
+                  self._ctx.lease_s),
             daemon=True,
         )
         proc.start()
         self._queues[worker_id] = queue
         self._procs[worker_id] = proc
         self._idle.append(worker_id)
+        self._idle_since[worker_id] = self._clock.monotonic()
 
     def _dispatch(self) -> None:
-        """Assign pending items to idle workers, growing the pool up to
-        capacity.  The parent records the assignment BEFORE enqueueing, so a
-        worker death at *any* point is attributable to exactly one item —
-        nothing can be silently consumed and lost."""
+        """Assign pending items to idle workers, growing the pool toward the
+        policy target for the observed backlog.  The parent records the
+        assignment BEFORE enqueueing, so a worker death at *any* point is
+        attributable to exactly one item — nothing can be silently consumed
+        and lost."""
+        backlog = len(self._pending) + len(self._busy)
+        target = self._policy.target(backlog, self.ewma_latency_s)
         while (self._pending and not self._idle
-               and len(self._procs) < self._workers):
+               and len(self._procs) < target):
             self._spawn_worker()
         while self._pending and self._idle:
             worker_id = self._idle.pop()
+            self._idle_since.pop(worker_id, None)
             item = self._pending.popleft()
             self._busy[worker_id] = item.tag
+            self._assigned_at[worker_id] = self._clock.monotonic()
             self._queues[worker_id].put(
                 (item.tag, item.configuration, item.digest))
+
+    def _retire_idle(self) -> None:
+        """Shrink: retire workers idle past the policy horizon, down to
+        ``min_workers`` (a clean sentinel shutdown, not a kill — the worker
+        finishes nothing because it is, by definition, idle).  Retirement is
+        non-blocking: the sentinel is sent and the exiting process parked on
+        a reap list that later polls (and close) collect, so the pipelined
+        hot loop never stalls on a join."""
+        for proc, queue in self._retiring[:]:
+            if not proc.is_alive():
+                proc.join()
+                queue.close()
+                self._retiring.remove((proc, queue))
+        if not self._idle:
+            return
+        now = self._clock.monotonic()
+        for worker_id in list(self._idle):
+            if len(self._procs) <= self._policy.min_workers:
+                break
+            since = self._idle_since.get(worker_id)
+            if since is None or now - since < self._policy.idle_retire_s:
+                continue
+            self._idle.remove(worker_id)
+            self._idle_since.pop(worker_id, None)
+            queue = self._queues.pop(worker_id)
+            proc = self._procs.pop(worker_id)
+            queue.put(None)
+            self._retiring.append((proc, queue))
 
     def submit(self, item: WorkItem) -> int:
         if self._closed:
@@ -221,7 +295,18 @@ class ProcessBackend(ExecutionBackend):
             if self._busy.get(worker_id) == tag:
                 del self._busy[worker_id]
                 self._idle.append(worker_id)
-            item = self._items.pop(tag)
+                now = self._clock.monotonic()
+                self._idle_since[worker_id] = now
+                assigned = self._assigned_at.pop(worker_id, None)
+                if assigned is not None:
+                    self.ewma_latency_s = self._policy.smooth(
+                        self.ewma_latency_s, now - assigned)
+            item = self._items.pop(tag, None)
+            if item is None:
+                # the worker reported this item, then died before the next
+                # poll could see the buffered result: its death was already
+                # attributed and the slot failed — drop the late duplicate
+                continue
             if err_kind == "crash":
                 err: Optional[BaseException] = WorkerCrashError(
                     f"experiment crashed in worker process: {message}")
@@ -244,6 +329,8 @@ class ProcessBackend(ExecutionBackend):
                 self._queues.pop(worker_id).close()
                 if worker_id in self._idle:
                     self._idle.remove(worker_id)
+                self._idle_since.pop(worker_id, None)
+                self._assigned_at.pop(worker_id, None)
                 proc.join()
                 tag = self._busy.pop(worker_id, None)
                 if tag is not None and tag in self._items:
@@ -256,6 +343,7 @@ class ProcessBackend(ExecutionBackend):
                         f"worker process pid={proc.pid} died with exit code "
                         f"{proc.exitcode} mid-measurement")))
         self._dispatch()
+        self._retire_idle()
         return out
 
     @property
@@ -269,17 +357,21 @@ class ProcessBackend(ExecutionBackend):
         for worker_id in self._procs:
             self._queues[worker_id].put(None)
         deadline = time.monotonic() + 5.0
-        for proc in self._procs.values():
+        retiring_procs = [p for p, _ in self._retiring]
+        for proc in list(self._procs.values()) + retiring_procs:
             proc.join(timeout=max(0.0, deadline - time.monotonic()))
             if proc.is_alive():
                 proc.terminate()
                 proc.join()
-        for queue in self._queues.values():
+        for queue in list(self._queues.values()) + [q for _, q in self._retiring]:
             queue.close()
+        self._retiring.clear()
         self._procs.clear()
         self._queues.clear()
         self._items.clear()
         self._busy.clear()
         self._idle.clear()
+        self._idle_since.clear()
+        self._assigned_at.clear()
         self._pending.clear()
         self._results.close()

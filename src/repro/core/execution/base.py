@@ -20,17 +20,20 @@ An :class:`ExecutionBackend` is a small asynchronous work pool:
 from __future__ import annotations
 
 import abc
+import math
 import os
 import threading
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import List, Optional, Sequence
 
 from ..actions import MeasurementError
+from ..clock import Clock, SYSTEM_CLOCK
 from ..entities import Configuration, PropertyValue
 
 __all__ = ["WorkItem", "WorkResult", "ExecutionBackend", "ExecutionContext",
-           "WorkerCrashError", "run_measurement"]
+           "WorkerCrashError", "AutoscalePolicy", "LeasePacer",
+           "run_measurement"]
 
 
 class WorkerCrashError(MeasurementError):
@@ -45,11 +48,18 @@ class WorkerCrashError(MeasurementError):
 
 @dataclass(frozen=True)
 class WorkItem:
-    """One unit of execution: measure all of A's experiments for a configuration."""
+    """One unit of execution: measure all of A's experiments for a configuration.
+
+    ``priority`` is the optimizer's acquisition score for the candidate
+    (higher = more informative, 0.0 when unscored).  Queue-rendezvous
+    workers pop best-first on it; in-process backends execute in submission
+    order regardless, which keeps the serial engine byte-identical.
+    """
 
     configuration: Configuration
     digest: str
     tag: int  # submission index; the driver maps results back through it
+    priority: float = 0.0
 
 
 @dataclass
@@ -67,6 +77,51 @@ class WorkResult:
     error: Optional[BaseException] = None
 
 
+@dataclass(frozen=True)
+class AutoscalePolicy:
+    """When to grow and shrink a worker fleet (ExpoCloud-style).
+
+    The policy is a pure function of observed queue state, so scaling
+    decisions are deterministic and unit-testable: :meth:`target` maps a
+    backlog (and optionally the EWMA per-item latency) to a desired fleet
+    size between ``min_workers`` and ``max_workers``.
+
+    * grow while the backlog per worker exceeds ``backlog_per_worker``;
+    * with a ``drain_horizon_s`` and an observed per-item latency, size the
+      fleet so the current backlog drains within the horizon
+      (``backlog * latency / horizon`` workers) — latency-aware scaling;
+    * shrink a worker that has been idle for ``idle_retire_s`` (paced off
+      the injected clock, so tests drive retirement deterministically).
+    """
+
+    min_workers: int = 1
+    max_workers: int = 4
+    backlog_per_worker: float = 1.0
+    idle_retire_s: float = 30.0
+    ewma_alpha: float = 0.3
+    drain_horizon_s: Optional[float] = None
+
+    def __post_init__(self):
+        if not 1 <= self.min_workers <= self.max_workers:
+            raise ValueError(
+                f"need 1 <= min_workers <= max_workers, got "
+                f"{self.min_workers}..{self.max_workers}")
+
+    def target(self, backlog: int, ewma_latency_s: Optional[float] = None) -> int:
+        """Desired fleet size for a queue backlog (pure, deterministic)."""
+        if self.drain_horizon_s and ewma_latency_s is not None:
+            want = math.ceil(backlog * ewma_latency_s / self.drain_horizon_s)
+        else:
+            want = math.ceil(backlog / max(self.backlog_per_worker, 1e-9))
+        return max(self.min_workers, min(self.max_workers, int(want)))
+
+    def smooth(self, ewma: Optional[float], observed: float) -> float:
+        """Fold one latency observation into the EWMA."""
+        if ewma is None:
+            return observed
+        return (1.0 - self.ewma_alpha) * ewma + self.ewma_alpha * observed
+
+
 @dataclass
 class ExecutionContext:
     """What a backend needs to execute work: the common context and A.
@@ -74,16 +129,97 @@ class ExecutionContext:
     ``store`` is the investigator's handle; ``store_path`` is what
     out-of-process backends hand to children so they open their *own*
     connections (forked/spawned processes must never share a SQLite handle).
+
+    ``claim_timeout_s`` is how long a waiter trusts *another* investigator's
+    in-flight measurement (size it to the slowest experiment: minutes for
+    cloud deployments); ``lease_s`` is the much shorter heartbeat lease a
+    *live* owner keeps renewed — death detection is decoupled from
+    experiment duration.  Lease expiry compares *wall-clock* timestamps
+    written by different hosts, so on a multi-machine deployment ``lease_s``
+    must exceed the heartbeat interval (lease_s/3) plus the worst expected
+    clock skew between hosts (NTP drift); the default 15 s suits a single
+    host or well-synced fleet — raise it (or QueueBackend's
+    ``requeue_after_s`` grace) for loosely-synced clocks, trading slower
+    death detection for no spurious reaping of live workers.  ``clock`` is
+    the injectable time source every timing decision reads (leases, sweeps,
+    autoscaling); ``autoscale``, when set, is the fleet-sizing policy
+    backends that own workers apply.
     """
 
     store: "SampleStore"  # noqa: F821 - circular import avoided
     experiments: Sequence
     claim_timeout_s: float = 60.0
     space_id: str = ""
+    lease_s: float = 15.0
+    clock: Clock = field(default_factory=lambda: SYSTEM_CLOCK)
+    autoscale: Optional[AutoscalePolicy] = None
 
     @property
     def store_path(self) -> str:
         return self.store.path
+
+
+class LeasePacer:
+    """Heartbeat thread: renews an owner's leases every ``interval_s``.
+
+    Runs against real wall time (a daemon thread blocking on an Event), so a
+    hung *process* stops beating and gets reaped — which is the point.
+    ``max_age_s``, when set, is the hung-*thread* watchdog: rows older than
+    it stop being renewed (see :meth:`SampleStore.renew_lease`), so a live
+    process with a deadlocked measurement cannot keep its work claimed
+    forever — workers pass their claim timeout.  Deterministic tests bypass
+    the thread and call :meth:`beat` directly with a fake clock.  Idempotent
+    start/stop; safe to use as a context manager around a measurement loop.
+    """
+
+    def __init__(self, store, owner: str, lease_s: float,
+                 interval_s: Optional[float] = None,
+                 max_age_s: Optional[float] = None):
+        self._store = store
+        self._owner = owner
+        self._lease_s = lease_s
+        self._interval_s = interval_s if interval_s is not None else lease_s / 3.0
+        self._max_age_s = max_age_s
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    def beat(self) -> int:
+        """Renew now; returns the number of leases extended."""
+        return self._store.renew_lease(self._owner, self._lease_s,
+                                       max_age_s=self._max_age_s)
+
+    def _run(self) -> None:
+        while not self._stop.wait(self._interval_s):
+            try:
+                self.beat()
+            except Exception:
+                # a transient store error (e.g. "database is locked" past the
+                # busy timeout under heavy contention) must not kill the
+                # heartbeat for good — a silenced pacer makes a live worker
+                # look dead, its items get re-executed, and its finishes are
+                # rejected.  Skip the beat; the lease spans 3 intervals, so
+                # one (or even two) missed beats never reap a live owner.
+                continue
+
+    def start(self) -> "LeasePacer":
+        if self._thread is None:
+            self._stop.clear()
+            self._thread = threading.Thread(
+                target=self._run, name=f"lease-pacer-{self._owner}", daemon=True)
+            self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=5.0)
+            self._thread = None
+
+    def __enter__(self) -> "LeasePacer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
 
 
 class ExecutionBackend(abc.ABC):
@@ -145,7 +281,8 @@ class ExecutionBackend(abc.ABC):
 
 def run_measurement(store, experiments, configuration: Configuration,
                     digest: str, claim_timeout_s: float = 60.0,
-                    owner: Optional[str] = None):
+                    owner: Optional[str] = None,
+                    lease_s: Optional[float] = None):
     """Measure every experiment in A for one configuration — the state machine.
 
     Returns ``(action, error)`` where ``action`` is the sampling-record tag.
@@ -159,10 +296,15 @@ def run_measurement(store, experiments, configuration: Configuration,
       (owner failed) race to re-claim; if it goes stale (owner presumed
       dead) exactly one waiter steals it.
 
-    Any failure between claiming and durably landing values releases the
-    claim so waiters take over instead of stalling until their timeout.
+    ``lease_s`` sizes the claim's lease: heartbeating owners (queue/process
+    workers running a :class:`LeasePacer`) pass their short heartbeat lease,
+    non-heartbeating callers default to ``claim_timeout_s`` — the pre-lease
+    reaping horizon.  Any failure between claiming and durably landing
+    values releases the claim so waiters take over instead of stalling
+    until their timeout.
     """
     owner = owner or str(os.getpid())
+    claim_lease_s = lease_s if lease_s is not None else claim_timeout_s
     measured_any = reused_any = predicted_any = False
     try:
         for exp in experiments:
@@ -173,7 +315,8 @@ def run_measurement(store, experiments, configuration: Configuration,
                 # apply-on-demand (A*_pred semantics, paper §IV-4)
                 continue
             who = f"{owner}:{threading.get_ident()}"
-            claimed = store.claim_experiment(digest, exp.identifier, who)
+            claimed = store.claim_experiment(digest, exp.identifier, who,
+                                             lease_s=claim_lease_s)
             while not claimed:
                 # Another investigator (thread or process) is already
                 # measuring this cell: wait and reuse their result — the
@@ -190,7 +333,7 @@ def run_measurement(store, experiments, configuration: Configuration,
                 else:
                     # owner failed and released: race for the re-claim
                     claimed = store.claim_experiment(
-                        digest, exp.identifier, who)
+                        digest, exp.identifier, who, lease_s=claim_lease_s)
             if not claimed:
                 reused_any = True
                 continue

@@ -1,0 +1,198 @@
+"""Autoscaling supervision for store-rendezvous worker fleets.
+
+:class:`FleetSupervisor` manages a fleet of queue workers (each an
+in-process thread hosting the :func:`~repro.core.execution.worker.run_worker`
+claim loop against its own :class:`~repro.core.discovery.DiscoverySpace`
+handle) and sizes it ExpoCloud-style from two observations it reads out of
+the shared store — queue depth and the EWMA of per-item claim→finish
+latency:
+
+* :meth:`step` is one supervision round: observe, fold the latency into the
+  EWMA, compute the :class:`~repro.core.execution.base.AutoscalePolicy`
+  target, grow the fleet toward it, and — once the queue has stayed drained
+  for ``idle_retire_s`` — shrink back to ``min_workers``.  It also performs
+  fleet hygiene: re-queueing items whose owner stopped heartbeating and
+  sweeping their stale measurement claims.
+* :meth:`run` loops ``step`` until a wall-clock budget expires (the CI
+  queue-soak entry point); tests call ``step`` directly under a
+  :class:`~repro.core.clock.FakeClock` for deterministic scale decisions.
+
+The store remains the *only* coordination point (paper §III-D): the
+supervisor never talks to an investigator — any number of investigators can
+submit prioritized work while one supervisor keeps the fleet sized to the
+backlog.
+"""
+
+from __future__ import annotations
+
+import threading
+import uuid
+from typing import Callable, Optional
+
+from ..clock import Clock
+from .base import AutoscalePolicy, LeasePacer
+from .worker import run_worker
+
+__all__ = ["FleetSupervisor"]
+
+
+class FleetSupervisor:
+    """Grow/shrink a fleet of queue-worker threads from observed queue state.
+
+    ``ds_factory`` rebuilds the Discovery Space (each worker gets its own
+    handle, exactly like a remote worker process would); ``policy`` defaults
+    to the space's ``autoscale`` policy or a 1–4 worker default.
+    """
+
+    def __init__(self, ds_factory: Callable[[], "DiscoverySpace"],  # noqa: F821
+                 policy: Optional[AutoscalePolicy] = None,
+                 clock: Optional[Clock] = None,
+                 claim_batch: int = 2,
+                 poll_interval_s: float = 0.02,
+                 name: Optional[str] = None):
+        self._ds_factory = ds_factory
+        ds = ds_factory()
+        self._store = ds.store
+        self._space_id = ds.space_id
+        self._clock = clock if clock is not None else ds.clock
+        self._policy = (policy if policy is not None
+                        else getattr(ds, "autoscale", None) or AutoscalePolicy())
+        self._claim_batch = claim_batch
+        self._poll_interval_s = poll_interval_s
+        # Owner names must be store-unique: two supervisors sharing one
+        # store with colliding worker owners would cross-renew each other's
+        # leases (a live fleet keeping a dead fleet's items "running").
+        self._name = name if name is not None else f"fleet-{uuid.uuid4().hex[:8]}"
+        self._workers: list = []  # (owner, thread, stop_event)
+        self._lock = threading.Lock()
+        self._processed = 0
+        self._next_id = 0
+        self._idle_since: Optional[float] = None
+        self.ewma_latency_s: Optional[float] = None
+
+    # -- fleet membership ---------------------------------------------------
+
+    @property
+    def num_workers(self) -> int:
+        """Live fleet size.  Threads that died unexpectedly (an experiment
+        or store error escaping ``run_worker``) are pruned here, so the next
+        :meth:`step` sees real capacity and respawns toward the target
+        instead of counting corpses."""
+        self._workers = [w for w in self._workers if w[1].is_alive()]
+        return len(self._workers)
+
+    @property
+    def processed(self) -> int:
+        """Total work items executed by this fleet so far."""
+        with self._lock:
+            return self._processed
+
+    def _serve(self, ds, owner: str, stop_event: threading.Event) -> None:
+        """Worker-thread body: drain-claim-measure rounds until told to stop.
+
+        One lease pacer covers the whole thread (claims + running items), so
+        heartbeats continue across rounds; the inner ``run_worker`` call runs
+        with ``idle_timeout_s=0`` — process everything claimable, then yield.
+        """
+        # the age budget scales with the claim batch: a batch shares one
+        # claimed_at, so its tail item starts up to (N-1) experiments late
+        with LeasePacer(ds.store, owner, ds.lease_s,
+                        max_age_s=ds.claim_timeout_s * max(1, self._claim_batch)):
+            while not stop_event.is_set():
+                n = run_worker(ds, owner=owner, idle_timeout_s=0.0,
+                               poll_interval_s=self._poll_interval_s,
+                               claim_batch=self._claim_batch,
+                               heartbeat=False)
+                if n:
+                    with self._lock:
+                        self._processed += n
+                else:
+                    stop_event.wait(self._poll_interval_s)
+
+    def _spawn(self) -> str:
+        owner = f"{self._name}-w{self._next_id}"
+        self._next_id += 1
+        ds = self._ds_factory()
+        stop_event = threading.Event()
+        thread = threading.Thread(target=self._serve, args=(ds, owner, stop_event),
+                                  name=owner, daemon=True)
+        thread.start()
+        self._workers.append((owner, thread, stop_event))
+        return owner
+
+    def _stop_one(self) -> None:
+        owner, thread, stop_event = self._workers.pop()
+        stop_event.set()
+        thread.join(timeout=10.0)
+
+    # -- supervision --------------------------------------------------------
+
+    def step(self) -> dict:
+        """One supervision round; returns the observability snapshot.
+
+        Deterministic given the store state and the injected clock: the
+        autoscaling tests drive this directly with a fake clock — no sleeps.
+        """
+        # fleet hygiene first: a dead worker's items go back to the queue
+        # (counting toward the backlog this round) and its claims are swept
+        requeued = self._store.requeue_stale_work()
+        self._store.sweep_stale_claims()
+
+        stats = self._store.work_queue_stats(self._space_id)
+        if stats["recent_latency_s"] is not None:
+            self.ewma_latency_s = self._policy.smooth(
+                self.ewma_latency_s, stats["recent_latency_s"])
+        backlog = stats["queued"] + stats["running"]
+        target = self._policy.target(backlog, self.ewma_latency_s)
+
+        now = self._clock.monotonic()
+        if backlog > 0:
+            self._idle_since = None
+        elif self._idle_since is None:
+            self._idle_since = now
+
+        while self.num_workers < target:
+            self._spawn()
+        if (backlog == 0 and self._idle_since is not None
+                and now - self._idle_since >= self._policy.idle_retire_s):
+            while self.num_workers > self._policy.min_workers:
+                self._stop_one()
+
+        return {"workers": self.num_workers, "target": target,
+                "backlog": backlog, "requeued": requeued,
+                "ewma_latency_s": self.ewma_latency_s,
+                "processed": self.processed, **stats}
+
+    def run(self, budget_s: float, step_interval_s: float = 0.2) -> dict:
+        """Supervise for ``budget_s`` seconds, then stop the fleet.
+
+        The soak/CI entry point: keeps stepping on ``step_interval_s`` until
+        the budget expires; returns the final snapshot.
+        """
+        deadline = self._clock.monotonic() + budget_s
+        snapshot = self.step()
+        try:
+            while self._clock.monotonic() < deadline:
+                self._clock.sleep(step_interval_s)
+                snapshot = self.step()
+        finally:
+            self.stop()
+        return snapshot
+
+    def start(self) -> "FleetSupervisor":
+        """Pre-warm the fleet to ``min_workers`` (optional; ``step`` grows on
+        demand anyway)."""
+        while self.num_workers < self._policy.min_workers:
+            self._spawn()
+        return self
+
+    def stop(self) -> None:
+        """Stop every worker thread (idempotent)."""
+        while self._workers:
+            self._stop_one()
+
+    def __enter__(self) -> "FleetSupervisor":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()

@@ -10,17 +10,20 @@ measurement state machine, and land values through the existing
 measurement-claim arbitration.  The investigator polls the table for
 outcomes; it never talks to a worker directly.
 
-Crash tolerance (ExpoCloud-style): a worker that dies mid-item leaves the
-row ``running``; the backend periodically re-queues rows whose claim went
-silent for longer than the claim timeout, so the surviving fleet redoes the
-work, and sweeps the dead worker's stale measurement claims so nobody stalls
-waiting on them.
+Crash tolerance (ExpoCloud-style): workers heartbeat their leases, so a
+worker that dies mid-item stops renewing; the backend periodically re-queues
+rows whose lease expired — within seconds, even when the claim timeout is
+minutes — so the surviving fleet redoes the work, and sweeps the dead
+worker's stale measurement claims so nobody stalls waiting on them.
+
+Scheduling (Lynceus-style): ``submit`` forwards the work item's ``priority``
+(the optimizer's acquisition score) into the queue row, and workers pop
+best-first — the most informative configurations are measured earliest,
+which is what lets a budget-constrained exploration converge early.
 """
 
 from __future__ import annotations
 
-import os
-import time
 from typing import List, Optional
 
 from ..actions import MeasurementError
@@ -52,18 +55,23 @@ class QueueBackend(ExecutionBackend):
                 "QueueBackend needs a file-backed SampleStore: remote "
                 "workers rendezvous through the database file")
         self._ctx = ctx
-        self._requeue_after_s = (requeue_after_s if requeue_after_s is not None
-                                 else ctx.claim_timeout_s)
+        # Grace period past lease expiry before re-queueing (0 = re-queue the
+        # moment a heartbeat lease lapses; raise it for jittery networks).
+        self._requeue_after_s = requeue_after_s or 0.0
         self._drain_timeout_s = drain_timeout_s
         self._open: dict = {}  # item_id -> WorkItem
-        self._last_sweep = time.monotonic()
+        # GC paces off the injected clock — and the first poll sweeps
+        # immediately, so even sub-second runs (--quick benches, CI smoke
+        # tests) get at least one garbage-collection pass.
+        self._last_sweep: Optional[float] = None
 
     def drain(self, timeout_s: Optional[float] = None):
         return super().drain(timeout_s if timeout_s is not None
                              else self._drain_timeout_s)
 
     def submit(self, item: WorkItem) -> int:
-        item_id = self._ctx.store.enqueue_work(self._ctx.space_id, item.digest)
+        item_id = self._ctx.store.enqueue_work(self._ctx.space_id, item.digest,
+                                               priority=item.priority)
         self._open[item_id] = item
         return item.tag
 
@@ -82,13 +90,16 @@ class QueueBackend(ExecutionBackend):
 
     def _maybe_gc(self) -> None:
         """Periodic fleet hygiene while waiting: re-queue items whose worker
-        went silent and reap its stale measurement claims."""
-        now = time.monotonic()
-        if now - self._last_sweep < min(1.0, self._requeue_after_s / 2):
+        stopped heartbeating and reap its stale measurement claims.  Paced
+        off the injected clock at half the lease horizon, so dead owners are
+        reaped within ~1.5 leases — seconds, not claim timeouts."""
+        now = self._ctx.clock.monotonic()
+        period = min(1.0, self._ctx.lease_s / 2)
+        if self._last_sweep is not None and now - self._last_sweep < period:
             return
         self._last_sweep = now
-        self._ctx.store.requeue_stale_work(self._requeue_after_s)
-        self._ctx.store.sweep_stale_claims(self._ctx.claim_timeout_s)
+        self._ctx.store.requeue_stale_work(grace_s=self._requeue_after_s)
+        self._ctx.store.sweep_stale_claims()
 
     @property
     def outstanding(self) -> int:

@@ -10,14 +10,21 @@ any ``multiprocessing`` target)::
     python -m repro.core.execution.worker \
         --store /mnt/shared/common_context.db \
         --factory mypackage.study:build_ds \
-        --idle-timeout 30
+        --idle-timeout 30 --claim-batch 4
 
 The factory is ``module:callable`` taking the store path and returning a
-:class:`~repro.core.discovery.DiscoverySpace`.  The worker claims queued
-items for that space, runs the measurement state machine (values land
-through the normal measurement-claim arbitration, so racing workers still
-measure each cell exactly once), reports each outcome, and exits after
-``--idle-timeout`` seconds without work (or after ``--max-items``).
+:class:`~repro.core.discovery.DiscoverySpace`.  The worker pops queued items
+for that space *best-priority-first* — up to ``--claim-batch`` per store
+round-trip, which amortizes slow-link latency — runs the measurement state
+machine (values land through the normal measurement-claim arbitration, so
+racing workers still measure each cell exactly once), lands the batch's
+outcomes in one trip, and exits after ``--idle-timeout`` seconds without
+work (or after ``--max-items``).
+
+Liveness is heartbeat-based: a :class:`~repro.core.execution.base.LeasePacer`
+thread renews the worker's claim + work-item leases every third of
+``ds.lease_s``, so the investigator's GC reaps a silently dead worker in
+seconds even when ``claim_timeout_s`` is minutes.
 """
 
 from __future__ import annotations
@@ -25,52 +32,85 @@ from __future__ import annotations
 import argparse
 import importlib
 import os
-import time
 from typing import Optional
 
-from .base import run_measurement
+from .base import LeasePacer, run_measurement
 
 __all__ = ["run_worker", "main"]
 
 
 def run_worker(ds, owner: Optional[str] = None, idle_timeout_s: float = 10.0,
                max_items: Optional[int] = None,
-               poll_interval_s: float = 0.05) -> int:
+               poll_interval_s: float = 0.05,
+               claim_batch: int = 1,
+               heartbeat: bool = True) -> int:
     """Serve the work-item queue of ``ds``'s store until idle; returns the
-    number of items processed.  Importable directly so tests and embedded
-    fleets can host the loop in a thread instead of a process."""
+    number of items processed.  Importable directly so tests, embedded
+    fleets, and :class:`~repro.core.execution.fleet.FleetSupervisor` threads
+    can host the loop in-process.
+
+    ``claim_batch`` items are popped per store round-trip (best-priority
+    first) and their outcomes landed in one transaction; ``heartbeat=False``
+    disables the lease pacer (the fault-injection tests use it to simulate
+    a silently dead worker).
+    """
     owner = owner or f"worker-{os.getpid()}"
     store = ds.store
+    clock = ds.clock
     processed = 0
-    idle_since = time.monotonic()
-    while max_items is None or processed < max_items:
-        claim = store.claim_work(owner, space_id=ds.space_id)
-        if claim is None:
-            if time.monotonic() - idle_since >= idle_timeout_s:
-                break
-            time.sleep(poll_interval_s)
-            continue
-        digest = claim["config_digest"]
-        config = store.get_configuration(digest)
-        if config is None:
-            store.finish_work(claim["item_id"], "failed",
-                              f"no stored configuration for digest {digest}",
-                              owner=owner)
-            continue
-        action, err = run_measurement(store, ds.actions.experiments, config,
-                                      digest, ds.claim_timeout_s, owner=owner)
-        # guarded finish: if this item went silent long enough to be
-        # re-queued (and re-claimed by the surviving fleet), our late
-        # outcome is stale and must not overwrite the re-execution's
-        if action == "crashed":
-            # contain the experiment bug to this item; the worker survives
-            store.finish_work(claim["item_id"], "failed", f"crash: {err!r}",
-                              owner=owner)
-        else:
-            store.finish_work(claim["item_id"], action,
-                              None if err is None else str(err), owner=owner)
-        processed += 1
-        idle_since = time.monotonic()
+    # max_age_s: a measurement stuck past the claim timeout stops being
+    # renewed, so the fleet recovers it (pre-lease recovery horizon).  A
+    # claim batch shares one claimed_at, so the budget scales with the batch
+    # — the tail item of a healthy N-item batch legitimately starts up to
+    # (N-1) experiments after the claim.
+    pacer = (LeasePacer(store, owner, ds.lease_s,
+                        max_age_s=ds.claim_timeout_s * max(1, claim_batch))
+             if heartbeat else None)
+    if pacer is not None:
+        pacer.start()
+    try:
+        idle_since = clock.monotonic()
+        while max_items is None or processed < max_items:
+            limit = max(1, claim_batch)
+            if max_items is not None:
+                limit = min(limit, max_items - processed)
+            claims = store.claim_work_batch(owner, limit=limit,
+                                            space_id=ds.space_id,
+                                            lease_s=ds.lease_s)
+            if not claims:
+                if clock.monotonic() - idle_since >= idle_timeout_s:
+                    break
+                clock.sleep(poll_interval_s)
+                continue
+            outcomes = []
+            for claim in claims:
+                digest = claim["config_digest"]
+                config = store.get_configuration(digest)
+                if config is None:
+                    outcomes.append((claim["item_id"], "failed",
+                                     f"no stored configuration for digest {digest}"))
+                    continue
+                action, err = run_measurement(store, ds.actions.experiments,
+                                              config, digest,
+                                              ds.claim_timeout_s, owner=owner,
+                                              lease_s=ds.lease_s)
+                if action == "crashed":
+                    # contain the experiment bug to this item; the worker
+                    # survives and serves the rest of its batch
+                    outcomes.append((claim["item_id"], "failed", f"crash: {err!r}"))
+                else:
+                    outcomes.append((claim["item_id"], action,
+                                     None if err is None else str(err)))
+            # guarded batch finish, one round-trip: items that went silent
+            # long enough to be re-queued (and re-claimed by the surviving
+            # fleet) are stale here and silently skipped — the re-execution's
+            # outcome wins
+            store.finish_work_batch(outcomes, owner=owner)
+            processed += len(claims)
+            idle_since = clock.monotonic()
+    finally:
+        if pacer is not None:
+            pacer.stop()
     return processed
 
 
@@ -96,6 +136,12 @@ def main(argv: Optional[list] = None) -> int:
                         help="exit after processing this many items")
     parser.add_argument("--poll-interval", type=float, default=0.05,
                         help="queue poll period in seconds")
+    parser.add_argument("--claim-batch", type=int, default=1,
+                        help="work items claimed per store round-trip "
+                             "(amortizes slow-link latency)")
+    parser.add_argument("--no-heartbeat", action="store_true",
+                        help="disable lease renewal (debugging only: the "
+                             "worker will look dead after one lease)")
     parser.add_argument("--owner", default=None,
                         help="worker identity for claims (default: worker-<pid>)")
     args = parser.parse_args(argv)
@@ -104,7 +150,9 @@ def main(argv: Optional[list] = None) -> int:
     processed = run_worker(ds, owner=args.owner,
                            idle_timeout_s=args.idle_timeout,
                            max_items=args.max_items,
-                           poll_interval_s=args.poll_interval)
+                           poll_interval_s=args.poll_interval,
+                           claim_batch=args.claim_batch,
+                           heartbeat=not args.no_heartbeat)
     print(f"[worker pid={os.getpid()}] processed {processed} work items")
     return 0
 

@@ -18,7 +18,8 @@ is what makes the framework workload-agnostic and lets multiple optimizers —
 in one process or many — share one sample store (§III-D).
 """
 
-from .base import OptimizerRun, SearchAdapter, Trial, run_optimizer, hypergeom_p_found
+from .base import (OptimizerRun, ScoredCandidate, SearchAdapter, Trial,
+                   run_optimizer, hypergeom_p_found)
 from .random_search import RandomSearch
 from .bo_gp import GPBayesOpt
 from .tpe import TPE
@@ -33,6 +34,7 @@ OPTIMIZER_REGISTRY = {
 
 __all__ = [
     "OptimizerRun",
+    "ScoredCandidate",
     "SearchAdapter",
     "Trial",
     "run_optimizer",

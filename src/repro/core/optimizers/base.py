@@ -11,11 +11,16 @@ behind the paper's Fig. 7 incremental-sampling evaluation.
 Ask/tell protocol
 -----------------
 
-Optimizers implement ``ask(adapter, rng, n) -> [Configuration]``: propose up
-to ``n`` distinct unsampled candidates *without* evaluating them.  Evaluation
-is the driver's job: :meth:`SearchAdapter.evaluate_batch` routes the batch
-through ``DiscoverySpace.sample_batch`` (fanning experiments over a worker
-pool) and *tells* the resulting :class:`Trial` list back into the adapter's
+Optimizers implement ``ask(adapter, rng, n) -> [ScoredCandidate]``: propose
+up to ``n`` distinct unsampled candidates *without* evaluating them, each
+carrying the optimizer's acquisition score (None when the proposal is
+unscored, e.g. random draws).  Scores ride along as work-item *priorities*:
+queue-rendezvous workers measure the highest-acquisition configurations
+first (Lynceus-style), while results and records stay in submission/tell
+order, so scoring never perturbs the trajectory.  Evaluation is the
+driver's job: :meth:`SearchAdapter.evaluate_batch` routes the batch through
+``DiscoverySpace.sample_batch`` (fanning experiments over a worker pool)
+and *tells* the resulting :class:`Trial` list back into the adapter's
 history, which is the only state optimizers observe.  ``ask`` with ``n=1``
 is the classic suggest step — :meth:`Optimizer.suggest` remains as that thin
 wrapper, and :func:`run_optimizer` with ``batch_size=1`` reproduces the
@@ -29,7 +34,7 @@ import math
 import time
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional, Sequence, Union
+from typing import Callable, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -38,8 +43,46 @@ from ..discovery import BatchResult, DiscoverySpace
 from ..entities import Configuration
 from ..execution import ExecutionBackend, WorkItem
 
-__all__ = ["Trial", "OptimizerRun", "SearchAdapter", "Optimizer", "run_optimizer",
-           "hypergeom_p_found"]
+__all__ = ["Trial", "OptimizerRun", "ScoredCandidate", "SearchAdapter",
+           "Optimizer", "run_optimizer", "hypergeom_p_found"]
+
+
+@dataclass(frozen=True)
+class ScoredCandidate:
+    """One proposed configuration + the acquisition score behind it.
+
+    ``score`` is in *maximization* orientation (higher = more informative:
+    EI for GP-BO, log l/g for TPE) and becomes the work item's scheduling
+    priority; None marks an unscored proposal (random draws, init phase),
+    which schedules at priority 0.  The wrapper is deliberately thin —
+    ``digest`` proxies through so candidate bookkeeping (dedup sets, BOHB's
+    interleaved exclude) reads the same as for a bare configuration.
+    """
+
+    configuration: Configuration
+    score: Optional[float] = None
+
+    @property
+    def digest(self) -> str:
+        return self.configuration.digest
+
+
+def _split_scored(batch: Sequence) -> Tuple[List[Configuration], Optional[List[float]]]:
+    """Normalize an ask batch (ScoredCandidates and/or bare Configurations)
+    into parallel (configurations, priorities) lists; priorities is None
+    when nothing in the batch carried a score (all-FIFO, no point tagging)."""
+    configs: List[Configuration] = []
+    scores: List[float] = []
+    any_scored = False
+    for cand in batch:
+        if isinstance(cand, ScoredCandidate):
+            configs.append(cand.configuration)
+            scores.append(0.0 if cand.score is None else float(cand.score))
+            any_scored = any_scored or cand.score is not None
+        else:
+            configs.append(cand)
+            scores.append(0.0)
+    return configs, (scores if any_scored else None)
 
 
 @dataclass
@@ -156,27 +199,31 @@ class SearchAdapter:
         self.tell([trial])
         return trial
 
-    def evaluate_batch(self, configurations: Sequence[Configuration],
+    def evaluate_batch(self, configurations: Sequence,
                        workers: int = 1, executor=None,
                        backend=None) -> List[Optional[float]]:
         """Evaluate a candidate batch and tell the results.
 
-        Experiments fan out over an execution backend (``workers`` threads,
-        a caller-owned ``executor`` reused across batches, or any backend
+        Accepts :class:`ScoredCandidate` lists (the ``ask`` contract) or
+        bare configurations; acquisition scores are forwarded as work-item
+        priorities so scheduling backends measure best-first.  Experiments
+        fan out over an execution backend (``workers`` threads, a
+        caller-owned ``executor`` reused across batches, or any backend
         accepted by ``DiscoverySpace.sample_batch``); trials are appended in
         submission order so the history (and therefore every subsequent
         ``ask``) is deterministic regardless of completion order.  Failed
         measurements become ``action='failed'`` trials with value None.
         """
+        configs, priorities = _split_scored(configurations)
         results = self.ds.sample_batch(
-            configurations, operation_id=self.operation_id, workers=workers,
-            executor=executor, backend=backend)
+            configs, operation_id=self.operation_id, workers=workers,
+            executor=executor, backend=backend, priorities=priorities)
         batch = [self._make_trial(result, len(self.trials) + i)
                  for i, result in enumerate(results)]
         self.tell(batch)
         return [t.value for t in batch]
 
-    def evaluate(self, configuration: Configuration) -> Optional[float]:
+    def evaluate(self, configuration) -> Optional[float]:
         return self.evaluate_batch([configuration])[0]
 
     def seen_digests(self) -> set:
@@ -211,13 +258,26 @@ class Optimizer(abc.ABC):
 
     @abc.abstractmethod
     def ask(self, adapter: SearchAdapter, rng: np.random.Generator,
-            n: int = 1) -> List[Configuration]:
-        """Propose up to ``n`` next configurations ([] => space exhausted)."""
+            n: int = 1) -> List[ScoredCandidate]:
+        """Propose up to ``n`` next candidates ([] => space exhausted).
+
+        Each candidate carries the acquisition score that ranked it (None
+        for unscored proposals); drivers forward scores as scheduling
+        priorities.  Scoring must never change rng consumption — the n=1
+        stream stays draw-for-draw identical to the classic suggest step.
+        """
 
     def suggest(self, adapter: SearchAdapter, rng: np.random.Generator) -> Optional[Configuration]:
-        """Single-candidate convenience wrapper over :meth:`ask`."""
+        """Single-candidate convenience wrapper over :meth:`ask` — returns
+        the bare configuration (the classic suggest contract; the score is
+        scheduling metadata with no meaning for a batch of one).  Tolerates
+        subclasses whose ``ask`` still returns bare configurations, like
+        every other consumer of the ask batch."""
         batch = self.ask(adapter, rng, n=1)
-        return batch[0] if batch else None
+        if not batch:
+            return None
+        first = batch[0]
+        return first.configuration if isinstance(first, ScoredCandidate) else first
 
     # -- helpers shared by concrete optimizers ---------------------------------
 
@@ -257,22 +317,24 @@ class Optimizer(abc.ABC):
         return X, y
 
     @staticmethod
-    def _top_n(candidates: list, score: np.ndarray, n: int) -> list:
-        """The n best-scoring candidates, in score order.  Stable on ties so
-        ``_top_n(c, s, 1)[0] == c[np.argmax(s)]`` exactly."""
+    def _top_n(candidates: list, score: np.ndarray, n: int) -> List[ScoredCandidate]:
+        """The n best-scoring candidates (with their acquisition scores), in
+        score order.  Stable on ties so ``_top_n(c, s, 1)[0].configuration
+        == c[np.argmax(s)]`` exactly."""
         order = np.argsort(-score, kind="stable")
-        return [candidates[i] for i in order[:n]]
+        return [ScoredCandidate(candidates[i], float(score[i]))
+                for i in order[:n]]
 
     @staticmethod
     def _random_n(pool: Sequence[Configuration], rng: np.random.Generator,
-                  n: int) -> List[Configuration]:
-        """Up to n draws without replacement, one ``rng.integers`` call per
-        pick — the shared init-phase sampler, draw-for-draw identical to the
-        classic single-suggest draw at n=1."""
+                  n: int) -> List[ScoredCandidate]:
+        """Up to n unscored draws without replacement, one ``rng.integers``
+        call per pick — the shared init-phase sampler, draw-for-draw
+        identical to the classic single-suggest draw at n=1."""
         pool = list(pool)
-        out: List[Configuration] = []
+        out: List[ScoredCandidate] = []
         for _ in range(min(n, len(pool))):
-            out.append(pool.pop(int(rng.integers(len(pool)))))
+            out.append(ScoredCandidate(pool.pop(int(rng.integers(len(pool))))))
         return out
 
 
@@ -341,10 +403,12 @@ def _run_pipelined(
                 if not batch:
                     exhausted = True
                     break
-                config = batch[0]
+                configs, priorities = _split_scored(batch)
+                config = configs[0]
+                priority = priorities[0] if priorities is not None else 0.0
                 digest = ds.store.put_configuration(config)
                 adapter.pending.add(digest)
-                engine.submit(WorkItem(config, digest, tag))
+                engine.submit(WorkItem(config, digest, tag, priority=priority))
                 inflight[tag] = (config, digest)
                 tag += 1
             if not inflight:

@@ -13,8 +13,7 @@ import numpy as np
 from scipy.linalg import cho_factor, cho_solve
 from scipy.stats import norm
 
-from ..entities import Configuration
-from .base import Optimizer, SearchAdapter
+from .base import Optimizer, ScoredCandidate, SearchAdapter
 
 __all__ = ["GPBayesOpt"]
 
@@ -55,9 +54,10 @@ class GPBayesOpt(Optimizer):
     # -- proposal -----------------------------------------------------------------
 
     def ask(self, adapter: SearchAdapter, rng: np.random.Generator,
-            n: int = 1) -> List[Configuration]:
+            n: int = 1) -> List[ScoredCandidate]:
         """Top-n expected improvement over one GP fit (the model only changes
-        on tell, so one posterior serves the whole batch)."""
+        on tell, so one posterior serves the whole batch); candidates carry
+        their EI as the acquisition score."""
         candidates = self._unseen_candidates(adapter, rng)
         if not candidates:
             return []

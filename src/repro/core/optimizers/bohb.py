@@ -21,7 +21,7 @@ from typing import Callable, List, Optional
 import numpy as np
 
 from ..entities import Configuration
-from .base import Optimizer, SearchAdapter
+from .base import Optimizer, ScoredCandidate, SearchAdapter
 from .tpe import TPE
 
 __all__ = ["BOHB"]
@@ -40,18 +40,21 @@ class BOHB(TPE):
         self.random_fraction = random_fraction
 
     def ask(self, adapter: SearchAdapter, rng: np.random.Generator,
-            n: int = 1, exclude: Optional[set] = None) -> List[Configuration]:
+            n: int = 1, exclude: Optional[set] = None) -> List[ScoredCandidate]:
         # BOHB interleaves random configurations for theoretical guarantees —
         # per batch *slot*, so a batch mixes model and random picks in the
         # same proportion as the serial loop (and draw-for-draw at n=1).
-        out: List[Configuration] = []
+        # Model picks carry their TPE acquisition score; the interleaved
+        # random picks are unscored.
+        out: List[ScoredCandidate] = []
         exclude = set(exclude) if exclude else set()
         for _ in range(n):
             if rng.uniform() < self.random_fraction:
                 candidates = self._unseen_candidates(adapter, rng, exclude=exclude)
                 if not candidates:
                     break
-                pick = candidates[int(rng.integers(len(candidates)))]
+                pick = ScoredCandidate(
+                    candidates[int(rng.integers(len(candidates)))])
             else:
                 model = super().ask(adapter, rng, n=1, exclude=exclude)
                 if not model:

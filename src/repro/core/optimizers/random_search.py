@@ -6,8 +6,7 @@ from typing import List
 
 import numpy as np
 
-from ..entities import Configuration
-from .base import Optimizer, SearchAdapter
+from .base import Optimizer, ScoredCandidate, SearchAdapter
 
 __all__ = ["RandomSearch"]
 
@@ -16,20 +15,22 @@ class RandomSearch(Optimizer):
     name = "random"
 
     def ask(self, adapter: SearchAdapter, rng: np.random.Generator,
-            n: int = 1) -> List[Configuration]:
+            n: int = 1) -> List[ScoredCandidate]:
+        """Uniform draws carry no acquisition model: every candidate is
+        unscored (scheduling priority 0 — pure FIFO)."""
         space = adapter.space
         seen = adapter.seen_digests()
         if space.finite and space.size <= 65536:
             pool = [c for c in space.all_configurations() if c.digest not in seen]
             return self._random_n(pool, rng, n)
         # continuous / huge spaces: rejection-sample the batch
-        out: List[Configuration] = []
+        out: List[ScoredCandidate] = []
         exclude: set = set()
         for _ in range(n):
             for _ in range(1024):
                 c = space.sample_configuration(rng)
                 if c.digest not in seen and c.digest not in exclude:
-                    out.append(c)
+                    out.append(ScoredCandidate(c))
                     exclude.add(c.digest)
                     break
             else:

@@ -12,8 +12,7 @@ from typing import List, Optional
 
 import numpy as np
 
-from ..entities import Configuration
-from .base import Optimizer, SearchAdapter
+from .base import Optimizer, ScoredCandidate, SearchAdapter
 
 __all__ = ["TPE", "tpe_score"]
 
@@ -72,9 +71,10 @@ class TPE(Optimizer):
         self.bandwidth = bandwidth
 
     def ask(self, adapter: SearchAdapter, rng: np.random.Generator,
-            n: int = 1, exclude: Optional[set] = None) -> List[Configuration]:
+            n: int = 1, exclude: Optional[set] = None) -> List[ScoredCandidate]:
         """Propose the batch maximizing l(x)/g(x) (top-n of one scored pool;
         the model only updates on tell, so scoring once per ask is exact).
+        Candidates carry their log l(x) - log g(x) as the acquisition score.
         ``exclude`` lets BOHB thread its interleaved batch picks through."""
         candidates = self._unseen_candidates(adapter, rng, exclude=exclude)
         if not candidates:

@@ -110,11 +110,17 @@ def rssc_transfer(
     # ③ translate to A*
     translated = [source.space.translate(c, mapping) for c in reps]
 
-    # ④ measure the representative sub-space in A* (batched, parallel)
+    # ④ measure the representative sub-space in A* (batched, parallel).
+    # Priorities ride on the work items: representatives farthest from the
+    # source median are measured first — the extremes pin the linear fit's
+    # slope earliest, so a budget-cut (or straggling) measurement pass still
+    # yields the most informative subset (mode-agnostic: distance, not sign).
     op = target.begin_operation("rssc", {"property": property_name,
                                          "selection": selection})
+    spread = np.abs(source_values - float(np.median(source_values)))
     results = target.sample_batch(translated, operation_id=op, workers=workers,
-                                  backend=backend)
+                                  backend=backend,
+                                  priorities=[float(s) for s in spread])
     target_values = []
     kept_src, kept_tgt, kept_src_vals = [], [], []
     n_measured = 0

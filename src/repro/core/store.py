@@ -33,6 +33,28 @@ invariants make that safe:
   (``INSERT ... SELECT COALESCE(MAX(seq),-1)+1``), which executes atomically
   under SQLite's single-writer lock: concurrent appenders get gapless,
   non-duplicated ``seq`` values with no read-modify-write window.
+
+Leases and priorities
+---------------------
+
+Both coordination tables are lease-based: a measurement claim
+(``value_claims``) and a running work item (``work_items``) carry a
+``lease_expires_at`` timestamp that the owner refreshes periodically via
+:meth:`SampleStore.renew_lease` (a heartbeat).  Liveness is therefore
+decoupled from experiment duration: ``claim_timeout_s`` can be minutes for a
+long cloud measurement while a *silently dead* owner — whose heartbeats
+stopped — is reaped within seconds by :meth:`sweep_stale_claims` /
+:meth:`requeue_stale_work`.  Owners that do not heartbeat (the in-process
+backends) take a lease sized to their claim timeout, which reproduces the
+pre-lease reaping horizon exactly.
+
+``work_items`` rows also carry a ``priority`` (the optimizer's acquisition
+score): :meth:`claim_work_batch` pops best-first — highest priority, then
+FIFO within ties — and claims up to N items per store round-trip so remote
+workers amortize slow-link latency (ExpoCloud/Lynceus-style scheduling).
+
+All timestamps come from an injectable :class:`~repro.core.clock.Clock`, so
+every reap/renew/requeue behavior is deterministically testable.
 """
 
 from __future__ import annotations
@@ -41,15 +63,19 @@ import json
 import os
 import sqlite3
 import threading
-import time
 import uuid
 from contextlib import contextmanager
 from dataclasses import dataclass
 from typing import Any, Iterable, Mapping, Optional, Sequence
 
+from .clock import Clock, SYSTEM_CLOCK
 from .entities import Configuration, PropertyValue, canonical_json
 
-__all__ = ["SampleStore", "RecordEntry"]
+__all__ = ["SampleStore", "RecordEntry", "DEFAULT_LEASE_S"]
+
+#: Lease horizon for claimants that did not specify one (non-heartbeating
+#: owners): matches the pre-lease default claim timeout.
+DEFAULT_LEASE_S = 60.0
 
 _SCHEMA = """
 CREATE TABLE IF NOT EXISTS configurations (
@@ -91,27 +117,53 @@ CREATE TABLE IF NOT EXISTS records (
 );
 CREATE INDEX IF NOT EXISTS rec_space ON records(space_id, operation_id, seq);
 CREATE TABLE IF NOT EXISTS value_claims (
-    config_digest TEXT NOT NULL,
-    experiment_id TEXT NOT NULL,
-    owner         TEXT NOT NULL,
-    created_at    REAL NOT NULL,
+    config_digest    TEXT NOT NULL,
+    experiment_id    TEXT NOT NULL,
+    owner            TEXT NOT NULL,
+    created_at       REAL NOT NULL,
+    lease_expires_at REAL NOT NULL DEFAULT 0,
     PRIMARY KEY (config_digest, experiment_id)
 );
 CREATE INDEX IF NOT EXISTS rec_digest ON records(space_id, config_digest);
 CREATE TABLE IF NOT EXISTS work_items (
-    item_id       TEXT PRIMARY KEY,
-    space_id      TEXT NOT NULL,
-    config_digest TEXT NOT NULL,
-    status        TEXT NOT NULL DEFAULT 'queued',
-    owner         TEXT,
-    action        TEXT,
-    error         TEXT,
-    created_at    REAL NOT NULL,
-    claimed_at    REAL,
-    finished_at   REAL
+    item_id          TEXT PRIMARY KEY,
+    space_id         TEXT NOT NULL,
+    config_digest    TEXT NOT NULL,
+    status           TEXT NOT NULL DEFAULT 'queued',
+    owner            TEXT,
+    action           TEXT,
+    error            TEXT,
+    priority         REAL NOT NULL DEFAULT 0,
+    created_at       REAL NOT NULL,
+    claimed_at       REAL,
+    finished_at      REAL,
+    lease_expires_at REAL NOT NULL DEFAULT 0
 );
-CREATE INDEX IF NOT EXISTS wi_queue ON work_items(space_id, status, created_at);
 """
+
+# Indexes over MIGRATED columns: must be created after _migrate() has run,
+# or reopening a pre-migration database dies on "no such column" inside the
+# schema script before the ALTERs get a chance.  wi_prio's (space_id,
+# status) prefix also serves every query the old wi_queue index did, so
+# that one is dropped rather than double-maintained on the queue hot path.
+_SCHEMA_POST_MIGRATE = """
+CREATE INDEX IF NOT EXISTS wi_prio ON work_items(space_id, status, priority DESC, created_at);
+CREATE INDEX IF NOT EXISTS vc_owner ON value_claims(owner);
+DROP INDEX IF EXISTS wi_queue;
+"""
+
+# Columns added after the table first shipped: reopening a database created
+# by an older build ALTERs them in (constant defaults only — a SQLite
+# restriction on ADD COLUMN — so leases start expired and priorities flat).
+_MIGRATIONS = {
+    "value_claims": {
+        "lease_expires_at": "REAL NOT NULL DEFAULT 0",
+    },
+    "work_items": {
+        "priority": "REAL NOT NULL DEFAULT 0",
+        "lease_expires_at": "REAL NOT NULL DEFAULT 0",
+    },
+}
 
 # Allocates the next per-operation sequence number and inserts the record in
 # ONE statement: atomic under SQLite's writer lock, so concurrent appenders
@@ -121,6 +173,15 @@ _APPEND_SQL = (
     " SELECT ?, ?, COALESCE(MAX(seq), -1) + 1, ?, ?, ?"
     " FROM records WHERE space_id=? AND operation_id=?"
 )
+
+
+def _like_prefix(owner: str) -> str:
+    """LIKE pattern matching ``owner:<anything>`` with metacharacters in the
+    (user-settable) owner escaped, so ``gpu_node_1`` can never renew or
+    release ``gpu-node-1``'s claims through the ``_`` wildcard."""
+    escaped = (owner.replace("\\", "\\\\")
+               .replace("%", "\\%").replace("_", "\\_"))
+    return escaped + ":%"
 
 
 @dataclass(frozen=True)
@@ -138,8 +199,9 @@ class RecordEntry:
 class SampleStore:
     """SQLite-backed common context.  Thread-safe; multi-process safe (WAL)."""
 
-    def __init__(self, path: str = ":memory:"):
+    def __init__(self, path: str = ":memory:", clock: Optional[Clock] = None):
         self.path = path
+        self.clock = clock if clock is not None else SYSTEM_CLOCK
         self._local = threading.local()
         self._memory_conn: Optional[sqlite3.Connection] = None
         self._memory_lock = threading.Lock()
@@ -148,6 +210,24 @@ class SampleStore:
             os.makedirs(d, exist_ok=True)
         with self._conn() as conn:
             conn.executescript(_SCHEMA)
+            self._migrate(conn)
+            conn.executescript(_SCHEMA_POST_MIGRATE)
+
+    @staticmethod
+    def _migrate(conn: sqlite3.Connection) -> None:
+        for table, columns in _MIGRATIONS.items():
+            have = {r[1] for r in conn.execute(f"PRAGMA table_info({table})")}
+            for name, decl in columns.items():
+                if name not in have:
+                    try:
+                        conn.execute(
+                            f"ALTER TABLE {table} ADD COLUMN {name} {decl}")
+                    except sqlite3.OperationalError as err:
+                        # two processes opening a pre-migration store race
+                        # the ALTER; the loser's duplicate-column error just
+                        # means the winner already did the work
+                        if "duplicate column" not in str(err):
+                            raise
 
     # -- connection management ------------------------------------------------
 
@@ -210,7 +290,8 @@ class SampleStore:
         self._write(
             "INSERT OR IGNORE INTO spaces(space_id, space_json, actions, created_at)"
             " VALUES (?,?,?,?)",
-            (space_id, canonical_json(space_json), canonical_json(list(action_ids)), time.time()),
+            (space_id, canonical_json(space_json), canonical_json(list(action_ids)),
+             self.clock.time()),
         )
 
     def register_operation(self, operation_id: str, space_id: str, kind: str,
@@ -218,7 +299,8 @@ class SampleStore:
         self._write(
             "INSERT OR IGNORE INTO operations(operation_id, space_id, kind, meta, created_at)"
             " VALUES (?,?,?,?,?)",
-            (operation_id, space_id, kind, canonical_json(meta or {}), time.time()),
+            (operation_id, space_id, kind, canonical_json(meta or {}),
+             self.clock.time()),
         )
 
     def operations_for(self, space_id: str) -> list:
@@ -238,7 +320,7 @@ class SampleStore:
         digest = config.digest
         self._write(
             "INSERT OR IGNORE INTO configurations(digest, config, created_at) VALUES (?,?,?)",
-            (digest, canonical_json(config.values), time.time()),
+            (digest, canonical_json(config.values), self.clock.time()),
         )
         return digest
 
@@ -295,7 +377,7 @@ class SampleStore:
     # -- measurement claims (measure-once across concurrent investigators) -----
 
     def claim_experiment(self, config_digest: str, experiment_id: str,
-                         owner: str = "") -> bool:
+                         owner: str = "", lease_s: Optional[float] = None) -> bool:
         """Atomically claim the right to measure (configuration, experiment).
 
         Concurrent investigators sharing one store race through
@@ -304,15 +386,24 @@ class SampleStore:
         decides a single winner: True means *we* measure, False means someone
         else is (or already did) — wait via :meth:`wait_for_values`.
 
+        The claim carries a lease of ``lease_s`` seconds (default
+        :data:`DEFAULT_LEASE_S`): heartbeating owners take a short lease and
+        keep it alive via :meth:`renew_lease`, so their death is detected in
+        seconds; non-heartbeating owners pass their claim timeout, which
+        reproduces the pre-lease reaping horizon.
+
         Claims persist after a successful measurement (the values themselves
         make re-claiming moot) and are :meth:`release_claim`-ed on failure so
         waiters can take over instead of stalling.
         """
+        now = self.clock.time()
+        expiry = now + (lease_s if lease_s is not None else DEFAULT_LEASE_S)
         with self._conn() as conn:
             cur = conn.execute(
                 "INSERT OR IGNORE INTO value_claims"
-                "(config_digest, experiment_id, owner, created_at) VALUES (?,?,?,?)",
-                (config_digest, experiment_id, owner, time.time()),
+                "(config_digest, experiment_id, owner, created_at, lease_expires_at)"
+                " VALUES (?,?,?,?,?)",
+                (config_digest, experiment_id, owner, now, expiry),
             )
             return cur.rowcount == 1
 
@@ -326,17 +417,25 @@ class SampleStore:
                     owner: str, older_than_s: float) -> bool:
         """Atomically take over a claim whose owner is presumed dead.
 
-        Succeeds only if the claim row is older than ``older_than_s`` — a
-        single UPDATE under the writer lock, so of N waiters racing to steal
-        the same stale claim exactly one wins (the winner refreshes
-        ``created_at``, which falsifies the WHERE clause for the rest).
+        Succeeds only if the claim's lease has EXPIRED — lease liveness is
+        the one staleness signal, so a live owner heartbeating through a
+        long measurement can never be robbed mid-flight, no matter how
+        impatient the waiter (non-heartbeating owners carry a lease sized to
+        their claim timeout, so the pre-lease stealing horizon is
+        unchanged).  A single UPDATE under the writer lock: of N waiters
+        racing to steal the same stale claim exactly one wins (the winner's
+        refreshed lease falsifies the WHERE clause for the rest).  The
+        stealer's new lease spans ``older_than_s`` (its own claim-timeout
+        horizon — stealers are waiters, not heartbeaters).
         """
+        now = self.clock.time()
         with self._conn() as conn:
             cur = conn.execute(
-                "UPDATE value_claims SET owner=?, created_at=?"
-                " WHERE config_digest=? AND experiment_id=? AND created_at < ?",
-                (owner, time.time(), config_digest, experiment_id,
-                 time.time() - older_than_s),
+                "UPDATE value_claims SET owner=?, created_at=?, lease_expires_at=?"
+                " WHERE config_digest=? AND experiment_id=?"
+                " AND lease_expires_at < ?",
+                (owner, now, now + older_than_s, config_digest, experiment_id,
+                 now),
             )
             return cur.rowcount == 1
 
@@ -347,8 +446,18 @@ class SampleStore:
         )
         return bool(rows)
 
-    def sweep_stale_claims(self, older_than_s: float) -> int:
-        """Reap claims older than ``older_than_s`` (presumed-crashed owners).
+    def sweep_stale_claims(self, *, grace_s: float = 0.0) -> int:
+        """Reap claims whose lease expired (presumed-crashed owners).
+
+        A live owner heartbeating via :meth:`renew_lease` is never reaped no
+        matter how long its measurement takes; a silently dead owner's lease
+        runs out within its lease horizon and the next sweep clears it.
+        Lease expiry is the *only* staleness signal — there is deliberately
+        no age-based fallback, which would rob live long-running owners.
+        ``grace_s`` (keyword-only: the old positional parameter was an age
+        threshold with the opposite meaning, and silent reinterpretation
+        would be worse than a loud TypeError) reaps only claims expired at
+        least that long — a strictness knob for conservative deployments.
 
         Complements :meth:`steal_claim`, which only fires once a waiter has
         burned its full timeout on that specific cell: the periodic sweep
@@ -359,10 +468,56 @@ class SampleStore:
         """
         with self._conn() as conn:
             cur = conn.execute(
-                "DELETE FROM value_claims WHERE created_at < ?",
-                (time.time() - older_than_s,),
+                "DELETE FROM value_claims WHERE lease_expires_at < ?",
+                (self.clock.time() - max(0.0, grace_s),),
             )
             return cur.rowcount
+
+    def renew_lease(self, owner: str, lease_s: float,
+                    max_age_s: Optional[float] = None) -> int:
+        """Heartbeat: extend every lease ``owner`` holds to now + ``lease_s``.
+
+        Covers both coordination tables — the owner's measurement claims
+        (exact match or ``owner:<thread>`` children) and its running work
+        items.  Called periodically from a pacer thread
+        (:class:`~repro.core.execution.base.LeasePacer`), this is what lets
+        ``claim_timeout_s`` be minutes for long cloud measurements while a
+        worker whose heartbeats stop is reaped in seconds.  Claims whose
+        values already landed are NOT renewed — they are moot (the values
+        short-circuit re-claiming) and skipping them keeps the heartbeat
+        O(in-flight work), not O(everything the owner ever measured); the
+        sweep reaps their expired leases harmlessly.
+
+        ``max_age_s`` is the hung-owner watchdog: rows claimed more than
+        that long ago are NOT renewed, so an owner whose *process* is alive
+        but whose measurement thread is stuck (deadlocked experiment, hung
+        I/O) stops looking live once its item exceeds the age bound and the
+        normal reaping path recovers the work — workers pass their
+        ``claim_timeout_s``, restoring the pre-lease guarantee that nothing
+        stays claimed longer than the claim timeout without a result.
+        Returns the number of leases renewed (0 is fine — an idle owner
+        holds nothing).
+        """
+        now = self.clock.time()
+        expiry = now + lease_s
+        min_birth = None if max_age_s is None else now - max_age_s
+        with self._conn() as conn:
+            renewed = conn.execute(
+                "UPDATE value_claims SET lease_expires_at=?"
+                " WHERE (owner = ? OR owner LIKE ? ESCAPE '\\')"
+                " AND (? IS NULL OR created_at >= ?)"
+                " AND NOT EXISTS (SELECT 1 FROM property_values pv"
+                "  WHERE pv.config_digest = value_claims.config_digest"
+                "  AND pv.experiment_id = value_claims.experiment_id)",
+                (expiry, owner, _like_prefix(owner), min_birth, min_birth),
+            ).rowcount
+            renewed += conn.execute(
+                "UPDATE work_items SET lease_expires_at=?"
+                " WHERE status='running' AND owner=?"
+                " AND (? IS NULL OR claimed_at >= ?)",
+                (expiry, owner, min_birth, min_birth),
+            ).rowcount
+            return renewed
 
     def release_claims_owned_by(self, owner: str) -> int:
         """Release every claim held by ``owner`` (exact match or
@@ -371,8 +526,9 @@ class SampleStore:
         the number of claims released."""
         with self._conn() as conn:
             cur = conn.execute(
-                "DELETE FROM value_claims WHERE owner = ? OR owner LIKE ?",
-                (owner, owner + ":%"),
+                "DELETE FROM value_claims WHERE owner = ?"
+                " OR owner LIKE ? ESCAPE '\\'",
+                (owner, _like_prefix(owner)),
             )
             return cur.rowcount
 
@@ -384,85 +540,118 @@ class SampleStore:
         vanished without values (the owner failed — take over) or the timeout
         expired (the owner is presumed dead — take over).
         """
-        deadline = time.monotonic() + timeout_s
+        deadline = self.clock.monotonic() + timeout_s
         poll = 0.005
-        while time.monotonic() < deadline:
+        while self.clock.monotonic() < deadline:
             if self.has_values(config_digest, experiment_id):
                 return True
             if not self.claim_exists(config_digest, experiment_id):
                 return False
-            time.sleep(poll)
+            self.clock.sleep(poll)
             poll = min(poll * 2, 0.1)
         return False
 
     # -- the work-item queue (store-rendezvous execution, paper §III-D) ---------
 
-    def enqueue_work(self, space_id: str, config_digest: str) -> str:
+    def enqueue_work(self, space_id: str, config_digest: str,
+                     priority: float = 0.0) -> str:
         """Queue one (space, configuration) measurement for remote workers.
 
         The shared store is the *only* coordination point (§III-D): any
         worker process on any host holding this database file (or a network
         mount of it) can claim the item, run the experiments, and land values
-        through the normal measurement-claim arbitration.  Returns the item
-        id used to poll for completion.
+        through the normal measurement-claim arbitration.  ``priority`` is
+        the optimizer's acquisition score — workers pop best-first, so the
+        most informative configurations are measured earliest (Lynceus).
+        Returns the item id used to poll for completion.
         """
         item_id = uuid.uuid4().hex
         self._write(
-            "INSERT INTO work_items(item_id, space_id, config_digest, status, created_at)"
-            " VALUES (?,?,?,'queued',?)",
-            (item_id, space_id, config_digest, time.time()),
+            "INSERT INTO work_items"
+            "(item_id, space_id, config_digest, status, priority, created_at)"
+            " VALUES (?,?,?,'queued',?,?)",
+            (item_id, space_id, config_digest, float(priority),
+             self.clock.time()),
         )
         return item_id
 
-    def claim_work(self, owner: str, space_id: Optional[str] = None) -> Optional[dict]:
-        """Atomically pop the oldest queued work item (None when idle).
+    def claim_work_batch(self, owner: str, limit: int = 1,
+                         space_id: Optional[str] = None,
+                         lease_s: float = DEFAULT_LEASE_S) -> list:
+        """Atomically pop up to ``limit`` best-priority queued work items.
 
-        Claiming is an ``UPDATE ... WHERE status='queued'`` on a specific
-        item id: under SQLite's single-writer lock exactly one of N racing
-        workers flips the row to ``running``; the losers retry on the next
-        oldest item.
+        One ``BEGIN IMMEDIATE`` transaction selects and flips the rows to
+        ``running`` under SQLite's single-writer lock, so racing workers
+        partition the queue with no double-claims — and a worker on a slow
+        link pays one store round-trip for a whole batch.  Pop order is
+        highest ``priority`` first, FIFO (insertion order) within ties.
+        Each claimed item starts a lease of ``lease_s`` seconds; the worker
+        heartbeats it via :meth:`renew_lease` until it finishes.
+
+        Returns ``[{item_id, space_id, config_digest, priority}, ...]``
+        (empty when the queue is idle).
         """
-        for _ in range(16):
-            rows = self._rows(
-                "SELECT item_id, space_id, config_digest FROM work_items"
+        if limit < 1:
+            return []
+        now = self.clock.time()
+        claims: list = []
+        with self.transaction() as conn:
+            rows = conn.execute(
+                "SELECT item_id, space_id, config_digest, priority FROM work_items"
                 " WHERE status='queued'" +
                 (" AND space_id=?" if space_id is not None else "") +
-                " ORDER BY created_at, item_id LIMIT 1",
-                (space_id,) if space_id is not None else (),
-            )
-            if not rows:
-                return None
-            item_id = rows[0][0]
-            with self._conn() as conn:
-                cur = conn.execute(
-                    "UPDATE work_items SET status='running', owner=?, claimed_at=?"
-                    " WHERE item_id=? AND status='queued'",
-                    (owner, time.time(), item_id),
+                " ORDER BY priority DESC, created_at, rowid LIMIT ?",
+                ((space_id, limit) if space_id is not None else (limit,)),
+            ).fetchall()
+            for item_id, sid, digest, priority in rows:
+                conn.execute(
+                    "UPDATE work_items SET status='running', owner=?,"
+                    " claimed_at=?, lease_expires_at=? WHERE item_id=?",
+                    (owner, now, now + lease_s, item_id),
                 )
-                if cur.rowcount == 1:
-                    return {"item_id": item_id, "space_id": rows[0][1],
-                            "config_digest": rows[0][2]}
-        return None
+                claims.append({"item_id": item_id, "space_id": sid,
+                               "config_digest": digest, "priority": priority})
+        return claims
+
+    def claim_work(self, owner: str, space_id: Optional[str] = None,
+                   lease_s: float = DEFAULT_LEASE_S) -> Optional[dict]:
+        """Atomically pop the single best queued work item (None when idle)."""
+        batch = self.claim_work_batch(owner, limit=1, space_id=space_id,
+                                      lease_s=lease_s)
+        return batch[0] if batch else None
+
+    def finish_work_batch(self, outcomes: Sequence[Sequence],
+                          owner: Optional[str] = None) -> int:
+        """Land ``[(item_id, action, error), ...]`` in one transaction.
+
+        Guarded per item: only a ``running`` item is finished, and when
+        ``owner`` is given it must still hold the claim — a stale worker
+        whose item went silent long enough to be re-queued (and possibly
+        re-claimed by the surviving fleet) cannot overwrite the
+        re-execution's outcome.  Returns how many outcomes actually landed
+        (stale ones are skipped; the caller simply moves on).
+        """
+        if not outcomes:
+            return 0
+        now = self.clock.time()
+        sql = ("UPDATE work_items SET status='done', action=?, error=?,"
+               " finished_at=? WHERE item_id=? AND status='running'")
+        if owner is not None:
+            sql += " AND owner=?"
+        landed = 0
+        with self.transaction() as conn:
+            for item_id, action, error in outcomes:
+                params: list = [action, error, now, item_id]
+                if owner is not None:
+                    params.append(owner)
+                landed += conn.execute(sql, params).rowcount
+        return landed
 
     def finish_work(self, item_id: str, action: str,
                     error: Optional[str] = None,
                     owner: Optional[str] = None) -> bool:
-        """Land a claimed work item's outcome for the enqueuer to collect.
-
-        Guarded: only a ``running`` item is finished, and when ``owner`` is
-        given it must still hold the claim — a stale worker whose item was
-        re-queued (and possibly re-claimed by the surviving fleet) cannot
-        overwrite the re-execution's outcome.  Returns False for such stale
-        finishes (the caller should simply move on).
-        """
-        sql = ("UPDATE work_items SET status='done', action=?, error=?,"
-               " finished_at=? WHERE item_id=? AND status='running'")
-        params: list = [action, error, time.time(), item_id]
-        if owner is not None:
-            sql += " AND owner=?"
-            params.append(owner)
-        with self._conn() as conn:
-            return conn.execute(sql, params).rowcount == 1
+        """Land one claimed work item's outcome (see :meth:`finish_work_batch`)."""
+        return self.finish_work_batch([(item_id, action, error)], owner=owner) == 1
 
     def fetch_work_results(self, item_ids: Sequence[str]) -> dict:
         """``{item_id: (action, error)}`` for the finished subset of ids.
@@ -483,15 +672,20 @@ class SampleStore:
             out.update({r[0]: (r[1], r[2]) for r in rows})
         return out
 
-    def requeue_stale_work(self, older_than_s: float) -> int:
+    def requeue_stale_work(self, *, grace_s: float = 0.0) -> int:
         """Re-queue running items whose worker went silent (crash tolerance):
-        an item claimed more than ``older_than_s`` ago without a result goes
-        back to ``queued`` for the surviving fleet.  Returns the count."""
+        an item whose lease expired without a result — the owner's heartbeats
+        stopped — goes back to ``queued`` for the surviving fleet, keeping
+        its priority.  Lease expiry is the only staleness signal (no
+        age-based fallback: a heartbeating worker mid-long-measurement must
+        never lose its item); ``grace_s`` re-queues only items expired at
+        least that long.  Returns the count."""
         with self._conn() as conn:
             cur = conn.execute(
-                "UPDATE work_items SET status='queued', owner=NULL, claimed_at=NULL"
-                " WHERE status='running' AND claimed_at < ?",
-                (time.time() - older_than_s,),
+                "UPDATE work_items SET status='queued', owner=NULL,"
+                " claimed_at=NULL, lease_expires_at=0"
+                " WHERE status='running' AND lease_expires_at < ?",
+                (self.clock.time() - max(0.0, grace_s),),
             )
             return cur.rowcount
 
@@ -502,6 +696,33 @@ class SampleStore:
             sql += " AND space_id=?"
             params = (space_id,)
         return int(self._rows(sql, params)[0][0])
+
+    def work_queue_stats(self, space_id: Optional[str] = None,
+                         latency_window: int = 20) -> dict:
+        """Queue-depth + latency snapshot for autoscaling policies.
+
+        ``recent_latency_s`` is the mean claim→finish duration of the last
+        ``latency_window`` finished items (None before anything finished) —
+        the observed per-item cost a :class:`FleetSupervisor` feeds into its
+        EWMA to size the worker fleet (ExpoCloud-style).
+        """
+        where = " AND space_id=?" if space_id is not None else ""
+        params: tuple = (space_id,) if space_id is not None else ()
+        counts = {status: 0 for status in ("queued", "running", "done")}
+        for status, n in self._rows(
+                "SELECT status, COUNT(*) FROM work_items WHERE 1=1" + where +
+                " GROUP BY status", params):
+            counts[status] = int(n)
+        rows = self._rows(
+            "SELECT finished_at - claimed_at FROM work_items"
+            " WHERE status='done' AND finished_at IS NOT NULL"
+            " AND claimed_at IS NOT NULL" + where +
+            " ORDER BY finished_at DESC LIMIT ?",
+            params + (latency_window,),
+        )
+        latency = (sum(r[0] for r in rows) / len(rows)) if rows else None
+        return {"queued": counts["queued"], "running": counts["running"],
+                "done": counts["done"], "recent_latency_s": latency}
 
     # -- the time-resolved sampling record --------------------------------------------
 
@@ -519,7 +740,7 @@ class SampleStore:
                       action: str) -> RecordEntry:
         """Append one sampling event, allocating its per-operation ``seq``
         atomically (safe under concurrent threads and processes)."""
-        now = time.time()
+        now = self.clock.time()
         rowid = self._write(
             _APPEND_SQL,
             (space_id, operation_id, config_digest, action, now,
@@ -539,7 +760,7 @@ class SampleStore:
         """
         if not events:
             return []
-        now = time.time()
+        now = self.clock.time()
         first_rowid = None
         with self.transaction() as conn:
             for digest, action in events:

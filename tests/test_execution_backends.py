@@ -22,12 +22,15 @@ import time
 import numpy as np
 import pytest
 
-from repro.core import (Configuration, DiscoverySpace, MeasurementError,
-                        SampleStore, WorkerCrashError)
+from repro.core import (AutoscalePolicy, Configuration, DiscoverySpace,
+                        FakeClock, MeasurementError, SampleStore,
+                        WorkerCrashError)
 from repro.core.entities import canonical_json
 from repro.core.execution import WorkItem, make_backend
+from repro.core.execution.fleet import FleetSupervisor
 from repro.core.execution.worker import run_worker
-from repro.core.optimizers import OPTIMIZER_REGISTRY, run_optimizer
+from repro.core.optimizers import (OPTIMIZER_REGISTRY, ScoredCandidate,
+                                   SearchAdapter, run_optimizer)
 
 from _execution_workers import (build_queue_ds, exit_fn, flaky_fn,
                                 make_line_ds, raise_fn)
@@ -159,7 +162,10 @@ def test_pipelined_process_backend_survives_crashes(tmp_path):
 @pytest.mark.parametrize("name", list(OPTIMIZER_REGISTRY))
 def test_max_inflight_1_reproduces_serial_trajectory(name):
     """run_optimizer(max_inflight=1) == run_optimizer(batch_size=1): same
-    configurations, values, actions, records — draw-for-draw."""
+    configurations, values, actions, records — draw-for-draw.  Regression
+    gate for the scored-candidate ask contract: attaching acquisition
+    scores must never change rng consumption or the trajectory, for every
+    optimizer family."""
     def one(max_inflight=None, batch_size=1):
         ds = make_line_ds(lambda c: {"m": (c["x"] - 1.3) ** 2},
                           SampleStore(":memory:"))
@@ -174,6 +180,29 @@ def test_max_inflight_1_reproduces_serial_trajectory(name):
     pipe_trail, pipe_recs = one(max_inflight=1)
     assert pipe_trail == serial_trail
     assert pipe_recs == serial_recs
+
+
+@pytest.mark.parametrize("name", list(OPTIMIZER_REGISTRY))
+def test_ask_returns_scored_candidates(name):
+    """Every optimizer's ask batch is ScoredCandidates; model-based families
+    attach real (finite, orderable) acquisition scores once warmed up, and
+    the batch comes out best-score-first."""
+    ds = make_line_ds(lambda c: {"m": (c["x"] - 1.3) ** 2},
+                      SampleStore(":memory:"))
+    opt = OPTIMIZER_REGISTRY[name](seed=0)
+    if hasattr(opt, "n_initial"):
+        opt.n_initial = 2  # leave the random init phase within a tiny space
+    rng = np.random.default_rng(0)
+    adapter = SearchAdapter(ds, "m", "min", optimizer_name=opt.name)
+    warm = opt.ask(adapter, rng, n=2)
+    assert all(isinstance(c, ScoredCandidate) for c in warm)
+    adapter.evaluate_batch(warm)
+    batch = opt.ask(adapter, rng, n=1)
+    assert all(isinstance(c, ScoredCandidate) for c in batch)
+    if name in ("tpe", "bo-gp"):  # past n_initial: model scores attached
+        scores = [c.score for c in batch]
+        assert all(s is not None and np.isfinite(s) for s in scores)
+        assert scores == sorted(scores, reverse=True)
 
 
 def test_pipelined_keeps_max_inflight_and_exhausts_space():
@@ -294,12 +323,18 @@ def test_queue_worker_contains_experiment_bugs(tmp_path):
 
 
 def test_sweep_stale_claims():
+    """Staleness is lease expiry, nothing else: an expired lease is reaped,
+    a live one survives — even when the live claim is *older* (a
+    heartbeating owner mid-long-measurement must never be robbed)."""
     store = SampleStore(":memory:")
     store.claim_experiment("d1", "e", "dead")
     store.claim_experiment("d2", "e", "alive")
-    store._write("UPDATE value_claims SET created_at=? WHERE config_digest='d1'",
-                 (time.time() - 120.0,))
-    assert store.sweep_stale_claims(60.0) == 1
+    store._write("UPDATE value_claims SET lease_expires_at=?,"
+                 " created_at=? WHERE config_digest='d1'",
+                 (time.time() - 1.0, time.time() - 30.0))
+    store._write("UPDATE value_claims SET created_at=? WHERE config_digest='d2'",
+                 (time.time() - 3600.0,))  # old but lease-fresh: kept
+    assert store.sweep_stale_claims() == 1
     assert not store.claim_exists("d1", "e")
     assert store.claim_exists("d2", "e")
     store.close()
@@ -318,12 +353,12 @@ def test_release_claims_owned_by():
 def test_requeue_stale_work(tmp_path):
     store = SampleStore(str(tmp_path / "s.db"))
     item = store.enqueue_work("space", "digest")
-    claim = store.claim_work("w0")
+    claim = store.claim_work("w0", lease_s=60.0)
     assert claim["item_id"] == item
     assert store.claim_work("w1") is None  # nothing else queued
-    store._write("UPDATE work_items SET claimed_at=? WHERE item_id=?",
-                 (time.time() - 120.0, item))
-    assert store.requeue_stale_work(60.0) == 1
+    store._write("UPDATE work_items SET lease_expires_at=? WHERE item_id=?",
+                 (time.time() - 1.0, item))
+    assert store.requeue_stale_work() == 1
     again = store.claim_work("w1")
     assert again["item_id"] == item  # the surviving fleet redoes the work
     store.finish_work(item, "measured")
@@ -356,9 +391,9 @@ def test_stale_finish_cannot_overwrite_reexecution(tmp_path):
     store = SampleStore(str(tmp_path / "s.db"))
     item = store.enqueue_work("space", "digest")
     store.claim_work("worker-A")
-    store._write("UPDATE work_items SET claimed_at=? WHERE item_id=?",
-                 (time.time() - 120.0, item))
-    assert store.requeue_stale_work(60.0) == 1
+    store._write("UPDATE work_items SET lease_expires_at=? WHERE item_id=?",
+                 (time.time() - 1.0, item))
+    assert store.requeue_stale_work() == 1
     store.claim_work("worker-B")
     # A comes back from the dead with a failure: ignored, B still owns it
     assert store.finish_work(item, "failed", "crash: ...", owner="worker-A") is False
@@ -385,3 +420,151 @@ def test_make_backend_type_error():
     ds = make_line_ds(lambda c: {"m": 0.0}, SampleStore(":memory:"))
     with pytest.raises(TypeError):
         make_backend(42, ds.execution_context())
+
+
+# ----------------------------------------------- autoscaling (fake clock)
+
+
+def test_autoscale_policy_target_is_pure_and_clamped():
+    policy = AutoscalePolicy(min_workers=2, max_workers=6,
+                             backlog_per_worker=2.0)
+    assert policy.target(0) == 2        # never below min
+    assert policy.target(5) == 3        # ceil(5/2)
+    assert policy.target(100) == 6      # never above max
+    latency = AutoscalePolicy(min_workers=1, max_workers=8,
+                              drain_horizon_s=10.0)
+    # 20 items x 2 s each, drained in 10 s => 4 workers
+    assert latency.target(20, ewma_latency_s=2.0) == 4
+    with pytest.raises(ValueError):
+        AutoscalePolicy(min_workers=3, max_workers=2)
+
+
+def test_process_backend_grows_under_backlog_and_shrinks_when_drained(tmp_path):
+    """Acceptance gate: an autoscaling ProcessBackend fleet grows under
+    sustained queue depth and shrinks back to min_workers when drained —
+    asserted deterministically off a fake clock (no sleeps, no flakes)."""
+    clock = FakeClock()
+    ds = make_line_ds(lambda c: {"m": float(c["x"])},
+                      SampleStore(str(tmp_path / "store.db")))
+    ds.clock = clock
+    ds.autoscale = AutoscalePolicy(min_workers=1, max_workers=3,
+                                   idle_retire_s=10.0)
+    with ds.execution_backend("process") as engine:
+        configs = line_configs(4)
+        for i, config in enumerate(configs):
+            ds.store.put_configuration(config)
+            engine.submit(WorkItem(config, config.digest, i))
+        # sustained backlog: the fleet grew to the policy target
+        assert engine.num_workers == 3
+        results = engine.drain()
+        assert sorted(r.action for r in results) == ["measured"] * 4
+        # drained but idle horizon not reached: fleet holds steady
+        engine.poll()
+        assert engine.num_workers == 3
+        # past the idle horizon (virtual time only): shrink to min_workers
+        clock.advance(10.5)
+        engine.poll()
+        assert engine.num_workers == 1
+        # new backlog grows it right back
+        more = line_configs(4)
+        for i, config in enumerate(more):
+            engine.submit(WorkItem(config, config.digest, 100 + i))
+        assert engine.num_workers == 3
+        engine.drain()
+
+
+def test_fleet_supervisor_scales_queue_workers(tmp_path):
+    """FleetSupervisor: backlog grows the fleet to the policy target, a
+    drained queue (past the idle horizon on the fake clock) shrinks it back
+    to min_workers, and every enqueued item is executed exactly once."""
+    path = str(tmp_path / "store.db")
+    clock = FakeClock()
+
+    def factory():
+        ds = build_queue_ds(path)
+        ds.store.clock = clock
+        ds.clock = clock
+        return ds
+
+    ds = factory()
+    policy = AutoscalePolicy(min_workers=1, max_workers=3, idle_retire_s=5.0)
+    supervisor = FleetSupervisor(factory, policy=policy, clock=clock)
+    try:
+        configs = list(ds.space.all_configurations())[:9]
+        for config in configs:
+            ds.store.enqueue_work(ds.space_id, ds.store.put_configuration(config))
+        snap = supervisor.step()
+        assert snap["workers"] == 3 and snap["target"] == 3
+        deadline = time.monotonic() + 30.0
+        while ds.store.pending_work(ds.space_id):
+            assert time.monotonic() < deadline, "fleet never drained the queue"
+            time.sleep(0.01)
+        supervisor.step()           # observes the drained queue; idle starts
+        clock.advance(6.0)
+        snap = supervisor.step()
+        assert snap["workers"] == 1  # shrunk back to min_workers
+        assert supervisor.processed == len(configs)
+        stats = ds.store.work_queue_stats(ds.space_id)
+        assert stats["done"] == len(configs) and stats["queued"] == 0
+    finally:
+        supervisor.stop()
+    assert supervisor.num_workers == 0
+
+
+# ------------------------------------------------- priority scheduling e2e
+
+
+def test_queue_workers_measure_best_priority_first(tmp_path):
+    """End-to-end through QueueBackend + the real worker loop: a single
+    worker drains a prioritized batch best-acquisition-first (FIFO within
+    ties), observable in the store's claim order."""
+    path = str(tmp_path / "store.db")
+    ds = make_line_ds(lambda c: {"m": float(c["x"])}, SampleStore(path))
+    configs = line_configs(4)
+    priorities = [0.0, 3.0, -1.0, 7.0]  # best-first: x=3, x=1, x=0, x=2
+    # submit the whole batch BEFORE the worker exists, so the pop order is
+    # pure scheduling (a late-joining fleet is the §III-D normal case)
+    engine = ds.execution_backend("queue")
+    for i, (config, priority) in enumerate(zip(configs, priorities)):
+        ds.store.put_configuration(config)
+        engine.submit(WorkItem(config, config.digest, i, priority=priority))
+    worker = threading.Thread(
+        target=run_worker,
+        args=(make_line_ds(lambda c: {"m": float(c["x"])}, SampleStore(path)),),
+        kwargs={"idle_timeout_s": 1.0})  # claim_batch=1: one pop per trip,
+    # so per-item claim timestamps make the execution order observable
+    worker.start()
+    results = engine.drain(timeout_s=30.0)
+    worker.join()
+    assert sorted(r.action for r in results) == ["measured"] * 4
+    # the driver maps results back by tag regardless of completion order...
+    assert sorted(r.item.tag for r in results) == [0, 1, 2, 3]
+    # ...while execution happened in priority order
+    rows = ds.store._rows(
+        "SELECT config_digest FROM work_items ORDER BY claimed_at, rowid")
+    executed = [ds.store.get_configuration(r[0])["x"] for r in rows]
+    assert executed == [3, 1, 0, 2]
+
+
+def test_pipelined_over_queue_carries_acquisition_priorities(tmp_path):
+    """The pipelined engine forwards each ask's acquisition score into the
+    work_items priority column (0.0 only for unscored random picks)."""
+    path = str(tmp_path / "store.db")
+    ds = make_line_ds(lambda c: {"m": (c["x"] - 1.3) ** 2}, SampleStore(path))
+    worker = threading.Thread(
+        target=run_worker,
+        args=(make_line_ds(lambda c: {"m": (c["x"] - 1.3) ** 2},
+                           SampleStore(path)),),
+        kwargs={"idle_timeout_s": 1.0})
+    worker.start()
+    opt = OPTIMIZER_REGISTRY["tpe"](seed=0)
+    opt.n_initial = 2
+    run = run_optimizer(opt, ds, "m", "min", max_trials=4, patience=99,
+                        rng=np.random.default_rng(0), max_inflight=2,
+                        backend="queue")
+    worker.join()
+    assert run.num_trials == 4
+    rows = ds.store._rows("SELECT priority FROM work_items")
+    assert len(rows) == 4
+    # past the init phase the TPE scores are real: not all-zero
+    assert any(abs(r[0]) > 1e-12 for r in rows)

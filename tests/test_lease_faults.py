@@ -1,0 +1,301 @@
+"""Fault-injection suite for the lease-based work queue (deterministic).
+
+Every test drives a :class:`~repro.core.clock.FakeClock` by hand — no real
+sleeps, no wall-clock races — and proves the three liveness/safety contracts
+of heartbeat leasing:
+
+* a LIVE owner renewing every tick is never reaped, no matter how long its
+  measurement runs (``claim_timeout_s`` decoupled from death detection);
+* a SILENTLY DEAD owner (heartbeats stopped) is reaped in at most two sweep
+  periods — seconds, even when the claim timeout is minutes;
+* a reaped owner coming back from the dead cannot overwrite the surviving
+  fleet's re-execution (the ``finish_work`` owner guard).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (Configuration, FakeClock, SampleStore)
+from repro.core.execution import LeasePacer, WorkItem
+from repro.core.execution.worker import run_worker
+
+from _execution_workers import make_line_ds
+
+LEASE_S = 5.0          # heartbeat lease: seconds
+SWEEP_PERIOD_S = 3.0   # how often the GC sweeps
+CLAIM_TIMEOUT_S = 600.0  # "minutes" — must never gate death detection
+
+
+def fake_store():
+    clock = FakeClock()
+    return SampleStore(":memory:", clock=clock), clock
+
+
+# ------------------------------------------------------- live owners survive
+
+
+def test_live_owner_renewing_every_tick_is_never_reaped():
+    """An owner heartbeating every tick survives arbitrarily many sweeps,
+    even far past the original lease horizon (a long cloud measurement)."""
+    store, clock = fake_store()
+    pacer = LeasePacer(store, "owner-A", LEASE_S)  # beat() by hand: no thread
+    assert store.claim_experiment("dig", "exp", "owner-A:123", lease_s=LEASE_S)
+    item = store.enqueue_work("space", "dig")
+    assert store.claim_work("owner-A", lease_s=LEASE_S)["item_id"] == item
+
+    for _ in range(100):  # 100 ticks = 20x the lease, 50x a claim would allow
+        clock.advance(1.0)
+        assert pacer.beat() == 2  # value claim + running work item
+        reaped = store.sweep_stale_claims()
+        requeued = store.requeue_stale_work()
+        assert reaped == 0 and requeued == 0
+    assert store.claim_exists("dig", "exp")
+    assert store.fetch_work_results([item]) == {}  # still running, not lost
+    assert store.finish_work(item, "measured", owner="owner-A")
+
+
+def test_dead_owner_reaped_within_two_sweep_periods():
+    """Once heartbeats stop, the lease runs out and the next sweep (at most
+    two periods after death) reaps the claim and re-queues the item."""
+    store, clock = fake_store()
+    assert store.claim_experiment("dig", "exp", "owner-A:123", lease_s=LEASE_S)
+    item = store.enqueue_work("space", "dig")
+    store.claim_work("owner-A", lease_s=LEASE_S)
+
+    # alive for a while...
+    for _ in range(3):
+        clock.advance(SWEEP_PERIOD_S)
+        store.renew_lease("owner-A", LEASE_S)
+        assert store.sweep_stale_claims() == 0
+        assert store.requeue_stale_work() == 0
+
+    # ...then silence.  Sweeps keep running on their period; within two of
+    # them the lease (5 s) has expired and everything the owner held is
+    # recovered.
+    reap_times, requeue_times = [], []
+    for k in range(1, 4):
+        clock.advance(SWEEP_PERIOD_S)
+        if store.sweep_stale_claims():
+            reap_times.append(k)
+        if store.requeue_stale_work():
+            requeue_times.append(k)
+    assert reap_times and reap_times[0] <= 2
+    assert requeue_times and requeue_times[0] <= 2
+    assert not store.claim_exists("dig", "exp")
+    # the re-queued item is claimable by the surviving fleet, priority intact
+    again = store.claim_work("owner-B", lease_s=LEASE_S)
+    assert again is not None and again["item_id"] == item
+
+
+def test_death_detection_independent_of_claim_timeout():
+    """The point of leases: reaping horizon ~lease_s, not ~claim_timeout_s."""
+    store, clock = fake_store()
+    store.claim_experiment("dig", "exp", "dead-owner", lease_s=LEASE_S)
+    clock.advance(2 * LEASE_S)  # 10 s of silence; timeout would be 600 s
+    assert store.sweep_stale_claims() == 1
+    # a non-heartbeating owner still gets the full claim-timeout horizon
+    store.claim_experiment("dig2", "exp", "slow-owner",
+                           lease_s=CLAIM_TIMEOUT_S)
+    clock.advance(CLAIM_TIMEOUT_S / 2)
+    assert store.sweep_stale_claims() == 0
+    clock.advance(CLAIM_TIMEOUT_S)
+    assert store.sweep_stale_claims() == 1
+
+
+# --------------------------------------------------- stale finishes rejected
+
+
+def test_stale_finish_from_reaped_owner_is_rejected():
+    """Owner-guard regression: a worker that went silent long enough to be
+    reaped and re-queued must not land its late outcome over the
+    re-execution's — in any interleaving of B's claim and A's late finish."""
+    store, clock = fake_store()
+    item = store.enqueue_work("space", "dig")
+    store.claim_work("worker-A", lease_s=LEASE_S)
+    clock.advance(LEASE_S + 1.0)  # A went silent; lease expired
+    assert store.requeue_stale_work() == 1
+
+    # interleaving 1: A's zombie finish arrives while the item is queued
+    assert store.finish_work(item, "failed", "crash: ...", owner="worker-A") is False
+    assert store.fetch_work_results([item]) == {}
+
+    # interleaving 2: B re-claims, then A's zombie finish arrives
+    assert store.claim_work("worker-B", lease_s=LEASE_S)["item_id"] == item
+    assert store.finish_work(item, "failed", "crash: ...", owner="worker-A") is False
+    assert store.fetch_work_results([item]) == {}
+
+    # the re-execution's outcome is the one that lands
+    assert store.finish_work(item, "measured", owner="worker-B") is True
+    assert store.fetch_work_results([item]) == {item: ("measured", None)}
+    # ...exactly once: B can't double-finish either
+    assert store.finish_work(item, "failed", owner="worker-B") is False
+
+
+def test_batched_finish_skips_stale_items_but_lands_live_ones():
+    """finish_work_batch applies the owner guard per item: one stale item in
+    a batch must not poison (or land alongside) the live outcomes."""
+    store, clock = fake_store()
+    items = [store.enqueue_work("space", f"d{i}") for i in range(3)]
+    claims = store.claim_work_batch("worker-A", limit=3, lease_s=LEASE_S)
+    assert [c["item_id"] for c in claims] == items
+    # item 1 goes stale: re-queued and re-claimed by worker-B
+    store._write("UPDATE work_items SET lease_expires_at=0 WHERE item_id=?",
+                 (items[1],))
+    assert store.requeue_stale_work() == 1
+    store.claim_work("worker-B", lease_s=LEASE_S)
+    landed = store.finish_work_batch(
+        [(i, "measured", None) for i in items], owner="worker-A")
+    assert landed == 2
+    assert set(store.fetch_work_results(items)) == {items[0], items[2]}
+
+
+# ------------------------------------------------------ steal + pacer wiring
+
+
+def test_steal_claim_fires_on_expired_lease_and_winner_refreshes():
+    store, clock = fake_store()
+    store.claim_experiment("dig", "exp", "dead", lease_s=LEASE_S)
+    # lease still live: nobody can steal, however impatient
+    assert not store.steal_claim("dig", "exp", "thief-1", older_than_s=0.001)
+    clock.advance(LEASE_S + 0.5)
+    # expired: exactly one of the racing thieves wins, the winner's refresh
+    # falsifies the WHERE clause for the rest
+    wins = [store.steal_claim("dig", "exp", f"thief-{i}", older_than_s=60.0)
+            for i in range(4)]
+    assert wins.count(True) == 1
+    assert store.claim_exists("dig", "exp")
+
+
+def test_live_heartbeating_owner_cannot_be_robbed_by_claim_age():
+    """Measure-once regression: a claim much older than the waiter's
+    claim-timeout but with a freshly renewed lease must be steal-proof —
+    the exact long-cloud-measurement case the leases exist for."""
+    store, clock = fake_store()
+    store.claim_experiment("dig", "exp", "long-runner:1", lease_s=LEASE_S)
+    for _ in range(60):  # a 60 s measurement against a 5 s lease...
+        clock.advance(1.0)
+        store.renew_lease("long-runner", LEASE_S)
+    # ...and a waiter whose claim_timeout (10 s) has long since elapsed
+    assert not store.steal_claim("dig", "exp", "impatient", older_than_s=10.0)
+    assert store.sweep_stale_claims() == 0
+
+
+def test_owner_wildcards_do_not_leak_across_owners():
+    """LIKE-injection regression: `_` / `%` in a (user-settable) owner name
+    must not renew or release another owner's claims."""
+    store, clock = fake_store()
+    store.claim_experiment("d1", "e", "gpu_node_1:123", lease_s=LEASE_S)
+    store.claim_experiment("d2", "e", "gpu-node-1:456", lease_s=LEASE_S)
+    store.claim_experiment("d3", "e", "gpu%node%1:789", lease_s=LEASE_S)
+    # renew as gpu_node_1: only its own claim is extended
+    assert store.renew_lease("gpu_node_1", LEASE_S) == 1
+    # release as gpu_node_1: the dash/percent owners' claims survive
+    assert store.release_claims_owned_by("gpu_node_1") == 1
+    assert not store.claim_exists("d1", "e")
+    assert store.claim_exists("d2", "e") and store.claim_exists("d3", "e")
+    assert store.release_claims_owned_by("gpu%node%1") == 1
+    assert store.claim_exists("d2", "e") and not store.claim_exists("d3", "e")
+
+
+def test_lease_pacer_thread_renews_until_stopped(tmp_path):
+    """The real pacer thread (wall clock, fast interval): leases visibly
+    extend while it runs and stop extending after stop()."""
+    store = SampleStore(str(tmp_path / "s.db"))
+    store.claim_experiment("dig", "exp", "owner-A:7", lease_s=0.5)
+    with LeasePacer(store, "owner-A", lease_s=30.0, interval_s=0.01):
+        import time as _t
+        t0 = _t.monotonic()
+        while _t.monotonic() - t0 < 5.0:
+            rows = store._rows("SELECT lease_expires_at FROM value_claims")
+            if rows and rows[0][0] > store.clock.time() + 10.0:
+                break
+            _t.sleep(0.01)
+        else:
+            pytest.fail("pacer never extended the lease")
+    store.close()
+
+
+def test_hung_measurement_thread_stops_being_renewed():
+    """Watchdog: an owner whose process is alive (pacer beating) but whose
+    measurement is stuck past the claim timeout stops renewing that item's
+    leases, so the normal reaping path recovers the work — the pre-lease
+    recovery guarantee."""
+    store, clock = fake_store()
+    pacer = LeasePacer(store, "stuck", LEASE_S, max_age_s=30.0)
+    store.claim_experiment("dig", "exp", "stuck:1", lease_s=LEASE_S)
+    item = store.enqueue_work("space", "dig")
+    store.claim_work("stuck", lease_s=LEASE_S)
+    for _ in range(29):  # within the age bound: fully alive
+        clock.advance(1.0)
+        assert pacer.beat() == 2
+    assert store.sweep_stale_claims() == 0 and store.requeue_stale_work() == 0
+    # past the bound the beats stop covering the stuck rows...
+    clock.advance(2.0)
+    for _ in range(3):
+        clock.advance(1.0)
+        assert pacer.beat() == 0
+    # ...and once the last renewed lease runs out, everything is recovered
+    clock.advance(LEASE_S)
+    assert store.sweep_stale_claims() == 1
+    assert store.requeue_stale_work() == 1
+    assert store.claim_work("survivor", lease_s=LEASE_S)["item_id"] == item
+
+
+def test_pre_migration_database_reopens_cleanly(tmp_path):
+    """A database laid out by the pre-lease build (no priority /
+    lease_expires_at columns) must open, migrate, and serve the new API."""
+    import sqlite3
+    path = str(tmp_path / "old.db")
+    conn = sqlite3.connect(path)
+    conn.executescript("""
+    CREATE TABLE value_claims (
+        config_digest TEXT NOT NULL, experiment_id TEXT NOT NULL,
+        owner TEXT NOT NULL, created_at REAL NOT NULL,
+        PRIMARY KEY (config_digest, experiment_id));
+    CREATE TABLE work_items (
+        item_id TEXT PRIMARY KEY, space_id TEXT NOT NULL,
+        config_digest TEXT NOT NULL, status TEXT NOT NULL DEFAULT 'queued',
+        owner TEXT, action TEXT, error TEXT, created_at REAL NOT NULL,
+        claimed_at REAL, finished_at REAL);
+    INSERT INTO work_items(item_id, space_id, config_digest, created_at)
+        VALUES ('old-item', 's', 'd', 1.0);
+    """)
+    conn.close()
+    store = SampleStore(path)  # must not raise (index-before-migration bug)
+    # the legacy row is claimable through the new best-first path
+    claim = store.claim_work("w", space_id="s")
+    assert claim is not None and claim["item_id"] == "old-item"
+    assert store.enqueue_work("s", "d2", priority=4.0)
+    store.close()
+
+
+# --------------------------------------- worker loop under injected failures
+
+
+def test_silently_dead_worker_item_recovered_by_surviving_fleet(tmp_path):
+    """End-to-end over the real worker loop: a no-heartbeat worker claims an
+    item and vanishes; after its lease expires the GC re-queues the item and
+    a live worker finishes it."""
+    path = str(tmp_path / "s.db")
+    clock = FakeClock()
+    store = SampleStore(path, clock=clock)
+    ds = make_line_ds(lambda c: {"m": float(c["x"])}, store)
+    ds.lease_s = LEASE_S
+    config = Configuration.make({"x": 1})
+    digest = store.put_configuration(config)
+    item = store.enqueue_work(ds.space_id, digest)
+
+    # the doomed worker claims (heartbeat disabled => silence) and "dies"
+    assert store.claim_work("doomed", space_id=ds.space_id,
+                            lease_s=LEASE_S) is not None
+    clock.advance(LEASE_S + 1.0)
+    assert store.requeue_stale_work() == 1
+    assert store.sweep_stale_claims() >= 0  # no claims yet; must not throw
+
+    # a live worker (real loop, manual heartbeats not needed: it finishes
+    # fast) picks the item up and lands the outcome
+    processed = run_worker(ds, owner="survivor", idle_timeout_s=0.0,
+                           heartbeat=False)
+    assert processed == 1
+    assert store.fetch_work_results([item]) == {item: ("measured", None)}
+    store.close()

@@ -1,0 +1,179 @@
+"""Property-based tests for the priority work-queue invariants.
+
+Runs under real ``hypothesis`` when installed, else the API-compatible stub
+(:mod:`repro._compat.hypothesis_stub`) registered by ``conftest.py`` — the
+invariants are exercised either way:
+
+* **ordering** — pops come out in non-increasing priority order, FIFO
+  (insertion order) within equal priorities, regardless of batch sizes;
+* **conservation** — under randomly interleaved claim / requeue / finish
+  operations from multiple simulated workers, no work item is ever lost
+  (everything eventually finishes) and none is ever double-finished;
+* **partitioning** — racing claimers never receive the same item twice.
+"""
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import FakeClock, SampleStore
+
+LEASE_S = 5.0
+
+
+def fresh_store():
+    clock = FakeClock()
+    return SampleStore(":memory:", clock=clock), clock
+
+
+# ------------------------------------------------------------------ ordering
+
+
+@given(priorities=st.lists(st.sampled_from([0.0, 1.0, 2.5, 2.5, -3.0, 10.0]),
+                           min_size=1, max_size=12),
+       batch=st.integers(min_value=1, max_value=5))
+@settings(max_examples=40, deadline=None)
+def test_pops_are_best_first_fifo_within_ties(priorities, batch):
+    store, _ = fresh_store()
+    ids = [store.enqueue_work("s", f"d{i}", priority=p)
+           for i, p in enumerate(priorities)]
+    enqueue_pos = {item_id: i for i, item_id in enumerate(ids)}
+
+    popped = []
+    while True:
+        claims = store.claim_work_batch("w", limit=batch, space_id="s",
+                                        lease_s=LEASE_S)
+        if not claims:
+            break
+        popped.extend(claims)
+    assert len(popped) == len(ids)
+
+    keys = [(-c["priority"], enqueue_pos[c["item_id"]]) for c in popped]
+    assert keys == sorted(keys), (
+        "pops must be non-increasing in priority, FIFO within ties")
+    store.close()
+
+
+@given(n=st.integers(min_value=1, max_value=10))
+@settings(max_examples=15, deadline=None)
+def test_equal_priorities_degrade_to_pure_fifo(n):
+    """All-equal priorities (including the unscored 0.0 default) reproduce
+    the PR-2 FIFO queue exactly — even with identical enqueue timestamps,
+    which the fake clock makes degenerate on purpose."""
+    store, _ = fresh_store()
+    ids = [store.enqueue_work("s", f"d{i}") for i in range(n)]
+    got = [store.claim_work("w", space_id="s", lease_s=LEASE_S)["item_id"]
+           for _ in range(n)]
+    assert got == ids
+    store.close()
+
+
+# ------------------------------------------------- conservation under chaos
+
+
+@given(n_items=st.integers(min_value=1, max_value=8),
+       script=st.lists(st.tuples(st.sampled_from(["claim", "finish", "die",
+                                                  "gc", "tick"]),
+                                 st.integers(min_value=0, max_value=3)),
+                       min_size=4, max_size=40))
+@settings(max_examples=40, deadline=None)
+def test_no_item_lost_or_double_finished_under_interleaving(n_items, script):
+    """Drive a random interleaving of worker-fleet operations and assert the
+    conservation invariants at every step and at the end:
+
+    * an item is finished at most once (zombie finishes rejected);
+    * no item is ever lost — after the dust settles, every item is either
+      done or still claimable, and draining finishes the lot.
+    """
+    store, clock = fresh_store()
+    ids = [store.enqueue_work("s", f"d{i}", priority=float(i % 3))
+           for i in range(n_items)]
+    workers = [f"w{k}" for k in range(3)]
+    held = {w: [] for w in workers}     # live claims per worker
+    zombies = []                        # (worker, item_id) from dead workers
+    finished = set()
+
+    for op, arg in script:
+        w = workers[arg % len(workers)]
+        if op == "claim":
+            for claim in store.claim_work_batch(w, limit=1 + arg,
+                                                space_id="s", lease_s=LEASE_S):
+                assert claim["item_id"] not in finished
+                held[w].append(claim["item_id"])
+        elif op == "finish":
+            if held[w]:
+                item = held[w].pop(0)
+                if store.finish_work(item, "measured", owner=w):
+                    assert item not in finished, "double finish!"
+                    finished.add(item)
+        elif op == "die":
+            # silent death: claims stop heartbeating; the items become
+            # zombies that may later attempt a stale finish
+            zombies.extend((w, item) for item in held[w])
+            held[w] = []
+        elif op == "gc":
+            clock.advance(LEASE_S + 1.0)  # expire non-renewed leases
+            for live in workers:
+                if held[live]:
+                    store.renew_lease(live, LEASE_S)
+            store.requeue_stale_work()
+            # a zombie tries to overwrite after the requeue: must bounce
+            # unless the item genuinely still belongs to it (it doesn't —
+            # its lease expired and it was requeued or re-claimed)
+            for zw, zitem in zombies:
+                if store.finish_work(zitem, "failed", "late", owner=zw):
+                    assert zitem not in finished
+                    finished.add(zitem)  # pragma: no cover - must not happen
+            zombies = []
+        elif op == "tick":
+            for live in workers:
+                if held[live]:
+                    store.renew_lease(live, LEASE_S)
+            clock.advance(1.0)
+
+    # settle: expire every outstanding lease, requeue, and drain with one
+    # healthy worker — conservation means this terminates with ALL items done
+    clock.advance(LEASE_S + 1.0)
+    store.requeue_stale_work()
+    # zombies from the tail of the script must still bounce
+    for zw, zitem in zombies:
+        if zitem not in finished:
+            assert store.finish_work(zitem, "failed", "late", owner=zw) is False
+    guard = 0
+    while True:
+        claim = store.claim_work("drainer", space_id="s", lease_s=LEASE_S)
+        if claim is None:
+            break
+        assert claim["item_id"] not in finished
+        assert store.finish_work(claim["item_id"], "measured", owner="drainer")
+        finished.add(claim["item_id"])
+        guard += 1
+        assert guard <= n_items, "queue yielded more claims than items exist"
+    # ...except the ones legitimately finished earlier; nothing vanished
+    results = store.fetch_work_results(ids)
+    assert set(results) == set(ids) == finished
+    store.close()
+
+
+@given(limits=st.tuples(st.integers(min_value=1, max_value=6),
+                        st.integers(min_value=1, max_value=6),
+                        st.integers(min_value=1, max_value=6)))
+@settings(max_examples=25, deadline=None)
+def test_racing_batch_claims_partition_the_queue(limits):
+    """However claim batches interleave, every item is handed to exactly one
+    worker."""
+    store, _ = fresh_store()
+    ids = [store.enqueue_work("s", f"d{i}", priority=float(-i))
+           for i in range(10)]
+    seen = []
+    exhausted = False
+    while not exhausted:
+        exhausted = True
+        for k, limit in enumerate(limits):
+            claims = store.claim_work_batch(f"w{k}", limit=limit, space_id="s",
+                                            lease_s=LEASE_S)
+            if claims:
+                exhausted = False
+            seen.extend(c["item_id"] for c in claims)
+    assert sorted(seen) == sorted(ids)
+    assert len(set(seen)) == len(seen), "an item was claimed twice"
+    store.close()

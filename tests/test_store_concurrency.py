@@ -142,9 +142,10 @@ def test_steal_claim_stale_owner_single_winner():
     store = SampleStore(":memory:")
     assert store.claim_experiment("d", "e", "dead-owner")
     assert not store.steal_claim("d", "e", "w0", older_than_s=60.0)
-    # age the claim past the timeout, then race two stealers
-    store._write("UPDATE value_claims SET created_at=? WHERE config_digest=?",
-                 (_time.time() - 120.0, "d"))
+    # expire the claim's lease (the owner stopped renewing), then race two
+    # stealers
+    store._write("UPDATE value_claims SET lease_expires_at=? WHERE config_digest=?",
+                 (_time.time() - 1.0, "d"))
     wins = [store.steal_claim("d", "e", f"w{i}", older_than_s=60.0)
             for i in range(2)]
     assert wins == [True, False]
