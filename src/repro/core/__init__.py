@@ -4,10 +4,28 @@
 tensored with an action space of experiments, backed by a common-context
 sample store, searched by interchangeable optimizers, and transferable across
 related spaces via RSSC.
+
+Cooperative campaigns (paper §V)
+--------------------------------
+
+:class:`~repro.core.campaign.Campaign` is the sharing layer on top: N
+best-of-breed optimizers run concurrently over ONE Discovery Space, each
+with its own operation/rng/stopping rule, while every completed
+measurement is told to *all* of them — before each ask a member folds the
+other operations' new sampling events into its history
+(:meth:`SearchAdapter.sync_foreign`, an incremental watermark read via
+:meth:`SampleStore.records_since`), so each model trains on the union of
+the fleet's data.  Sharing is strictly additive (solo trajectories are
+draw-for-draw unchanged — regression-gated per optimizer), works across
+processes sharing the store file, and measures each configuration once
+fleet-wide through the ordinary claim arbitration.  Determinism, the
+sharing model, and how to reproduce ``BENCH_sharing.json`` are documented
+in :mod:`repro.core.campaign`.
 """
 
 from .actions import (ActionSpace, Experiment, FunctionExperiment,
                       MeasurementError, SurrogateExperiment)
+from .campaign import Campaign, CampaignResult, MemberResult, run_campaign
 from .clock import Clock, FakeClock, SYSTEM_CLOCK
 from .clustering import (select_linspace, select_representatives, select_top_k,
                          silhouette_clusters)
@@ -32,5 +50,6 @@ __all__ = [
     "select_linspace", "silhouette_clusters", "ExecutionBackend",
     "SerialBackend", "ThreadBackend", "ProcessBackend", "QueueBackend",
     "WorkerCrashError", "AutoscalePolicy", "LeasePacer", "Clock", "FakeClock",
-    "SYSTEM_CLOCK",
+    "SYSTEM_CLOCK", "Campaign", "CampaignResult", "MemberResult",
+    "run_campaign",
 ]

@@ -16,10 +16,19 @@ proposes a candidate batch over (Ω, P), the adapter evaluates it through
 tells the trials back.  Optimizers never touch experiments directly, which
 is what makes the framework workload-agnostic and lets multiple optimizers —
 in one process or many — share one sample store (§III-D).
+
+Cooperative campaigns (paper §V): :class:`~repro.core.campaign.Campaign`
+runs several of these optimizers concurrently over one Discovery Space,
+folding every member's completed measurements into every other member's
+history before each ask (``SearchAdapter.sync_foreign``, an incremental
+watermark read of the shared sampling record) — each model trains on the
+union of the fleet's data while rng streams, operations, and stopping rules
+stay per-member, so solo trajectories are untouched.
 """
 
-from .base import (OptimizerRun, ScoredCandidate, SearchAdapter, Trial,
-                   run_optimizer, hypergeom_p_found)
+from .base import (FOREIGN_ACTION, OptimizerRun, ScoredCandidate,
+                   SearchAdapter, Trial, as_scored, run_optimizer,
+                   hypergeom_p_found)
 from .random_search import RandomSearch
 from .bo_gp import GPBayesOpt
 from .tpe import TPE
@@ -39,6 +48,8 @@ __all__ = [
     "Trial",
     "run_optimizer",
     "hypergeom_p_found",
+    "as_scored",
+    "FOREIGN_ACTION",
     "RandomSearch",
     "GPBayesOpt",
     "TPE",

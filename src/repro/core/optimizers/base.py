@@ -31,7 +31,6 @@ from __future__ import annotations
 
 import abc
 import math
-import time
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Callable, List, Optional, Sequence, Tuple, Union
@@ -41,10 +40,18 @@ import numpy as np
 from ..actions import MeasurementError
 from ..discovery import BatchResult, DiscoverySpace
 from ..entities import Configuration
-from ..execution import ExecutionBackend, WorkItem
+from ..execution import ExecutionBackend
 
 __all__ = ["Trial", "OptimizerRun", "ScoredCandidate", "SearchAdapter",
-           "Optimizer", "run_optimizer", "hypergeom_p_found"]
+           "Optimizer", "run_optimizer", "hypergeom_p_found", "as_scored",
+           "FOREIGN_ACTION"]
+
+#: Action tag of a trial folded into an adapter's history from ANOTHER
+#: operation's sampling record (a campaign foreign tell).  Deliberately not
+#: part of the sampling-record vocabulary: foreign trials exist only in the
+#: optimizer-visible history — the store record of the originating operation
+#: is the single source of truth, so nothing is double-recorded.
+FOREIGN_ACTION = "foreign"
 
 
 @dataclass(frozen=True)
@@ -67,22 +74,33 @@ class ScoredCandidate:
         return self.configuration.digest
 
 
+def as_scored(batch: Sequence) -> List[ScoredCandidate]:
+    """Normalize an ask batch to :class:`ScoredCandidate`s.
+
+    :meth:`Optimizer.ask` documents a ScoredCandidate return, but the
+    tolerance :meth:`Optimizer.suggest` extends — a subclass still returning
+    bare configurations — must hold at *every* driver boundary, or a legacy
+    optimizer works under the batch engine and crashes the pipelined engine
+    (or the campaign foreign-tell path) the first time something reads
+    ``.configuration``/``.score`` off its batch.  Drivers call this once on
+    each ask result; everything downstream sees ScoredCandidates only.
+    None (another legacy exhaustion signal, tolerated by the batched driver)
+    normalizes to [].
+    """
+    return [c if isinstance(c, ScoredCandidate) else ScoredCandidate(c)
+            for c in (batch if batch is not None else [])]
+
+
 def _split_scored(batch: Sequence) -> Tuple[List[Configuration], Optional[List[float]]]:
     """Normalize an ask batch (ScoredCandidates and/or bare Configurations)
     into parallel (configurations, priorities) lists; priorities is None
     when nothing in the batch carried a score (all-FIFO, no point tagging)."""
-    configs: List[Configuration] = []
-    scores: List[float] = []
-    any_scored = False
-    for cand in batch:
-        if isinstance(cand, ScoredCandidate):
-            configs.append(cand.configuration)
-            scores.append(0.0 if cand.score is None else float(cand.score))
-            any_scored = any_scored or cand.score is not None
-        else:
-            configs.append(cand)
-            scores.append(0.0)
-    return configs, (scores if any_scored else None)
+    scored = as_scored(batch)
+    configs = [c.configuration for c in scored]
+    if all(c.score is None for c in scored):
+        return configs, None
+    return configs, [0.0 if c.score is None else float(c.score)
+                     for c in scored]
 
 
 @dataclass
@@ -168,6 +186,19 @@ class SearchAdapter:
         # backend).  The pipelined driver marks/clears these so ``ask`` never
         # re-proposes an outstanding candidate.
         self.pending: set = set()
+        # Foreign-tell sync state: the highest sampling-record ``rowid`` this
+        # adapter has folded, plus the value-None *failed* trials (own and
+        # foreign alike — registered by tell()) that are provisional:
+        # failures can be transient, so if a later foreign record shows the
+        # configuration was successfully measured, sync_foreign upgrades the
+        # trial's value in place instead of masking it.  Solo drivers never
+        # sync, so both are inert outside campaigns.
+        self.record_watermark: int = 0
+        self._provisional_failed: dict = {}
+        # Incrementally-maintained digest set over ``trials`` (tell() adds;
+        # nothing ever leaves a history), so per-sync dedup is O(new rows)
+        # instead of rebuilding a set over the whole history every call.
+        self._history_digests: set = set()
 
     @property
     def space(self):
@@ -179,7 +210,18 @@ class SearchAdapter:
         """Record externally-evaluated trials into the optimizer-visible
         history (the 'tell' half of the protocol).  Partial batches are fine:
         the pipelined engine tells each trial as its backend completes it,
-        without waiting for stragglers."""
+        without waiting for stragglers.
+
+        Value-None failed trials (own failures and foreign-folded ones) are
+        registered as *provisional*: a failure can be transient, and if a
+        later sampling record shows another operation measured the
+        configuration successfully, :meth:`sync_foreign` upgrades the
+        trial's value in place rather than letting the failure mask it.
+        """
+        for t in trials:
+            self._history_digests.add(t.configuration.digest)
+            if t.value is None and t.action in ("failed", FOREIGN_ACTION):
+                self._provisional_failed[t.configuration.digest] = t
         self.trials.extend(trials)
 
     def _make_trial(self, result: BatchResult, seq: int) -> Trial:
@@ -198,6 +240,88 @@ class SearchAdapter:
         trial = self._make_trial(result, len(self.trials))
         self.tell([trial])
         return trial
+
+    def sync_foreign(self) -> int:
+        """Fold other operations' sampling events into this history — the
+        campaign foreign-tell path (paper §V: transparent sharing between
+        concurrently-executing optimizers).
+
+        Reads the space's record incrementally from ``record_watermark``
+        (:meth:`SampleStore.records_since`: O(new rows), indexed) and
+        appends one ``action='foreign'`` :class:`Trial` per *new* foreign
+        configuration, so the optimizer's next model fit trains on the union
+        of the fleet's history.  Digest-deduplicated against everything this
+        adapter already knows — own trials, in-flight proposals, and
+        previously folded foreign tells — so a configuration enters the
+        history at most once no matter how many operations sampled it.
+        Foreign ``failed`` events fold as value-None trials: the optimizer
+        learns the configuration is non-deployable without re-paying for
+        it.  A value-None failed trial is *provisional*, though — failures
+        can be transient (quota, preemption) and the store permits
+        re-measurement — so if a later record shows another operation
+        successfully measured the same configuration, a foreign *recovery*
+        trial carrying the measured value is appended at the current
+        history position (never mutating the already-told failure: trial
+        objects are shared with fleet event traces and per-member results,
+        and rewriting them would retroactively falsify time-to-best
+        metrics).  Recovery is the one case a digest legitimately appears
+        twice in a history — once failed-None, once valued — and each
+        digest recovers at most once.
+
+        Safe to call at any time (records are appended only after their
+        values are durable, so every folded trial's value is readable), and
+        works identically when the foreign operations live in *other
+        processes* sharing the store file.  Returns the number of trials
+        folded; solo drivers never call this, which keeps their trajectories
+        byte-identical.
+        """
+        store = self.ds.store
+        # Snapshot the committed tail FIRST: everything at or below it is
+        # either returned below or our own (already in the history), so the
+        # watermark can safely jump to it even when own rows dominate the
+        # range — repeated syncs never re-scan them.  Rows committing after
+        # this read get higher rowids (single-writer id allocation) and are
+        # picked up next sync.
+        tail = store.last_record_rowid(self.ds.space_id)
+        if tail <= self.record_watermark:
+            return 0
+        records = store.records_since(self.ds.space_id, self.record_watermark,
+                                      exclude_operation=self.operation_id)
+        self.record_watermark = max(
+            tail, records[-1].rowid if records else 0)
+        folded = 0
+        for rec in records:
+            provisional = self._provisional_failed.get(rec.config_digest)
+            seen = (rec.config_digest in self._history_digests
+                    or rec.config_digest in self.pending)
+            if seen and provisional is None:
+                continue
+            config = store.get_configuration(rec.config_digest)
+            if config is None:  # pragma: no cover - store corruption guard
+                continue
+            if rec.action == "failed":
+                if seen:
+                    continue  # a trial (provisional or not) already stands
+                self.tell([Trial(config, None, FOREIGN_ACTION,
+                                 len(self.trials))])  # registers provisional
+                folded += 1
+                continue
+            sample = self.ds._reconstruct(rec.config_digest, config)
+            if not sample.has(self.metric):
+                # foreign operation measured a different action space's
+                # properties; nothing this study can train on
+                continue
+            value = sample.value(self.metric)
+            if provisional is not None:
+                # the earlier failure (own or foreign) was transient:
+                # another operation since measured this configuration —
+                # append a recovery trial at the CURRENT position (the
+                # failed trial stays untouched; see docstring), at most
+                # once per digest
+                del self._provisional_failed[rec.config_digest]
+            self.tell([Trial(config, value, FOREIGN_ACTION, len(self.trials))])
+            folded += 1
+        return folded
 
     def evaluate_batch(self, configurations: Sequence,
                        workers: int = 1, executor=None,
@@ -227,7 +351,7 @@ class SearchAdapter:
         return self.evaluate_batch([configuration])[0]
 
     def seen_digests(self) -> set:
-        return {t.configuration.digest for t in self.trials} | self.pending
+        return self._history_digests | self.pending
 
     def signed(self, value: float) -> float:
         """Value in canonical minimization orientation."""
@@ -273,11 +397,8 @@ class Optimizer(abc.ABC):
         scheduling metadata with no meaning for a batch of one).  Tolerates
         subclasses whose ``ask`` still returns bare configurations, like
         every other consumer of the ask batch."""
-        batch = self.ask(adapter, rng, n=1)
-        if not batch:
-            return None
-        first = batch[0]
-        return first.configuration if isinstance(first, ScoredCandidate) else first
+        batch = as_scored(self.ask(adapter, rng, n=1))
+        return batch[0].configuration if batch else None
 
     # -- helpers shared by concrete optimizers ---------------------------------
 
@@ -302,6 +423,12 @@ class Optimizer(abc.ABC):
         while len(out) < max_candidates and tries < max_candidates * 4:
             c = space.sample_configuration(rng)
             if c.digest not in seen:
+                # the draw itself joins `seen`: without this, a continuous
+                # space that happens to re-draw the same point (coarse
+                # dimensions, near-exhausted pools) returns a pool with
+                # duplicates and `ask` can emit a non-distinct batch,
+                # breaking its documented contract
+                seen.add(c.digest)
                 out.append(c)
             tries += 1
         return out
@@ -340,12 +467,22 @@ class Optimizer(abc.ABC):
 
 class _StoppingRule:
     """The paper's §V-B1 stopping rule, shared by both engines: halt when the
-    incumbent best has not improved for ``patience`` consecutive trials."""
+    incumbent best has not improved for ``patience`` consecutive trials.
 
-    def __init__(self, adapter: SearchAdapter, patience: int, min_trials: int):
+    ``count`` supplies the trial count the ``min_trials`` floor is checked
+    against; the default — everything in the adapter's history — is right
+    for solo runs, but campaign members pass their OWN told-trial count so
+    foreign-folded history can never satisfy a floor the caller asked this
+    member to reach itself.
+    """
+
+    def __init__(self, adapter: SearchAdapter, patience: int, min_trials: int,
+                 count: Optional[Callable[[], int]] = None):
         self.adapter = adapter
         self.patience = patience
         self.min_trials = min_trials
+        self.count = count if count is not None else (
+            lambda: len(adapter.trials))
         self.best: Optional[float] = None
         self.stall = 0
         self.stop = False
@@ -360,7 +497,7 @@ class _StoppingRule:
                 self.stall += 1
         else:
             self.stall += 1
-        if len(self.adapter.trials) >= self.min_trials and self.stall >= self.patience:
+        if self.count() >= self.min_trials and self.stall >= self.patience:
             self.stop = True
 
 
@@ -380,68 +517,31 @@ def _run_pipelined(
     refilled by asking the optimizer for ONE replacement — no barrier, so a
     straggling experiment never stalls the next ask.  In-flight candidates
     are visible to ``ask`` through ``adapter.pending``, which keeps proposals
-    distinct without mutating optimizer state.
+    distinct without mutating optimizer state.  Once the stopping rule (or a
+    crash) triggers, nothing new is submitted but trials already in flight
+    are drained and told — they are paid for; an in-process crash then
+    propagates, matching the batch engine.
 
     Records land in completion order; with ``max_inflight=1`` completion
     order *is* submission order and the run reproduces the serial
     ``batch_size=1`` trajectory draw-for-draw (same rng stream, same record).
+
+    Implemented as a one-member fleet on the campaign coordinator
+    (:func:`repro.core.campaign._drive_fleet`, with foreign-tell syncing
+    off), so the solo engine and N-optimizer campaigns share ONE
+    submit/tell/crash-drain state machine — the
+    ``test_solo_campaign_reproduces_pipelined_serial_trajectory`` and
+    ``test_max_inflight_1_reproduces_serial_trajectory`` gates pin its
+    semantics per optimizer family.
     """
-    ds = adapter.ds
-    owned = not isinstance(backend, ExecutionBackend)
-    engine = ds.execution_backend(backend, workers=max_inflight)
-    inflight: dict = {}  # tag -> (configuration, digest)
-    tag = 0
-    exhausted = False
-    crash: Optional[BaseException] = None
-    pause = 0.0005
-    try:
-        while True:
-            while (not rule.stop and crash is None and not exhausted
-                   and len(inflight) < max_inflight
-                   and len(adapter.trials) + len(inflight) < max_trials):
-                batch = optimizer.ask(adapter, rng, n=1)
-                if not batch:
-                    exhausted = True
-                    break
-                configs, priorities = _split_scored(batch)
-                config = configs[0]
-                priority = priorities[0] if priorities is not None else 0.0
-                digest = ds.store.put_configuration(config)
-                adapter.pending.add(digest)
-                engine.submit(WorkItem(config, digest, tag, priority=priority))
-                inflight[tag] = (config, digest)
-                tag += 1
-            if not inflight:
-                break
-            completed = engine.poll()
-            if not completed:
-                ds._maybe_sweep_claims()
-                time.sleep(pause)
-                pause = min(pause * 2, 0.005)
-                continue
-            pause = 0.0005
-            for res in completed:
-                config, digest = inflight.pop(res.item.tag)
-                adapter.pending.discard(digest)
-                if res.action == "crashed":
-                    # an in-process backend surfaced an experiment bug:
-                    # propagate like the batch engine — but only after the
-                    # remaining in-flight trials drain, so their records and
-                    # tells land first (their values are already durable)
-                    crash = crash if crash is not None else res.error
-                    continue
-                result = ds.record_result(config, digest, res.action,
-                                          res.error, adapter.operation_id)
-                trial = adapter.tell_result(result)
-                rule.observe(trial.value)
-            # once stopping (or a crash) triggers we submit nothing new, but
-            # trials already in flight are drained and told — they are paid
-            # for, and the batch engine likewise tells its full final batch
-        if crash is not None:
-            raise crash
-    finally:
-        if owned:
-            engine.close()
+    from ..campaign import _Member, _drive_fleet  # local: avoid cycle
+
+    member = _Member(optimizer.name, optimizer, adapter, rng, rule,
+                     max_inflight)
+    state = _drive_fleet(adapter.ds, [member], max_trials,
+                         share_history=False, backend=backend)
+    if state.crash is not None:
+        raise state.crash
 
 
 def run_optimizer(

@@ -57,7 +57,15 @@ class GPBayesOpt(Optimizer):
             n: int = 1) -> List[ScoredCandidate]:
         """Top-n expected improvement over one GP fit (the model only changes
         on tell, so one posterior serves the whole batch); candidates carry
-        their EI as the acquisition score."""
+        their EI as the acquisition score.
+
+        History handling: the GP posterior fits ``_history_arrays`` — every
+        valued trial in the adapter, own *and* campaign-foreign — so under
+        cooperative sharing the incumbent ``best`` and the EI surface reflect
+        the union of the fleet's measurements (and fleet history counts
+        toward ``n_initial``, skipping redundant random warmup).  Sharing
+        never consumes rng draws, so solo trajectories are unchanged.
+        """
         candidates = self._unseen_candidates(adapter, rng)
         if not candidates:
             return []

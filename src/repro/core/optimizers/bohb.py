@@ -45,7 +45,12 @@ class BOHB(TPE):
         # per batch *slot*, so a batch mixes model and random picks in the
         # same proportion as the serial loop (and draw-for-draw at n=1).
         # Model picks carry their TPE acquisition score; the interleaved
-        # random picks are unscored.
+        # random picks are unscored.  History handling is inherited from TPE:
+        # campaign-foreign trials join the model's good/bad split and the
+        # n_initial warmup count, while the random interleave keeps drawing
+        # from the not-yet-sampled pool (which excludes foreign digests via
+        # adapter.seen_digests()), so the exploration guarantee holds over
+        # the union of the fleet's history too.
         out: List[ScoredCandidate] = []
         exclude = set(exclude) if exclude else set()
         for _ in range(n):

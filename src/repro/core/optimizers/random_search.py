@@ -17,7 +17,15 @@ class RandomSearch(Optimizer):
     def ask(self, adapter: SearchAdapter, rng: np.random.Generator,
             n: int = 1) -> List[ScoredCandidate]:
         """Uniform draws carry no acquisition model: every candidate is
-        unscored (scheduling priority 0 — pure FIFO)."""
+        unscored (scheduling priority 0 — pure FIFO).
+
+        History handling: random search has no model to train, so campaign
+        sharing affects it only through ``adapter.seen_digests()`` — foreign
+        digests leave the draw pool, making the walk sampling-without-
+        replacement over the *fleet's* remaining space (it never re-pays for
+        a configuration another member measured).  Solo runs see no foreign
+        digests and are unchanged.
+        """
         space = adapter.space
         seen = adapter.seen_digests()
         if space.finite and space.size <= 65536:

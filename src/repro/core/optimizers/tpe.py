@@ -75,7 +75,17 @@ class TPE(Optimizer):
         """Propose the batch maximizing l(x)/g(x) (top-n of one scored pool;
         the model only updates on tell, so scoring once per ask is exact).
         Candidates carry their log l(x) - log g(x) as the acquisition score.
-        ``exclude`` lets BOHB thread its interleaved batch picks through."""
+        ``exclude`` lets BOHB thread its interleaved batch picks through.
+
+        History handling: the good/bad split runs over *every* valued trial
+        in ``adapter.trials`` — including ``action='foreign'`` trials a
+        campaign folded in from other optimizers' operations — so under
+        cooperative sharing the Parzen densities train on the union of the
+        fleet's measurements.  Foreign trials also count toward
+        ``n_initial``: a member warm-started by the fleet leaves its random
+        init phase early.  Solo runs have no foreign trials, and sharing
+        never touches the rng stream, so solo trajectories are unchanged.
+        """
         candidates = self._unseen_candidates(adapter, rng, exclude=exclude)
         if not candidates:
             return []

@@ -34,6 +34,13 @@ invariants make that safe:
   under SQLite's single-writer lock: concurrent appenders get gapless,
   non-duplicated ``seq`` values with no read-modify-write window.
 
+Those invariants also make the record *incrementally readable*:
+:meth:`SampleStore.records_since` pages a space's record by the store-global
+``rowid`` watermark (indexed, O(new rows) per call), which is what lets N
+cooperating optimizers — in one process or many — fold each other's
+sampling events into their own histories without ever re-reading the full
+record (the campaign layer's foreign-tell sync, paper §V).
+
 Leases and priorities
 ---------------------
 
@@ -116,6 +123,7 @@ CREATE TABLE IF NOT EXISTS records (
     created_at    REAL NOT NULL
 );
 CREATE INDEX IF NOT EXISTS rec_space ON records(space_id, operation_id, seq);
+CREATE INDEX IF NOT EXISTS rec_tail ON records(space_id, id);
 CREATE TABLE IF NOT EXISTS value_claims (
     config_digest    TEXT NOT NULL,
     experiment_id    TEXT NOT NULL,
@@ -186,7 +194,16 @@ def _like_prefix(owner: str) -> str:
 
 @dataclass(frozen=True)
 class RecordEntry:
-    """One entry of a space's time-resolved sampling record."""
+    """One entry of a space's time-resolved sampling record.
+
+    ``rowid`` is the store-global insertion id of the row: strictly
+    increasing in commit order across *all* operations of *all* spaces
+    (SQLite allocates it inside the write transaction, which holds the
+    single-writer lock until commit).  It is the watermark
+    :meth:`SampleStore.records_since` pages on — a reader that remembers
+    the highest ``rowid`` it has seen can fetch exactly the records that
+    landed since, in O(new rows).
+    """
 
     space_id: str
     operation_id: str
@@ -194,6 +211,7 @@ class RecordEntry:
     config_digest: str
     action: str
     created_at: float
+    rowid: int = 0
 
 
 class SampleStore:
@@ -747,7 +765,8 @@ class SampleStore:
              space_id, operation_id),
         )
         rows = self._rows("SELECT seq FROM records WHERE id=?", (rowid,))
-        return RecordEntry(space_id, operation_id, int(rows[0][0]), config_digest, action, now)
+        return RecordEntry(space_id, operation_id, int(rows[0][0]),
+                           config_digest, action, now, rowid=int(rowid))
 
     def append_records(self, space_id: str, operation_id: str,
                        events: Sequence[Sequence[str]]) -> list:
@@ -772,24 +791,74 @@ class SampleStore:
                 if first_rowid is None:
                     first_rowid = cur.lastrowid
             rows = conn.execute(
-                "SELECT seq FROM records WHERE id>=? AND space_id=? AND operation_id=?"
+                "SELECT seq, id FROM records WHERE id>=? AND space_id=? AND operation_id=?"
                 " ORDER BY id",
                 (first_rowid, space_id, operation_id),
             ).fetchall()
         return [
-            RecordEntry(space_id, operation_id, int(r[0]), digest, action, now)
+            RecordEntry(space_id, operation_id, int(r[0]), digest, action, now,
+                        rowid=int(r[1]))
             for r, (digest, action) in zip(rows, events)
         ]
 
     def records_for(self, space_id: str, operation_id: Optional[str] = None) -> list:
-        sql = ("SELECT space_id, operation_id, seq, config_digest, action, created_at"
-               " FROM records WHERE space_id=?")
+        sql = ("SELECT space_id, operation_id, seq, config_digest, action,"
+               " created_at, id FROM records WHERE space_id=?")
         params: list = [space_id]
         if operation_id is not None:
             sql += " AND operation_id=?"
             params.append(operation_id)
         sql += " ORDER BY id"
         return [RecordEntry(*r) for r in self._rows(sql, params)]
+
+    def records_since(self, space_id: str, after_rowid: int = 0,
+                      limit: Optional[int] = None,
+                      exclude_operation: Optional[str] = None) -> list:
+        """Incremental record read: every sampling event of ``space_id`` that
+        committed after ``after_rowid``, in commit (= ``rowid``) order.
+
+        This is the watermark sync the cooperative-campaign layer
+        (:mod:`repro.core.campaign`) runs before every ask: a reader keeps
+        the highest ``rowid`` it has folded and pays O(new rows) per sync —
+        an indexed range scan (``rec_tail``) — instead of re-reading the
+        whole record like :meth:`records_for`.  Correctness rests on two
+        invariants: per-operation ``seq`` allocation is atomic (no gaps or
+        duplicates to page over), and ``rowid`` order is commit order
+        (SQLite's single-writer lock is held from id allocation to commit),
+        so a record can never appear *behind* an already-observed watermark.
+        Works identically for readers in other processes sharing the
+        database file.  ``limit`` bounds one page; page again from the last
+        entry's ``rowid`` for the rest.  ``exclude_operation`` drops one
+        operation's rows server-side — a campaign member syncing foreign
+        history skips its own events in SQL instead of fetching them just
+        to discard them.  NOTE: with ``limit``, excluded rows still advance
+        the watermark implicitly (they are not returned), so resume from
+        the last *returned* rowid as usual — correctness is unaffected
+        because the member's own events are, by definition, already in its
+        history.
+        """
+        sql = ("SELECT space_id, operation_id, seq, config_digest, action,"
+               " created_at, id FROM records WHERE space_id=? AND id>?")
+        params: list = [space_id, int(after_rowid)]
+        if exclude_operation is not None:
+            sql += " AND operation_id != ?"
+            params.append(exclude_operation)
+        sql += " ORDER BY id"
+        if limit is not None:
+            sql += " LIMIT ?"
+            params.append(int(limit))
+        return [RecordEntry(*r) for r in self._rows(sql, params)]
+
+    def last_record_rowid(self, space_id: str) -> int:
+        """The space's current record-tail ``rowid`` (0 when empty): the
+        watermark a reader starts from to observe only FUTURE events.  An
+        O(1) index-tail lookup (``rec_tail``) — campaigns call this at
+        construction, where reading the whole record just to find its tail
+        would defeat the incremental-read design."""
+        rows = self._rows(
+            "SELECT COALESCE(MAX(id), 0) FROM records WHERE space_id=?",
+            (space_id,))
+        return int(rows[0][0])
 
     def has_record(self, space_id: str, config_digest: str,
                    include_failed: bool = False) -> bool:

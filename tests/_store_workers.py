@@ -34,3 +34,21 @@ def hammer(store: SampleStore, worker: int, iterations: int) -> None:
 
 def hammer_process(path: str, worker: int, iterations: int) -> None:
     hammer(SampleStore(path), worker, iterations)
+
+
+def append_mixed(store: SampleStore, worker: int, rounds: int,
+                 batch: int) -> None:
+    """One writer's record-append workload for the seq-invariant test: rounds
+    alternate between single ``append_record`` calls and ``append_records``
+    batches, all against ONE (space, operation)."""
+    for i in range(rounds):
+        if i % 2 == 0:
+            store.append_record(SPACE_ID, OP_ID, f"w{worker}-r{i}", "measured")
+        else:
+            store.append_records(SPACE_ID, OP_ID, [
+                (f"w{worker}-r{i}-b{j}", "measured") for j in range(batch)])
+
+
+def append_mixed_process(path: str, worker: int, rounds: int,
+                         batch: int) -> None:
+    append_mixed(SampleStore(path), worker, rounds, batch)

@@ -15,6 +15,16 @@ from repro.models.common import DTypePolicy
 
 ARCH_IDS = sorted(ARCHITECTURES)
 
+# Families kept in the default (fast) tier-1 run: the two cheapest
+# representatives spanning the recurrent and attention block types.  The
+# rest compile for tens of seconds each on CPU and run under `-m slow`
+# (and in the CI slow-suite step) instead; see the tier-1 runtime budget
+# note in pyproject.toml.
+FAST_ARCHS = {"xlstm-125m", "chatglm3-6b"}
+ARCH_PARAMS = [a if a in FAST_ARCHS
+               else pytest.param(a, marks=pytest.mark.slow)
+               for a in ARCH_IDS]
+
 B, S = 2, 32
 
 SMOKE_OPTIONS = ModelOptions(
@@ -50,7 +60,7 @@ def models():
     return get
 
 
-@pytest.mark.parametrize("arch_id", ARCH_IDS)
+@pytest.mark.parametrize("arch_id", ARCH_PARAMS)
 def test_forward_shapes_and_finite(models, arch_id):
     model, params = models(arch_id)
     batch = make_batch(model.cfg)
@@ -60,7 +70,7 @@ def test_forward_shapes_and_finite(models, arch_id):
     assert jnp.isfinite(aux)
 
 
-@pytest.mark.parametrize("arch_id", ARCH_IDS)
+@pytest.mark.parametrize("arch_id", ARCH_PARAMS)
 def test_train_gradient_step(models, arch_id):
     model, params = models(arch_id)
     batch = make_batch(model.cfg)
@@ -83,7 +93,7 @@ def test_train_gradient_step(models, arch_id):
     assert loss2 < loss + 1e-3
 
 
-@pytest.mark.parametrize("arch_id", ARCH_IDS)
+@pytest.mark.parametrize("arch_id", ARCH_PARAMS)
 def test_prefill_decode_consistency(models, arch_id):
     """Prefill + decode of token S must match full forward at position S.
 

@@ -1,0 +1,476 @@
+"""Tests for cooperative multi-optimizer campaigns (paper §V sharing).
+
+Three contracts matter:
+
+* **determinism** — a single-member campaign reproduces
+  ``run_optimizer(max_inflight=1)`` (and therefore the classic serial loop)
+  draw-for-draw, per optimizer family: the sharing machinery must be
+  strictly additive;
+* **sharing** — under ``share_history=True`` every member's history folds
+  the other operations' measurements (digest-deduplicated, incrementally
+  watermark-read via ``records_since``), including across processes;
+* **tolerance** — a legacy optimizer returning bare configurations from
+  ``ask`` runs through every driver (batched, pipelined, campaign) because
+  normalization happens once at the driver boundary.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import (ActionSpace, Campaign, Configuration, DiscoverySpace,
+                        Dimension, FunctionExperiment, MeasurementError,
+                        ProbabilitySpace, SampleStore, run_campaign)
+from repro.core.optimizers import (FOREIGN_ACTION, OPTIMIZER_REGISTRY,
+                                   ScoredCandidate, run_optimizer)
+from repro.core.optimizers.base import Optimizer, SearchAdapter, as_scored
+
+
+def quad_space(n=8):
+    vals = [round(v, 3) for v in np.linspace(-2, 2, n)]
+    return ProbabilitySpace.make([
+        Dimension.discrete("x", vals),
+        Dimension.discrete("y", vals),
+    ])
+
+
+def quad_fn(c):
+    return {"loss": (c["x"] - 0.5) ** 2 + (c["y"] + 0.5) ** 2}
+
+
+def make_ds(store=None, fn=quad_fn, space=None):
+    exp = FunctionExperiment(fn=fn, properties=("loss",), name="quad")
+    return DiscoverySpace(space=space or quad_space(),
+                          actions=ActionSpace.make([exp]),
+                          store=store or SampleStore(":memory:"))
+
+
+def trail(trials):
+    return [(t.configuration.digest, t.value, t.action) for t in trials]
+
+
+# ------------------------------------------------- records_since (store layer)
+
+
+def test_records_since_is_incremental_and_ordered():
+    ds = make_ds()
+    configs = list(ds.space.all_configurations())[:5]
+    ds.sample_batch(configs[:3], operation_id="op-a")
+    first = ds.store.records_since(ds.space_id, 0)
+    assert [r.seq for r in first] == [0, 1, 2]
+    assert [r.rowid for r in first] == sorted(r.rowid for r in first)
+    # nothing new => empty, watermark unchanged
+    assert ds.store.records_since(ds.space_id, first[-1].rowid) == []
+    ds.sample_batch(configs[3:], operation_id="op-b")
+    fresh = ds.store.records_since(ds.space_id, first[-1].rowid)
+    assert [r.operation_id for r in fresh] == ["op-b", "op-b"]
+    assert all(r.rowid > first[-1].rowid for r in fresh)
+    # the incremental union equals the full read
+    assert first + fresh == ds.store.records_for(ds.space_id)
+
+
+def test_records_since_pages_with_limit_and_filters_space():
+    store = SampleStore(":memory:")
+    for i in range(5):
+        store.append_record("space-1", "op", f"d{i}", "measured")
+    store.append_record("space-2", "op", "other", "measured")
+    page1 = store.records_since("space-1", 0, limit=2)
+    assert [r.config_digest for r in page1] == ["d0", "d1"]
+    page2 = store.records_since("space-1", page1[-1].rowid)
+    assert [r.config_digest for r in page2] == ["d2", "d3", "d4"]
+    assert all(r.space_id == "space-1" for r in page1 + page2)
+    store.close()
+
+
+# ------------------------------------------- determinism (regression gate)
+
+
+@pytest.mark.parametrize("name", list(OPTIMIZER_REGISTRY))
+def test_solo_campaign_reproduces_pipelined_serial_trajectory(name):
+    """A one-member campaign == run_optimizer(max_inflight=1) draw-for-draw
+    (same configurations, values, actions, sampling record) for every
+    optimizer family — the PR-3-style regression gate: cooperative-sharing
+    machinery must never perturb a solo trajectory."""
+    def records(ds, op):
+        return [(r.seq, r.config_digest, r.action) for r in ds.timeseries(op)]
+
+    ds1, ds2 = make_ds(), make_ds()
+    run = run_optimizer(OPTIMIZER_REGISTRY[name](seed=0), ds1, "loss", "min",
+                        max_trials=6, patience=2,
+                        rng=np.random.default_rng(3), max_inflight=1)
+    camp = run_campaign(ds2, [OPTIMIZER_REGISTRY[name](seed=0)], "loss",
+                        max_trials=6, patience=2,
+                        rngs=[np.random.default_rng(3)])
+    member = camp.members[0]
+    assert trail(member.run.trials) == trail(run.trials)
+    assert records(ds2, member.operation_id) == records(ds1, run.operation_id)
+    assert member.foreign_trials == 0
+
+
+# ------------------------------------------------------------- foreign tells
+
+
+def test_members_fold_each_others_measurements():
+    """Two members, shared history: each member folds the other operation's
+    measurements as action='foreign' trials, digest-deduplicated, so its
+    history size equals own + foreign with no double counting."""
+    ds = make_ds()
+    campaign = Campaign(
+        ds, [OPTIMIZER_REGISTRY["random"](seed=0),
+             OPTIMIZER_REGISTRY["tpe"](seed=1)],
+        "loss", max_trials=8, patience=99,
+        rngs=[np.random.default_rng(0), np.random.default_rng(1)])
+    res = campaign.run()
+    assert len(res.members) == 2
+    histories = [m.adapter.trials for m in campaign.members]
+    for result, history in zip(res.members, histories):
+        assert result.foreign_trials > 0
+        assert result.history_size \
+            == result.run.num_trials + result.foreign_trials
+        digests = [t.configuration.digest for t in history]
+        assert len(set(digests)) == len(digests), "history must dedup digests"
+        foreign = {t.configuration.digest for t in history
+                   if t.action == FOREIGN_ACTION}
+        own = {t.configuration.digest for t in history
+               if t.action != FOREIGN_ACTION}
+        assert foreign and not foreign & own
+    # every foreign digest really came from the other member's operation
+    own_sets = [{t.configuration.digest for t in m.run.trials}
+                for m in res.members]
+    for history, other_own in zip(histories, reversed(own_sets)):
+        foreign = {t.configuration.digest for t in history
+                   if t.action == FOREIGN_ACTION}
+        assert foreign <= other_own
+
+
+def test_foreign_history_reaches_model_and_digests_never_duplicate():
+    """Drive the adapters directly: after a campaign, re-syncing a fresh
+    adapter folds the full fleet history once, and folding again is a
+    no-op (watermark + dedup)."""
+    ds = make_ds()
+    res = run_campaign(
+        ds, [OPTIMIZER_REGISTRY["random"](seed=0),
+             OPTIMIZER_REGISTRY["bo-gp"](seed=1)],
+        "loss", max_trials=6, patience=99,
+        rngs=[np.random.default_rng(0), np.random.default_rng(1)])
+    adapter = SearchAdapter(ds, "loss", "min", optimizer_name="late-joiner")
+    folded = adapter.sync_foreign()
+    digests = [t.configuration.digest for t in adapter.trials]
+    assert folded == len(digests) > 0
+    assert len(set(digests)) == len(digests), "foreign fold must dedup digests"
+    assert all(t.action == FOREIGN_ACTION for t in adapter.trials)
+    assert adapter.sync_foreign() == 0  # watermark: nothing new
+    # the union view: every fleet configuration exactly once
+    fleet = {t.configuration.digest for m in res.members for t in m.run.trials}
+    assert set(digests) == fleet
+
+
+def test_foreign_failed_trials_fold_as_value_none():
+    """A foreign 'failed' record folds as a value-None trial: the member
+    learns the configuration is non-deployable and never re-proposes it."""
+    def flaky(c):
+        if c["x"] > 1.5:
+            raise MeasurementError("quota")
+        return quad_fn(c)
+
+    ds = make_ds(fn=flaky)
+    bad = Configuration.make({"x": 2.0, "y": 2.0})
+    ds.sample_batch([bad], operation_id="other-op")  # records a failure
+    adapter = SearchAdapter(ds, "loss", "min", optimizer_name="member")
+    assert adapter.sync_foreign() == 1
+    t = adapter.trials[0]
+    assert t.action == FOREIGN_ACTION and t.value is None
+    assert bad.digest in adapter.seen_digests()
+
+
+def test_warm_start_folds_pre_campaign_history():
+    """warm_start=True folds records that existed before the campaign began
+    (cross-campaign reuse); the default shares only fleet-produced data."""
+    store = SampleStore(":memory:")
+    ds = make_ds(store)
+    prior = list(ds.space.all_configurations())[:4]
+    ds.sample_batch(prior, operation_id="previous-study")
+
+    cold = Campaign(ds, [OPTIMIZER_REGISTRY["random"](seed=0)], "loss",
+                    max_trials=2, rngs=[np.random.default_rng(0)])
+    assert cold.members[0].adapter.record_watermark > 0  # tail, not zero
+    warm = Campaign(ds, [OPTIMIZER_REGISTRY["random"](seed=0)], "loss",
+                    max_trials=2, warm_start=True,
+                    rngs=[np.random.default_rng(0)])
+    assert warm.members[0].adapter.record_watermark == 0
+    res = warm.run()
+    member = res.members[0]
+    assert member.foreign_trials == len(prior)
+    assert member.history_size == member.run.num_trials + len(prior)
+
+
+def test_shared_store_measures_once_across_members():
+    """Two members proposing overlapping configurations: the store's claim
+    arbitration measures each cell once; the second tell is 'reused'."""
+    store = SampleStore(":memory:")
+    ds = make_ds(store)
+    # identical rng streams => the two random walkers propose identical draws
+    res = run_campaign(
+        ds, [OPTIMIZER_REGISTRY["random"](seed=0),
+             OPTIMIZER_REGISTRY["random"](seed=0)],
+        "loss", max_trials=5, patience=99, share_history=False,
+        rngs=[np.random.default_rng(7), np.random.default_rng(7)])
+    digests = {t.configuration.digest for _, t in res.events}
+    assert store.count_measured(ds.space_id) == len(digests)
+    assert res.num_measured == len(digests)
+    assert res.num_trials > res.num_measured  # the overlap came back reused
+
+
+def test_campaign_through_queue_backend_shares_one_worker_fleet(tmp_path):
+    """Fleet routing: a two-member campaign over the store-rendezvous queue
+    backend — one external worker loop serves BOTH members' work items, and
+    every trial lands through the §III-D store-only coordination path."""
+    from repro.core.execution.worker import run_worker
+
+    path = str(tmp_path / "store.db")
+    ds = make_ds(SampleStore(path))
+    ds.claim_timeout_s = 10.0
+    worker_ds = make_ds(SampleStore(path))
+    worker = threading.Thread(
+        target=run_worker, args=(worker_ds,),
+        kwargs={"idle_timeout_s": 2.0, "claim_batch": 2})
+    worker.start()
+    try:
+        res = run_campaign(
+            ds, [OPTIMIZER_REGISTRY["random"](seed=0),
+                 OPTIMIZER_REGISTRY["tpe"](seed=1)],
+            "loss", max_trials=5, patience=99, max_inflight=2,
+            backend="queue",
+            rngs=[np.random.default_rng(0), np.random.default_rng(1)])
+    finally:
+        worker.join()
+    assert all(m.run.num_trials == 5 for m in res.members)
+    assert all(t.value is not None for _, t in res.events)
+    # both members' items went through the one queue (one shared fleet)
+    assert ds.store._rows(
+        "SELECT COUNT(*) FROM work_items WHERE status='done'")[0][0] \
+        == res.num_trials
+
+
+def test_foreign_failure_recovered_when_later_measured():
+    """A foreign 'failed' record folds provisionally: if another operation
+    later measures the same configuration successfully, a recovery trial
+    with the value is appended — a transient quota failure must not mask
+    the real value forever (first-record-wins regression).  The failed
+    trial itself is never mutated: trial objects are shared with event
+    traces, and rewriting history would falsify time-to-best metrics."""
+    calls = {"n": 0}
+
+    def flaky_once(c):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise MeasurementError("transient quota")
+        return quad_fn(c)
+
+    ds = make_ds(fn=flaky_once)
+    x = next(iter(ds.space.all_configurations()))
+    ds.sample_batch([x], operation_id="op-a")   # records 'failed'
+    adapter = SearchAdapter(ds, "loss", "min", optimizer_name="member")
+    assert adapter.sync_foreign() == 1
+    assert adapter.trials[0].value is None      # provisional non-deployable
+    ds.sample_batch([x], operation_id="op-b")   # re-measure succeeds
+    assert adapter.sync_foreign() == 1          # the recovery is a new fold
+    assert len(adapter.trials) == 2             # failure kept, value appended
+    assert adapter.trials[0].value is None      # history never rewritten
+    assert adapter.trials[1].value == quad_fn(x)["loss"]
+    assert adapter.trials[1].action == FOREIGN_ACTION
+    # at most one recovery per digest: further syncs fold nothing
+    ds.sample_batch([x], operation_id="op-c")
+    assert adapter.sync_foreign() == 0
+
+
+def test_own_failure_recovered_when_foreign_measurement_lands():
+    """Symmetry: a member's OWN transient failure is provisional too — when
+    another operation later measures the configuration successfully, the
+    member gains a recovery trial instead of treating the configuration as
+    non-deployable forever."""
+    calls = {"n": 0}
+
+    def flaky_once(c):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise MeasurementError("transient quota")
+        return quad_fn(c)
+
+    ds = make_ds(fn=flaky_once)
+    x = next(iter(ds.space.all_configurations()))
+    adapter = SearchAdapter(ds, "loss", "min", optimizer_name="member")
+    adapter.evaluate_batch([x])                  # own trial: failed
+    assert adapter.trials[0].action == "failed"
+    assert adapter.trials[0].value is None
+    ds.sample_batch([x], operation_id="op-b")    # outside op re-measures
+    assert adapter.sync_foreign() == 1           # recovery appended
+    assert len(adapter.trials) == 2
+    assert adapter.trials[0].value is None       # own record stays honest
+    assert adapter.trials[1].value == quad_fn(x)["loss"]
+    assert adapter.trials[1].action == FOREIGN_ACTION
+
+
+def test_crash_stops_fleet_submissions_immediately():
+    """In-process crash contract: once a completion surfaces a crash, no
+    further member may submit — exactly one experiment executes on a
+    serial backend where every configuration crashes."""
+    calls = {"n": 0}
+
+    def bomb(c):
+        calls["n"] += 1
+        raise RuntimeError("experiment bug: wild pointer")
+
+    ds = make_ds(fn=bomb)
+    with pytest.raises(RuntimeError, match="wild pointer"):
+        run_campaign(
+            ds, [OPTIMIZER_REGISTRY["random"](seed=0),
+                 OPTIMIZER_REGISTRY["random"](seed=1)],
+            "loss", max_trials=5, patience=99, backend="serial",
+            rngs=[np.random.default_rng(0), np.random.default_rng(1)])
+    assert calls["n"] == 1, "submissions after an absorbed crash"
+
+
+def test_min_trials_floor_counts_own_trials_not_foreign():
+    """Regression: a member's min_trials floor must be satisfied by its OWN
+    trials — foreign-folded fleet history (which quickly dwarfs own counts)
+    must not let a stalled member stop early."""
+    ds = make_ds(fn=lambda c: {"loss": 1.0})  # flat surface: every trial stalls
+    res = run_campaign(
+        ds, [OPTIMIZER_REGISTRY["random"](seed=0),
+             OPTIMIZER_REGISTRY["random"](seed=1)],
+        "loss", max_trials=30, patience=1, min_trials=8,
+        rngs=[np.random.default_rng(0), np.random.default_rng(1)])
+    for m in res.members:
+        # stalls from trial one (flat surface), but the floor holds per member
+        assert m.run.num_trials >= 8
+        assert m.foreign_trials > 0  # the fold really was in play
+
+
+# --------------------------------------------- sharing helps (smoke version)
+
+
+def test_shared_campaign_reaches_best_no_later_than_isolated_member():
+    """Sharing-efficiency smoke (the full §V comparison lives in
+    benchmarks/campaign_bench.py): on a fixed seed set, the cooperative
+    campaign's fleet finds the space optimum within its measurement budget
+    and every model-based member trains on more history than it paid for."""
+    space = quad_space(10)
+    truth = min(quad_fn(c)["loss"] for c in space.all_configurations())
+
+    ds = make_ds(space=space)
+    opts = [OPTIMIZER_REGISTRY[n](seed=i)
+            for i, n in enumerate(("random", "tpe", "bo-gp", "bohb"))]
+    res = run_campaign(ds, opts, "loss", max_trials=12, patience=12,
+                       rngs=[np.random.default_rng(100 + i) for i in range(4)])
+    assert res.best is not None
+    assert res.best.value <= truth + 0.35  # lands at/near the bowl bottom
+    for m in res.members:
+        assert m.history_size > m.run.num_trials  # model saw foreign data
+    assert res.measurements_to_best() <= res.num_measured
+
+
+# ----------------------------------------- bare-ask tolerance (normalization)
+
+
+class BareRandom(Optimizer):
+    """A legacy optimizer whose ask returns bare Configurations (no
+    ScoredCandidate wrapper) — the tolerance documented on Optimizer.suggest
+    must hold at every driver boundary."""
+
+    name = "bare-random"
+
+    def ask(self, adapter, rng, n=1):
+        pool = [c for c in adapter.space.all_configurations()
+                if c.digest not in adapter.seen_digests()]
+        out = []
+        for _ in range(min(n, len(pool))):
+            out.append(pool.pop(int(rng.integers(len(pool)))))
+        return out  # bare Configuration objects
+
+
+def test_as_scored_normalizes_mixed_batches():
+    c1 = Configuration.make({"x": 1})
+    c2 = Configuration.make({"x": 2})
+    batch = as_scored([c1, ScoredCandidate(c2, 3.5)])
+    assert all(isinstance(b, ScoredCandidate) for b in batch)
+    assert batch[0].configuration == c1 and batch[0].score is None
+    assert batch[1].score == 3.5
+
+
+@pytest.mark.parametrize("engine", ["batched", "pipelined", "campaign"])
+def test_bare_returning_optimizer_runs_through_every_driver(engine):
+    ds = make_ds()
+    if engine == "campaign":
+        res = run_campaign(ds, [BareRandom(seed=0)], "loss", max_trials=5,
+                           patience=99, rngs=[np.random.default_rng(0)])
+        trials = res.members[0].run.trials
+    elif engine == "pipelined":
+        run = run_optimizer(BareRandom(seed=0), ds, "loss", "min",
+                            max_trials=5, patience=99,
+                            rng=np.random.default_rng(0), max_inflight=2)
+        trials = run.trials
+    else:
+        run = run_optimizer(BareRandom(seed=0), ds, "loss", "min",
+                            max_trials=5, patience=99,
+                            rng=np.random.default_rng(0), batch_size=2)
+        trials = run.trials
+    assert len(trials) == 5
+    assert all(t.value is not None for t in trials)
+    digests = [t.configuration.digest for t in trials]
+    assert len(set(digests)) == 5
+
+
+def test_bare_optimizer_joins_shared_campaign_with_model_member():
+    """The campaign foreign-tell path tolerates bare-ask members alongside
+    scored ones: both run, both fold each other's history."""
+    ds = make_ds()
+    res = run_campaign(
+        ds, [BareRandom(seed=0), OPTIMIZER_REGISTRY["tpe"](seed=1)],
+        "loss", max_trials=6, patience=99,
+        rngs=[np.random.default_rng(0), np.random.default_rng(1)])
+    assert all(m.run.num_trials == 6 for m in res.members)
+    assert all(m.foreign_trials > 0 for m in res.members)
+
+
+# --------------------------------------- _unseen_candidates dedup regression
+
+
+def test_unseen_candidates_continuous_space_has_no_duplicates():
+    """Bugfix regression: the continuous-space draw loop must dedup within
+    itself — on a tiny effective space repeated draws used to return a pool
+    with duplicate digests, letting ask() emit a non-distinct batch."""
+    # continuous dimension, but the optimizer encoding snaps nothing — use
+    # a 1-d continuous space with a coarse sampler via a tiny discrete dim
+    # alongside: duplicates arise from the categorical collapsing draws
+    space = ProbabilitySpace.make([
+        Dimension.categorical("mode", ["a", "b", "c"]),
+        Dimension.continuous("x", 0.0, 1.0),
+    ])
+
+    class SnappingSpace:
+        """View whose sample_configuration rounds x to one decimal: a
+        continuous space with only ~30 distinct digests, so raw draws
+        collide constantly."""
+
+        def __init__(self, inner):
+            self._inner = inner
+
+        def __getattr__(self, name):
+            return getattr(self._inner, name)
+
+        def sample_configuration(self, rng):
+            c = self._inner.sample_configuration(rng)
+            return Configuration.make(
+                {"mode": c["mode"], "x": round(c["x"], 1)})
+
+    ds = make_ds(space=space)
+    adapter = SearchAdapter(ds, "loss", "min")
+    ds.space = SnappingSpace(space)
+
+    pool = Optimizer._unseen_candidates(adapter, np.random.default_rng(0),
+                                        max_candidates=64)
+    digests = [c.digest for c in pool]
+    assert len(set(digests)) == len(digests), "pool contains duplicates"
+    assert 0 < len(pool) <= 64

@@ -19,7 +19,8 @@ from repro.core import (ActionSpace, Configuration, Dimension, DiscoverySpace,
                         FunctionExperiment, ProbabilitySpace, SampleStore)
 from repro.core.entities import canonical_json, content_hash
 
-from _store_workers import OP_ID, SPACE_ID, hammer as _hammer, \
+from _store_workers import OP_ID, SPACE_ID, append_mixed as _append_mixed, \
+    append_mixed_process as _append_mixed_process, hammer as _hammer, \
     hammer_process as _hammer_process
 
 
@@ -170,6 +171,74 @@ def test_sample_batch_cross_store_measures_once(tmp_path):
     assert ds1.store.count_measured(ds1.space_id) == len(configs)
     assert all(r.ok for results in out for r in results)
     assert _reconciled(ds1) == _reconciled(ds2)
+
+
+# ------------------------------- seq allocation under concurrent appenders
+#
+# The invariant the campaign layer's `records_since` watermark sync depends
+# on: per-operation seq numbers are gapless, strictly ordered (seq order ==
+# rowid/commit order), and duplicate-free no matter how many processes
+# append to ONE operation concurrently — mixed single appends and
+# multi-event `append_records` transactions included.
+
+
+def _assert_seq_invariants_and_watermark_sync(store: SampleStore,
+                                              n_events: int) -> None:
+    records = store.records_for(SPACE_ID, OP_ID)
+    assert len(records) == n_events
+    seqs = [r.seq for r in records]  # records_for orders by rowid
+    assert sorted(seqs) == list(range(n_events)), "seq must be gapless/unique"
+    assert seqs == list(range(n_events)), \
+        "seq order must equal commit (rowid) order — no reordering window"
+    rowids = [r.rowid for r in records]
+    assert rowids == sorted(rowids) and len(set(rowids)) == len(rowids)
+    # incremental watermark paging sees every record exactly once and in
+    # order, regardless of page size
+    paged, watermark = [], 0
+    while True:
+        page = store.records_since(SPACE_ID, watermark, limit=7)
+        if not page:
+            break
+        watermark = page[-1].rowid
+        paged.extend(page)
+    assert paged == records
+
+
+def test_concurrent_thread_appenders_keep_seq_gapless():
+    store = SampleStore(":memory:")
+    rounds, batch, workers = 10, 3, 6
+    threads = [threading.Thread(target=_append_mixed,
+                                args=(store, w, rounds, batch))
+               for w in range(workers)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    per_worker = (rounds // 2) + (rounds // 2) * batch
+    _assert_seq_invariants_and_watermark_sync(store, workers * per_worker)
+    store.close()
+
+
+def test_concurrent_process_appenders_keep_seq_gapless(tmp_path):
+    """Multi-process writers to one operation: the atomic in-insert seq
+    allocation holds across process boundaries (separate connections, WAL),
+    so a watermark reader in any process sees a gapless, strictly-ordered,
+    duplicate-free record."""
+    path = str(tmp_path / "store.db")
+    SampleStore(path).close()  # create schema before forking
+    rounds, batch, workers = 8, 3, 4
+    ctx = multiprocessing.get_context("spawn")
+    procs = [ctx.Process(target=_append_mixed_process,
+                         args=(path, w, rounds, batch))
+             for w in range(workers)]
+    for p in procs:
+        p.start()
+    for p in procs:
+        p.join(timeout=120)
+    assert all(p.exitcode == 0 for p in procs), [p.exitcode for p in procs]
+    per_worker = (rounds // 2) + (rounds // 2) * batch
+    _assert_seq_invariants_and_watermark_sync(
+        SampleStore(path), workers * per_worker)
 
 
 # ----------------------------------------------------------- digest stability

@@ -120,6 +120,7 @@ def test_checkpoint_resharding_load(tmp_path):
     assert restored["w"].sharding == shardings["w"]
 
 
+@pytest.mark.slow
 def test_train_restart_bit_exact(tmp_path):
     """Kill a training run mid-stream; resume; final state must be bit-exact
     equal to an uninterrupted run (fault-tolerance integration test)."""
@@ -226,6 +227,7 @@ def test_quantize_roundtrip_exact_for_representable():
                                np.asarray(x), rtol=1e-6)
 
 
+@pytest.mark.slow
 def test_compressed_psum_error_feedback_converges():
     """Mean of a constant gradient over repeated steps: error feedback makes
     the time-averaged compressed mean converge to the true mean."""
