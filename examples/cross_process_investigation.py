@@ -1,0 +1,160 @@
+"""Cross-process cooperative investigation over one shared store file.
+
+The ROADMAP item "cross-process campaigns" wired end to end: two optimizer
+members run in SEPARATE PROCESSES, each with its own operation, rng, and
+stopping behaviour, coordinating through nothing but the shared SQLite
+store (paper §III-D).  Before every ask each member folds the other
+process's new sampling events into its history —
+``SearchAdapter.sync_foreign``, the same incremental watermark-paged read
+(``SampleStore.records_since``) the in-process ``Campaign`` uses — so both
+models train on the union of the fleet's measurements while the store's
+claim arbitration keeps every configuration measured at most once
+fleet-wide.
+
+Each member also reports its observed **sync latency**: for every foreign
+record it folds, the time from the record's commit (its store timestamp) to
+the moment the fold made it model-visible.  That is the staleness bound a
+cross-process fleet trains under — with two local processes over one WAL
+database it is dominated by the ask/evaluate cadence, not the store.
+
+    PYTHONPATH=src python examples/cross_process_investigation.py [--quick]
+"""
+
+import argparse
+import json
+import multiprocessing as mp
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import (ActionSpace, Dimension, DiscoverySpace,
+                        ProbabilitySpace, SampleStore)
+from repro.core.api.workloads import cloud_deploy
+from repro.core.optimizers import OPTIMIZER_REGISTRY
+from repro.core.optimizers.base import FOREIGN_ACTION, SearchAdapter, as_scored
+
+METRIC = "cost_per_1k"
+
+
+def build_space() -> ProbabilitySpace:
+    return ProbabilitySpace.make([
+        Dimension.categorical("instance", ["m5.large", "m5.xlarge",
+                                           "c5.xlarge", "c5.2xlarge"]),
+        Dimension.discrete("workers", [1, 2, 4, 8]),
+        Dimension.discrete("batch_size", [8, 16, 32, 64]),
+        Dimension.discrete("prefetch", [1, 2, 4]),
+    ])
+
+
+def member_process(store_path: str, label: str, optimizer: str, seed: int,
+                   trials: int, out_path: str, pace_s: float) -> None:
+    """One fleet member in its own process: sync foreign → ask → evaluate.
+
+    Identical to a Campaign member's turn on the coordinator loop, except
+    the 'fleet' is whatever other processes share the store file.  Sync
+    latency is measured per folded record as fold-time minus the record's
+    commit timestamp (same host, same wall clock)."""
+    store = SampleStore(store_path)
+    ds = DiscoverySpace(space=build_space(),
+                        actions=ActionSpace.make([cloud_deploy()]),
+                        store=store)
+    adapter = SearchAdapter(ds, METRIC, "min", optimizer_name=label)
+    opt = OPTIMIZER_REGISTRY[optimizer](seed=seed)
+    rng = np.random.default_rng(seed)
+    latencies = []
+    for _ in range(trials):
+        # peek the rows sync_foreign is about to fold, to timestamp them
+        fresh = store.records_since(ds.space_id, adapter.record_watermark,
+                                    exclude_operation=adapter.operation_id)
+        folded = adapter.sync_foreign()
+        now = time.time()
+        if folded:
+            latencies.extend(now - r.created_at for r in fresh)
+        batch = as_scored(opt.ask(adapter, rng, n=1))
+        if not batch:
+            break
+        adapter.evaluate_batch([batch[0]])
+        time.sleep(pace_s)  # a real deployment takes time; let peers land
+    adapter.sync_foreign()  # final fold for honest history accounting
+    own = [t for t in adapter.trials if t.action != FOREIGN_ACTION]
+    with open(out_path, "w") as f:
+        json.dump({
+            "label": label,
+            "operation_id": adapter.operation_id,
+            "own_trials": len(own),
+            "own_measured": sum(1 for t in own if t.action == "measured"),
+            "own_reused": sum(1 for t in own if t.action == "reused"),
+            "foreign_trials": sum(1 for t in adapter.trials
+                                  if t.action == FOREIGN_ACTION),
+            "best": min((t.value for t in adapter.trials
+                         if t.value is not None), default=None),
+            "sync_latencies_s": latencies,
+        }, f)
+
+
+def main(argv=None) -> None:
+    parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    parser.add_argument("--quick", action="store_true",
+                        help="smaller budgets (CI smoke mode)")
+    args = parser.parse_args(argv)
+    trials = 8 if args.quick else 16
+    pace_s = 0.02 if args.quick else 0.05
+
+    members = [("tpe", "tpe", 0), ("bo-gp", "bo-gp", 1)]
+    ctx = mp.get_context("spawn")  # no fork: keep worker processes hermetic
+    with tempfile.TemporaryDirectory() as tmp:
+        store_path = os.path.join(tmp, "store.db")
+        # parent creates the store + space once; children rendezvous on it
+        ds = DiscoverySpace(space=build_space(),
+                            actions=ActionSpace.make([cloud_deploy()]),
+                            store=SampleStore(store_path))
+        t0 = time.perf_counter()
+        procs, outs = [], []
+        for label, optimizer, seed in members:
+            out_path = os.path.join(tmp, f"{label}.json")
+            outs.append(out_path)
+            p = ctx.Process(target=member_process,
+                            args=(store_path, label, optimizer, seed,
+                                  trials, out_path, pace_s))
+            p.start()
+            procs.append(p)
+        for p in procs:
+            p.join(timeout=240)
+            if p.exitcode != 0:
+                raise SystemExit(f"member process failed: {p.exitcode}")
+        wall = time.perf_counter() - t0
+        results = [json.load(open(o)) for o in outs]
+
+        print(f"Two-process investigation over one store file ({wall:.1f}s):")
+        all_lat = []
+        for r in results:
+            lat = r["sync_latencies_s"]
+            all_lat.extend(lat)
+            lat_txt = ("no foreign records" if not lat else
+                       f"sync latency median {1e3 * float(np.median(lat)):.0f}ms "
+                       f"p95 {1e3 * float(np.quantile(lat, 0.95)):.0f}ms")
+            print(f"  [{r['label']:5s}] op={r['operation_id'][:24]} "
+                  f"own={r['own_trials']} (measured={r['own_measured']}, "
+                  f"reused={r['own_reused']}) + foreign={r['foreign_trials']} "
+                  f"=> best {r['best']:.3f}; {lat_txt}")
+
+        # the cross-process sharing contract, asserted
+        store = SampleStore(store_path)
+        distinct = len(store.sampled_digests(ds.space_id))
+        measured = store.count_measured(ds.space_id)
+        for r in results:
+            assert r["foreign_trials"] > 0, \
+                f"{r['label']} saw no foreign history — no sharing happened"
+        assert measured == distinct, "a configuration was measured twice"
+        print(f"  fleet: {distinct} distinct configurations, {measured} paid "
+              f"measurements (measure-once held across processes)")
+        print(f"  observed store→model sync latency: median "
+              f"{1e3 * float(np.median(all_lat)):.0f}ms, max "
+              f"{1e3 * float(np.max(all_lat)):.0f}ms over "
+              f"{len(all_lat)} folded records")
+
+
+if __name__ == "__main__":
+    main()

@@ -25,6 +25,10 @@ in :mod:`repro.core.campaign`.
 
 from .actions import (ActionSpace, Experiment, FunctionExperiment,
                       MeasurementError, SurrogateExperiment)
+from .api import (CatalogEntry, Investigation, InvestigationPlan,
+                  InvestigationResult, InvestigationSpec, RelatedSpace,
+                  SpaceCatalog, TransferReport, TransferSpec,
+                  register_experiment)
 from .campaign import Campaign, CampaignResult, MemberResult, run_campaign
 from .clock import Clock, FakeClock, SYSTEM_CLOCK
 from .clustering import (select_linspace, select_representatives, select_top_k,
@@ -51,5 +55,8 @@ __all__ = [
     "SerialBackend", "ThreadBackend", "ProcessBackend", "QueueBackend",
     "WorkerCrashError", "AutoscalePolicy", "LeasePacer", "Clock", "FakeClock",
     "SYSTEM_CLOCK", "Campaign", "CampaignResult", "MemberResult",
-    "run_campaign",
+    "run_campaign", "Investigation", "InvestigationPlan",
+    "InvestigationResult", "InvestigationSpec", "TransferReport",
+    "TransferSpec", "SpaceCatalog", "CatalogEntry", "RelatedSpace",
+    "register_experiment",
 ]

@@ -1,0 +1,39 @@
+"""repro.core.api — the declarative Investigation front door.
+
+ONE way in for every search scenario the repo supports: describe the study
+as an :class:`InvestigationSpec` (space + experiments + optimizer fleet +
+execution + budget + transfer policy, JSON round-trippable), hand it to an
+:class:`Investigation`, and ``plan()`` / ``run()`` / ``resume()``.  Solo
+ask/tell, batched, pipelined, multi-optimizer campaigns, and RSSC-style
+cross-space transfer are all *configurations* of this one engine — the
+legacy entrypoints (``run_optimizer``, ``Campaign.run``) are thin shims
+over it, draw-for-draw.
+
+The :class:`SpaceCatalog` is the persistent reuse index: every Discovery
+Space registers itself (Ω digest + entity metadata + record counts) in the
+shared store, and ``Investigation.run()`` with ``transfer.enabled`` queries
+it for related, already-measured spaces to warm-start from — the paper's
+>90 % configuration-search speed-up path (§IV-3/4, §V-B), reproduced by
+``python -m benchmarks.transfer_bench``.
+
+Spec-driven CLI::
+
+    python -m repro.core.api run spec.json --store study.db [--dry-run]
+    python -m repro.core.api catalog --store study.db
+"""
+
+from .catalog import CatalogEntry, RelatedSpace, SpaceCatalog
+from .investigation import (Investigation, InvestigationPlan,
+                            InvestigationResult, TransferReport)
+from .spec import (SCHEMA_VERSION, BudgetSpec, ExecutionSpec, ExperimentSpec,
+                   InvestigationSpec, OptimizerSpec, TransferSpec,
+                   register_experiment, resolve_experiment_factory)
+from . import workloads  # noqa: F401 — registers the built-in factories
+
+__all__ = [
+    "Investigation", "InvestigationPlan", "InvestigationResult",
+    "TransferReport", "InvestigationSpec", "ExperimentSpec", "OptimizerSpec",
+    "ExecutionSpec", "BudgetSpec", "TransferSpec", "SCHEMA_VERSION",
+    "SpaceCatalog", "CatalogEntry", "RelatedSpace", "register_experiment",
+    "resolve_experiment_factory",
+]

@@ -1,0 +1,128 @@
+"""Spec-driven CLI: run investigations and inspect the space catalog.
+
+::
+
+    python -m repro.core.api run spec.json [--store PATH] [--dry-run]
+                                           [--resume] [--out RESULT.json]
+    python -m repro.core.api validate spec.json
+    python -m repro.core.api catalog --store PATH
+
+``run`` executes the spec end to end over the given store (a fresh
+in-memory store when omitted — fine for self-contained smoke specs, useless
+for transfer, which needs the store holding the source data).  ``--dry-run``
+prints the :meth:`~repro.core.api.investigation.Investigation.plan` —
+engine dispatch, fleet, budget, and which catalog spaces transfer would
+warm-start from — without measuring anything.  ``validate`` parses the spec
+(strict: unknown fields and schema-version mismatches fail) and re-emits
+its canonical JSON.  ``catalog`` lists every registered space in a store
+with its measurement counts.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from ..store import SampleStore
+from .catalog import SpaceCatalog
+from .investigation import Investigation
+from .spec import InvestigationSpec
+
+
+def _load_spec(path: str) -> InvestigationSpec:
+    try:
+        return InvestigationSpec.load(path)
+    except (ValueError, KeyError, OSError, json.JSONDecodeError) as err:
+        raise SystemExit(f"error: bad spec {path!r}: {err}")
+
+
+def _cmd_run(args) -> int:
+    spec = _load_spec(args.spec)
+    store = SampleStore(args.store) if args.store else None
+    inv = Investigation(spec, store=store)
+    plan = inv.plan()
+    print(plan.describe())
+    if args.dry_run:
+        return 0
+    result = inv.run(resume=args.resume)
+    summary = result.summary()
+    print(f"\ninvestigation {spec.name!r} finished: "
+          f"{summary['trials']} trials, "
+          f"{summary['paid_measurements']} paid measurements", end="")
+    if result.transfer is not None and result.transfer.applied:
+        print(f" (transfer from {result.transfer.source_space_id[:12]}…: "
+              f"{result.transfer.n_warm_trials} warm trials, "
+              f"{result.transfer.paid} paid representatives)", end="")
+    print()
+    best = summary["best"]
+    if best is not None:
+        print(f"best {spec.metric} = {best['value']:.4g} at "
+              f"{best['configuration']}")
+    q = summary["prediction_quality"]
+    if q is not None:
+        print(f"prediction quality (surrogate vs later measurements): {q}")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(summary, f, indent=2, sort_keys=True, default=str)
+        print(f"wrote {args.out}")
+    return 0
+
+
+def _cmd_validate(args) -> int:
+    spec = _load_spec(args.spec)
+    roundtrip = InvestigationSpec.loads(spec.dumps())
+    assert roundtrip == spec, "spec does not round-trip"  # defensive
+    print(spec.dumps())
+    return 0
+
+
+def _cmd_catalog(args) -> int:
+    catalog = SpaceCatalog(SampleStore(args.store))
+    entries = catalog.entries()
+    if not entries:
+        print("catalog is empty")
+        return 0
+    for e in entries:
+        s = e.summary()
+        print(f"{e.space_id}  dims={','.join(s['dimensions'])} "
+              f"size={s['size']} properties={','.join(s['properties']) or '?'}"
+              f" records={s['records']} measured={s['measured']}")
+    return 0
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.core.api",
+        description="Declarative Investigation runner + space-catalog tool")
+    sub = parser.add_subparsers(dest="command", required=True)
+
+    p_run = sub.add_parser("run", help="execute an InvestigationSpec")
+    p_run.add_argument("spec", help="path to the spec JSON")
+    p_run.add_argument("--store", default=None,
+                       help="SampleStore path (default: in-memory)")
+    p_run.add_argument("--dry-run", action="store_true",
+                       help="print the plan (incl. transfer candidates) and "
+                            "exit without measuring anything")
+    p_run.add_argument("--resume", action="store_true",
+                       help="fold everything already recorded in the space "
+                            "into each member's history before the first ask")
+    p_run.add_argument("--out", default=None,
+                       help="write the result summary JSON here")
+    p_run.set_defaults(fn=_cmd_run)
+
+    p_val = sub.add_parser("validate",
+                           help="strict-parse a spec and print canonical JSON")
+    p_val.add_argument("spec")
+    p_val.set_defaults(fn=_cmd_validate)
+
+    p_cat = sub.add_parser("catalog", help="list a store's registered spaces")
+    p_cat.add_argument("--store", required=True)
+    p_cat.set_defaults(fn=_cmd_catalog)
+
+    args = parser.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,247 @@
+"""The persistent SpaceCatalog: what has already been measured, and how it
+relates to what you want to measure next.
+
+The paper's reuse story (§IV, §V-B) assumes an investigator can *find* the
+previously-measured space worth transferring from.  The catalog is that
+lookup: it reads the store's ``spaces`` table (every
+:class:`~repro.core.discovery.DiscoverySpace` ever constructed over the
+store registers itself with its Ω digest + entity metadata) joined with
+per-space sampling-record counts, and answers relatedness queries:
+
+* **exact** — another study over the same dimensions (typically a different
+  action space: new model architecture, new cloud provider — the paper's
+  FT-TRANS pattern);
+* **renamed values** — dimensions match by name/kind but some finite values
+  were renamed (``gpu_model: A100-PCIE → A100-SXM4`` — the §IV-1
+  ``map_values`` pattern), connected through an explicit caller mapping or,
+  for same-cardinality categorical dimensions, a positionally *inferred*
+  one (flagged, and ranked below explicit matches);
+* **disjoint** — nothing to transfer; filtered out by ``min_overlap``.
+
+``find_related`` is deliberately read-only and cheap (two queries + pure
+matching) so ``Investigation.plan()`` can call it in a dry run without
+paying for anything.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Mapping, Optional, Sequence
+
+from ..space import ProbabilitySpace
+from ..store import SampleStore
+
+__all__ = ["CatalogEntry", "RelatedSpace", "SpaceCatalog"]
+
+
+@dataclass(frozen=True)
+class CatalogEntry:
+    """One registered Discovery Space + its measurement statistics."""
+
+    space_id: str
+    space: ProbabilitySpace
+    action_ids: tuple
+    space_digest: str
+    meta: dict
+    created_at: float
+    n_records: int = 0
+    n_measured: int = 0
+    n_failed: int = 0
+    n_distinct: int = 0
+
+    @property
+    def properties(self) -> tuple:
+        """Observed property names, when the registering build recorded them
+        (empty for pre-catalog rows — treat as unknown, not as none)."""
+        return tuple(self.meta.get("properties", ()))
+
+    def summary(self) -> dict:
+        return {
+            "space_id": self.space_id,
+            "dimensions": list(self.space.names),
+            "size": self.space.size if self.space.finite else None,
+            "properties": list(self.properties),
+            "records": self.n_records,
+            "measured": self.n_measured,
+            "distinct": self.n_distinct,
+        }
+
+
+@dataclass(frozen=True)
+class RelatedSpace:
+    """A catalog entry related to a query space, with how to reach it.
+
+    ``mapping`` is the per-dimension source→target value rename needed to
+    translate the entry's configurations into the query space (empty for an
+    exact dimension match); ``inferred_dims`` names dimensions whose mapping
+    was positionally inferred rather than caller-supplied.
+    """
+
+    entry: CatalogEntry
+    overlap: float
+    shared_dimensions: tuple
+    mapping: dict = field(default_factory=dict)
+    inferred_dims: tuple = ()
+
+    @property
+    def exact(self) -> bool:
+        return self.overlap == 1.0 and not self.mapping
+
+    def summary(self) -> dict:
+        return {
+            "space_id": self.entry.space_id,
+            "overlap": round(self.overlap, 3),
+            "shared_dimensions": list(self.shared_dimensions),
+            "mapped_dimensions": sorted(self.mapping),
+            "inferred_dimensions": list(self.inferred_dims),
+            "measured": self.entry.n_measured,
+        }
+
+
+def _match_dimension(src_dim, tgt_dim, explicit: Optional[Mapping]):
+    """(mapping, inferred) when the dimensions are relatable, else None.
+
+    ``mapping`` is the src→tgt value rename restricted to values that
+    actually change (empty = identical value sets)."""
+    if src_dim.kind != tgt_dim.kind:
+        return None
+    if src_dim.kind == "continuous":
+        if (src_dim.low, src_dim.high) == (tgt_dim.low, tgt_dim.high):
+            return {}, False
+        return None
+    if src_dim.values == tgt_dim.values:
+        return {}, False
+    if src_dim.kind == "categorical" \
+            and set(src_dim.values) == set(tgt_dim.values):
+        # same unordered value set declared in a different order: identity —
+        # positional inference here would cross-rename identical values
+        return {}, False
+    if explicit is not None:
+        mapped = tuple(explicit.get(v, v) for v in src_dim.values)
+        if (len(mapped) == len(set(mapped))
+                and set(mapped) == set(tgt_dim.values)):
+            return ({v: explicit[v] for v in src_dim.values
+                     if v in explicit and explicit[v] != v}, False)
+        return None
+    if (src_dim.kind == "categorical"
+            and len(src_dim.values) == len(tgt_dim.values)):
+        # positional inference: a pure rename of an unordered finite set —
+        # the stored value order carries the correspondence.  Never done for
+        # discrete numeric dimensions, whose values are quantities (a space
+        # with mem_gb [1,2,4] is NOT a renaming of one with [8,16,32]).
+        return ({s: t for s, t in zip(src_dim.values, tgt_dim.values)
+                 if s != t}, True)
+    return None
+
+
+class SpaceCatalog:
+    """Query interface over every space registered in a sample store."""
+
+    def __init__(self, store: SampleStore):
+        self.store = store
+
+    # -------------------------------------------------------------- listing
+
+    def entries(self) -> list:
+        """All registered spaces, oldest first, with record counts."""
+        stats = self.store.space_stats()
+        out = []
+        for row in self.store.list_spaces():
+            s = stats.get(row["space_id"], {})
+            out.append(CatalogEntry(
+                space_id=row["space_id"],
+                space=ProbabilitySpace.from_json(row["space_json"]),
+                action_ids=tuple(row["actions"]),
+                space_digest=row["space_digest"],
+                meta=row["meta"],
+                created_at=row["created_at"],
+                n_records=s.get("records", 0),
+                n_measured=s.get("measured", 0),
+                n_failed=s.get("failed", 0),
+                n_distinct=s.get("distinct", 0),
+            ))
+        return out
+
+    def get(self, space_id: str) -> Optional[CatalogEntry]:
+        for entry in self.entries():
+            if entry.space_id == space_id:
+                return entry
+        return None
+
+    # ----------------------------------------------------------- relatedness
+
+    def find_related(
+        self,
+        space: ProbabilitySpace,
+        exclude: Sequence[str] = (),
+        mappings: Optional[Mapping[str, Mapping]] = None,
+        min_overlap: float = 1.0,
+        metric: Optional[str] = None,
+        min_measured: int = 0,
+    ) -> list:
+        """Catalog entries relatable to ``space``, best candidates first.
+
+        ``overlap`` is matched dimensions over the *union* of dimension
+        names, so extra dimensions on either side dilute it — two spaces
+        with disjoint dimensions score 0 and never match.  ``mappings``
+        supplies explicit per-dimension src→tgt value renames
+        (``{dim: {src: tgt}}``); without one, a same-cardinality
+        categorical rename is positionally inferred and flagged.
+
+        ``exclude`` drops space ids (callers pass their own); ``metric``
+        keeps only entries whose registered properties include it (entries
+        with unknown properties pass — the data check happens when values
+        are read); ``min_measured`` requires that many measured records.
+
+        Ranking: exact matches first, then by overlap, then by measured
+        data volume, explicit mappings before inferred ones.
+        """
+        mappings = mappings or {}
+        excluded = set(exclude)
+        out = []
+        for entry in self.entries():
+            if entry.space_id in excluded:
+                continue
+            if entry.n_measured < min_measured:
+                continue
+            if metric is not None and entry.properties \
+                    and metric not in entry.properties:
+                continue
+            src_dims = {d.name: d for d in entry.space.dimensions}
+            tgt_dims = {d.name: d for d in space.dimensions}
+            union = set(src_dims) | set(tgt_dims)
+            matched, mapping, inferred = [], {}, []
+            for name in sorted(set(src_dims) & set(tgt_dims)):
+                m = _match_dimension(src_dims[name], tgt_dims[name],
+                                     mappings.get(name))
+                if m is None:
+                    continue
+                dim_map, was_inferred = m
+                matched.append(name)
+                if dim_map:
+                    mapping[name] = dim_map
+                if was_inferred:
+                    inferred.append(name)
+            overlap = len(matched) / len(union) if union else 0.0
+            if overlap < min_overlap or not matched:
+                continue
+            out.append(RelatedSpace(
+                entry=entry, overlap=overlap,
+                shared_dimensions=tuple(matched),
+                mapping=mapping, inferred_dims=tuple(inferred)))
+        out.sort(key=lambda r: (not r.exact, -r.overlap, -r.entry.n_measured,
+                                len(r.inferred_dims), r.entry.space_id))
+        return out
+
+    # ------------------------------------------------------------ source data
+
+    def measured_pairs(self, entry: CatalogEntry, metric: str) -> list:
+        """``[(configuration, value), ...]`` of the entry's *measured* (not
+        predicted) values for ``metric``, in first-sampled order (last
+        measured write wins per configuration) — the source data a transfer
+        surrogate is fitted on.  Reads raw store rows in one JOIN scan
+        (:meth:`SampleStore.measured_property_values`): the source space's
+        experiments are code and need not be reconstructible here.
+        """
+        return self.store.measured_property_values(
+            entry.space_id, metric, list(entry.action_ids))

@@ -1,0 +1,395 @@
+"""The declarative Investigation specification (fully JSON round-trippable).
+
+An :class:`InvestigationSpec` is the paper's "description of workload
+configuration problems" made concrete: ONE document that names the space
+(Ω), the methodology (A, via experiment factories), the optimizer fleet, the
+execution backend, the budget/stopping rule, and the cross-space transfer
+policy.  Every scenario the repo grew one-entrypoint-at-a-time — solo
+ask/tell, pipelined ``max_inflight=N``, multi-optimizer campaigns, RSSC-style
+transfer — is a *configuration* of this document, executed by
+:class:`~repro.core.api.investigation.Investigation`.
+
+Serialization contract
+----------------------
+
+* ``to_json()`` → plain-JSON dict; ``from_json()`` parses it back to an
+  equal spec.  Parsing is STRICT: unknown fields raise ``ValueError`` at
+  every nesting level (a typo'd knob must never silently no-op a paid
+  cloud search), and ``schema_version`` must match :data:`SCHEMA_VERSION`.
+* Experiments are code, so the spec stores *references*: a registry short
+  name (see :func:`register_experiment`) or an ``"importable.module:attr"``
+  path to a factory called with ``params``.
+* Value mappings (``transfer.mappings``) are stored as pair LISTS, not JSON
+  objects — JSON object keys are forcibly strings, which would corrupt
+  numeric/boolean dimension values on a round trip.
+"""
+
+from __future__ import annotations
+
+import importlib
+import json
+from dataclasses import dataclass, field
+from typing import Any, Callable, Mapping, Optional, Sequence, Tuple
+
+from ..actions import Experiment
+from ..space import ProbabilitySpace
+
+__all__ = ["SCHEMA_VERSION", "ExperimentSpec", "OptimizerSpec",
+           "ExecutionSpec", "BudgetSpec", "TransferSpec", "InvestigationSpec",
+           "register_experiment", "resolve_experiment_factory",
+           "EXPERIMENT_REGISTRY"]
+
+#: Version of the spec JSON schema; from_json rejects any other value.
+SCHEMA_VERSION = 1
+
+_EXECUTION_BACKENDS = (None, "serial", "thread", "process", "queue")
+_SELECTIONS = ("clustering", "top5", "linspace")
+
+#: Short names for experiment factories usable in spec JSON (CLI-friendly).
+EXPERIMENT_REGISTRY: dict = {}
+
+
+def register_experiment(name: str, factory: Callable[..., Experiment]) -> None:
+    """Register an experiment factory under a short name for spec JSON."""
+    EXPERIMENT_REGISTRY[name] = factory
+
+
+def resolve_experiment_factory(ref: str) -> Callable[..., Experiment]:
+    """Resolve a spec's experiment reference: registry short name first
+    (built-ins auto-load from :mod:`repro.core.api.workloads`), then an
+    ``"module.path:attr"`` import."""
+    if ref in EXPERIMENT_REGISTRY:
+        return EXPERIMENT_REGISTRY[ref]
+    if ":" not in ref:
+        from . import workloads  # noqa: F401 — registers the built-ins
+        if ref in EXPERIMENT_REGISTRY:
+            return EXPERIMENT_REGISTRY[ref]
+        raise ValueError(
+            f"unknown experiment {ref!r}: not a registered name "
+            f"({sorted(EXPERIMENT_REGISTRY)}) and not a 'module:attr' path")
+    module_name, attr_path = ref.split(":", 1)
+    obj: Any = importlib.import_module(module_name)
+    for part in attr_path.split("."):
+        obj = getattr(obj, part)
+    return obj
+
+
+def _reject_unknown(d: Mapping, allowed: Sequence[str], ctx: str) -> None:
+    unknown = sorted(set(d) - set(allowed))
+    if unknown:
+        raise ValueError(
+            f"{ctx}: unknown field(s) {unknown} (allowed: {sorted(allowed)})")
+
+
+def _mappings_to_json(mappings: Mapping[str, Tuple]) -> dict:
+    return {dim: [[s, t] for s, t in pairs]
+            for dim, pairs in mappings.items()}
+
+
+def _mappings_from_json(d: Any, ctx: str) -> dict:
+    """Accept {dim: {src: tgt}} (convenient) or {dim: [[src, tgt], ...]}
+    (round-trip canonical); normalize to {dim: ((src, tgt), ...)}."""
+    if not isinstance(d, Mapping):
+        raise ValueError(f"{ctx}: mappings must be an object, got {type(d)}")
+    out: dict = {}
+    for dim, m in d.items():
+        if isinstance(m, Mapping):
+            out[dim] = tuple((s, t) for s, t in m.items())
+        else:
+            out[dim] = tuple((pair[0], pair[1]) for pair in m)
+    return out
+
+
+@dataclass(frozen=True)
+class ExperimentSpec:
+    """One action-space entry: a factory reference + its parameters."""
+
+    factory: str
+    params: dict = field(default_factory=dict)
+
+    def build(self) -> Experiment:
+        exp = resolve_experiment_factory(self.factory)(**self.params)
+        if not isinstance(exp, Experiment):
+            raise TypeError(
+                f"experiment factory {self.factory!r} returned "
+                f"{type(exp).__name__}, not an Experiment")
+        return exp
+
+    def to_json(self) -> dict:
+        return {"factory": self.factory, "params": dict(self.params)}
+
+    @staticmethod
+    def from_json(d: Mapping) -> "ExperimentSpec":
+        _reject_unknown(d, ("factory", "params"), "experiment")
+        if "factory" not in d:
+            raise ValueError("experiment: 'factory' is required")
+        return ExperimentSpec(factory=str(d["factory"]),
+                              params=dict(d.get("params", {})))
+
+
+@dataclass(frozen=True)
+class OptimizerSpec:
+    """One fleet member: an optimizer family + seed (+ family kwargs)."""
+
+    name: str
+    seed: int = 0
+    params: dict = field(default_factory=dict)
+
+    def __post_init__(self):
+        from ..optimizers import OPTIMIZER_REGISTRY
+        if self.name not in OPTIMIZER_REGISTRY:
+            raise ValueError(f"unknown optimizer {self.name!r} "
+                             f"(known: {sorted(OPTIMIZER_REGISTRY)})")
+
+    def build(self):
+        from ..optimizers import OPTIMIZER_REGISTRY
+        return OPTIMIZER_REGISTRY[self.name](seed=self.seed, **self.params)
+
+    def to_json(self) -> dict:
+        return {"name": self.name, "seed": self.seed,
+                "params": dict(self.params)}
+
+    @staticmethod
+    def from_json(d: Mapping) -> "OptimizerSpec":
+        _reject_unknown(d, ("name", "seed", "params"), "optimizer")
+        if "name" not in d:
+            raise ValueError("optimizer: 'name' is required")
+        return OptimizerSpec(name=str(d["name"]), seed=int(d.get("seed", 0)),
+                             params=dict(d.get("params", {})))
+
+
+@dataclass(frozen=True)
+class ExecutionSpec:
+    """How experiments execute: backend routing + engine shape.
+
+    ``max_inflight=None`` with ``batch_size=1`` is the classic serial loop;
+    ``batch_size=N`` is the barriered batch engine; ``max_inflight=N`` is
+    the pipelined engine (campaigns are always pipelined, one slot budget
+    per member).  ``backend`` names an execution backend (``serial | thread
+    | process | queue``) or None for the legacy workers-sized default.
+    """
+
+    backend: Optional[str] = None
+    workers: int = 1
+    max_inflight: Optional[int] = None
+    batch_size: int = 1
+
+    def __post_init__(self):
+        if self.backend not in _EXECUTION_BACKENDS:
+            raise ValueError(f"unknown backend {self.backend!r} "
+                             f"(known: {_EXECUTION_BACKENDS})")
+        if self.batch_size < 1:
+            raise ValueError(f"batch_size must be >= 1, got {self.batch_size}")
+        if self.max_inflight is not None and self.max_inflight < 1:
+            raise ValueError(
+                f"max_inflight must be >= 1, got {self.max_inflight}")
+        if self.workers < 1:
+            raise ValueError(f"workers must be >= 1, got {self.workers}")
+
+    def to_json(self) -> dict:
+        return {"backend": self.backend, "workers": self.workers,
+                "max_inflight": self.max_inflight,
+                "batch_size": self.batch_size}
+
+    @staticmethod
+    def from_json(d: Mapping) -> "ExecutionSpec":
+        _reject_unknown(d, ("backend", "workers", "max_inflight",
+                            "batch_size"), "execution")
+        mi = d.get("max_inflight")
+        return ExecutionSpec(
+            backend=d.get("backend"),
+            workers=int(d.get("workers", 1)),
+            max_inflight=None if mi is None else int(mi),
+            batch_size=int(d.get("batch_size", 1)))
+
+
+@dataclass(frozen=True)
+class BudgetSpec:
+    """Trial budget + the paper's §V-B1 stopping rule, per member."""
+
+    max_trials: int = 50
+    patience: int = 5
+    min_trials: int = 1
+
+    def __post_init__(self):
+        if self.max_trials < 1:
+            raise ValueError(f"max_trials must be >= 1, got {self.max_trials}")
+        if self.patience < 1:
+            raise ValueError(f"patience must be >= 1, got {self.patience}")
+
+    def to_json(self) -> dict:
+        return {"max_trials": self.max_trials, "patience": self.patience,
+                "min_trials": self.min_trials}
+
+    @staticmethod
+    def from_json(d: Mapping) -> "BudgetSpec":
+        _reject_unknown(d, ("max_trials", "patience", "min_trials"), "budget")
+        return BudgetSpec(max_trials=int(d.get("max_trials", 50)),
+                          patience=int(d.get("patience", 5)),
+                          min_trials=int(d.get("min_trials", 1)))
+
+
+@dataclass(frozen=True)
+class TransferSpec:
+    """Cross-space reuse policy (paper §IV-3/4): when enabled, the
+    Investigation queries the :class:`~repro.core.api.catalog.SpaceCatalog`
+    for related, already-measured spaces, measures a representative
+    sub-space in the target, applies the transfer criteria, and — if they
+    pass — warm-starts every member's history with surrogate predictions.
+
+    ``sources`` restricts discovery to explicit space ids (empty = any
+    related space); ``mappings`` are per-dimension source→target value-
+    rename hints, stored as pair lists (``{dim: ((src, tgt), ...)}``);
+    ``min_r``/``max_p`` are the paper's go/no-go criteria;
+    ``max_representatives`` caps the paid representative measurements (the
+    selected points are subsampled evenly over the value ranking, keeping
+    the spread that pins the fit — the paper's clustering chose 4–33
+    points, Table VI); ``max_warm`` caps the folded history
+    (best-predicted first); ``seed`` fixes the representative-selection
+    rng.
+    """
+
+    enabled: bool = False
+    sources: tuple = ()
+    mappings: dict = field(default_factory=dict)
+    min_r: float = 0.7
+    max_p: float = 0.01
+    selection: str = "clustering"
+    max_representatives: Optional[int] = None
+    max_warm: Optional[int] = None
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.selection not in _SELECTIONS:
+            raise ValueError(f"unknown selection {self.selection!r} "
+                             f"(known: {_SELECTIONS})")
+
+    def mapping_dicts(self) -> dict:
+        """``{dim: {src: tgt}}`` view for translate()/find_related()."""
+        return {dim: dict(pairs) for dim, pairs in self.mappings.items()}
+
+    def to_json(self) -> dict:
+        return {"enabled": self.enabled, "sources": list(self.sources),
+                "mappings": _mappings_to_json(self.mappings),
+                "min_r": self.min_r, "max_p": self.max_p,
+                "selection": self.selection,
+                "max_representatives": self.max_representatives,
+                "max_warm": self.max_warm, "seed": self.seed}
+
+    @staticmethod
+    def from_json(d: Mapping) -> "TransferSpec":
+        _reject_unknown(d, ("enabled", "sources", "mappings", "min_r",
+                            "max_p", "selection", "max_representatives",
+                            "max_warm", "seed"), "transfer")
+        mw = d.get("max_warm")
+        mr = d.get("max_representatives")
+        return TransferSpec(
+            enabled=bool(d.get("enabled", False)),
+            sources=tuple(d.get("sources", ())),
+            mappings=_mappings_from_json(d.get("mappings", {}), "transfer"),
+            min_r=float(d.get("min_r", 0.7)),
+            max_p=float(d.get("max_p", 0.01)),
+            selection=str(d.get("selection", "clustering")),
+            max_representatives=None if mr is None else int(mr),
+            max_warm=None if mw is None else int(mw),
+            seed=int(d.get("seed", 0)))
+
+
+@dataclass(frozen=True)
+class InvestigationSpec:
+    """The full declarative description of one configuration search.
+
+    ``experiments`` may be empty ONLY when the Investigation is handed a
+    ready :class:`~repro.core.discovery.DiscoverySpace` (the programmatic /
+    legacy-shim path); a spec executed from JSON must name its experiments.
+    ``share_history``/``warm_start`` carry the campaign semantics: fold
+    other members' completions into every history / additionally fold
+    records that predate the run.
+    """
+
+    name: str
+    space: ProbabilitySpace
+    metric: str
+    experiments: tuple = ()
+    mode: str = "min"
+    optimizers: tuple = (OptimizerSpec("random"),)
+    execution: ExecutionSpec = ExecutionSpec()
+    budget: BudgetSpec = BudgetSpec()
+    transfer: TransferSpec = TransferSpec()
+    share_history: bool = True
+    warm_start: bool = False
+
+    def __post_init__(self):
+        if self.mode not in ("min", "max"):
+            raise ValueError(f"mode must be min|max, got {self.mode!r}")
+        if not self.optimizers:
+            raise ValueError("an investigation needs at least one optimizer")
+        if len(self.optimizers) > 1 and self.execution.batch_size != 1:
+            raise ValueError("multi-optimizer investigations are pipelined; "
+                             "batch_size must be 1 (use max_inflight)")
+
+    # ------------------------------------------------------------- serialize
+
+    def to_json(self) -> dict:
+        return {
+            "schema_version": SCHEMA_VERSION,
+            "name": self.name,
+            "space": self.space.to_json(),
+            "experiments": [e.to_json() for e in self.experiments],
+            "metric": self.metric,
+            "mode": self.mode,
+            "optimizers": [o.to_json() for o in self.optimizers],
+            "execution": self.execution.to_json(),
+            "budget": self.budget.to_json(),
+            "transfer": self.transfer.to_json(),
+            "share_history": self.share_history,
+            "warm_start": self.warm_start,
+        }
+
+    @staticmethod
+    def from_json(d: Mapping) -> "InvestigationSpec":
+        _reject_unknown(d, ("schema_version", "name", "space", "experiments",
+                            "metric", "mode", "optimizers", "execution",
+                            "budget", "transfer", "share_history",
+                            "warm_start"), "investigation")
+        version = d.get("schema_version", SCHEMA_VERSION)
+        if version != SCHEMA_VERSION:
+            raise ValueError(f"unsupported schema_version {version!r} "
+                             f"(this build reads {SCHEMA_VERSION})")
+        for req in ("name", "space", "metric"):
+            if req not in d:
+                raise ValueError(f"investigation: {req!r} is required")
+        return InvestigationSpec(
+            name=str(d["name"]),
+            space=ProbabilitySpace.from_json(d["space"]),
+            metric=str(d["metric"]),
+            experiments=tuple(ExperimentSpec.from_json(e)
+                              for e in d.get("experiments", ())),
+            mode=str(d.get("mode", "min")),
+            optimizers=tuple(OptimizerSpec.from_json(o)
+                             for o in d.get("optimizers",
+                                            ({"name": "random"},))),
+            execution=ExecutionSpec.from_json(d.get("execution", {})),
+            budget=BudgetSpec.from_json(d.get("budget", {})),
+            transfer=TransferSpec.from_json(d.get("transfer", {})),
+            share_history=bool(d.get("share_history", True)),
+            warm_start=bool(d.get("warm_start", False)),
+        )
+
+    # --------------------------------------------------------------- file IO
+
+    def dumps(self, indent: int = 2) -> str:
+        return json.dumps(self.to_json(), indent=indent, sort_keys=True)
+
+    @staticmethod
+    def loads(text: str) -> "InvestigationSpec":
+        return InvestigationSpec.from_json(json.loads(text))
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.dumps() + "\n")
+
+    @staticmethod
+    def load(path: str) -> "InvestigationSpec":
+        with open(path) as f:
+            return InvestigationSpec.loads(f.read())

@@ -1,0 +1,102 @@
+"""Built-in experiment factories usable by name in spec JSON.
+
+Experiments are code, so an :class:`~repro.core.api.spec.InvestigationSpec`
+references them by factory — either an ``"importable.module:attr"`` path or
+one of the short names registered here.  These built-ins are small synthetic
+cloud-configuration surfaces (closed-form, instant) used by the CLI smoke
+specs, the examples, and the transfer bench; real deployments register their
+own factories via :func:`~repro.core.api.spec.register_experiment` or ship a
+module path.
+
+``linear_shift`` wraps another factory's experiment in an affine transform
+(+ deterministic per-configuration jitter) — the canonical "related space"
+(new provider / new hardware generation, same shape) the transfer machinery
+exists for.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..actions import Experiment, FunctionExperiment
+from ..entities import Configuration, content_hash
+from .spec import register_experiment, resolve_experiment_factory
+
+__all__ = ["quad", "cloud_deploy", "linear_shift"]
+
+
+def quad(x_dim: str = "x", y_dim: str = "y", prop: str = "loss") -> Experiment:
+    """A 2-d quadratic bowl: min at (0.5, -0.5).  Test/smoke surface."""
+
+    def fn(c: Configuration):
+        return {prop: (c[x_dim] - 0.5) ** 2 + (c[y_dim] + 0.5) ** 2}
+
+    return FunctionExperiment(fn=fn, properties=(prop,), name="quad",
+                              params={"x": x_dim, "y": y_dim, "prop": prop})
+
+
+def cloud_deploy(prop: str = "cost_per_1k") -> Experiment:
+    """Synthetic cloud-deployment cost surface (instance × workers ×
+    batch_size × prefetch) — the cooperative-campaign example's workload,
+    exposed as a named factory for spec JSON."""
+    rate = {"m5.large": 90.0, "m5.xlarge": 170.0,
+            "c5.xlarge": 210.0, "c5.2xlarge": 400.0}
+    price = {"m5.large": 0.096, "m5.xlarge": 0.192,
+             "c5.xlarge": 0.17, "c5.2xlarge": 0.34}
+
+    def fn(c: Configuration):
+        eff = min(1.0, 0.4 + 0.13 * np.log2(c["workers"] * c["batch_size"] / 8))
+        eff *= 1.0 + 0.05 * np.log2(c["prefetch"])
+        throughput = rate[c["instance"]] * c["workers"] * eff
+        return {prop: 1000.0 * price[c["instance"]] * c["workers"]
+                / (3.6 * throughput)}
+
+    return FunctionExperiment(fn=fn, properties=(prop,), name="cloud-deploy",
+                              params={"prop": prop})
+
+
+def linear_shift(base: str, scale: float = 1.2, offset: float = 10.0,
+                 noise: float = 0.0, seed: int = 0, name: str = "shifted",
+                 rename: dict = None, **base_params) -> Experiment:
+    """An affine transform of another factory's surface — a related space's
+    experiment (e.g. the same workload on a newer hardware generation).
+
+    ``rename`` maps THIS space's dimension values back to the base
+    experiment's (the inverse of the §IV-1 ``map_values`` rename), so a
+    renamed-value target space can still be evaluated through the source
+    surface.  ``noise`` adds deterministic per-configuration jitter keyed on
+    the configuration digest, so the relationship is strong-but-not-exact.
+    """
+    inner = resolve_experiment_factory(base)(**base_params)
+    rename = rename or {}
+
+    def fn(c: Configuration):
+        values = c.as_dict()
+        for dim, m in rename.items():
+            if dim in values:
+                values[dim] = m.get(values[dim], values[dim])
+        out = inner.measure(Configuration.make(values))
+        jitter = 0.0
+        if noise:
+            h = int(content_hash([seed, c.digest])[:8], 16)
+            jitter = noise * (2.0 * (h / 0xFFFFFFFF) - 1.0)
+        return {k: scale * v + offset + jitter for k, v in out.items()}
+
+    return FunctionExperiment(
+        fn=fn, properties=tuple(inner.observed_properties), name=name,
+        # the FULL parameterization: rename and the base factory's kwargs
+        # change the measured surface, so they must change the experiment
+        # identity too — stored provenance is keyed on it (hermetic
+        # (name, version, params) contract), and two different surfaces
+        # sharing an identifier would let the catalog attribute one
+        # space's values to the other
+        params={"base": base, "scale": scale, "offset": offset,
+                "noise": noise, "seed": seed,
+                "rename": sorted((dim, sorted(m.items()))
+                                 for dim, m in rename.items()),
+                "base_params": sorted(base_params.items())})
+
+
+register_experiment("quad", quad)
+register_experiment("cloud-deploy", cloud_deploy)
+register_experiment("linear-shift", linear_shift)

@@ -56,21 +56,23 @@ import numpy as np
 
 from .discovery import DiscoverySpace
 from .execution import ExecutionBackend, WorkItem
-from .optimizers.base import (FOREIGN_ACTION, Optimizer, OptimizerRun,
-                              SearchAdapter, Trial, _StoppingRule, as_scored)
+from .optimizers.base import (FOREIGN_ACTION, WARM_ACTION, Optimizer,
+                              OptimizerRun, SearchAdapter, Trial,
+                              _StoppingRule, as_scored)
 
 __all__ = ["Campaign", "CampaignResult", "MemberResult", "run_campaign"]
 
 
 @dataclass
 class MemberResult:
-    """One member's view of a finished campaign."""
+    """One member's view of a finished campaign/investigation."""
 
     optimizer: str
     operation_id: str
     run: OptimizerRun          # own trials only (what this member asked for)
     foreign_trials: int        # fleet history folded into its model
-    history_size: int          # own + foreign: what the last model fit saw
+    history_size: int          # own + foreign + warm: what the model fit saw
+    warm_trials: int = 0       # cross-space transfer trials folded pre-run
 
     @property
     def best(self) -> Optional[Trial]:
@@ -122,9 +124,11 @@ class CampaignResult:
 class _Member:
     """Per-optimizer fleet state: one asker on the shared coordinator loop.
 
-    Also the unit :func:`repro.core.optimizers.base._run_pipelined` wraps a
-    solo run in — the caller supplies a ready adapter/rule/rng, so the solo
-    engine and the campaign share one state machine (and one set of
+    Also the unit a solo pipelined run
+    (``run_optimizer(max_inflight=N)`` via
+    :class:`~repro.core.api.investigation.Investigation`) wraps itself in —
+    the caller supplies a ready adapter/rule/rng, so the solo engine and
+    the campaign share one state machine (and one set of
     submit/tell/crash-drain semantics) by construction.
     """
 
@@ -148,7 +152,10 @@ class _Member:
                 and self.own_told + self.inflight < max_trials)
 
     def own_trials(self) -> list:
-        return [t for t in self.adapter.trials if t.action != FOREIGN_ACTION]
+        """Trials this member asked for itself — the foreign-folded fleet
+        history and warm-start transfer trials live only in the adapter."""
+        return [t for t in self.adapter.trials
+                if t.action not in (FOREIGN_ACTION, WARM_ACTION)]
 
 
 class _RunState:
@@ -186,11 +193,12 @@ def _drive_fleet(ds: DiscoverySpace, members: Sequence[_Member],
                  backend: Union[ExecutionBackend, str, None]) -> _RunState:
     """THE coordinator state machine: N askers multiplexed over one backend.
 
-    :func:`~repro.core.optimizers.base._run_pipelined` is this loop with a
-    single member and ``share_history=False`` (``max_inflight=1`` then
-    reproduces the serial trajectory draw-for-draw — regression-gated per
-    optimizer); :meth:`Campaign.run` is the same loop with N members and
-    foreign-tell syncs.  One implementation means one set of
+    A solo pipelined ``run_optimizer(max_inflight=N)`` — routed through
+    :class:`~repro.core.api.investigation.Investigation` — is this loop
+    with a single member and ``share_history=False`` (``max_inflight=1``
+    then reproduces the serial trajectory draw-for-draw — regression-gated
+    per optimizer); :meth:`Campaign.run` is the same loop with N members
+    and foreign-tell syncs.  One implementation means one set of
     submit/tell/crash-drain semantics to maintain.
 
     Round-robin, one submission per member per pass — each member with
@@ -338,44 +346,28 @@ class Campaign:
     def run(self) -> CampaignResult:
         """Drive the fleet to completion and return the campaign result.
 
-        Runs :func:`_drive_fleet` — the coordinator state machine shared
-        with the solo pipelined engine — with foreign-tell syncing per
-        ``share_history``.  A crash surfaced by an in-process backend
-        propagates after the surviving in-flight trials drain, exactly the
-        solo pipelined contract.
+        Thin shim over the declarative engine: hands the prebuilt members
+        to an :class:`~repro.core.api.investigation.Investigation`
+        (:meth:`~repro.core.api.investigation.Investigation.for_members`),
+        which runs :func:`_drive_fleet` — the coordinator state machine
+        shared with the solo pipelined engine — with foreign-tell syncing
+        per ``share_history`` and a final fold so every member's reported
+        history covers the fleet's last completions.  A crash surfaced by
+        an in-process backend propagates after the surviving in-flight
+        trials drain, exactly the solo pipelined contract.  Trajectories
+        are regression-gated draw-for-draw against the pre-shim engine.
         """
-        state = _drive_fleet(self.ds, self.members, self.max_trials,
-                             self.share_history, self.backend)
-        if state.crash is not None:
-            raise state.crash
-        # final fold so every member's reported history covers the fleet's
-        # last completions (models queried post-run see the full union)
-        if self.share_history:
-            for member in self.members:
-                member.foreign_told += member.adapter.sync_foreign()
+        from .api.investigation import Investigation  # local: avoid cycle
+
+        inv = Investigation.for_members(
+            self.ds, self.members, self.metric, self.mode, self.max_trials,
+            share_history=self.share_history, backend=self.backend)
+        res = inv.run()
         return CampaignResult(
             metric=self.metric,
             mode=self.mode,
-            members=[self._result_of(m) for m in self.members],
-            events=state.events,
-        )
-
-    def _result_of(self, member: _Member) -> MemberResult:
-        run = OptimizerRun(
-            optimizer=member.label,
-            metric=self.metric,
-            mode=self.mode,
-            trials=member.own_trials(),
-            operation_id=member.adapter.operation_id,
-            batch_size=1,
-            max_inflight=member.max_inflight,
-        )
-        return MemberResult(
-            optimizer=member.label,
-            operation_id=member.adapter.operation_id,
-            run=run,
-            foreign_trials=member.foreign_told,
-            history_size=len(member.adapter.trials),
+            members=res.members,
+            events=res.events,
         )
 
 

@@ -17,7 +17,7 @@ from typing import Optional, Sequence
 import numpy as np
 
 __all__ = ["kmeans", "silhouette_score", "silhouette_clusters", "select_representatives",
-           "select_top_k", "select_linspace"]
+           "select_top_k", "select_linspace", "select_indices"]
 
 
 def kmeans(X: np.ndarray, k: int, rng: np.random.Generator, n_iter: int = 100):
@@ -128,3 +128,21 @@ def select_linspace(values: np.ndarray, k: int) -> list:
     order = np.argsort(v)
     idx = np.linspace(0, len(v) - 1, num=min(k, len(v)))
     return sorted({int(order[int(round(i))]) for i in idx})
+
+
+def select_indices(values: np.ndarray, selection: str,
+                   rng: np.random.Generator, top_k: int = 5) -> list:
+    """Representative-point selection dispatch shared by RSSC (§IV-2) and the
+    Investigation transfer stage: ``selection`` ∈ {"clustering", "top5",
+    "linspace"} — the paper's method and its two §V-B2 baselines.  The
+    linspace baseline sizes itself to the clustering pick (same rng draw) so
+    the comparison is point-count-matched, exactly the rssc_transfer
+    behaviour this was factored out of."""
+    if selection == "clustering":
+        return select_representatives(values, rng)
+    if selection == "top5":
+        return select_top_k(values, k=top_k)
+    if selection == "linspace":
+        k = len(select_representatives(values, rng))  # match clustering count
+        return select_linspace(values, k)
+    raise ValueError(f"unknown selection method {selection!r}")

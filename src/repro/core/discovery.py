@@ -109,8 +109,18 @@ class DiscoverySpace:
         self.space_id = space_id or content_hash(
             {"space": space.digest, "actions": actions.digest}
         )
+        # Catalog registration: the Ω-only digest + entity metadata are what
+        # SpaceCatalog.find_related matches on — a target investigation can
+        # discover this space as a transfer source without reconstructing
+        # its (code-only) experiments.
         self.store.register_space(
-            self.space_id, space.to_json(), actions.identifiers
+            self.space_id, space.to_json(), actions.identifiers,
+            space_digest=space.digest,
+            meta={
+                "dimensions": list(space.names),
+                "size": space.size if space.finite else None,
+                "properties": list(actions.observed_properties),
+            },
         )
         # Stale-claim GC pacing: the batch/pipelined drivers sweep at most
         # once per lease interval — and the FIRST call always sweeps, so

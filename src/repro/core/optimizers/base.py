@@ -31,7 +31,6 @@ from __future__ import annotations
 
 import abc
 import math
-from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Callable, List, Optional, Sequence, Tuple, Union
 
@@ -44,7 +43,7 @@ from ..execution import ExecutionBackend
 
 __all__ = ["Trial", "OptimizerRun", "ScoredCandidate", "SearchAdapter",
            "Optimizer", "run_optimizer", "hypergeom_p_found", "as_scored",
-           "FOREIGN_ACTION"]
+           "FOREIGN_ACTION", "WARM_ACTION"]
 
 #: Action tag of a trial folded into an adapter's history from ANOTHER
 #: operation's sampling record (a campaign foreign tell).  Deliberately not
@@ -52,6 +51,15 @@ __all__ = ["Trial", "OptimizerRun", "ScoredCandidate", "SearchAdapter",
 #: optimizer-visible history — the store record of the originating operation
 #: is the single source of truth, so nothing is double-recorded.
 FOREIGN_ACTION = "foreign"
+
+#: Action tag of a trial folded by :meth:`SearchAdapter.warm_start` — a value
+#: transferred from a *related* space (paper §IV-3/4): typically a surrogate
+#: prediction, sometimes a re-measured representative.  Like foreign trials
+#: these exist only in the optimizer-visible history; unlike them, warm
+#: digests are NOT marked seen, so the optimizer may still propose (and truly
+#: measure) a warm-predicted configuration — predictions guide the model,
+#: they never veto a measurement.
+WARM_ACTION = "warm"
 
 
 @dataclass(frozen=True)
@@ -199,6 +207,9 @@ class SearchAdapter:
         # nothing ever leaves a history), so per-sync dedup is O(new rows)
         # instead of rebuilding a set over the whole history every call.
         self._history_digests: set = set()
+        # Trials folded by warm_start (cross-space transfer): counted apart
+        # from told trials so budgets/stopping rules never charge for them.
+        self.warm_told: int = 0
 
     @property
     def space(self):
@@ -240,6 +251,37 @@ class SearchAdapter:
         trial = self._make_trial(result, len(self.trials))
         self.tell([trial])
         return trial
+
+    def warm_start(self, entries: Sequence[Tuple[Configuration, float]]) -> int:
+        """Fold cross-space transferred values into the model-visible history
+        (the paper's §IV-3/4 reuse: surrogate predictions over a related,
+        already-measured space warm-starting a fresh search).
+
+        Each ``(configuration, value)`` entry becomes an
+        ``action='warm'`` :class:`Trial`, appended in the given order — the
+        caller supplies a deterministic order, and this method is rng-free,
+        so warm-started trajectories are exactly reproducible.  Unlike
+        :meth:`tell`, warm digests are NOT added to the seen set: a warm
+        value is (usually) a *prediction*, and excluding its configuration
+        from proposals would let an approximate surrogate veto ever
+        measuring the true best.  The optimizer trains on warm values
+        immediately (they count toward model-phase thresholds like
+        ``n_initial``, exactly as foreign trials do) and re-proposing a warm
+        configuration measures it for real — the measured trial then joins
+        the history alongside the prediction, correcting the model.
+
+        Warm trials are never told to the store (no sampling-record event:
+        the source space's record is the single source of truth, as with
+        foreign tells) and never charged against budgets or stopping rules
+        — drivers count *own* told trials.  Returns the number folded.
+        """
+        folded = 0
+        for config, value in entries:
+            self.trials.append(
+                Trial(config, float(value), WARM_ACTION, len(self.trials)))
+            folded += 1
+        self.warm_told += folded
+        return folded
 
     def sync_foreign(self) -> int:
         """Fold other operations' sampling events into this history — the
@@ -501,49 +543,6 @@ class _StoppingRule:
             self.stop = True
 
 
-def _run_pipelined(
-    optimizer: Optimizer,
-    adapter: SearchAdapter,
-    rng: np.random.Generator,
-    max_trials: int,
-    rule: _StoppingRule,
-    max_inflight: int,
-    backend,
-) -> None:
-    """The Lynceus-style pipelined ask/tell engine.
-
-    Keeps up to ``max_inflight`` trials outstanding on an execution backend;
-    every completion is told immediately (a partial tell) and its slot is
-    refilled by asking the optimizer for ONE replacement — no barrier, so a
-    straggling experiment never stalls the next ask.  In-flight candidates
-    are visible to ``ask`` through ``adapter.pending``, which keeps proposals
-    distinct without mutating optimizer state.  Once the stopping rule (or a
-    crash) triggers, nothing new is submitted but trials already in flight
-    are drained and told — they are paid for; an in-process crash then
-    propagates, matching the batch engine.
-
-    Records land in completion order; with ``max_inflight=1`` completion
-    order *is* submission order and the run reproduces the serial
-    ``batch_size=1`` trajectory draw-for-draw (same rng stream, same record).
-
-    Implemented as a one-member fleet on the campaign coordinator
-    (:func:`repro.core.campaign._drive_fleet`, with foreign-tell syncing
-    off), so the solo engine and N-optimizer campaigns share ONE
-    submit/tell/crash-drain state machine — the
-    ``test_solo_campaign_reproduces_pipelined_serial_trajectory`` and
-    ``test_max_inflight_1_reproduces_serial_trajectory`` gates pin its
-    semantics per optimizer family.
-    """
-    from ..campaign import _Member, _drive_fleet  # local: avoid cycle
-
-    member = _Member(optimizer.name, optimizer, adapter, rng, rule,
-                     max_inflight)
-    state = _drive_fleet(adapter.ds, [member], max_trials,
-                         share_history=False, backend=backend)
-    if state.crash is not None:
-        raise state.crash
-
-
 def run_optimizer(
     optimizer: Optimizer,
     ds: DiscoverySpace,
@@ -560,16 +559,23 @@ def run_optimizer(
 ) -> OptimizerRun:
     """Run one optimization operation on a Discovery Space.
 
-    Two engines share the ask/tell protocol and the stopping rule:
+    Thin shim over the declarative engine: builds a one-member
+    :class:`~repro.core.api.investigation.Investigation`
+    (:meth:`~repro.core.api.investigation.Investigation.from_components`)
+    and returns its member's run — trajectories are regression-gated
+    draw-for-draw against the pre-shim engines.  Two engine shapes share
+    the ask/tell protocol and the stopping rule:
 
     * **batched** (default): each step asks for a ``batch_size`` candidate
       batch and evaluates it with ``workers`` parallel experiment workers,
       barrier-synchronizing per batch (with the defaults this is the classic
       serial loop, draw-for-draw);
     * **pipelined** (``max_inflight=N``): up to N trials stay outstanding on
-      an execution backend; completed trials are told and replaced
-      immediately, so slow experiments never stall the next ask.
-      ``max_inflight=1`` reproduces the serial trajectory draw-for-draw.
+      an execution backend (a one-member fleet on the campaign coordinator,
+      :func:`repro.core.campaign._drive_fleet`); completed trials are told
+      and replaced immediately, so slow experiments never stall the next
+      ask.  ``max_inflight=1`` reproduces the serial trajectory
+      draw-for-draw.
 
     ``backend`` routes experiment execution (``serial | thread | process |
     queue`` or an :class:`~repro.core.execution.ExecutionBackend`); None
@@ -585,43 +591,16 @@ def run_optimizer(
         raise ValueError(f"batch_size must be >= 1, got {batch_size}")
     if max_inflight is not None and max_inflight < 1:
         raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
-    rng = rng if rng is not None else np.random.default_rng(optimizer.seed)
-    adapter = SearchAdapter(ds, metric, mode, optimizer_name=optimizer.name)
-    rule = _StoppingRule(adapter, patience, min_trials)
-    if max_inflight is not None:
-        _run_pipelined(optimizer, adapter, rng, max_trials, rule,
-                       max_inflight, backend)
-    else:
-        # one worker pool / backend for the whole run, not one per batch
-        owned = not isinstance(backend, ExecutionBackend)
-        pool = (ThreadPoolExecutor(max_workers=workers)
-                if workers > 1 and backend is None else None)
-        engine = (ds.execution_backend(backend, workers=workers)
-                  if backend is not None else None)
-        try:
-            while not rule.stop and len(adapter.trials) < max_trials:
-                n = min(batch_size, max_trials - len(adapter.trials))
-                batch = optimizer.ask(adapter, rng, n=n)
-                if not batch:
-                    break
-                values = adapter.evaluate_batch(batch, workers=workers,
-                                                executor=pool, backend=engine)
-                for value in values:
-                    rule.observe(value)
-        finally:
-            if pool is not None:
-                pool.shutdown(wait=False)
-            if engine is not None and owned:
-                engine.close()
-    return OptimizerRun(
-        optimizer=optimizer.name,
-        metric=metric,
-        mode=mode,
-        trials=adapter.trials,
-        operation_id=adapter.operation_id,
-        batch_size=batch_size,
-        max_inflight=max_inflight,
-    )
+    from ..api.investigation import Investigation  # local: avoid cycle
+
+    inv = Investigation.from_components(
+        ds, [optimizer], metric, mode=mode,
+        rngs=[rng if rng is not None
+              else np.random.default_rng(optimizer.seed)],
+        max_trials=max_trials, patience=patience, min_trials=min_trials,
+        batch_size=batch_size, workers=workers, max_inflight=max_inflight,
+        backend=backend)
+    return inv.run().members[0].run
 
 
 def hypergeom_p_found(space_size: int, target_count: int, n_draws: int) -> float:

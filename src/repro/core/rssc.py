@@ -24,7 +24,7 @@ from typing import Mapping, Optional, Sequence
 import numpy as np
 
 from .actions import ActionSpace, MeasurementError, SurrogateExperiment
-from .clustering import select_linspace, select_representatives, select_top_k
+from .clustering import select_indices
 from .discovery import DiscoverySpace
 from .entities import Configuration, Sample
 from .transfer import (TransferAssessment, TransferCriteria, assess_transfer)
@@ -95,15 +95,7 @@ def rssc_transfer(
         raise ValueError(f"source space has only {len(samples)} samples with "
                          f"{property_name!r}; RSSC needs a well-sampled source")
     values = np.array([s.value(property_name) for s in samples])
-    if selection == "clustering":
-        idx = select_representatives(values, rng)
-    elif selection == "top5":
-        idx = select_top_k(values, k=top_k)
-    elif selection == "linspace":
-        k = len(select_representatives(values, rng))  # match clustering count
-        idx = select_linspace(values, k)
-    else:
-        raise ValueError(f"unknown selection method {selection!r}")
+    idx = select_indices(values, selection, rng, top_k=top_k)
     reps = [samples[i].configuration for i in idx]
     source_values = values[np.array(idx)]
 

@@ -171,6 +171,16 @@ _MIGRATIONS = {
         "priority": "REAL NOT NULL DEFAULT 0",
         "lease_expires_at": "REAL NOT NULL DEFAULT 0",
     },
+    # Catalog columns (SpaceCatalog, paper §IV reuse discovery): the space's
+    # Ω-only content digest — space_id hashes (Ω, A) so two studies with the
+    # same dimensions but different action spaces get different ids, while
+    # space_digest lets the catalog see they share Ω — plus entity metadata
+    # (dimension names, |Ω|, observed properties) for relatedness queries
+    # without parsing every space_json.
+    "spaces": {
+        "space_digest": "TEXT NOT NULL DEFAULT ''",
+        "meta": "TEXT NOT NULL DEFAULT '{}'",
+    },
 }
 
 # Allocates the next per-operation sequence number and inserts the record in
@@ -304,13 +314,56 @@ class SampleStore:
 
     # -- spaces & operations ----------------------------------------------------
 
-    def register_space(self, space_id: str, space_json: Mapping, action_ids: Sequence[str]) -> None:
-        self._write(
-            "INSERT OR IGNORE INTO spaces(space_id, space_json, actions, created_at)"
-            " VALUES (?,?,?,?)",
-            (space_id, canonical_json(space_json), canonical_json(list(action_ids)),
-             self.clock.time()),
-        )
+    def register_space(self, space_id: str, space_json: Mapping, action_ids: Sequence[str],
+                       space_digest: str = "", meta: Optional[Mapping] = None) -> None:
+        """Register a Discovery Space definition (idempotent).
+
+        ``space_digest`` is the Ω-only content hash and ``meta`` the entity
+        metadata (dimension names, |Ω|, observed properties) the
+        :class:`~repro.core.api.catalog.SpaceCatalog` queries; a re-register
+        backfills them onto rows written by pre-catalog builds (whose
+        migrated columns hold the empty defaults).
+        """
+        with self._conn() as conn:
+            conn.execute(
+                "INSERT OR IGNORE INTO spaces"
+                "(space_id, space_json, actions, created_at, space_digest, meta)"
+                " VALUES (?,?,?,?,?,?)",
+                (space_id, canonical_json(space_json),
+                 canonical_json(list(action_ids)), self.clock.time(),
+                 space_digest, canonical_json(meta or {})),
+            )
+            if space_digest:
+                conn.execute(
+                    "UPDATE spaces SET space_digest=?, meta=?"
+                    " WHERE space_id=? AND space_digest=''",
+                    (space_digest, canonical_json(meta or {}), space_id),
+                )
+
+    def list_spaces(self) -> list:
+        """Every registered space definition, oldest first — the raw rows the
+        :class:`~repro.core.api.catalog.SpaceCatalog` builds entries from."""
+        rows = self._rows(
+            "SELECT space_id, space_json, actions, space_digest, meta,"
+            " created_at FROM spaces ORDER BY created_at, space_id")
+        return [
+            {"space_id": r[0], "space_json": json.loads(r[1]),
+             "actions": json.loads(r[2]), "space_digest": r[3],
+             "meta": json.loads(r[4]), "created_at": r[5]}
+            for r in rows
+        ]
+
+    def space_stats(self) -> dict:
+        """Per-space sampling-record counts in one grouped scan:
+        ``{space_id: {records, measured, failed, distinct}}``.  Spaces with
+        an empty record are absent — the catalog treats them as 0s."""
+        rows = self._rows(
+            "SELECT space_id, COUNT(*), SUM(action='measured'),"
+            " SUM(action='failed'), COUNT(DISTINCT config_digest)"
+            " FROM records GROUP BY space_id")
+        return {r[0]: {"records": int(r[1]), "measured": int(r[2] or 0),
+                       "failed": int(r[3] or 0), "distinct": int(r[4])}
+                for r in rows}
 
     def register_operation(self, operation_id: str, space_id: str, kind: str,
                            meta: Optional[Mapping] = None) -> None:
@@ -383,6 +436,44 @@ class SampleStore:
             PropertyValue(name=r[0], value=r[1], experiment_id=r[2],
                           predicted=bool(r[3]), timestamp=r[4])
             for r in self._rows(sql, params)
+        ]
+
+    def measured_property_values(self, space_id: str, prop: str,
+                                 experiment_ids: Optional[Sequence[str]] = None
+                                 ) -> list:
+        """``[(configuration, value), ...]``: the latest *measured* (not
+        predicted) value of ``prop`` for every non-failed configuration in
+        the space's sampling record, ordered by first appearance.
+
+        One JOIN scan instead of two point queries per digest — this is the
+        SpaceCatalog's transfer-source read, which runs over a well-sampled
+        space (possibly thousands of digests) once per candidate attempt.
+        ``experiment_ids`` restricts provenance to the space's action space.
+        """
+        sql = (
+            "SELECT c.digest, c.config, pv.value"
+            " FROM (SELECT config_digest, MIN(id) AS first_id FROM records"
+            "       WHERE space_id=? AND action != 'failed'"
+            "       GROUP BY config_digest) r"
+            " JOIN configurations c ON c.digest = r.config_digest"
+            " JOIN property_values pv ON pv.config_digest = r.config_digest"
+            " WHERE pv.property=? AND pv.predicted=0")
+        params: list = [space_id, prop]
+        if experiment_ids is not None:
+            marks = ",".join("?" * len(experiment_ids))
+            sql += f" AND pv.experiment_id IN ({marks})"
+            params.extend(experiment_ids)
+        sql += " ORDER BY r.first_id, pv.id"
+        latest: dict = {}
+        for digest, config_json, value in self._rows(sql, params):
+            # dict preserves first-appearance order; later writes for the
+            # same digest overwrite the value (last measured write wins,
+            # matching the read path's reconciliation)
+            latest[digest] = (config_json, float(value))
+        return [
+            (Configuration(values=tuple((k, _thaw(v))
+                                        for k, v in json.loads(cj))), val)
+            for cj, val in latest.values()
         ]
 
     def has_values(self, config_digest: str, experiment_id: str) -> bool:

@@ -1,0 +1,214 @@
+"""Tests for the persistent SpaceCatalog (registration, stats, relatedness).
+
+Every DiscoverySpace registers itself (Ω digest + entity metadata) in the
+store's ``spaces`` table; the catalog joins that with per-space record
+counts and answers ``find_related`` queries — the discovery step of the
+paper's §IV cross-space reuse.  Edge cases pinned here: disjoint dimension
+sets never match, value renames connect through explicit mappings or
+positional inference (categorical only — numeric value sets are
+quantities), and partial overlap is gated by ``min_overlap``.
+"""
+
+import numpy as np
+
+from repro.core import (ActionSpace, Configuration, DiscoverySpace,
+                        Dimension, FunctionExperiment, MeasurementError,
+                        ProbabilitySpace, SampleStore, SpaceCatalog)
+from repro.core.api.catalog import _match_dimension
+
+
+def make_ds(store, dims, prop="m", name="exp", fn=None):
+    fn = fn or (lambda c: {prop: 1.0})
+    exp = FunctionExperiment(fn=fn, properties=(prop,), name=name)
+    return DiscoverySpace(space=ProbabilitySpace.make(dims),
+                          actions=ActionSpace.make([exp]), store=store)
+
+
+def dims_xy(xvals=(1, 2, 3), yvals=("a", "b")):
+    return [Dimension.discrete("x", list(xvals)),
+            Dimension.categorical("y", list(yvals))]
+
+
+# ------------------------------------------------------------- registration
+
+
+def test_every_discovery_space_registers_a_catalog_entry():
+    store = SampleStore(":memory:")
+    ds = make_ds(store, dims_xy())
+    cat = SpaceCatalog(store)
+    entries = cat.entries()
+    assert [e.space_id for e in entries] == [ds.space_id]
+    e = entries[0]
+    assert e.space_digest == ds.space.digest
+    assert e.meta["dimensions"] == ["x", "y"]
+    assert e.meta["size"] == 6
+    assert e.properties == ("m",)
+    assert e.n_records == e.n_measured == 0
+
+
+def test_entry_counts_track_the_sampling_record():
+    store = SampleStore(":memory:")
+
+    def flaky(c):
+        if c["x"] == 3:
+            raise MeasurementError("cliff")
+        return {"m": float(c["x"])}
+
+    ds = make_ds(store, dims_xy(), fn=flaky)
+    configs = list(ds.space.all_configurations())
+    ds.sample_batch(configs, operation_id="op")
+    ds.sample_batch(configs[:2], operation_id="op2")  # reused, not measured
+    e = SpaceCatalog(store).get(ds.space_id)
+    assert e.n_records == 8          # 6 + 2 reuse events
+    assert e.n_measured == 4         # x==3 slots failed
+    assert e.n_failed == 2
+    assert e.n_distinct == 6
+
+
+def test_same_dimensions_different_actions_are_two_entries_one_digest():
+    store = SampleStore(":memory:")
+    a = make_ds(store, dims_xy(), name="exp-a")
+    b = make_ds(store, dims_xy(), name="exp-b")
+    assert a.space_id != b.space_id
+    entries = SpaceCatalog(store).entries()
+    assert len(entries) == 2
+    assert len({e.space_digest for e in entries}) == 1
+
+
+# ------------------------------------------------------------- find_related
+
+
+def seeded(store, dims, n=4, **kw):
+    """A measured space: n configurations sampled so find_related sees data."""
+    ds = make_ds(store, dims, **kw)
+    ds.sample_batch(list(ds.space.all_configurations())[:n], operation_id="op")
+    return ds
+
+
+def test_find_related_exact_match_ranks_first():
+    store = SampleStore(":memory:")
+    src = seeded(store, dims_xy(), name="exp-src")
+    tgt = make_ds(store, dims_xy(), name="exp-tgt")
+    rel = SpaceCatalog(store).find_related(tgt.space,
+                                           exclude=[tgt.space_id])
+    assert [r.entry.space_id for r in rel] == [src.space_id]
+    assert rel[0].exact and rel[0].overlap == 1.0
+    assert rel[0].shared_dimensions == ("x", "y")
+    assert rel[0].mapping == {}
+
+
+def test_find_related_disjoint_dimensions_never_match():
+    store = SampleStore(":memory:")
+    seeded(store, dims_xy(), name="exp-src")
+    other = ProbabilitySpace.make([Dimension.discrete("cores", [1, 2]),
+                                   Dimension.discrete("mem", [4, 8])])
+    assert SpaceCatalog(store).find_related(other) == []
+    # even with min_overlap 0 a zero-dimension match is not 'related'
+    assert SpaceCatalog(store).find_related(other, min_overlap=0.0) == []
+
+
+def test_find_related_partial_overlap_gated_by_min_overlap():
+    store = SampleStore(":memory:")
+    src = seeded(store, dims_xy(), name="exp-src")
+    superset = ProbabilitySpace.make(
+        dims_xy() + [Dimension.discrete("z", [0, 1])])
+    cat = SpaceCatalog(store)
+    assert cat.find_related(superset) == []           # default needs 1.0
+    rel = cat.find_related(superset, min_overlap=0.6)
+    assert [r.entry.space_id for r in rel] == [src.space_id]
+    assert rel[0].overlap == 2 / 3
+    assert rel[0].shared_dimensions == ("x", "y")
+
+
+def test_find_related_renamed_values_need_a_mapping_or_inference():
+    store = SampleStore(":memory:")
+    src = seeded(store, dims_xy(yvals=("gpu-old-1", "gpu-old-2")),
+                 name="exp-src")
+    tgt_space = ProbabilitySpace.make(
+        dims_xy(yvals=("gpu-new-1", "gpu-new-2")))
+    cat = SpaceCatalog(store)
+
+    # positional inference: categorical, same cardinality => inferred rename
+    rel = cat.find_related(tgt_space)
+    assert len(rel) == 1 and rel[0].entry.space_id == src.space_id
+    assert rel[0].mapping == {"y": {"gpu-old-1": "gpu-new-1",
+                                    "gpu-old-2": "gpu-new-2"}}
+    assert rel[0].inferred_dims == ("y",)
+    assert not rel[0].exact
+
+    # an explicit mapping overrides inference (here: crossed renames)
+    rel = cat.find_related(tgt_space, mappings={
+        "y": {"gpu-old-1": "gpu-new-2", "gpu-old-2": "gpu-new-1"}})
+    assert rel[0].mapping == {"y": {"gpu-old-1": "gpu-new-2",
+                                    "gpu-old-2": "gpu-new-1"}}
+    assert rel[0].inferred_dims == ()
+
+    # a mapping that misses the target's value set is not a match
+    assert cat.find_related(tgt_space, mappings={
+        "y": {"gpu-old-1": "gpu-other"}}) == []
+
+
+def test_find_related_reordered_categorical_values_match_as_identity():
+    """The same unordered value set declared in a different order is the
+    same dimension: positional inference must NOT cross-rename it."""
+    store = SampleStore(":memory:")
+    src = seeded(store, dims_xy(yvals=("a", "b")), name="exp-src")
+    reordered = ProbabilitySpace.make(dims_xy(yvals=("b", "a")))
+    rel = SpaceCatalog(store).find_related(reordered)
+    assert [r.entry.space_id for r in rel] == [src.space_id]
+    assert rel[0].mapping == {} and rel[0].exact
+    assert rel[0].inferred_dims == ()
+
+
+def test_find_related_never_infers_numeric_value_renames():
+    store = SampleStore(":memory:")
+    seeded(store, [Dimension.discrete("mem_gb", [1, 2, 4])], name="exp-src")
+    bigger = ProbabilitySpace.make([Dimension.discrete("mem_gb", [8, 16, 32])])
+    cat = SpaceCatalog(store)
+    assert cat.find_related(bigger) == []   # quantities, not labels
+    # ...but an explicit mapping is allowed to assert the correspondence
+    rel = cat.find_related(bigger, mappings={"mem_gb": {1: 8, 2: 16, 4: 32}})
+    assert len(rel) == 1 and rel[0].mapping == {"mem_gb": {1: 8, 2: 16, 4: 32}}
+
+
+def test_find_related_filters_metric_and_data_volume():
+    store = SampleStore(":memory:")
+    src = seeded(store, dims_xy(), n=4, prop="latency", name="exp-src")
+    seeded(store, dims_xy(), n=2, prop="latency", name="exp-small")
+    seeded(store, dims_xy(), n=4, prop="throughput", name="exp-other")
+    tgt = ProbabilitySpace.make(dims_xy())
+    rel = SpaceCatalog(store).find_related(tgt, metric="latency",
+                                           min_measured=3)
+    assert [r.entry.space_id for r in rel] == [src.space_id]
+
+
+def test_match_dimension_kind_and_range_rules():
+    cont = Dimension.continuous("t", 0.0, 1.0)
+    assert _match_dimension(cont, Dimension.continuous("t", 0.0, 1.0),
+                            None) == ({}, False)
+    assert _match_dimension(cont, Dimension.continuous("t", 0.0, 2.0),
+                            None) is None
+    assert _match_dimension(cont, Dimension.discrete("t", [0, 1]),
+                            None) is None
+
+
+# ------------------------------------------------------------ measured_pairs
+
+
+def test_measured_pairs_returns_only_real_measured_values():
+    store = SampleStore(":memory:")
+
+    def flaky(c):
+        if c["x"] == 3:
+            raise MeasurementError("cliff")
+        return {"m": float(c["x"]) * 10}
+
+    ds = make_ds(store, dims_xy(), fn=flaky)
+    ds.sample_batch(list(ds.space.all_configurations()), operation_id="op")
+    cat = SpaceCatalog(store)
+    entry = cat.get(ds.space_id)
+    pairs = cat.measured_pairs(entry, "m")
+    assert len(pairs) == 4                      # the x==3 failures dropped
+    assert all(isinstance(c, Configuration) and v == c["x"] * 10
+               for c, v in pairs)
+    assert cat.measured_pairs(entry, "no-such-metric") == []

@@ -1,0 +1,292 @@
+"""Tests for the declarative Investigation API (spec + engine + CLI).
+
+Contracts:
+
+* **spec** — JSON round-trip at every nesting level (including non-string
+  mapping values), STRICT parsing (unknown fields and schema-version
+  mismatches raise), registry/import-path experiment resolution;
+* **engine** — a spec-driven Investigation reproduces ``run_optimizer``
+  draw-for-draw (the existing gates pin the shims; this pins the spec
+  path), engine dispatch matches the execution block, multi-optimizer specs
+  run as sharing campaigns, ``resume()`` folds prior history and reuses;
+* **CLI** — ``python -m repro.core.api`` run/--dry-run/validate/catalog.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (ActionSpace, DiscoverySpace, Dimension,
+                        FunctionExperiment, Investigation, InvestigationSpec,
+                        ProbabilitySpace, SampleStore)
+from repro.core.api.__main__ import main as cli_main
+from repro.core.api.spec import (SCHEMA_VERSION, BudgetSpec, ExecutionSpec,
+                                 ExperimentSpec, OptimizerSpec, TransferSpec)
+from repro.core.optimizers import OPTIMIZER_REGISTRY, run_optimizer
+
+
+def quad_space(n=8):
+    vals = [round(v, 3) for v in np.linspace(-2, 2, n)]
+    return ProbabilitySpace.make([
+        Dimension.discrete("x", vals),
+        Dimension.discrete("y", vals),
+    ])
+
+
+def full_spec(**overrides):
+    base = dict(
+        name="test-study",
+        space=quad_space(),
+        metric="loss",
+        experiments=(ExperimentSpec("quad"),),
+        optimizers=(OptimizerSpec("tpe", seed=3),),
+        execution=ExecutionSpec(backend="serial", workers=2),
+        budget=BudgetSpec(max_trials=9, patience=9),
+        transfer=TransferSpec(enabled=True, max_warm=32,
+                              mappings={"x": ((1.0, 2.0),)}),
+        share_history=False,
+        warm_start=True,
+    )
+    base.update(overrides)
+    return InvestigationSpec(**base)
+
+
+def trail(trials):
+    return [(t.configuration.digest, t.value, t.action) for t in trials]
+
+
+# ------------------------------------------------------------ spec round-trip
+
+
+def test_spec_round_trips_through_json():
+    spec = full_spec()
+    rt = InvestigationSpec.loads(spec.dumps())
+    assert rt == spec
+    # mappings preserve non-string value types through the pair-list encoding
+    assert rt.transfer.mappings["x"] == ((1.0, 2.0),)
+    assert json.loads(spec.dumps())["schema_version"] == SCHEMA_VERSION
+
+
+def test_spec_file_round_trip(tmp_path):
+    path = str(tmp_path / "spec.json")
+    spec = full_spec()
+    spec.save(path)
+    assert InvestigationSpec.load(path) == spec
+
+
+@pytest.mark.parametrize("mutate, ctx", [
+    (lambda d: d.update(surprise=1), "investigation"),
+    (lambda d: d["execution"].update(wrkers=4), "execution"),
+    (lambda d: d["budget"].update(maxtrials=4), "budget"),
+    (lambda d: d["transfer"].update(minr=0.5), "transfer"),
+    (lambda d: d["optimizers"][0].update(sed=1), "optimizer"),
+    (lambda d: d["experiments"][0].update(factry="quad"), "experiment"),
+])
+def test_spec_rejects_unknown_fields_at_every_level(mutate, ctx):
+    d = full_spec().to_json()
+    mutate(d)
+    with pytest.raises(ValueError, match=f"{ctx}: unknown field"):
+        InvestigationSpec.from_json(d)
+
+
+def test_spec_rejects_wrong_schema_version():
+    d = full_spec().to_json()
+    d["schema_version"] = SCHEMA_VERSION + 1
+    with pytest.raises(ValueError, match="schema_version"):
+        InvestigationSpec.from_json(d)
+
+
+def test_spec_rejects_bad_values():
+    with pytest.raises(ValueError, match="unknown optimizer"):
+        OptimizerSpec("definitely-not-registered")
+    with pytest.raises(ValueError, match="unknown backend"):
+        ExecutionSpec(backend="teleport")
+    with pytest.raises(ValueError, match="mode"):
+        full_spec(mode="median")
+    with pytest.raises(ValueError, match="batch_size must be 1"):
+        full_spec(optimizers=(OptimizerSpec("random"),
+                              OptimizerSpec("tpe")),
+                  execution=ExecutionSpec(batch_size=3))
+    with pytest.raises(ValueError, match="required"):
+        InvestigationSpec.from_json({"schema_version": SCHEMA_VERSION,
+                                     "name": "x"})
+
+
+def test_experiment_factory_resolution_registry_and_import_path():
+    by_name = ExperimentSpec("quad").build()
+    by_path = ExperimentSpec("repro.core.api.workloads:quad").build()
+    assert by_name.identifier == by_path.identifier
+    with pytest.raises(ValueError, match="unknown experiment"):
+        ExperimentSpec("no-such-factory").build()
+
+
+# ------------------------------------------------------- engine equivalence
+
+
+@pytest.mark.parametrize("name", list(OPTIMIZER_REGISTRY))
+def test_spec_driven_run_matches_run_optimizer(name):
+    """The declarative path and the legacy shim produce identical
+    trajectories for the same seed/budget — one engine, two doors."""
+    def make_ds():
+        exp = FunctionExperiment(
+            fn=lambda c: {"loss": (c["x"] - 0.5) ** 2 + (c["y"] + 0.5) ** 2},
+            properties=("loss",), name="quad")
+        return DiscoverySpace(space=quad_space(),
+                              actions=ActionSpace.make([exp]),
+                              store=SampleStore(":memory:"))
+
+    ds_ref = make_ds()
+    ref = run_optimizer(OPTIMIZER_REGISTRY[name](seed=5), ds_ref, "loss",
+                        max_trials=7, patience=99,
+                        rng=np.random.default_rng(5))
+    spec = InvestigationSpec(
+        name="eq", space=quad_space(), metric="loss",
+        experiments=(ExperimentSpec("quad"),),
+        optimizers=(OptimizerSpec(name, seed=5),),
+        budget=BudgetSpec(max_trials=7, patience=99))
+    res = Investigation(spec).run()
+    assert res.engine == "batched"
+    assert trail(res.members[0].run.trials) == trail(ref.trials)
+
+
+def test_engine_dispatch_follows_execution_block():
+    spec = full_spec(transfer=TransferSpec(), warm_start=False)
+    assert Investigation(spec).engine == "batched"
+    spec2 = full_spec(transfer=TransferSpec(), warm_start=False,
+                      execution=ExecutionSpec(max_inflight=2))
+    assert Investigation(spec2).engine == "pipelined"
+    spec3 = full_spec(transfer=TransferSpec(), warm_start=False,
+                      optimizers=(OptimizerSpec("random"),
+                                  OptimizerSpec("tpe")),
+                      execution=ExecutionSpec())
+    assert Investigation(spec3).engine == "campaign"
+
+
+def test_multi_optimizer_spec_runs_sharing_campaign():
+    spec = InvestigationSpec(
+        name="fleet", space=quad_space(), metric="loss",
+        experiments=(ExperimentSpec("quad"),),
+        optimizers=(OptimizerSpec("random", seed=0),
+                    OptimizerSpec("tpe", seed=1)),
+        budget=BudgetSpec(max_trials=6, patience=99))
+    res = Investigation(spec).run()
+    assert res.engine == "campaign"
+    assert len(res.members) == 2
+    assert [m.optimizer for m in res.members] == ["random", "tpe"]
+    for m in res.members:
+        assert m.run.num_trials == 6
+        assert m.foreign_trials > 0          # sharing really happened
+    assert res.num_trials == 12
+    s = res.summary()
+    assert s["trials"] == 12 and len(s["members"]) == 2
+
+
+def test_duplicate_family_members_get_unique_labels_and_operations():
+    spec = InvestigationSpec(
+        name="twins", space=quad_space(), metric="loss",
+        experiments=(ExperimentSpec("quad"),),
+        optimizers=(OptimizerSpec("random", seed=0),
+                    OptimizerSpec("random", seed=1)),
+        budget=BudgetSpec(max_trials=3, patience=99))
+    res = Investigation(spec).run()
+    labels = [m.optimizer for m in res.members]
+    assert labels == ["random", "random#2"]
+    assert len({m.operation_id for m in res.members}) == 2
+
+
+def test_resume_folds_prior_history_and_reuses():
+    """resume() continues a study: everything already recorded enters each
+    member's history before the first ask, and re-proposals come back as
+    free 'reused' trials — the cross-session continuation path."""
+    store = SampleStore(":memory:")
+    spec = InvestigationSpec(
+        name="sess", space=quad_space(), metric="loss",
+        experiments=(ExperimentSpec("quad"),),
+        optimizers=(OptimizerSpec("random", seed=0),),
+        budget=BudgetSpec(max_trials=5, patience=99))
+    first = Investigation(spec, store=store).run()
+    assert first.num_measured == 5
+    second = Investigation(spec, store=store).resume()
+    member = second.members[0]
+    assert member.foreign_trials >= 5        # prior history folded pre-ask
+    # the fold enters the model-visible history, so the same rng stream
+    # proposes NEW configurations: nothing is re-paid
+    prior = {t.configuration.digest for t in first.members[0].run.trials}
+    new = {t.configuration.digest for t in member.run.trials}
+    assert not (prior & new)
+    assert store.count_measured() == 10
+
+
+def test_plan_is_free_and_reports_transfer_candidates():
+    store = SampleStore(":memory:")
+    src_spec = InvestigationSpec(
+        name="src", space=quad_space(), metric="loss",
+        experiments=(ExperimentSpec("quad"),),
+        optimizers=(OptimizerSpec("random", seed=0),),
+        budget=BudgetSpec(max_trials=8, patience=99))
+    Investigation(src_spec, store=store).run()
+    tgt_spec = InvestigationSpec(
+        name="tgt", space=quad_space(), metric="loss",
+        experiments=(ExperimentSpec(
+            "linear-shift", {"base": "quad", "scale": 1.2, "offset": 3.0}),),
+        optimizers=(OptimizerSpec("tpe", seed=0),),
+        budget=BudgetSpec(max_trials=4, patience=99),
+        transfer=TransferSpec(enabled=True))
+    before = store.count_measured()
+    plan = Investigation(tgt_spec, store=store).plan()
+    assert store.count_measured() == before  # planning paid for nothing
+    assert plan.transfer_enabled
+    assert len(plan.transfer_candidates) == 1
+    assert plan.transfer_candidates[0]["measured"] >= 8
+    assert "transfer" in plan.describe()
+
+
+# ----------------------------------------------------------------------- CLI
+
+
+def write_cli_spec(tmp_path, **spec_overrides):
+    spec = InvestigationSpec(
+        name="cli-smoke", space=quad_space(), metric="loss",
+        experiments=(ExperimentSpec("quad"),),
+        optimizers=(OptimizerSpec("random", seed=0),),
+        budget=BudgetSpec(max_trials=4, patience=99), **spec_overrides)
+    path = str(tmp_path / "spec.json")
+    spec.save(path)
+    return path
+
+
+def test_cli_dry_run_executes_nothing(tmp_path, capsys):
+    path = write_cli_spec(tmp_path)
+    store_path = str(tmp_path / "store.db")
+    assert cli_main(["run", path, "--store", store_path, "--dry-run"]) == 0
+    out = capsys.readouterr().out
+    assert "engine    : batched" in out
+    assert SampleStore(store_path).count_measured() == 0
+
+
+def test_cli_run_and_catalog_end_to_end(tmp_path, capsys):
+    path = write_cli_spec(tmp_path)
+    store_path = str(tmp_path / "store.db")
+    out_path = str(tmp_path / "result.json")
+    assert cli_main(["run", path, "--store", store_path,
+                     "--out", out_path]) == 0
+    summary = json.load(open(out_path))
+    assert summary["trials"] == 4 and summary["best"] is not None
+    assert SampleStore(store_path).count_measured() == 4
+    assert cli_main(["catalog", "--store", store_path]) == 0
+    assert "measured=4" in capsys.readouterr().out
+
+
+def test_cli_validate_round_trips_and_rejects_bad_spec(tmp_path, capsys):
+    path = write_cli_spec(tmp_path)
+    assert cli_main(["validate", path]) == 0
+    emitted = capsys.readouterr().out
+    assert InvestigationSpec.loads(emitted) == InvestigationSpec.load(path)
+    bad = str(tmp_path / "bad.json")
+    d = InvestigationSpec.load(path).to_json()
+    d["typo_field"] = True
+    with open(bad, "w") as f:
+        json.dump(d, f)
+    with pytest.raises(SystemExit, match="unknown field"):
+        cli_main(["validate", bad])

@@ -1,0 +1,306 @@
+"""Tests for cross-space transfer warm-starting (SearchAdapter.warm_start +
+the Investigation transfer stage).
+
+Contracts:
+
+* **warm_start** — rng-free, deterministic-order folding into the
+  model-visible history; warm digests stay proposable (a prediction never
+  vetoes a real measurement); budgets/stopping rules never charge for warm
+  trials;
+* **determinism** — per optimizer family, two identical warm-started
+  investigations over identical stores produce identical own trajectories;
+* **end-to-end** — the transfer stage discovers the related space, applies
+  the criteria, warm-starts, and beats the cold search on paid
+  measurements; failed criteria fall back to a cold search (reported).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (ActionSpace, DiscoverySpace, Dimension,
+                        FunctionExperiment, Investigation, InvestigationSpec,
+                        ProbabilitySpace, SampleStore)
+from repro.core.api.spec import (BudgetSpec, ExperimentSpec, OptimizerSpec,
+                                 TransferSpec)
+from repro.core.optimizers import OPTIMIZER_REGISTRY
+from repro.core.optimizers.base import WARM_ACTION, SearchAdapter
+
+
+def quad_space(n=8):
+    vals = [round(v, 3) for v in np.linspace(-2, 2, n)]
+    return ProbabilitySpace.make([
+        Dimension.discrete("x", vals),
+        Dimension.discrete("y", vals),
+    ])
+
+
+def make_ds(store=None):
+    exp = FunctionExperiment(
+        fn=lambda c: {"loss": (c["x"] - 0.5) ** 2 + (c["y"] + 0.5) ** 2},
+        properties=("loss",), name="quad")
+    return DiscoverySpace(space=quad_space(),
+                          actions=ActionSpace.make([exp]),
+                          store=store or SampleStore(":memory:"))
+
+
+def trail(trials):
+    return [(t.configuration.digest, t.value, t.action) for t in trials]
+
+
+def seed_source(store):
+    """Exhaustively measure a quad source space into the store; returns the
+    source investigation spec's space_id."""
+    src = make_ds(store)
+    src.sample_batch(list(src.remaining_configurations()),
+                     operation_id="historical")
+    return src.space_id
+
+
+def target_spec(optimizer="tpe", seed=0, enabled=True, max_trials=8,
+                **transfer_kw):
+    return InvestigationSpec(
+        name="warm-target", space=quad_space(), metric="loss",
+        experiments=(ExperimentSpec(
+            "linear-shift", {"base": "quad", "scale": 1.3, "offset": 5.0,
+                             "noise": 0.02}),),
+        optimizers=(OptimizerSpec(optimizer, seed=seed),),
+        budget=BudgetSpec(max_trials=max_trials, patience=99),
+        transfer=TransferSpec(enabled=enabled, **transfer_kw))
+
+
+# ------------------------------------------------------- adapter.warm_start
+
+
+def test_warm_start_folds_without_marking_seen_or_touching_rng():
+    ds = make_ds()
+    adapter = SearchAdapter(ds, "loss", "min")
+    configs = list(ds.space.all_configurations())[:3]
+    rng = np.random.default_rng(0)
+    state_before = rng.bit_generator.state
+    folded = adapter.warm_start([(c, float(i)) for i, c in enumerate(configs)])
+    assert rng.bit_generator.state == state_before  # rng-free by construction
+    assert folded == adapter.warm_told == 3
+    assert [t.action for t in adapter.trials] == [WARM_ACTION] * 3
+    assert [t.value for t in adapter.trials] == [0.0, 1.0, 2.0]
+    # warm digests are NOT seen: predictions never veto a real measurement
+    assert adapter.seen_digests() == set()
+
+
+def test_warm_trials_never_charge_budgets_or_stopping_rules():
+    """A member warm-started with a big history must still spend its full
+    own-trial budget: warm trials are model food, not paid work."""
+    store = SampleStore(":memory:")
+    seed_source(store)
+    res = Investigation(target_spec(max_trials=5), store=store).run()
+    m = res.members[0]
+    assert m.warm_trials >= 60              # the whole source folded
+    assert m.run.num_trials == 5            # budget counted own trials only
+    assert m.history_size >= m.warm_trials + m.run.num_trials
+
+
+def test_warm_digest_can_be_proposed_and_measured_for_real():
+    """The optimizer may re-propose a warm-predicted configuration; the
+    measurement lands normally and the history then holds both the
+    prediction and the measured correction."""
+    store = SampleStore(":memory:")
+    seed_source(store)
+    res = Investigation(target_spec(max_trials=6), store=store).run()
+    m = res.members[0]
+    # the whole space is warm-covered, so every own trial re-measures (or
+    # reuses) a warm digest — proposals were not vetoed by the predictions
+    assert m.run.num_trials == 6
+    assert all(t.action in ("measured", "reused") for t in m.run.trials)
+    warm_digests = {t.configuration.digest for t in m.run.trials} & {
+        d for d in res.transfer.warm_predictions}
+    assert warm_digests or res.transfer.n_warm_trials == 64
+
+
+@pytest.mark.parametrize("name", list(OPTIMIZER_REGISTRY))
+def test_warm_started_trajectories_are_deterministic_per_family(name):
+    """Two identical warm-started investigations over identically-seeded
+    stores produce identical own trajectories — warm_start folds in a
+    deterministic order and consumes no randomness."""
+    def run_once():
+        store = SampleStore(":memory:")
+        seed_source(store)
+        spec = target_spec(optimizer=name, seed=4, max_trials=6)
+        return Investigation(spec, store=store).run()
+
+    a, b = run_once(), run_once()
+    assert a.transfer.applied and b.transfer.applied
+    assert trail(a.members[0].run.trials) == trail(b.members[0].run.trials)
+    # the warm fold itself is identical too
+    assert a.members[0].warm_trials == b.members[0].warm_trials
+
+
+# ----------------------------------------------------- transfer stage (e2e)
+
+
+def test_transfer_stage_discovers_assesses_and_warm_starts():
+    store = SampleStore(":memory:")
+    src_id = seed_source(store)
+    res = Investigation(target_spec(), store=store).run()
+    t = res.transfer
+    assert t is not None and t.applied
+    assert t.source_space_id == src_id
+    assert t.assessment.transferable and abs(t.assessment.r) > 0.95
+    assert t.n_rep_measured == t.n_representatives > 0
+    assert t.n_warm_trials == t.n_source_samples == 64
+    assert res.members[0].warm_trials == t.n_warm_trials
+    # paid = search measurements + the representative pass
+    assert res.paid_measurements >= t.paid + res.num_measured
+
+
+def test_transfer_disabled_or_empty_catalog_searches_cold():
+    store = SampleStore(":memory:")
+    res = Investigation(target_spec(enabled=False), store=store).run()
+    assert res.transfer is None
+    res2 = Investigation(target_spec(), store=SampleStore(":memory:")).run()
+    assert res2.transfer is not None and not res2.transfer.applied
+    assert res2.members[0].warm_trials == 0
+
+
+def test_failed_criteria_fall_back_to_cold_with_attempt_recorded():
+    """An uncorrelated source (pure per-configuration noise) must fail the
+    r/p criteria: no warm trials, the attempt is reported, and the search
+    still runs to budget."""
+    store = SampleStore(":memory:")
+    rng = np.random.default_rng(0)
+    noise = {}
+    exp = FunctionExperiment(
+        fn=lambda c: {"loss": noise.setdefault(c.digest,
+                                               float(rng.normal()))},
+        properties=("loss",), name="quad")  # same identity as the source exp?
+    src = DiscoverySpace(space=quad_space(),
+                         actions=ActionSpace.make([exp]),
+                         store=store)
+    src.sample_batch(list(src.remaining_configurations()),
+                     operation_id="noise-study")
+    res = Investigation(target_spec(max_trials=4), store=store).run()
+    assert not res.transfer.applied
+    assert res.transfer.attempts
+    assert res.transfer.attempts[0]["outcome"] == "criteria not met"
+    assert res.members[0].warm_trials == 0
+    assert res.members[0].run.num_trials == 4
+    assert res.prediction_quality() is None
+
+
+def test_failed_attempt_rep_measurements_still_count_as_paid():
+    """A candidate that pays a representative pass and THEN fails the
+    criteria still deployed real experiments: its paid count must survive
+    into the report even when a later candidate transfers."""
+    store = SampleStore(":memory:")
+    # decoy source: same dimensions, MORE measured data (ranked first),
+    # pure noise => criteria must reject it after a paid rep pass
+    rng = np.random.default_rng(0)
+    noise = {}
+    decoy_exp = FunctionExperiment(
+        fn=lambda c: {"loss": noise.setdefault(c.digest,
+                                               float(rng.normal()))},
+        properties=("loss",), name="decoy")
+    decoy = DiscoverySpace(space=quad_space(), store=store,
+                           actions=ActionSpace.make([decoy_exp]))
+    decoy.sample_batch(list(decoy.space.all_configurations()),
+                       operation_id="decoy-study")
+    # real source: fewer samples (ranked second), strongly transferable
+    src = make_ds(store)
+    src.sample_batch(list(src.space.all_configurations())[:40],
+                     operation_id="historical")
+    res = Investigation(target_spec(max_trials=3), store=store).run()
+    t = res.transfer
+    assert t.applied and t.source_space_id == src.space_id
+    assert [a["outcome"] for a in t.attempts] == ["criteria not met",
+                                                  "transfer"]
+    # paid = BOTH rep passes, not just the winning candidate's
+    assert t.paid == sum(a["rep_paid"] for a in t.attempts)
+    assert t.paid > t.attempts[1]["rep_paid"] > 0
+
+
+def test_failed_representatives_are_not_warm_folded():
+    """A representative the rep pass just observed to FAIL in the target
+    must not re-enter the members' histories as a plausible surrogate
+    prediction — that would steer the search toward a known-bad point."""
+    from repro.core import MeasurementError
+
+    store = SampleStore(":memory:")
+    seed_source(store)
+    bad = {"x": -2.0, "y": 2.0}  # the source surface's unique maximum
+
+    def cliffy(c):
+        if c["x"] == bad["x"] and c["y"] == bad["y"]:
+            raise MeasurementError("OOM")
+        return {"loss": 1.3 * ((c["x"] - 0.5) ** 2 + (c["y"] + 0.5) ** 2)
+                + 5.0}
+
+    tgt = DiscoverySpace(
+        space=quad_space(), store=store,
+        actions=ActionSpace.make([FunctionExperiment(
+            fn=cliffy, properties=("loss",), name="cliffy")]))
+    spec = InvestigationSpec(
+        name="cliff", space=quad_space(), metric="loss",
+        optimizers=(OptimizerSpec("tpe", seed=0),),
+        budget=BudgetSpec(max_trials=3, patience=99),
+        # linspace picks both ranking extremes, so the failing maximum is
+        # guaranteed into the representative sub-space
+        transfer=TransferSpec(enabled=True, selection="linspace"))
+    res = Investigation(spec, ds=tgt).run()
+    t = res.transfer
+    assert t.applied and t.n_rep_failed == 1
+    from repro.core import Configuration
+    bad_digest = Configuration.make(bad).digest
+    assert bad_digest not in t.warm_predictions
+    assert t.n_warm_trials == t.n_source_samples - 1
+
+
+def test_transfer_respects_caps():
+    store = SampleStore(":memory:")
+    seed_source(store)
+    res = Investigation(
+        target_spec(max_representatives=4, max_warm=10),
+        store=store).run()
+    t = res.transfer
+    assert t.applied
+    assert t.n_representatives <= 4
+    assert t.n_warm_trials <= 10
+    assert res.members[0].warm_trials <= 10
+
+
+def test_warm_beats_cold_on_paid_measurements_same_seeds():
+    """The bench claim, 5-seed smoke (the ≥16-seed version is
+    ``python -m benchmarks.transfer_bench``): warm search needs fewer total
+    paid measurements to land the target's true optimum."""
+    truth_exp = ExperimentSpec(
+        "linear-shift", {"base": "quad", "scale": 1.3, "offset": 5.0,
+                         "noise": 0.02}).build()
+    space = quad_space()
+    truth = [truth_exp.measure(c)["loss"] for c in space.all_configurations()]
+    threshold = float(min(truth)) + 1e-9
+
+    def paid_to_target(res):
+        paid = res.transfer.paid if res.transfer is not None else 0
+        for _, t in res.events:
+            if t.action in ("measured", "failed"):
+                paid += 1
+            if t.value is not None and t.value <= threshold:
+                return paid
+        return 999
+
+    warm_paid = cold_paid = 0
+    quality_seen = False
+    for seed in range(5):
+        warm_store = SampleStore(":memory:")
+        seed_source(warm_store)
+        warm = Investigation(
+            target_spec(seed=seed, max_trials=40, max_representatives=4),
+            store=warm_store).run()
+        cold = Investigation(
+            target_spec(seed=seed, enabled=False, max_trials=40),
+            store=SampleStore(":memory:")).run()
+        warm_paid += paid_to_target(warm)
+        cold_paid += paid_to_target(cold)
+        q = warm.prediction_quality()
+        if q is not None:  # needs >=2 verified predictions
+            quality_seen = True
+            assert 0.0 <= q.top5_pct <= 1.0
+    assert warm_paid < cold_paid
+    assert quality_seen
