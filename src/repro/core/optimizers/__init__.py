@@ -24,8 +24,43 @@ history before each ask (``SearchAdapter.sync_foreign``, an incremental
 watermark read of the shared sampling record) — each model trains on the
 union of the fleet's data while rng streams, operations, and stopping rules
 stay per-member, so solo trajectories are untouched.
+
+Accelerated ask backends
+------------------------
+
+Campaign warm-starts (PR 5) fold thousands of trials into every member's
+history, which put BO-GP/TPE ask-latency — O(|H|³) Cholesky plus
+per-candidate scoring — on the critical path.  Every model-based optimizer
+therefore takes a ``backend`` constructor argument (threaded through spec
+JSON as ``OptimizerSpec.backend``):
+
+* ``"numpy"`` (default) — the reference implementation;
+* ``"jax"`` — the GP posterior + batched analytic EI, and TPE's
+  per-dimension Parzen densities, each fused into one jitted device call
+  over the *entire* candidate pool (shape-bucketed so a growing history
+  reuses O(log |H|) compiled programs);
+* ``"pallas"`` — the jax path with the pairwise-distance/RBF Gram matrices
+  built by a blocked pallas kernel (:mod:`.accel.pallas_rbf`), for the
+  large-history regime where the Gram build dominates; degrades to
+  ``"jax"`` where pallas is unavailable (and any accelerated choice
+  degrades to ``"numpy"`` without jax — a spec never fails to run).
+
+Parity guarantee: accelerated backends consume the identical rng stream
+(scoring is rng-free) and are regression-gated **draw-for-draw** against
+the numpy path in ``tests/test_accel_parity.py`` — same candidate pools,
+argmax-identical proposals per family across seeds, history sizes, and
+categorical/continuous spaces, at float32 tolerances.
+
+``benchmarks/ask_bench.py`` measures ask latency vs history length × pool
+size and writes ``BENCH_ask.json``: per family, one row per
+(history, pool, backend) with median milliseconds (``ms``) and first-call
+latency including jit compile (``first_ms``); ``gate`` records the CI soft
+regression gate — jitted ask at |H|=2048 must not be slower than numpy —
+and ``speedup`` is numpy-ms / backend-ms at each grid point (compile time
+excluded: campaigns amortize it across every subsequent ask).
 """
 
+from . import accel
 from .base import (FOREIGN_ACTION, OptimizerRun, ScoredCandidate,
                    SearchAdapter, Trial, as_scored, run_optimizer,
                    hypergeom_p_found)
@@ -55,4 +90,5 @@ __all__ = [
     "TPE",
     "BOHB",
     "OPTIMIZER_REGISTRY",
+    "accel",
 ]

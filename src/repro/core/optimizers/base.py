@@ -419,8 +419,21 @@ class Optimizer(abc.ABC):
 
     name = "optimizer"
 
-    def __init__(self, seed: int = 0):
+    def __init__(self, seed: int = 0, backend: str = "numpy",
+                 max_candidates: int = 512):
+        """``backend`` selects the ask-scoring implementation (``numpy`` —
+        the reference — or the accelerated ``jax``/``pallas`` paths, see
+        :mod:`.accel`); unavailable accelerators degrade to numpy rather
+        than raise.  ``max_candidates`` caps the per-ask candidate pool the
+        acquisition is scored over (the accelerated backends score the
+        whole pool in one device call, so large pools are cheap there)."""
+        from .accel import resolve_backend
         self.seed = seed
+        self.backend = resolve_backend(backend)
+        if max_candidates < 1:
+            raise ValueError(
+                f"max_candidates must be >= 1, got {max_candidates}")
+        self.max_candidates = max_candidates
 
     @abc.abstractmethod
     def ask(self, adapter: SearchAdapter, rng: np.random.Generator,
@@ -450,12 +463,23 @@ class Optimizer(abc.ABC):
                            exclude: Optional[set] = None) -> list:
         """Candidate pool: unsampled configurations of a finite space (or
         random draws for continuous spaces).  ``exclude`` removes candidates
-        already proposed earlier in the current batch."""
+        already proposed earlier in the current batch.
+
+        Finite spaces are ALWAYS enumerated and filtered, whatever their
+        size: the old ``size <= 4096`` cutoff sent large finite spaces
+        through the rejection-sampling loop below, whose try cap made a
+        near-exhausted pool (most digests seen, so almost every draw
+        rejects) return ``[]`` — falsely reporting exhaustion and stopping
+        the run with unsampled configurations still on the table.
+        Enumeration finds exactly the unseen remainder; when it exceeds
+        ``max_candidates``, a uniform subsample keeps the pool bounded.
+        The rejection loop now serves only truly continuous spaces, where
+        ``[]`` genuinely cannot mean exhaustion."""
         space = adapter.space
         seen = adapter.seen_digests()
         if exclude:
             seen |= exclude
-        if space.finite and space.size <= 4096:
+        if space.finite:
             pool = [c for c in space.all_configurations() if c.digest not in seen]
             if len(pool) > max_candidates:
                 idx = rng.choice(len(pool), size=max_candidates, replace=False)

@@ -3,6 +3,25 @@
 The skopt-BO family the paper evaluates (§V-B1).  Implementation: RBF + white
 kernel GP on the unit-cube encoding of configurations, analytic EI
 acquisition maximized over the pool of unsampled configurations.
+
+Two interchangeable acquisition paths (see :mod:`.accel`):
+
+* ``backend="numpy"`` (default) — the reference ``_fit_predict`` below:
+  scipy Cholesky, per-candidate posterior, scipy-norm EI.
+* ``backend="jax"``/``"pallas"`` — a jitted fit/score pair
+  (:func:`.accel.gp_ei`): the Cholesky factorization, cached until the
+  history changes, plus batched analytic EI over the *entire* candidate
+  pool via a single forward triangular solve, with the Gram matrices
+  optionally built by the blocked pallas RBF kernel.  Regression-gated
+  draw-for-draw against the numpy path (same candidates, same rng stream,
+  argmax-identical proposals at float32 tolerances).
+
+Robustness (shared by both backends): a Gram matrix the jittered Cholesky
+cannot factor, or an EI surface that is entirely NaN (e.g. a posterior
+``std`` underflow when every history value is identical after campaign
+foreign-folding), must never crash the worker — ``ask`` degrades to random
+proposals for that step, and isolated NaN scores are zeroed by a
+``np.nan_to_num`` guard before ranking.
 """
 
 from __future__ import annotations
@@ -22,12 +41,18 @@ class GPBayesOpt(Optimizer):
     name = "bo-gp"
 
     def __init__(self, seed: int = 0, n_initial: int = 3, length_scale: float = 0.35,
-                 noise: float = 1e-4, xi: float = 0.01):
-        super().__init__(seed)
+                 noise: float = 1e-4, xi: float = 0.01, backend: str = "numpy",
+                 max_candidates: int = 512):
+        super().__init__(seed, backend=backend, max_candidates=max_candidates)
         self.n_initial = n_initial
         self.length_scale = length_scale
         self.noise = noise
         self.xi = xi  # EI exploration offset
+        # Accelerated-backend fit cache (one entry: the current factorization
+        # as device buffers).  Any history change — every tell or foreign
+        # fold — changes the content hash and replaces it, so repeated asks
+        # against one fitted surrogate skip the O(|H|^3) refit.
+        self._accel_cache: dict = {}
 
     # -- GP machinery -----------------------------------------------------------
 
@@ -37,19 +62,48 @@ class GPBayesOpt(Optimizer):
         return np.exp(-0.5 * d2 / (self.length_scale ** 2))
 
     def _fit_predict(self, X: np.ndarray, y: np.ndarray, Xc: np.ndarray):
+        """Posterior (mean, std) at ``Xc``, or None when the Gram matrix
+        cannot be factored even after the jitter retry — the caller treats
+        an unfittable model as "no model" and proposes randomly, instead of
+        letting a second ``LinAlgError`` kill the worker (and with it the
+        whole campaign member) mid-ask."""
         mu_y, sd_y = y.mean(), y.std() + 1e-12
         yn = (y - mu_y) / sd_y
         K = self._kernel(X, X) + self.noise * np.eye(len(X))
         try:
             cf = cho_factor(K, lower=True)
         except np.linalg.LinAlgError:
-            cf = cho_factor(K + 1e-6 * np.eye(len(X)), lower=True)
+            try:
+                cf = cho_factor(K + 1e-6 * np.eye(len(X)), lower=True)
+            except np.linalg.LinAlgError:
+                return None
         alpha = cho_solve(cf, yn)
         Ks = self._kernel(Xc, X)
         mean = Ks @ alpha
         v = cho_solve(cf, Ks.T)
         var = np.clip(1.0 - np.einsum("ij,ji->i", Ks, v), 1e-12, None)
         return mean * sd_y + mu_y, np.sqrt(var) * sd_y
+
+    def _acquisition(self, X: np.ndarray, y: np.ndarray,
+                     Xc: np.ndarray) -> Optional[np.ndarray]:
+        """EI over the whole encoded candidate pool, backend-dispatched;
+        None signals an unfittable model (caller falls back to random)."""
+        if self.backend != "numpy":
+            from . import accel
+            ei = accel.gp_ei(X, y, Xc, length_scale=self.length_scale,
+                             noise=self.noise, xi=self.xi,
+                             use_pallas=self.backend == "pallas",
+                             cache=self._accel_cache)
+            if ei is not None:
+                return ei
+        fit = self._fit_predict(X, y, Xc)
+        if fit is None:
+            return None
+        mean, std = fit
+        best = y.min()
+        # expected improvement for minimization
+        z = (best - self.xi - mean) / std
+        return (best - self.xi - mean) * norm.cdf(z) + std * norm.pdf(z)
 
     # -- proposal -----------------------------------------------------------------
 
@@ -65,8 +119,14 @@ class GPBayesOpt(Optimizer):
         the union of the fleet's measurements (and fleet history counts
         toward ``n_initial``, skipping redundant random warmup).  Sharing
         never consumes rng draws, so solo trajectories are unchanged.
+
+        Degenerate fits degrade instead of crashing: an unfactorable Gram
+        matrix or an all-NaN EI surface (posterior-std underflow on an
+        all-equal history) falls back to random proposals for this step,
+        and residual NaN scores are zeroed before ranking so ``_top_n``
+        never sorts on NaN.
         """
-        candidates = self._unseen_candidates(adapter, rng)
+        candidates = self._unseen_candidates(adapter, rng, self.max_candidates)
         if not candidates:
             return []
         X, y = self._history_arrays(adapter)
@@ -74,9 +134,8 @@ class GPBayesOpt(Optimizer):
             return self._random_n(candidates, rng, n)
 
         Xc = np.stack([adapter.space.encode(c) for c in candidates])
-        mean, std = self._fit_predict(X, y, Xc)
-        best = y.min()
-        # expected improvement for minimization
-        z = (best - self.xi - mean) / std
-        ei = (best - self.xi - mean) * norm.cdf(z) + std * norm.pdf(z)
+        ei = self._acquisition(X, y, Xc)
+        if ei is None or bool(np.isnan(ei).all()):
+            return self._random_n(candidates, rng, n)
+        ei = np.nan_to_num(ei, nan=0.0)
         return self._top_n(candidates, ei, n)

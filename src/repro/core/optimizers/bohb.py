@@ -32,8 +32,11 @@ class BOHB(TPE):
 
     def __init__(self, seed: int = 0, n_initial: int = 4, gamma: float = 0.15,
                  bandwidth: float = 0.18, eta: int = 3, min_budget: float = 1.0,
-                 max_budget: float = 9.0, random_fraction: float = 0.2):
-        super().__init__(seed=seed, n_initial=n_initial, gamma=gamma, bandwidth=bandwidth)
+                 max_budget: float = 9.0, random_fraction: float = 0.2,
+                 backend: str = "numpy", max_candidates: int = 512):
+        super().__init__(seed=seed, n_initial=n_initial, gamma=gamma,
+                         bandwidth=bandwidth, backend=backend,
+                         max_candidates=max_candidates)
         self.eta = eta
         self.min_budget = min_budget
         self.max_budget = max_budget
@@ -55,7 +58,8 @@ class BOHB(TPE):
         exclude = set(exclude) if exclude else set()
         for _ in range(n):
             if rng.uniform() < self.random_fraction:
-                candidates = self._unseen_candidates(adapter, rng, exclude=exclude)
+                candidates = self._unseen_candidates(
+                    adapter, rng, self.max_candidates, exclude=exclude)
                 if not candidates:
                     break
                 pick = ScoredCandidate(

@@ -64,11 +64,25 @@ class TPE(Optimizer):
     name = "tpe"
 
     def __init__(self, seed: int = 0, n_initial: int = 4, gamma: float = 0.25,
-                 bandwidth: float = 0.12):
-        super().__init__(seed)
+                 bandwidth: float = 0.12, backend: str = "numpy",
+                 max_candidates: int = 512):
+        super().__init__(seed, backend=backend, max_candidates=max_candidates)
         self.n_initial = n_initial
         self.gamma = gamma
         self.bandwidth = bandwidth
+
+    def _score(self, space, good, bad, candidates) -> np.ndarray:
+        """Backend-dispatched Parzen ratio: the vmapped jax path evaluates
+        every per-dimension KDE for all candidates in one device call
+        (:func:`.accel.tpe_scores`), regression-gated draw-for-draw against
+        the numpy reference ``tpe_score``."""
+        if self.backend != "numpy":
+            from . import accel
+            score = accel.tpe_scores(space, good, bad, candidates,
+                                     self.bandwidth)
+            if score is not None:
+                return score
+        return tpe_score(space, good, bad, candidates, self.bandwidth)
 
     def ask(self, adapter: SearchAdapter, rng: np.random.Generator,
             n: int = 1, exclude: Optional[set] = None) -> List[ScoredCandidate]:
@@ -86,7 +100,8 @@ class TPE(Optimizer):
         init phase early.  Solo runs have no foreign trials, and sharing
         never touches the rng stream, so solo trajectories are unchanged.
         """
-        candidates = self._unseen_candidates(adapter, rng, exclude=exclude)
+        candidates = self._unseen_candidates(adapter, rng, self.max_candidates,
+                                             exclude=exclude)
         if not candidates:
             return []
         ok = [t for t in adapter.trials if t.value is not None]
@@ -97,6 +112,13 @@ class TPE(Optimizer):
         order = np.argsort(values)
         n_good = max(1, int(np.ceil(self.gamma * len(ok))))
         good = [ok[i].configuration for i in order[:n_good]]
-        bad = [ok[i].configuration for i in order[n_good:]] or good
-        score = tpe_score(adapter.space, good, bad, candidates, self.bandwidth)
+        # Degenerate split (n_good == len(ok), e.g. gamma ~ 1 or a history
+        # only as long as n_good): aliasing bad to good would make
+        # l(x)/g(x) exactly 1 for EVERY candidate, so each score is 0 and
+        # _top_n's stable sort silently returns pool order.  An empty bad
+        # set instead scores l(x) against the uniform prior alone (the
+        # Parzen densities degrade to the prior when fed no observations),
+        # which still ranks candidates by proximity to the good set.
+        bad = [ok[i].configuration for i in order[n_good:]]
+        score = self._score(adapter.space, good, bad, candidates)
         return self._top_n(candidates, score, n)

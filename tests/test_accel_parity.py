@@ -1,0 +1,365 @@
+"""Draw-for-draw parity of the accelerated ask backends, plus the ask-path
+numerical-robustness bugfixes.
+
+Parity contract: scoring is rng-free and both backends consume identical rng
+streams in the candidate sampler, so for the same adapter history and the
+same seeded rng, ``ask`` must propose the *same configurations in the same
+order* whatever the backend — the accelerated paths are drop-in, not
+approximately-similar.  Float32 vs float64 can only reorder exact score
+ties, which the deterministic cases here avoid.
+
+The three regression-pinned bugs:
+
+* ``GPBayesOpt``: a Gram matrix that fails Cholesky twice, or an EI surface
+  that is entirely NaN (posterior-std underflow on an all-equal history),
+  used to crash or mis-rank — now both degrade to random proposals.
+* ``Optimizer._unseen_candidates``: finite spaces larger than the old 4096
+  enumeration cutoff went through rejection sampling, whose try cap
+  reported a near-exhausted pool as empty — false exhaustion.
+* ``TPE``: a degenerate good/bad split (``n_good == len(ok)``) aliased
+  ``bad = good``, zeroing every score so proposals silently came out in
+  pool order.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (ActionSpace, Dimension, DiscoverySpace,
+                        FunctionExperiment, ProbabilitySpace, SampleStore)
+from repro.core.api.spec import OptimizerSpec
+from repro.core.optimizers import BOHB, GPBayesOpt, TPE
+from repro.core.optimizers import accel
+from repro.core.optimizers.base import Optimizer, SearchAdapter, Trial
+from repro.core.optimizers.tpe import tpe_score
+
+jax_missing = not accel.jax_available()
+
+FAMILIES = {"bo-gp": GPBayesOpt, "tpe": TPE, "bohb": BOHB}
+
+
+def mixed_space():
+    return ProbabilitySpace.make([
+        Dimension.discrete("cpu", [1, 2, 4, 8, 16, 32]),
+        Dimension.discrete("mem", [0.5, 1.0, 2.0, 4.0]),
+        Dimension.categorical("tier", ["gp", "burst", "spot"]),
+    ])
+
+
+def continuous_space():
+    return ProbabilitySpace.make([
+        Dimension.continuous("lr", 1e-4, 1e-1),
+        Dimension.continuous("momentum", 0.0, 0.99),
+    ])
+
+
+def adapter_with_history(space, n, seed=0, value_fn=None):
+    """An adapter preloaded with n synthetic valued trials."""
+    exp = FunctionExperiment(fn=lambda c: {"m": 0.0}, properties=("m",),
+                             name="parity")
+    ds = DiscoverySpace(space=space, actions=ActionSpace.make([exp]),
+                        store=SampleStore(":memory:"))
+    adapter = SearchAdapter(ds, "m", "min")
+    rng = np.random.default_rng(seed)
+    configs = [space.sample_configuration(rng) for _ in range(n)]
+    values = rng.random(n)
+    if value_fn is not None:
+        values = np.array([value_fn(c, v) for c, v in zip(configs, values)])
+    adapter.tell([Trial(c, float(v), "measured", i)
+                  for i, (c, v) in enumerate(zip(configs, values))])
+    return adapter
+
+
+def accel_backends():
+    out = []
+    if accel.jax_available():
+        out.append("jax")
+        if accel.pallas_available():
+            out.append("pallas")
+    return out
+
+
+# -- draw-for-draw proposal parity -------------------------------------------
+
+
+@pytest.mark.skipif(jax_missing, reason="jax unavailable")
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+@pytest.mark.parametrize("space_maker", [mixed_space, continuous_space],
+                         ids=["mixed", "continuous"])
+@pytest.mark.parametrize("history", [9, 17])
+@pytest.mark.parametrize("seed", [0, 3])
+def test_ask_proposals_match_numpy(family, space_maker, history, seed):
+    adapter = adapter_with_history(space_maker(), history, seed=seed)
+    batches = {}
+    for backend in ["numpy"] + accel_backends():
+        opt = FAMILIES[family](seed=0, backend=backend, max_candidates=32)
+        batches[backend] = opt.ask(adapter, np.random.default_rng(seed), n=3)
+    ref = [c.digest for c in batches["numpy"]]
+    assert len(ref) == 3
+    for backend, batch in batches.items():
+        assert [c.digest for c in batch] == ref, (
+            f"{family}/{backend} diverged from numpy proposals")
+        # scores must agree too (None init-phase scores stay None)
+        for a, b in zip(batches["numpy"], batch):
+            if a.score is None:
+                assert b.score is None
+            else:
+                assert b.score == pytest.approx(a.score, rel=1e-2, abs=1e-3)
+
+
+@pytest.mark.skipif(jax_missing, reason="jax unavailable")
+def test_gp_ei_surface_close_and_argmax_identical():
+    """Direct acquisition-surface comparison on a bigger pool than the ask
+    tests use: argmax must match exactly, values at float32 tolerance."""
+    space = mixed_space()
+    rng = np.random.default_rng(5)
+    configs = [space.sample_configuration(rng) for _ in range(48)]
+    y = rng.random(48)
+    X = np.stack([space.encode(c) for c in configs])
+    pool = [space.sample_configuration(rng) for _ in range(200)]
+    Xc = np.stack([space.encode(c) for c in pool])
+    ei_ref = GPBayesOpt(seed=0)._acquisition(X, y, Xc)
+    for backend in accel_backends():
+        opt = GPBayesOpt(seed=0, backend=backend)
+        ei = opt._acquisition(X, y, Xc)
+        assert int(np.argmax(ei)) == int(np.argmax(ei_ref))
+        np.testing.assert_allclose(ei, ei_ref, atol=1e-3)
+        # second call hits the fit cache and must be bit-identical
+        assert np.array_equal(opt._acquisition(X, y, Xc), ei)
+
+
+@pytest.mark.skipif(jax_missing, reason="jax unavailable")
+def test_tpe_scores_close_to_reference():
+    space = mixed_space()
+    rng = np.random.default_rng(2)
+    good = [space.sample_configuration(rng) for _ in range(5)]
+    bad = [space.sample_configuration(rng) for _ in range(11)]
+    pool = [space.sample_configuration(rng) for _ in range(100)]
+    ref = tpe_score(space, good, bad, pool)
+    got = accel.tpe_scores(space, good, bad, pool)
+    np.testing.assert_allclose(got, ref, atol=1e-4)
+    # empty observation sets degrade to the uniform prior on both paths
+    np.testing.assert_allclose(accel.tpe_scores(space, good, [], pool),
+                               tpe_score(space, good, [], pool), atol=1e-4)
+
+
+@pytest.mark.skipif(jax_missing, reason="jax unavailable")
+def test_pallas_rbf_matches_jnp_oracle():
+    from repro.core.optimizers.accel import pallas_rbf
+    if not pallas_rbf.pallas_available():
+        pytest.skip("pallas unavailable")
+    rng = np.random.default_rng(0)
+    A = rng.random((24, 5)).astype(np.float32)
+    B = rng.random((17, 5)).astype(np.float32)
+    inv2ls2 = np.float32(0.5 / 0.35 ** 2)
+    got = np.asarray(pallas_rbf.rbf_matrix_pallas(A, B, inv2ls2))
+    want = np.asarray(pallas_rbf.rbf_matrix_jnp(A, B, inv2ls2))
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+# -- backend selection / spec threading --------------------------------------
+
+
+def test_unknown_backend_rejected():
+    with pytest.raises(ValueError, match="unknown ask backend"):
+        GPBayesOpt(seed=0, backend="cuda")
+    with pytest.raises(ValueError, match="unknown ask backend"):
+        OptimizerSpec(name="tpe", backend="cuda")
+
+
+def test_spec_threads_backend_and_roundtrips():
+    spec = OptimizerSpec(name="bo-gp", seed=7, backend="jax")
+    opt = spec.build()
+    # resolve degrades to numpy only when jax is missing
+    assert opt.backend == ("jax" if accel.jax_available() else "numpy")
+    assert OptimizerSpec.from_json(spec.to_json()) == spec
+    # default stays backend-free for byte-compatible old spec files
+    assert OptimizerSpec(name="tpe").to_json()["backend"] is None
+    assert OptimizerSpec(name="tpe").build().backend == "numpy"
+
+
+# -- bugfix 1: GP ask-path robustness ----------------------------------------
+
+
+def test_gp_double_cholesky_failure_degrades_to_random(monkeypatch):
+    """Both cho_factor attempts raising used to escape ask and kill the
+    worker; now the step degrades to (unscored) random proposals."""
+    from repro.core.optimizers import bo_gp as bo_gp_mod
+
+    def always_fail(*a, **k):
+        raise np.linalg.LinAlgError("not positive definite")
+
+    monkeypatch.setattr(bo_gp_mod, "cho_factor", always_fail)
+    adapter = adapter_with_history(mixed_space(), 8, seed=0)
+    batch = GPBayesOpt(seed=0).ask(adapter, np.random.default_rng(0), n=3)
+    assert len(batch) == 3
+    assert all(c.score is None for c in batch)
+    assert len({c.digest for c in batch}) == 3
+
+
+def test_gp_all_equal_history_no_nan_proposals():
+    """All-equal y after foreign folding underflows the posterior std; the
+    NaN EI surface must fall back to random instead of ranking on NaN."""
+    for backend in ["numpy"] + accel_backends():
+        adapter = adapter_with_history(mixed_space(), 12, seed=1,
+                                       value_fn=lambda c, v: 0.75)
+        opt = GPBayesOpt(seed=0, backend=backend)
+        batch = opt.ask(adapter, np.random.default_rng(1), n=3)
+        assert len(batch) == 3
+        assert all(c.score is None or np.isfinite(c.score) for c in batch)
+
+
+def test_gp_nan_surface_triggers_random_fallback(monkeypatch):
+    adapter = adapter_with_history(mixed_space(), 8, seed=2)
+    opt = GPBayesOpt(seed=0)
+    monkeypatch.setattr(
+        GPBayesOpt, "_acquisition",
+        lambda self, X, y, Xc: np.full(Xc.shape[0], np.nan))
+    batch = opt.ask(adapter, np.random.default_rng(2), n=2)
+    assert len(batch) == 2
+    assert all(c.score is None for c in batch)
+
+
+def test_gp_isolated_nan_scores_zeroed(monkeypatch):
+    """A partially-NaN surface keeps ranking the finite scores; NaN entries
+    are zeroed so _top_n never sorts on NaN."""
+    adapter = adapter_with_history(mixed_space(), 8, seed=3)
+    opt = GPBayesOpt(seed=0)
+
+    def spiky(self, X, y, Xc):
+        ei = np.zeros(Xc.shape[0])
+        ei[0] = np.nan
+        ei[1] = 3.5
+        return ei
+
+    monkeypatch.setattr(GPBayesOpt, "_acquisition", spiky)
+    batch = opt.ask(adapter, np.random.default_rng(3), n=1)
+    assert batch[0].score == pytest.approx(3.5)
+
+
+@given(scale=st.sampled_from([0.0, 1e-15, 1e-9, 1.0]),
+       n=st.integers(min_value=4, max_value=12))
+@settings(max_examples=20, deadline=None)
+def test_gp_fit_predict_never_crashes_on_degenerate_history(scale, n):
+    """Property: near-constant (down to exactly constant) histories produce
+    either a clean posterior or None — never an exception, never NaN std."""
+    rng = np.random.default_rng(n)
+    X = rng.random((n, 3))
+    y = 0.5 + scale * rng.standard_normal(n)
+    Xc = rng.random((16, 3))
+    fit = GPBayesOpt(seed=0)._fit_predict(X, y, Xc)
+    if fit is not None:
+        mean, std = fit
+        assert np.all(np.isfinite(std))
+
+
+# -- bugfix 2: false exhaustion of large finite spaces -----------------------
+
+
+class _StubAdapter:
+    """The minimal surface _unseen_candidates touches."""
+
+    def __init__(self, space, seen):
+        self.space = space
+        self._seen = set(seen)
+
+    def seen_digests(self):
+        return set(self._seen)
+
+
+def test_large_finite_space_near_exhaustion_returns_remainder():
+    """5000-option space (beyond the old 4096 enumeration cutoff) with all
+    but 7 configurations seen: rejection sampling used to return [] here;
+    enumeration must return exactly the remaining 7."""
+    space = ProbabilitySpace.make(
+        [Dimension.discrete("x", list(range(5000)))])
+    all_configs = list(space.all_configurations())
+    remainder = {c.digest for c in all_configs[::717]}  # 7 survivors
+    seen = {c.digest for c in all_configs} - remainder
+    pool = Optimizer._unseen_candidates(_StubAdapter(space, seen),
+                                        np.random.default_rng(0),
+                                        max_candidates=64)
+    assert {c.digest for c in pool} == remainder
+
+
+def test_large_finite_space_pool_is_bounded_subsample():
+    space = ProbabilitySpace.make(
+        [Dimension.discrete("x", list(range(4500)))])
+    pool = Optimizer._unseen_candidates(_StubAdapter(space, set()),
+                                        np.random.default_rng(0),
+                                        max_candidates=100)
+    assert len(pool) == 100
+    assert len({c.digest for c in pool}) == 100
+
+
+_EXH_SPACE = ProbabilitySpace.make([Dimension.discrete("a", list(range(70))),
+                                    Dimension.discrete("b", list(range(60)))])
+_EXH_CONFIGS = list(_EXH_SPACE.all_configurations())  # 4200 > old cutoff
+
+
+@given(keep=st.integers(min_value=0, max_value=40),
+       seed=st.integers(min_value=0, max_value=10 ** 6))
+@settings(max_examples=25, deadline=None)
+def test_unseen_pool_is_exactly_the_remainder(keep, seed):
+    """Property: for any survivor count at/below max_candidates, the pool is
+    exactly the unseen remainder — never empty while configs remain."""
+    rng = np.random.default_rng(seed)
+    idx = rng.choice(len(_EXH_CONFIGS), size=keep, replace=False)
+    remainder = {_EXH_CONFIGS[i].digest for i in idx}
+    seen = {c.digest for c in _EXH_CONFIGS} - remainder
+    pool = Optimizer._unseen_candidates(_StubAdapter(_EXH_SPACE, seen),
+                                        np.random.default_rng(seed),
+                                        max_candidates=40)
+    assert {c.digest for c in pool} == remainder
+
+
+# -- bugfix 3: TPE degenerate good/bad split ---------------------------------
+
+
+def _tpe_expected_pick(opt, adapter, seed):
+    """Replicate ask's pool + degenerate-split scoring with the reference
+    scorer: candidates from the identical rng stream, scored l(x) against
+    the uniform prior (empty bad set)."""
+    rng = np.random.default_rng(seed)
+    candidates = opt._unseen_candidates(adapter, rng, opt.max_candidates)
+    ok = [t for t in adapter.trials if t.value is not None]
+    order = np.argsort([adapter.signed(t.value) for t in ok])
+    good = [ok[i].configuration for i in order]  # gamma=1: everything good
+    score = tpe_score(adapter.space, good, [], candidates, opt.bandwidth)
+    return candidates, score
+
+
+@pytest.mark.parametrize("backend", ["numpy"])
+def test_tpe_degenerate_split_ranks_against_prior(backend):
+    """gamma=1 makes n_good == len(ok).  The old bad=good alias zeroed all
+    scores (every proposal = pool order); the fix scores l(x) against the
+    uniform prior, so proposals track proximity to the good set."""
+    adapter = adapter_with_history(mixed_space(), 8, seed=4)
+    opt = TPE(seed=0, gamma=1.0, backend=backend)
+    batch = opt.ask(adapter, np.random.default_rng(9), n=1)
+    candidates, score = _tpe_expected_pick(opt, adapter, seed=9)
+    assert np.any(score != 0.0), "degenerate split must not zero all scores"
+    expected = candidates[int(np.argmax(score))]
+    assert batch[0].digest == expected.digest
+    assert batch[0].score == pytest.approx(float(score.max()), abs=1e-6)
+
+
+@pytest.mark.skipif(jax_missing, reason="jax unavailable")
+def test_tpe_degenerate_split_parity_across_backends():
+    adapter = adapter_with_history(mixed_space(), 8, seed=4)
+    ref = TPE(seed=0, gamma=1.0).ask(adapter, np.random.default_rng(9), n=3)
+    for backend in accel_backends():
+        got = TPE(seed=0, gamma=1.0, backend=backend).ask(
+            adapter, np.random.default_rng(9), n=3)
+        assert [c.digest for c in got] == [c.digest for c in ref]
+
+
+def test_tpe_short_history_equal_to_n_good_not_pool_order():
+    """Regression shape from the wild: len(ok) small enough that
+    ceil(gamma * len) == len, with default gamma untouched."""
+    adapter = adapter_with_history(mixed_space(), 4, seed=6)
+    opt = TPE(seed=0, n_initial=4, gamma=1.0)
+    batch = opt.ask(adapter, np.random.default_rng(11), n=2)
+    assert len(batch) == 2
+    assert all(c.score is not None and np.isfinite(c.score) for c in batch)
