@@ -40,7 +40,7 @@ from .execution import (AutoscalePolicy, ExecutionBackend, LeasePacer,
                         ThreadBackend, WorkerCrashError)
 from .rssc import RSSCResult, rssc_transfer
 from .space import ProbabilitySpace
-from .store import RecordEntry, SampleStore
+from .store import RecordEntry, SampleStore, StoreBackend, open_store
 from .transfer import (LinearSurrogate, PredictionQuality, TransferAssessment,
                        TransferCriteria, assess_transfer, prediction_quality)
 
@@ -48,6 +48,7 @@ __all__ = [
     "ActionSpace", "Experiment", "FunctionExperiment", "MeasurementError",
     "SurrogateExperiment", "DiscoverySpace", "Configuration", "Dimension",
     "PropertyValue", "Sample", "ProbabilitySpace", "RecordEntry", "SampleStore",
+    "StoreBackend", "open_store",
     "RSSCResult", "rssc_transfer", "LinearSurrogate", "PredictionQuality",
     "TransferAssessment", "TransferCriteria", "assess_transfer",
     "prediction_quality", "select_representatives", "select_top_k",

@@ -24,7 +24,7 @@ import argparse
 import json
 import sys
 
-from ..store import SampleStore
+from ..store import open_store
 from .catalog import SpaceCatalog
 from .investigation import Investigation
 from .spec import InvestigationSpec
@@ -39,7 +39,7 @@ def _load_spec(path: str) -> InvestigationSpec:
 
 def _cmd_run(args) -> int:
     spec = _load_spec(args.spec)
-    store = SampleStore(args.store) if args.store else None
+    store = open_store(args.store) if args.store else None
     inv = Investigation(spec, store=store)
     plan = inv.plan()
     print(plan.describe())
@@ -78,7 +78,7 @@ def _cmd_validate(args) -> int:
 
 
 def _cmd_catalog(args) -> int:
-    catalog = SpaceCatalog(SampleStore(args.store))
+    catalog = SpaceCatalog(open_store(args.store))
     entries = catalog.entries()
     if not entries:
         print("catalog is empty")
@@ -100,7 +100,10 @@ def main(argv=None) -> int:
     p_run = sub.add_parser("run", help="execute an InvestigationSpec")
     p_run.add_argument("spec", help="path to the spec JSON")
     p_run.add_argument("--store", default=None,
-                       help="SampleStore path (default: in-memory)")
+                       help="store path or server URL (tcp://host:port / "
+                            "unix:///path.sock); overrides the spec's "
+                            "'store' field (default: the spec's, else "
+                            "in-memory)")
     p_run.add_argument("--dry-run", action="store_true",
                        help="print the plan (incl. transfer candidates) and "
                             "exit without measuring anything")
@@ -117,7 +120,8 @@ def main(argv=None) -> int:
     p_val.set_defaults(fn=_cmd_validate)
 
     p_cat = sub.add_parser("catalog", help="list a store's registered spaces")
-    p_cat.add_argument("--store", required=True)
+    p_cat.add_argument("--store", required=True,
+                       help="store path or server URL")
     p_cat.set_defaults(fn=_cmd_catalog)
 
     args = parser.parse_args(argv)

@@ -29,7 +29,7 @@ from dataclasses import dataclass, field
 from typing import Mapping, Optional, Sequence
 
 from ..space import ProbabilitySpace
-from ..store import SampleStore
+from ..store import StoreBackend
 
 __all__ = ["CatalogEntry", "RelatedSpace", "SpaceCatalog"]
 
@@ -137,7 +137,7 @@ def _match_dimension(src_dim, tgt_dim, explicit: Optional[Mapping]):
 class SpaceCatalog:
     """Query interface over every space registered in a sample store."""
 
-    def __init__(self, store: SampleStore):
+    def __init__(self, store: StoreBackend):
         self.store = store
 
     # -------------------------------------------------------------- listing

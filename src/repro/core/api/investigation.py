@@ -43,7 +43,7 @@ from ..discovery import DiscoverySpace
 from ..execution import ExecutionBackend
 from ..optimizers.base import (OptimizerRun, SearchAdapter, _StoppingRule,
                                as_scored)
-from ..store import SampleStore
+from ..store import StoreBackend, open_store
 from ..transfer import (PredictionQuality, TransferAssessment,
                         TransferCriteria, assess_transfer, prediction_quality)
 from .catalog import SpaceCatalog
@@ -268,7 +268,11 @@ class Investigation:
 
     * ``Investigation(spec, store=...)`` — fully declarative: the Discovery
       Space is built from the spec's dimensions + experiment factories over
-      the given (or a fresh in-memory) store;
+      the given store — or, when none is passed, over the backend the
+      spec's ``store`` field names via
+      :func:`repro.core.store.open_store` (a path opens SQLite, a
+      ``tcp://``/``unix://`` URL connects to a store server; ``None`` means
+      a fresh in-memory store);
     * ``Investigation(spec, ds=...)`` — programmatic space, declarative
       everything else (the spec's experiments may then be empty);
     * :meth:`from_components` / :meth:`for_members` — the legacy-shim paths
@@ -276,7 +280,7 @@ class Investigation:
     """
 
     def __init__(self, spec: InvestigationSpec,
-                 store: Optional[SampleStore] = None,
+                 store: Optional[StoreBackend] = None,
                  ds: Optional[DiscoverySpace] = None):
         self.spec = spec
         if ds is None:
@@ -289,7 +293,8 @@ class Investigation:
                 space=spec.space,
                 actions=ActionSpace.make([e.build()
                                           for e in spec.experiments]),
-                store=store if store is not None else SampleStore(":memory:"))
+                store=store if store is not None
+                else open_store(spec.store or ":memory:"))
         self.ds = ds
         # programmatic overrides (shim paths); None => build from the spec
         self._optimizers: Optional[list] = None

@@ -324,6 +324,16 @@ class InvestigationSpec:
     ``share_history``/``warm_start`` carry the campaign semantics: fold
     other members' completions into every history / additionally fold
     records that predate the run.
+
+    ``store`` selects the shared sample store the investigation rendezvouses
+    through (paper §III-D): ``None`` keeps today's behavior (a private
+    in-memory store, or whatever handle the caller passed in), a filesystem
+    path opens/creates the SQLite reference backend, and a ``tcp://`` /
+    ``unix://`` URL connects to a running
+    ``python -m repro.core.store.server`` — resolved via
+    :func:`repro.core.store.open_store`.  An explicit ``store=`` argument to
+    :class:`~repro.core.api.investigation.Investigation` wins over the spec
+    field (the caller's live handle is more specific than the document).
     """
 
     name: str
@@ -337,6 +347,7 @@ class InvestigationSpec:
     transfer: TransferSpec = TransferSpec()
     share_history: bool = True
     warm_start: bool = False
+    store: Optional[str] = None
 
     def __post_init__(self):
         if self.mode not in ("min", "max"):
@@ -363,6 +374,7 @@ class InvestigationSpec:
             "transfer": self.transfer.to_json(),
             "share_history": self.share_history,
             "warm_start": self.warm_start,
+            "store": self.store,
         }
 
     @staticmethod
@@ -370,7 +382,7 @@ class InvestigationSpec:
         _reject_unknown(d, ("schema_version", "name", "space", "experiments",
                             "metric", "mode", "optimizers", "execution",
                             "budget", "transfer", "share_history",
-                            "warm_start"), "investigation")
+                            "warm_start", "store"), "investigation")
         version = d.get("schema_version", SCHEMA_VERSION)
         if version != SCHEMA_VERSION:
             raise ValueError(f"unsupported schema_version {version!r} "
@@ -393,6 +405,7 @@ class InvestigationSpec:
             transfer=TransferSpec.from_json(d.get("transfer", {})),
             share_history=bool(d.get("share_history", True)),
             warm_start=bool(d.get("warm_start", False)),
+            store=None if d.get("store") is None else str(d["store"]),
         )
 
     # --------------------------------------------------------------- file IO

@@ -45,7 +45,7 @@ from .entities import Configuration, Sample, content_hash
 from .execution import (AutoscalePolicy, ExecutionBackend, ExecutionContext,
                         WorkItem, make_backend)
 from .space import ProbabilitySpace
-from .store import RecordEntry, SampleStore
+from .store import RecordEntry, SampleStore, StoreBackend
 
 __all__ = ["DiscoverySpace", "BatchResult"]
 
@@ -76,7 +76,7 @@ class DiscoverySpace:
         self,
         space: ProbabilitySpace,
         actions: ActionSpace,
-        store: Optional[SampleStore] = None,
+        store: Optional[StoreBackend] = None,
         space_id: Optional[str] = None,
         claim_timeout_s: float = 60.0,
         lease_s: float = 15.0,
@@ -244,7 +244,8 @@ class DiscoverySpace:
         for config in configs:
             self.space.validate(config)
         self._maybe_sweep_claims()
-        digests = [self.store.put_configuration(c) for c in configs]
+        # one interning transaction/round-trip for the whole batch
+        digests = self.store.put_configurations(configs)
 
         # Duplicates measure once: the first slot of each digest does the
         # experiment work, later slots transparently reuse (§III-C5).

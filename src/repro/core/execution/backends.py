@@ -119,9 +119,9 @@ def _pool_worker(worker_id: int, task_queue, result_queue, store_path: str,
     experiment error is reported as a crash outcome and the worker lives on
     to serve the next item.
     """
-    from ..store import SampleStore
+    from ..store import open_store
 
-    store = SampleStore(store_path)
+    store = open_store(store_path)
     pacer = (LeasePacer(store, str(os.getpid()), lease_s,
                         max_age_s=claim_timeout_s).start()
              if lease_s is not None else None)
@@ -183,8 +183,9 @@ class ProcessBackend(ExecutionBackend):
                  mp_context=None, policy: Optional[AutoscalePolicy] = None):
         if ctx.store_path == ":memory:":
             raise ValueError(
-                "ProcessBackend needs a file-backed SampleStore: worker "
-                "processes rendezvous through the database file")
+                "ProcessBackend needs a reopenable store — a database file "
+                "path or a store-server URL: worker processes rendezvous "
+                "through the shared store, never a shared connection")
         self._ctx = ctx
         self._clock = ctx.clock
         if policy is None:

@@ -52,8 +52,9 @@ class QueueBackend(ExecutionBackend):
                  drain_timeout_s: Optional[float] = None):
         if ctx.store_path == ":memory:":
             raise ValueError(
-                "QueueBackend needs a file-backed SampleStore: remote "
-                "workers rendezvous through the database file")
+                "QueueBackend needs a reopenable store — a database file "
+                "path or a store-server URL: remote workers rendezvous "
+                "through the shared store")
         self._ctx = ctx
         # Grace period past lease expiry before re-queueing (0 = re-queue the
         # moment a heartbeat lease lapses; raise it for jittery networks).

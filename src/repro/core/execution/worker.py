@@ -1,8 +1,10 @@
 """Remote measurement worker: ``python -m repro.core.execution.worker``.
 
 One worker process serving the ``work_items`` queue of a shared sample
-store.  Start any number of these — on the investigator's host or on any
-machine sharing the database file — and point them at a *factory* that
+store.  Start any number of these — on the investigator's host, on any
+machine sharing the database file, or on any machine that can reach a
+``python -m repro.core.store.server`` URL — and point them at a *factory*
+that
 rebuilds the Discovery Space (the store only persists Ω and experiment
 identifiers; the experiment *code* must come from your module, exactly like
 any ``multiprocessing`` target)::
@@ -126,10 +128,14 @@ def main(argv: Optional[list] = None) -> int:
         prog="python -m repro.core.execution.worker",
         description="Serve a shared sample store's work-item queue.")
     parser.add_argument("--store", required=True,
-                        help="path to the shared SampleStore database file")
+                        help="shared store identity: a database file path, "
+                             "or a store-server URL (tcp://host:port / "
+                             "unix:///path.sock) from "
+                             "python -m repro.core.store.server")
     parser.add_argument("--factory", required=True,
                         help="module:callable rebuilding the DiscoverySpace "
-                             "from the store path")
+                             "from the store path/URL (resolve it with "
+                             "repro.core.store.open_store)")
     parser.add_argument("--idle-timeout", type=float, default=10.0,
                         help="exit after this many seconds without work")
     parser.add_argument("--max-items", type=int, default=None,

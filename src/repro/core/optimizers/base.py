@@ -327,10 +327,38 @@ class SearchAdapter:
         tail = store.last_record_rowid(self.ds.space_id)
         if tail <= self.record_watermark:
             return 0
-        records = store.records_since(self.ds.space_id, self.record_watermark,
-                                      exclude_operation=self.operation_id)
-        self.record_watermark = max(
-            tail, records[-1].rowid if records else 0)
+        folded = 0
+        # Page the range instead of materializing it: each page holds at
+        # most RECORD_PAGE_SIZE entries and its configurations are
+        # prefetched in ONE batched (cache-assisted) read — at 10⁶-record
+        # depth a first sync streams the record in bounded memory, and on
+        # the served backend a page costs two round-trips, not 2·page_size.
+        for page in self._record_pages(store, tail):
+            interesting = [
+                rec.config_digest for rec in page
+                if rec.config_digest not in self._history_digests
+                or rec.config_digest in self._provisional_failed]
+            configs = store.get_configurations(interesting)
+            folded += self._fold_page(store, page, configs)
+        self.record_watermark = tail
+        return folded
+
+    def _record_pages(self, store, tail: int):
+        """Snapshot-bounded pages of foreign records in (watermark, tail]."""
+        from ..store.base import RECORD_PAGE_SIZE
+        watermark = self.record_watermark
+        while watermark < tail:
+            page = store.records_since(self.ds.space_id, watermark,
+                                       limit=RECORD_PAGE_SIZE,
+                                       exclude_operation=self.operation_id,
+                                       upto_rowid=tail)
+            if page:
+                yield page
+            if len(page) < RECORD_PAGE_SIZE:
+                return  # LIMIT not hit: the remaining range is exhausted
+            watermark = page[-1].rowid
+
+    def _fold_page(self, store, records, configs: dict) -> int:
         folded = 0
         for rec in records:
             provisional = self._provisional_failed.get(rec.config_digest)
@@ -338,7 +366,8 @@ class SearchAdapter:
                     or rec.config_digest in self.pending)
             if seen and provisional is None:
                 continue
-            config = store.get_configuration(rec.config_digest)
+            config = configs.get(rec.config_digest) \
+                or store.get_configuration(rec.config_digest)
             if config is None:  # pragma: no cover - store corruption guard
                 continue
             if rec.action == "failed":

@@ -1,0 +1,43 @@
+"""The shared sample store (paper §III-C3/§III-D), as a pluggable package.
+
+* :class:`~repro.core.store.base.StoreBackend` — the interface everything
+  above the store programs against.
+* :class:`~repro.core.store.sqlite.SampleStore` — the SQLite-WAL reference
+  backend (in-process; multi-process via a shared database file).
+* :class:`~repro.core.store.client.ClientStore` — the served backend's
+  client; pair with ``python -m repro.core.store.server``.
+* :func:`open_store` — the one factory every entry point uses: a plain
+  path opens SQLite, a ``tcp://``/``unix://`` URL connects to a server.
+
+Importing :class:`SampleStore` from ``repro.core.store`` keeps working
+exactly as it did when the store was a single module.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from ..clock import Clock
+from .base import (DEFAULT_LEASE_S, RecordEntry, StoreBackend,
+                   config_from_pairs)
+from .sqlite import SampleStore
+
+__all__ = ["SampleStore", "StoreBackend", "RecordEntry", "DEFAULT_LEASE_S",
+           "open_store", "config_from_pairs"]
+
+
+def open_store(path: str, clock: Optional[Clock] = None) -> StoreBackend:
+    """Open a store by identity string — the universal front door.
+
+    ``tcp://host:port`` / ``unix:///path.sock`` connect a
+    :class:`~repro.core.store.client.ClientStore` to a running
+    ``python -m repro.core.store.server``; anything else (including
+    ``:memory:``) opens the SQLite reference backend on that path.  Worker
+    processes reopening ``ExecutionContext.store_path``, the spec CLI's
+    ``--store``, and ``InvestigationSpec.store`` all resolve through here,
+    so every entry point accepts both backends with no further plumbing.
+    """
+    if path.startswith(("tcp://", "unix://")):
+        from .client import ClientStore  # socket machinery only when served
+        return ClientStore(path, clock=clock)
+    return SampleStore(path, clock=clock)

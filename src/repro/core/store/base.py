@@ -1,0 +1,400 @@
+"""The ``StoreBackend`` interface: every way a sample store can be reached.
+
+The paper's §III-D rendezvous — one *common context* shared by every
+investigator — was first built as a single SQLite file
+(:class:`~repro.core.store.sqlite.SampleStore`).  That class remains the
+reference implementation, but everything above the store (the Discovery
+Space, the execution backends, the campaign sync, the Investigation API)
+talks to this interface, so the rendezvous can also be *served*: one store
+process mediating many investigations over a socket
+(:class:`~repro.core.store.client.ClientStore` +
+``python -m repro.core.store.server`` — the ExpoCloud controller/worker
+shape), with claim arbitration happening inside the single server process.
+
+Contract highlights every backend must honor:
+
+* **content-addressed configurations** — ``put_configuration`` is
+  idempotent; a digest, once written, never maps to different values.  This
+  immutability is what lets backends cache decoded configurations without a
+  cross-process invalidation protocol (see :meth:`StoreBackend._config_get`).
+* **atomic per-operation ``seq``** — concurrent appenders observe gapless,
+  non-duplicated sequence numbers.
+* **commit-ordered ``rowid``** — :meth:`records_since` pages on a watermark
+  that can never run backwards; a record is visible only after its values
+  are durable.
+* **single-winner claims** — of N racing ``claim_experiment`` /
+  ``claim_work_batch`` callers exactly one wins each cell/item, regardless
+  of which process (or host) they run in.
+"""
+
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass
+from typing import Any, Iterable, Iterator, Mapping, Optional, Sequence
+
+from ..clock import Clock, SYSTEM_CLOCK
+from ..entities import Configuration, PropertyValue
+
+__all__ = ["StoreBackend", "RecordEntry", "DEFAULT_LEASE_S"]
+
+#: Lease horizon for claimants that did not specify one (non-heartbeating
+#: owners): matches the pre-lease default claim timeout.
+DEFAULT_LEASE_S = 60.0
+
+#: Decoded-configuration cache bound, per backend instance.  Configurations
+#: are content-addressed and immutable, so entries can never go stale — the
+#: cap only bounds memory at catalog scale (10⁶-record stores still hold
+#: far fewer *distinct* configurations than records).
+CONFIG_CACHE_MAX = 65536
+
+#: Default page bound for :meth:`StoreBackend.iter_records_since`: big
+#: enough to amortize per-call overhead, small enough that a sync against a
+#: deep record never materializes millions of rows in one list.
+RECORD_PAGE_SIZE = 1024
+
+
+@dataclass(frozen=True)
+class RecordEntry:
+    """One entry of a space's time-resolved sampling record.
+
+    ``rowid`` is the store-global insertion id of the row: strictly
+    increasing in commit order across *all* operations of *all* spaces.
+    It is the watermark :meth:`StoreBackend.records_since` pages on — a
+    reader that remembers the highest ``rowid`` it has seen can fetch
+    exactly the records that landed since, in O(new rows).
+    """
+
+    space_id: str
+    operation_id: str
+    seq: int
+    config_digest: str
+    action: str
+    created_at: float
+    rowid: int = 0
+
+
+def _thaw(v: Any) -> Any:
+    """JSON/msgpack round-trips turn tuples into lists; configuration values
+    are hashable tuples — restore them on every decode path."""
+    if isinstance(v, (list, tuple)):
+        return tuple(_thaw(x) for x in v)
+    return v
+
+
+def config_from_pairs(pairs: Iterable) -> Configuration:
+    """Rebuild a :class:`Configuration` from its serialized value pairs."""
+    return Configuration(values=tuple((k, _thaw(v)) for k, v in pairs))
+
+
+class StoreBackend:
+    """Abstract common-context store (paper §III-C3/§III-D).
+
+    Subclasses provide the primitive methods; this base supplies the
+    derived conveniences every backend shares — single-item claim/finish
+    shims, the claim-waiting poll loop, snapshot-bounded record paging, and
+    the immutable-configuration read cache.
+    """
+
+    #: Backend identity handed to out-of-process children so they can open
+    #: their OWN handle: a filesystem path for SQLite, a ``tcp://`` /
+    #: ``unix://`` URL for the served store (see :func:`repro.core.store.open_store`).
+    path: str = ":memory:"
+    clock: Clock = SYSTEM_CLOCK
+
+    # -- primitives every backend implements --------------------------------
+
+    def register_space(self, space_id: str, space_json: Mapping,
+                       action_ids: Sequence[str], space_digest: str = "",
+                       meta: Optional[Mapping] = None) -> None:
+        raise NotImplementedError
+
+    def list_spaces(self) -> list:
+        raise NotImplementedError
+
+    def space_stats(self) -> dict:
+        raise NotImplementedError
+
+    def register_operation(self, operation_id: str, space_id: str, kind: str,
+                           meta: Optional[Mapping] = None) -> None:
+        raise NotImplementedError
+
+    def operations_for(self, space_id: str) -> list:
+        raise NotImplementedError
+
+    def put_configuration(self, config: Configuration) -> str:
+        raise NotImplementedError
+
+    def get_configuration(self, digest: str) -> Optional[Configuration]:
+        raise NotImplementedError
+
+    def put_values(self, config_digest: str,
+                   values: Iterable[PropertyValue]) -> None:
+        raise NotImplementedError
+
+    def get_values(self, config_digest: str,
+                   experiment_ids: Optional[Sequence[str]] = None) -> list:
+        raise NotImplementedError
+
+    def measured_property_values(self, space_id: str, prop: str,
+                                 experiment_ids: Optional[Sequence[str]] = None
+                                 ) -> list:
+        raise NotImplementedError
+
+    def has_values(self, config_digest: str, experiment_id: str) -> bool:
+        raise NotImplementedError
+
+    def claim_experiment(self, config_digest: str, experiment_id: str,
+                         owner: str = "",
+                         lease_s: Optional[float] = None) -> bool:
+        raise NotImplementedError
+
+    def release_claim(self, config_digest: str, experiment_id: str) -> None:
+        raise NotImplementedError
+
+    def steal_claim(self, config_digest: str, experiment_id: str,
+                    owner: str, older_than_s: float) -> bool:
+        raise NotImplementedError
+
+    def claim_exists(self, config_digest: str, experiment_id: str) -> bool:
+        raise NotImplementedError
+
+    def sweep_stale_claims(self, *, grace_s: float = 0.0) -> int:
+        raise NotImplementedError
+
+    def renew_lease(self, owner: str, lease_s: float,
+                    max_age_s: Optional[float] = None) -> int:
+        raise NotImplementedError
+
+    def release_claims_owned_by(self, owner: str) -> int:
+        raise NotImplementedError
+
+    def enqueue_work(self, space_id: str, config_digest: str,
+                     priority: float = 0.0) -> str:
+        raise NotImplementedError
+
+    def claim_work_batch(self, owner: str, limit: int = 1,
+                         space_id: Optional[str] = None,
+                         lease_s: float = DEFAULT_LEASE_S) -> list:
+        raise NotImplementedError
+
+    def finish_work_batch(self, outcomes: Sequence[Sequence],
+                          owner: Optional[str] = None) -> int:
+        raise NotImplementedError
+
+    def fetch_work_results(self, item_ids: Sequence[str]) -> dict:
+        raise NotImplementedError
+
+    def requeue_stale_work(self, *, grace_s: float = 0.0) -> int:
+        raise NotImplementedError
+
+    def pending_work(self, space_id: Optional[str] = None) -> int:
+        raise NotImplementedError
+
+    def work_queue_stats(self, space_id: Optional[str] = None,
+                         latency_window: int = 20) -> dict:
+        raise NotImplementedError
+
+    def next_seq(self, space_id: str, operation_id: str) -> int:
+        raise NotImplementedError
+
+    def append_record(self, space_id: str, operation_id: str,
+                      config_digest: str, action: str) -> RecordEntry:
+        raise NotImplementedError
+
+    def append_records(self, space_id: str, operation_id: str,
+                       events: Sequence[Sequence[str]]) -> list:
+        raise NotImplementedError
+
+    def records_for(self, space_id: str,
+                    operation_id: Optional[str] = None) -> list:
+        raise NotImplementedError
+
+    def records_since(self, space_id: str, after_rowid: int = 0,
+                      limit: Optional[int] = None,
+                      exclude_operation: Optional[str] = None,
+                      upto_rowid: Optional[int] = None) -> list:
+        raise NotImplementedError
+
+    def last_record_rowid(self, space_id: str) -> int:
+        raise NotImplementedError
+
+    def has_record(self, space_id: str, config_digest: str,
+                   include_failed: bool = False) -> bool:
+        raise NotImplementedError
+
+    def sampled_digests(self, space_id: str,
+                        include_failed: bool = False) -> list:
+        raise NotImplementedError
+
+    def count_measured(self, space_id: Optional[str] = None) -> int:
+        raise NotImplementedError
+
+    def close(self) -> None:
+        raise NotImplementedError
+
+    # -- derived conveniences (shared by every backend) ----------------------
+
+    def put_configurations(self, configs: Sequence[Configuration]) -> list:
+        """Intern a batch of configurations; returns their digests in order.
+
+        Backends override this to coalesce the batch into one write
+        transaction (SQLite) or one request round-trip (served store) —
+        the hot path of ``DiscoverySpace.sample_batch``.
+        """
+        return [self.put_configuration(c) for c in configs]
+
+    def get_configurations(self, digests: Sequence[str]) -> dict:
+        """``{digest: Configuration}`` for every digest that exists.
+
+        Backends override this to batch the misses (one IN query / one
+        request frame); the fallback is a cache-assisted point-read loop.
+        """
+        out = {}
+        for d in digests:
+            config = self.get_configuration(d)
+            if config is not None:
+                out[d] = config
+        return out
+
+    def claim_work(self, owner: str, space_id: Optional[str] = None,
+                   lease_s: float = DEFAULT_LEASE_S) -> Optional[dict]:
+        """Atomically pop the single best queued work item (None when idle)."""
+        batch = self.claim_work_batch(owner, limit=1, space_id=space_id,
+                                      lease_s=lease_s)
+        return batch[0] if batch else None
+
+    def finish_work(self, item_id: str, action: str,
+                    error: Optional[str] = None,
+                    owner: Optional[str] = None) -> bool:
+        """Land one claimed work item's outcome (see :meth:`finish_work_batch`)."""
+        return self.finish_work_batch([(item_id, action, error)],
+                                      owner=owner) == 1
+
+    def wait_for_values(self, config_digest: str, experiment_id: str,
+                        timeout_s: float = 60.0,
+                        max_poll_s: float = 0.5) -> bool:
+        """Wait for another investigator's in-flight measurement to land.
+
+        Returns True when values appeared (reuse them), False when the claim
+        vanished without values (the owner failed — take over) or the
+        timeout expired (the owner is presumed dead — take over).
+
+        Polling is exponential-backoff with full jitter, capped at
+        ``max_poll_s``: the first checks come fast (a concurrent in-process
+        measurement often lands in milliseconds), but a waiter stuck behind
+        a minutes-long cloud measurement decays to ~2 polls/second instead
+        of hammering the store — which matters at fleet scale, and doubly so
+        for the served backend where every poll is a network round-trip.
+        The jitter desynchronizes waiters that blocked on the same cell at
+        the same moment, so their polls don't arrive in lockstep.
+        """
+        deadline = self.clock.monotonic() + timeout_s
+        poll = 0.005
+        while self.clock.monotonic() < deadline:
+            has, claimed = self._poll_cell(config_digest, experiment_id)
+            if has:
+                return True
+            if not claimed:
+                return False
+            remaining = deadline - self.clock.monotonic()
+            # full jitter in (poll/2, poll], never sleeping past the deadline
+            self.clock.sleep(min(max(remaining, 0.0),
+                                 poll * (0.5 + 0.5 * random.random())))
+            poll = min(poll * 2.0, max_poll_s)
+        return self.has_values(config_digest, experiment_id)
+
+    def _poll_cell(self, config_digest: str, experiment_id: str):
+        """One ``wait_for_values`` probe: ``(has_values, claim_exists)``.
+
+        A backend hook so remote stores can fuse both checks into a single
+        round-trip (the served backend pipelines them); claim state is moot
+        once values exist, so the second check is skipped on a hit here.
+        """
+        if self.has_values(config_digest, experiment_id):
+            return True, True
+        return False, self.claim_exists(config_digest, experiment_id)
+
+    def iter_records_since(self, space_id: str, after_rowid: int = 0,
+                           page_size: int = RECORD_PAGE_SIZE,
+                           exclude_operation: Optional[str] = None,
+                           ) -> Iterator[RecordEntry]:
+        """Page through a space's record from a watermark, snapshot-bounded.
+
+        The tail ``rowid`` is snapshotted ONCE up front and every page is
+        bounded by it, so one sync observes a consistent prefix of the
+        record no matter how fast concurrent writers append — the sync
+        terminates after ``(tail - watermark) / page_size`` pages instead of
+        chasing a moving tail.  Rows committing after the snapshot get
+        higher rowids (commit-ordered allocation) and are picked up by the
+        next sync.  Each page holds at most ``page_size`` decoded entries,
+        which is what keeps a foreign-tell sync O(new rows) in *memory* as
+        well as in I/O at 10⁶-record depth.
+
+        After exhaustion the consumer's new watermark is the snapshot tail
+        (see :meth:`consume_records_since`), even when the trailing rows
+        were all ``exclude_operation``'s own.
+        """
+        tail = self.last_record_rowid(space_id)
+        watermark = int(after_rowid)
+        while watermark < tail:
+            page = self.records_since(space_id, watermark, limit=page_size,
+                                      exclude_operation=exclude_operation,
+                                      upto_rowid=tail)
+            yield from page
+            if len(page) < page_size:
+                break  # LIMIT not hit: the remaining range is exhausted
+            watermark = page[-1].rowid
+
+    def consume_records_since(self, space_id: str, after_rowid: int = 0,
+                              page_size: int = RECORD_PAGE_SIZE,
+                              exclude_operation: Optional[str] = None,
+                              ):
+        """(records, new_watermark): one snapshot-bounded paged read.
+
+        The returned watermark is the snapshot tail — everything at or
+        below it was either returned or excluded-by-request, so the caller
+        can jump straight to it and never re-scan the range.
+        """
+        tail = self.last_record_rowid(space_id)
+        if tail <= after_rowid:
+            return [], int(after_rowid)
+        records = list(self.iter_records_since(
+            space_id, after_rowid, page_size=page_size,
+            exclude_operation=exclude_operation))
+        return records, tail
+
+    # -- the immutable-configuration read cache ------------------------------
+
+    #: lazily created per instance (subclasses need no __init__ cooperation)
+    _config_cache: Optional[dict] = None
+
+    def _config_get(self, digest: str) -> Optional[Configuration]:
+        cache = self._config_cache
+        return None if cache is None else cache.get(digest)
+
+    def _config_put(self, digest: str, config: Configuration) -> None:
+        cache = self._config_cache
+        if cache is None:
+            cache = self._config_cache = {}
+        if len(cache) >= CONFIG_CACHE_MAX:
+            # drop the oldest half (dict preserves insertion order): crude
+            # but O(1) amortized, and misses only re-pay one point read
+            for key in list(cache)[:CONFIG_CACHE_MAX // 2]:
+                del cache[key]
+        cache[digest] = config
+
+    def invalidate_config_cache(self, digest: Optional[str] = None) -> None:
+        """Explicit invalidation hook for the configuration read cache.
+
+        Configurations are content-addressed and immutable, so routine
+        writes never *need* this — ``put_configuration`` writes through.
+        It exists for administrative surgery (a store file rewritten
+        underneath a live handle) and for tests.
+        """
+        if self._config_cache is None:
+            return
+        if digest is None:
+            self._config_cache.clear()
+        else:
+            self._config_cache.pop(digest, None)

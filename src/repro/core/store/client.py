@@ -1,0 +1,411 @@
+"""``ClientStore``: the served store's client-side ``StoreBackend``.
+
+Connects to a ``python -m repro.core.store.server`` process over the
+length-prefixed frame protocol (:mod:`repro.core.store.protocol`) and
+implements every store primitive as a request/response round-trip, so all
+code above the interface — Discovery Spaces, execution backends, campaign
+sync, the Investigation API — runs unmodified against a store it cannot
+open as a file.
+
+* ``path`` is the server URL (``tcp://host:port`` / ``unix:///sock``), so
+  :attr:`~repro.core.execution.base.ExecutionContext.store_path` hands
+  child worker processes exactly what they need to open their own handle
+  via :func:`repro.core.store.open_store`.
+* **one socket per thread** (mirroring the SQLite backend's per-thread
+  connections): worker threads never interleave frames, and the server
+  answers each connection strictly in order — the invariant that makes
+  :meth:`_call_many` pipelining sound (N frames written back-to-back, N
+  responses read back; one network round-trip for the batch).
+* **reconnect with backoff**: a dropped connection (server restart, network
+  blip) is retried transparently.  Mutating retries are safe for the same
+  reason the store's own API is: writes are idempotent (content-addressed
+  configuration interning, guarded UPDATEs) or at worst conservative —
+  a ``claim_experiment`` whose first attempt won but whose response was
+  lost returns False on retry (the claim exists), and the claimant then
+  waits on its own claim until lease expiry recovers it; measure-once is
+  never violated.
+* the immutable-configuration read cache (from
+  :class:`~repro.core.store.base.StoreBackend`) short-circuits repeat
+  ``get_configuration`` calls entirely — at campaign scale most foreign-tell
+  config lookups never touch the network.
+"""
+
+from __future__ import annotations
+
+import socket
+import threading
+import time
+from typing import Iterable, Mapping, Optional, Sequence
+
+from ..clock import Clock, SYSTEM_CLOCK
+from ..entities import Configuration, PropertyValue
+from .base import (DEFAULT_LEASE_S, RecordEntry, StoreBackend,
+                   config_from_pairs)
+from .protocol import DEFAULT_CODEC, FrameError, recv_frame, send_frame
+
+__all__ = ["ClientStore", "StoreRemoteError", "parse_store_url"]
+
+
+class StoreRemoteError(RuntimeError):
+    """The server reported an exception while executing a request."""
+
+    def __init__(self, exc_type: str, message: str):
+        super().__init__(f"{exc_type}: {message}")
+        self.exc_type = exc_type
+
+
+def parse_store_url(url: str):
+    """``tcp://host:port`` → ('tcp', (host, port)); ``unix://path`` →
+    ('unix', path).  Raises ValueError on anything else."""
+    if url.startswith("tcp://"):
+        hostport = url[len("tcp://"):]
+        host, _, port = hostport.rpartition(":")
+        if not host or not port.isdigit():
+            raise ValueError(f"bad tcp store url: {url!r}")
+        return "tcp", (host, int(port))
+    if url.startswith("unix://"):
+        path = url[len("unix://"):]
+        if not path:
+            raise ValueError(f"bad unix store url: {url!r}")
+        return "unix", path
+    raise ValueError(f"not a store url: {url!r}"
+                     " (expected tcp://host:port or unix://path)")
+
+
+def _pv_tuple(v: PropertyValue) -> tuple:
+    return (v.name, v.value, v.experiment_id, v.predicted, v.timestamp)
+
+
+def _pv_from(t) -> PropertyValue:
+    name, value, experiment_id, predicted, timestamp = t
+    return PropertyValue(name=name, value=float(value),
+                         experiment_id=experiment_id,
+                         predicted=bool(predicted), timestamp=timestamp)
+
+
+def _record_from(t) -> RecordEntry:
+    space_id, operation_id, seq, config_digest, action, created_at, rowid = t
+    return RecordEntry(space_id, operation_id, int(seq), config_digest,
+                       action, float(created_at), rowid=int(rowid))
+
+
+class ClientStore(StoreBackend):
+    """Store backend that talks to a ``repro.core.store.server`` process."""
+
+    def __init__(self, url: str, clock: Optional[Clock] = None,
+                 connect_timeout_s: float = 10.0, retries: int = 5,
+                 codec: bytes = DEFAULT_CODEC):
+        self.path = url  # the URL is the identity children reopen with
+        self.clock = clock if clock is not None else SYSTEM_CLOCK
+        self._kind, self._addr = parse_store_url(url)
+        self._connect_timeout_s = connect_timeout_s
+        self._retries = max(1, int(retries))
+        self._codec = codec
+        self._local = threading.local()
+        self._socks_lock = threading.Lock()
+        self._socks: set = set()
+        self._closed = False
+        self._call("ping")  # fail fast on a wrong/downed URL
+
+    # -- connection management ----------------------------------------------
+
+    def _connect(self) -> socket.socket:
+        if self._kind == "tcp":
+            sock = socket.create_connection(self._addr,
+                                            timeout=self._connect_timeout_s)
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        else:
+            sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+            sock.settimeout(self._connect_timeout_s)
+            sock.connect(self._addr)
+        sock.settimeout(None)  # requests block until the server answers
+        return sock
+
+    def _sock(self) -> socket.socket:
+        sock = getattr(self._local, "sock", None)
+        if sock is None:
+            if self._closed:
+                raise ConnectionError("store client is closed")
+            sock = self._connect()
+            self._local.sock = sock
+            with self._socks_lock:
+                self._socks.add(sock)
+        return sock
+
+    def _drop_sock(self) -> None:
+        sock = getattr(self._local, "sock", None)
+        if sock is not None:
+            with self._socks_lock:
+                self._socks.discard(sock)
+            try:
+                sock.close()
+            except OSError:
+                pass
+            self._local.sock = None
+
+    def _next_req_id(self) -> int:
+        req_id = getattr(self._local, "req_id", 0) + 1
+        self._local.req_id = req_id
+        return req_id
+
+    # -- request plumbing ----------------------------------------------------
+
+    def _call(self, method: str, *args):
+        """One request/response round-trip (with reconnect retries)."""
+        return self._call_many([(method, list(args))])[0]
+
+    def _call_many(self, calls: Sequence) -> list:
+        """Pipeline: write every request frame, then read every response.
+
+        One network round-trip for the whole batch — the mechanism behind
+        the served backend's batched write paths staying near the
+        in-process store's throughput.  Responses arrive in request order
+        (per-connection ordering is a server guarantee); ``req_id`` echoes
+        are still verified defensively.
+        """
+        if not calls:
+            return []
+        last_err: Optional[Exception] = None
+        for attempt in range(self._retries):
+            if attempt:
+                self._drop_sock()
+                # capped backoff so a restarting server is rejoined quickly
+                # but a dead one isn't hammered
+                time.sleep(min(0.05 * (2 ** (attempt - 1)), 1.0))
+            try:
+                sock = self._sock()
+                expected = []
+                for method, args in calls:
+                    req_id = self._next_req_id()
+                    expected.append(req_id)
+                    send_frame(sock, [req_id, method, list(args)],
+                               self._codec)
+                results = []
+                for req_id in expected:
+                    frame = recv_frame(sock)
+                    if frame is None:
+                        raise FrameError("server closed connection")
+                    response, _codec = frame
+                    got_id, ok, payload = response
+                    if got_id != req_id:
+                        raise FrameError(
+                            f"response out of order ({got_id} != {req_id})")
+                    if not ok:
+                        exc_type, message = payload
+                        raise StoreRemoteError(exc_type, message)
+                    results.append(payload)
+                return results
+            except StoreRemoteError:
+                raise  # the server is healthy; the request itself failed
+            except (ConnectionError, FrameError, OSError) as err:
+                last_err = err
+        self._drop_sock()
+        raise ConnectionError(
+            f"store server unreachable at {self.path}"
+            f" after {self._retries} attempts: {last_err}")
+
+    # -- primitives over the wire --------------------------------------------
+
+    def register_space(self, space_id: str, space_json: Mapping,
+                       action_ids: Sequence[str], space_digest: str = "",
+                       meta: Optional[Mapping] = None) -> None:
+        self._call("register_space", space_id, dict(space_json),
+                   list(action_ids), space_digest, meta)
+
+    def list_spaces(self) -> list:
+        return self._call("list_spaces")
+
+    def space_stats(self) -> dict:
+        return self._call("space_stats")
+
+    def register_operation(self, operation_id: str, space_id: str, kind: str,
+                           meta: Optional[Mapping] = None) -> None:
+        self._call("register_operation", operation_id, space_id, kind, meta)
+
+    def operations_for(self, space_id: str) -> list:
+        return self._call("operations_for", space_id)
+
+    def put_configuration(self, config: Configuration) -> str:
+        digest = self._call("put_configuration", list(config.values))
+        self._config_put(digest, config)
+        return digest
+
+    def put_configurations(self, configs: Sequence[Configuration]) -> list:
+        configs = list(configs)
+        if not configs:
+            return []
+        digests = self._call("put_configurations",
+                             [list(c.values) for c in configs])
+        for digest, config in zip(digests, configs):
+            self._config_put(digest, config)
+        return digests
+
+    def get_configuration(self, digest: str) -> Optional[Configuration]:
+        cached = self._config_get(digest)
+        if cached is not None:
+            return cached
+        pairs = self._call("get_configuration", digest)
+        if pairs is None:
+            return None
+        config = config_from_pairs(pairs)
+        self._config_put(digest, config)
+        return config
+
+    def get_configurations(self, digests: Sequence[str]) -> dict:
+        out: dict = {}
+        misses = []
+        for digest in digests:
+            cached = self._config_get(digest)
+            if cached is not None:
+                out[digest] = cached
+            else:
+                misses.append(digest)
+        if misses:
+            for digest, pairs in self._call("get_configurations",
+                                            misses).items():
+                config = config_from_pairs(pairs)
+                self._config_put(digest, config)
+                out[digest] = config
+        return out
+
+    def put_values(self, config_digest: str,
+                   values: Iterable[PropertyValue]) -> None:
+        self._call("put_values", config_digest,
+                   [_pv_tuple(v) for v in values])
+
+    def get_values(self, config_digest: str,
+                   experiment_ids: Optional[Sequence[str]] = None) -> list:
+        rows = self._call("get_values", config_digest,
+                          list(experiment_ids)
+                          if experiment_ids is not None else None)
+        return [_pv_from(r) for r in rows]
+
+    def measured_property_values(self, space_id: str, prop: str,
+                                 experiment_ids: Optional[Sequence[str]] = None
+                                 ) -> list:
+        rows = self._call("measured_property_values", space_id, prop,
+                          list(experiment_ids)
+                          if experiment_ids is not None else None)
+        return [(config_from_pairs(pairs), float(value))
+                for pairs, value in rows]
+
+    def has_values(self, config_digest: str, experiment_id: str) -> bool:
+        return bool(self._call("has_values", config_digest, experiment_id))
+
+    def _poll_cell(self, config_digest: str, experiment_id: str):
+        # one round-trip per wait_for_values poll instead of two
+        has, claimed = self._call_many([
+            ("has_values", [config_digest, experiment_id]),
+            ("claim_exists", [config_digest, experiment_id]),
+        ])
+        return bool(has), bool(claimed)
+
+    def claim_experiment(self, config_digest: str, experiment_id: str,
+                         owner: str = "",
+                         lease_s: Optional[float] = None) -> bool:
+        return bool(self._call("claim_experiment", config_digest,
+                               experiment_id, owner, lease_s))
+
+    def release_claim(self, config_digest: str, experiment_id: str) -> None:
+        self._call("release_claim", config_digest, experiment_id)
+
+    def steal_claim(self, config_digest: str, experiment_id: str,
+                    owner: str, older_than_s: float) -> bool:
+        return bool(self._call("steal_claim", config_digest, experiment_id,
+                               owner, older_than_s))
+
+    def claim_exists(self, config_digest: str, experiment_id: str) -> bool:
+        return bool(self._call("claim_exists", config_digest, experiment_id))
+
+    def sweep_stale_claims(self, *, grace_s: float = 0.0) -> int:
+        return int(self._call("sweep_stale_claims", grace_s))
+
+    def renew_lease(self, owner: str, lease_s: float,
+                    max_age_s: Optional[float] = None) -> int:
+        return int(self._call("renew_lease", owner, lease_s, max_age_s))
+
+    def release_claims_owned_by(self, owner: str) -> int:
+        return int(self._call("release_claims_owned_by", owner))
+
+    def enqueue_work(self, space_id: str, config_digest: str,
+                     priority: float = 0.0) -> str:
+        return self._call("enqueue_work", space_id, config_digest, priority)
+
+    def claim_work_batch(self, owner: str, limit: int = 1,
+                         space_id: Optional[str] = None,
+                         lease_s: float = DEFAULT_LEASE_S) -> list:
+        return self._call("claim_work_batch", owner, limit, space_id, lease_s)
+
+    def finish_work_batch(self, outcomes: Sequence[Sequence],
+                          owner: Optional[str] = None) -> int:
+        return int(self._call("finish_work_batch",
+                              [list(o) for o in outcomes], owner))
+
+    def fetch_work_results(self, item_ids: Sequence[str]) -> dict:
+        results = self._call("fetch_work_results", list(item_ids))
+        return {item_id: tuple(outcome)
+                for item_id, outcome in results.items()}
+
+    def requeue_stale_work(self, *, grace_s: float = 0.0) -> int:
+        return int(self._call("requeue_stale_work", grace_s))
+
+    def pending_work(self, space_id: Optional[str] = None) -> int:
+        return int(self._call("pending_work", space_id))
+
+    def work_queue_stats(self, space_id: Optional[str] = None,
+                         latency_window: int = 20) -> dict:
+        return self._call("work_queue_stats", space_id, latency_window)
+
+    def next_seq(self, space_id: str, operation_id: str) -> int:
+        return int(self._call("next_seq", space_id, operation_id))
+
+    def append_record(self, space_id: str, operation_id: str,
+                      config_digest: str, action: str) -> RecordEntry:
+        return _record_from(self._call("append_record", space_id,
+                                       operation_id, config_digest, action))
+
+    def append_records(self, space_id: str, operation_id: str,
+                       events: Sequence[Sequence[str]]) -> list:
+        rows = self._call("append_records", space_id, operation_id,
+                          [list(e) for e in events])
+        return [_record_from(r) for r in rows]
+
+    def records_for(self, space_id: str,
+                    operation_id: Optional[str] = None) -> list:
+        return [_record_from(r)
+                for r in self._call("records_for", space_id, operation_id)]
+
+    def records_since(self, space_id: str, after_rowid: int = 0,
+                      limit: Optional[int] = None,
+                      exclude_operation: Optional[str] = None,
+                      upto_rowid: Optional[int] = None) -> list:
+        rows = self._call("records_since", space_id, after_rowid, limit,
+                          exclude_operation, upto_rowid)
+        return [_record_from(r) for r in rows]
+
+    def last_record_rowid(self, space_id: str) -> int:
+        return int(self._call("last_record_rowid", space_id))
+
+    def has_record(self, space_id: str, config_digest: str,
+                   include_failed: bool = False) -> bool:
+        return bool(self._call("has_record", space_id, config_digest,
+                               include_failed))
+
+    def sampled_digests(self, space_id: str,
+                        include_failed: bool = False) -> list:
+        return self._call("sampled_digests", space_id, include_failed)
+
+    def count_measured(self, space_id: Optional[str] = None) -> int:
+        return int(self._call("count_measured", space_id))
+
+    def close(self) -> None:
+        self._closed = True
+        with self._socks_lock:
+            socks = list(self._socks)
+            self._socks.clear()
+        for sock in socks:
+            try:
+                sock.close()
+            except OSError:
+                pass
+        self._local = threading.local()

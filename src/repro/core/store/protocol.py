@@ -1,0 +1,147 @@
+"""Wire protocol of the served store: length-prefixed msgpack/JSON frames.
+
+Every message — request or response — is one *frame*:
+
+.. code-block:: text
+
+    +----------------+-------+------------------+
+    | length (4B BE) | codec |  payload bytes   |
+    +----------------+-------+------------------+
+
+``length`` counts ``codec + payload``; ``codec`` is one byte — ``b"M"`` for
+msgpack, ``b"J"`` for UTF-8 JSON.  msgpack is the default (compact, fast,
+already a repo dependency); JSON is the fallback so a store server remains
+reachable from environments without msgpack (and trivially debuggable with
+``socat``).  The server answers each request in the codec it arrived in, so
+mixed-codec clients can share one server.
+
+Payloads are positional arrays, not maps — small on the wire and
+order-stable:
+
+* request:  ``[req_id, method, args]`` where ``args`` is a list of
+  positional arguments for the store method (keyword-only params travel
+  positionally in the method's declared order).
+* response: ``[req_id, ok, payload]`` — ``ok`` is a bool; on success
+  ``payload`` is the return value, on failure it is ``[exc_type, message]``
+  and the client re-raises.
+
+``req_id`` is an arbitrary integer the client chooses; the server echoes it
+back.  Responses to one connection's requests are sent in request order, so
+a *pipelining* client can write N request frames back-to-back and then read
+N responses — one network round-trip for a whole batch, which is what keeps
+the served backend's batched paths (``put_configurations``,
+``append_records``, ``finish_work_batch``) within striking distance of the
+in-process store (see ``benchmarks/store_bench.py``).
+
+Value coercion
+--------------
+
+The protocol ships plain data only.  Rich store types cross the wire as:
+
+* :class:`~repro.core.entities.Configuration` — its value-pair list (the
+  same shape its canonical JSON uses); tuples are restored client-side via
+  :func:`~repro.core.store.base._thaw`.
+* :class:`~repro.core.entities.PropertyValue` — a 5-tuple
+  ``(name, value, experiment_id, predicted, timestamp)``.
+* :class:`~repro.core.store.base.RecordEntry` — a 7-tuple in field order.
+
+Both codecs lose tuple-ness (msgpack and JSON render tuples as arrays), so
+every decode path rebuilds the dataclasses explicitly — never trust
+container types off the wire.
+"""
+
+from __future__ import annotations
+
+import json
+import socket
+import struct
+from typing import Any, Optional, Tuple
+
+try:  # msgpack is a baked-in dependency, but the JSON path keeps the
+    import msgpack  # served store importable (and testable) without it
+except ImportError:  # pragma: no cover - exercised via codec='J' tests
+    msgpack = None
+
+__all__ = ["send_frame", "recv_frame", "encode", "decode",
+           "FrameError", "MAX_FRAME", "DEFAULT_CODEC"]
+
+_LEN = struct.Struct(">I")
+
+#: Upper bound on one frame's body (codec byte + payload): 64 MiB comfortably
+#: holds the largest legitimate message (a 1024-entry record page is ~100 KiB)
+#: while a corrupt/hostile length prefix can't make either side allocate
+#: gigabytes.
+MAX_FRAME = 64 * 1024 * 1024
+
+DEFAULT_CODEC = b"M" if msgpack is not None else b"J"
+
+
+class FrameError(ConnectionError):
+    """A malformed frame (bad codec byte, oversized length, short read)."""
+
+
+def encode(obj: Any, codec: bytes = DEFAULT_CODEC) -> bytes:
+    """Serialize ``obj`` into a frame body (codec byte + payload)."""
+    if codec == b"M":
+        if msgpack is None:
+            raise FrameError("msgpack codec requested but msgpack is unavailable")
+        return b"M" + msgpack.packb(obj, use_bin_type=True)
+    if codec == b"J":
+        return b"J" + json.dumps(obj, separators=(",", ":")).encode("utf-8")
+    raise FrameError(f"unknown codec {codec!r}")
+
+
+def decode(body: bytes) -> Any:
+    """Deserialize a frame body produced by :func:`encode`."""
+    if not body:
+        raise FrameError("empty frame body")
+    codec, payload = body[:1], body[1:]
+    if codec == b"M":
+        if msgpack is None:
+            raise FrameError("received msgpack frame but msgpack is unavailable")
+        return msgpack.unpackb(payload, raw=False, strict_map_key=False)
+    if codec == b"J":
+        return json.loads(payload.decode("utf-8"))
+    raise FrameError(f"unknown codec {codec!r}")
+
+
+def send_frame(sock: socket.socket, obj: Any,
+               codec: bytes = DEFAULT_CODEC) -> None:
+    """Write one framed message (a single ``sendall`` — atomic enough for
+    interleaving-free pipelined writes from one thread)."""
+    body = encode(obj, codec)
+    if len(body) > MAX_FRAME:
+        raise FrameError(f"frame of {len(body)} bytes exceeds MAX_FRAME")
+    sock.sendall(_LEN.pack(len(body)) + body)
+
+
+def _recv_exact(sock: socket.socket, n: int) -> Optional[bytes]:
+    """Read exactly ``n`` bytes; None on clean EOF at a frame boundary."""
+    chunks = []
+    got = 0
+    while got < n:
+        chunk = sock.recv(min(n - got, 1 << 20))
+        if not chunk:
+            if got == 0:
+                return None
+            raise FrameError(f"connection closed mid-frame ({got}/{n} bytes)")
+        chunks.append(chunk)
+        got += len(chunk)
+    return b"".join(chunks)
+
+
+def recv_frame(sock: socket.socket) -> Optional[Tuple[Any, bytes]]:
+    """Read one framed message: ``(decoded, codec)``, or None on clean EOF.
+
+    The codec is returned so a server can answer in the client's dialect.
+    """
+    header = _recv_exact(sock, _LEN.size)
+    if header is None:
+        return None
+    (length,) = _LEN.unpack(header)
+    if length == 0 or length > MAX_FRAME:
+        raise FrameError(f"invalid frame length {length}")
+    body = _recv_exact(sock, length)
+    if body is None:
+        raise FrameError("connection closed before frame body")
+    return decode(body), body[:1]

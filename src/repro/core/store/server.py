@@ -1,0 +1,279 @@
+"""The served store: one process owning the database, many clients.
+
+``python -m repro.core.store.server --db /path/store.db`` turns the
+reference SQLite store into a *service*: investigations and workers — any
+number, on any host that can reach the socket — talk to it through
+:class:`~repro.core.store.client.ClientStore` instead of opening the
+database file themselves.  This is the ExpoCloud controller/worker shape
+(PAPERS.md) applied to the paper's §III-D rendezvous: the common context no
+longer requires a shared filesystem, and every claim race
+(``claim_experiment``, ``claim_work_batch``, ``steal_claim``) is arbitrated
+inside the single server process, where SQLite's writer lock settles it
+without cross-host file-locking semantics ever entering the picture.
+
+Design:
+
+* **thread per connection**, frames processed strictly in arrival order per
+  connection — which is exactly what makes client-side *pipelining* sound
+  (N requests written back-to-back are answered by N responses in the same
+  order; see :mod:`repro.core.store.protocol`).
+* **dispatch allowlist**: the wire can invoke exactly the
+  :class:`~repro.core.store.base.StoreBackend` primitives, nothing else —
+  a method name outside the table is an error response, never a getattr.
+* **plain-data boundary**: rich types (Configuration, PropertyValue,
+  RecordEntry) are coerced at this boundary (see the protocol module's
+  docstring for the shapes); the store underneath is the stock
+  :class:`~repro.core.store.sqlite.SampleStore` and behaves byte-identically
+  to in-process use.
+
+Crash behavior: the server holds no volatile coordination state — claims,
+leases, and the work queue all live in the database — so killing it
+mid-claim loses nothing that the lease machinery doesn't already recover.
+Clients reconnect (with backoff) to a restarted server at the same URL, and
+leases whose owners died in the gap expire and are reaped/re-queued exactly
+as they would with the in-process backend (exercised by
+``tests/test_store_server.py``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import socket
+import sys
+import threading
+from typing import Optional
+
+from ..entities import PropertyValue
+from .base import DEFAULT_LEASE_S, config_from_pairs
+from .protocol import FrameError, recv_frame, send_frame
+from .sqlite import SampleStore
+
+__all__ = ["StoreServer", "main"]
+
+
+def _record_tuple(rec) -> tuple:
+    return (rec.space_id, rec.operation_id, rec.seq, rec.config_digest,
+            rec.action, rec.created_at, rec.rowid)
+
+
+def _pv_tuple(v: PropertyValue) -> tuple:
+    return (v.name, v.value, v.experiment_id, v.predicted, v.timestamp)
+
+
+def _pv_from(t) -> PropertyValue:
+    name, value, experiment_id, predicted, timestamp = t
+    return PropertyValue(name=name, value=float(value),
+                         experiment_id=experiment_id,
+                         predicted=bool(predicted), timestamp=timestamp)
+
+
+class StoreServer:
+    """Serve one :class:`SampleStore` over a TCP or unix-domain socket."""
+
+    def __init__(self, store: SampleStore, host: str = "127.0.0.1",
+                 port: int = 0, unix_path: Optional[str] = None):
+        self.store = store
+        self._lock = threading.Lock()
+        self._conns: set = set()
+        self._shutdown = threading.Event()
+        if unix_path is not None:
+            if os.path.exists(unix_path):
+                os.unlink(unix_path)  # stale socket from a dead server
+            self._sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+            self._sock.bind(unix_path)
+            self.url = f"unix://{unix_path}"
+        else:
+            self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+            self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+            self._sock.bind((host, port))
+            bound_host, bound_port = self._sock.getsockname()[:2]
+            self.url = f"tcp://{bound_host}:{bound_port}"
+        self._sock.listen(128)
+        self._accept_thread: Optional[threading.Thread] = None
+        # Bound once: the wire may invoke exactly these methods.  Handlers
+        # coerce plain wire data to rich types on the way in and back out.
+        store_do = self.store
+        self._handlers = {
+            "ping": lambda: "pong",
+            "register_space": lambda space_id, space_json, action_ids,
+                space_digest="", meta=None: store_do.register_space(
+                    space_id, space_json, action_ids, space_digest, meta),
+            "list_spaces": store_do.list_spaces,
+            "space_stats": store_do.space_stats,
+            "register_operation": store_do.register_operation,
+            "operations_for": store_do.operations_for,
+            "put_configuration": lambda pairs: store_do.put_configuration(
+                config_from_pairs(pairs)),
+            "put_configurations": lambda pairs_list: store_do.put_configurations(
+                [config_from_pairs(p) for p in pairs_list]),
+            "get_configuration": self._get_configuration,
+            "get_configurations": self._get_configurations,
+            "put_values": lambda digest, values: store_do.put_values(
+                digest, [_pv_from(v) for v in values]),
+            "get_values": lambda digest, experiment_ids=None: [
+                _pv_tuple(v) for v in store_do.get_values(digest, experiment_ids)],
+            "measured_property_values": lambda space_id, prop,
+                experiment_ids=None: [
+                    [list(config.values), value] for config, value in
+                    store_do.measured_property_values(space_id, prop,
+                                                      experiment_ids)],
+            "has_values": store_do.has_values,
+            "claim_experiment": store_do.claim_experiment,
+            "release_claim": store_do.release_claim,
+            "steal_claim": store_do.steal_claim,
+            "claim_exists": store_do.claim_exists,
+            "sweep_stale_claims": lambda grace_s=0.0:
+                store_do.sweep_stale_claims(grace_s=grace_s),
+            "renew_lease": store_do.renew_lease,
+            "release_claims_owned_by": store_do.release_claims_owned_by,
+            "enqueue_work": store_do.enqueue_work,
+            "claim_work_batch": store_do.claim_work_batch,
+            "finish_work_batch": lambda outcomes, owner=None:
+                store_do.finish_work_batch(
+                    [tuple(o) for o in outcomes], owner=owner),
+            "fetch_work_results": lambda item_ids: {
+                item_id: list(outcome) for item_id, outcome in
+                store_do.fetch_work_results(item_ids).items()},
+            "requeue_stale_work": lambda grace_s=0.0:
+                store_do.requeue_stale_work(grace_s=grace_s),
+            "pending_work": store_do.pending_work,
+            "work_queue_stats": store_do.work_queue_stats,
+            "next_seq": store_do.next_seq,
+            "append_record": lambda *args: _record_tuple(
+                store_do.append_record(*args)),
+            "append_records": lambda space_id, operation_id, events: [
+                _record_tuple(r) for r in store_do.append_records(
+                    space_id, operation_id, [tuple(e) for e in events])],
+            "records_for": lambda *args: [
+                _record_tuple(r) for r in store_do.records_for(*args)],
+            "records_since": lambda *args: [
+                _record_tuple(r) for r in store_do.records_since(*args)],
+            "last_record_rowid": store_do.last_record_rowid,
+            "has_record": store_do.has_record,
+            "sampled_digests": store_do.sampled_digests,
+            "count_measured": store_do.count_measured,
+        }
+
+    def _get_configuration(self, digest: str):
+        config = self.store.get_configuration(digest)
+        return None if config is None else list(config.values)
+
+    def _get_configurations(self, digests):
+        return {digest: list(config.values) for digest, config in
+                self.store.get_configurations(digests).items()}
+
+    # -- serving -------------------------------------------------------------
+
+    def start(self) -> "StoreServer":
+        """Serve on a daemon thread; returns self (for in-process tests)."""
+        self._accept_thread = threading.Thread(
+            target=self.serve_forever, name="store-server-accept", daemon=True)
+        self._accept_thread.start()
+        return self
+
+    def serve_forever(self) -> None:
+        while not self._shutdown.is_set():
+            try:
+                conn, _addr = self._sock.accept()
+            except OSError:
+                break  # listener closed by shutdown()
+            conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1) \
+                if conn.family == socket.AF_INET else None
+            with self._lock:
+                self._conns.add(conn)
+            threading.Thread(target=self._serve_connection, args=(conn,),
+                             name="store-server-conn", daemon=True).start()
+
+    def _serve_connection(self, conn: socket.socket) -> None:
+        try:
+            while True:
+                frame = recv_frame(conn)
+                if frame is None:
+                    return  # client hung up cleanly
+                request, codec = frame
+                req_id, method, args = request
+                handler = self._handlers.get(method)
+                if handler is None:
+                    response = [req_id, False,
+                                ["UnknownMethod", f"no such method: {method}"]]
+                else:
+                    try:
+                        response = [req_id, True, handler(*args)]
+                    except Exception as err:  # ship the failure, keep serving
+                        response = [req_id, False,
+                                    [type(err).__name__, str(err)]]
+                send_frame(conn, response, codec)
+        except (FrameError, ConnectionError, OSError):
+            pass  # client died mid-frame; its leases expire on their own
+        finally:
+            with self._lock:
+                self._conns.discard(conn)
+            try:
+                conn.close()
+            except OSError:
+                pass
+
+    def shutdown(self) -> None:
+        self._shutdown.set()
+        try:
+            # closing alone does not wake a thread blocked in accept();
+            # shutdown() does, making the accept loop observe the flag
+            self._sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+        with self._lock:
+            conns = list(self._conns)
+        for conn in conns:
+            try:
+                conn.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
+                conn.close()
+            except OSError:
+                pass
+        if self._accept_thread is not None and self._accept_thread.is_alive():
+            self._accept_thread.join(timeout=5.0)
+        self.store.close()
+
+
+def main(argv: Optional[list] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.core.store.server",
+        description="Serve a SampleStore database to many investigations/"
+                    "workers over a socket (paper §III-D, served).")
+    parser.add_argument("--db", required=True,
+                        help="SQLite database path the server owns"
+                             " (created if absent)")
+    parser.add_argument("--host", default="127.0.0.1",
+                        help="TCP bind address (default 127.0.0.1)")
+    parser.add_argument("--port", type=int, default=0,
+                        help="TCP port; 0 picks an ephemeral port"
+                             " (printed on stdout)")
+    parser.add_argument("--unix", default=None, metavar="PATH",
+                        help="serve on a unix-domain socket at PATH instead"
+                             " of TCP")
+    args = parser.parse_args(argv)
+
+    store = SampleStore(args.db)
+    server = StoreServer(store, host=args.host, port=args.port,
+                         unix_path=args.unix)
+    # machine-parseable first line: launchers (and the conformance tests)
+    # read the URL from here, then pass it to workers as --store
+    print(f"STORE_URL={server.url}", flush=True)
+    try:
+        server.serve_forever()
+    except KeyboardInterrupt:
+        pass
+    finally:
+        server.shutdown()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -92,7 +92,7 @@ def test_unknown_backend_name_rejected():
 
 def test_process_backend_requires_file_store():
     ds = make_line_ds(lambda c: {"m": 0.0}, SampleStore(":memory:"))
-    with pytest.raises(ValueError, match="file-backed"):
+    with pytest.raises(ValueError, match="reopenable store"):
         ds.sample_batch(line_configs(1), backend="process")
 
 

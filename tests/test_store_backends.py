@@ -1,0 +1,519 @@
+"""Backend-conformance suite: every StoreBackend honors the same contract.
+
+Each test runs against BOTH backends via the ``backend`` fixture:
+
+* ``sqlite`` — the reference :class:`~repro.core.store.sqlite.SampleStore`
+  on a temp file;
+* ``server`` — an in-process :class:`~repro.core.store.server.StoreServer`
+  over the same SQLite store, reached through a
+  :class:`~repro.core.store.client.ClientStore` socket connection.
+
+The served pair shares one FakeClock with the test body, so lease/sweep
+behavior is driven deterministically on both sides of the wire.  Covers the
+contract the rest of the repo relies on: single-winner claims, lease-based
+staleness, the priority work queue, watermark paging of ``records_since``,
+measure-once under concurrency, and the batched write paths.
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+
+import pytest
+
+from repro.core import Configuration, FakeClock
+from repro.core.entities import PropertyValue
+from repro.core.store import open_store
+from repro.core.store.base import RECORD_PAGE_SIZE
+from repro.core.store.client import ClientStore, StoreRemoteError
+from repro.core.store.server import StoreServer
+from repro.core.store.sqlite import SampleStore
+
+SPACE = "conformance-space"
+OP = "op-main"
+
+
+def _config(i: int) -> Configuration:
+    return Configuration(values=(("size", i), ("tier", f"t{i % 3}")))
+
+
+@pytest.fixture(params=["sqlite", "server"])
+def backend(request, tmp_path):
+    """(store, clock): the backend under test + the clock driving it."""
+    clock = FakeClock()
+    base = SampleStore(str(tmp_path / "store.db"), clock=clock)
+    if request.param == "sqlite":
+        yield base, clock
+        base.close()
+        return
+    server = StoreServer(base, unix_path=str(tmp_path / "store.sock")).start()
+    client = ClientStore(server.url, clock=clock)
+    yield client, clock
+    client.close()
+    server.shutdown()
+
+
+# ----------------------------------------------------------------- identity
+
+
+def test_configurations_roundtrip_and_batch(backend):
+    store, _ = backend
+    configs = [_config(i) for i in range(7)]
+    digests = store.put_configurations(configs)
+    assert digests == [c.digest for c in configs]
+    # batch interning is idempotent and matches the per-item path
+    assert store.put_configuration(configs[0]) == digests[0]
+    for digest, config in zip(digests, configs):
+        assert store.get_configuration(digest) == config
+    # the decode survives a cold cache (forces the wire/SQL path)
+    store.invalidate_config_cache()
+    fetched = store.get_configurations(digests + ["missing-digest"])
+    assert fetched == dict(zip(digests, configs))
+    assert store.get_configuration("missing-digest") is None
+
+
+def test_values_roundtrip_types(backend):
+    store, clock = backend
+    digest = store.put_configuration(_config(1))
+    store.put_values(digest, [
+        PropertyValue(name="p95_ms", value=12.5, experiment_id="exp-a",
+                      predicted=False, timestamp=clock.time()),
+        PropertyValue(name="p95_ms", value=11.0, experiment_id="exp-a",
+                      predicted=True, timestamp=clock.time()),
+    ])
+    values = store.get_values(digest)
+    assert [(v.name, v.value, v.experiment_id, v.predicted) for v in values] \
+        == [("p95_ms", 12.5, "exp-a", False), ("p95_ms", 11.0, "exp-a", True)]
+    assert store.get_values(digest, ["other"]) == []
+    assert store.has_values(digest, "exp-a")
+    assert not store.has_values(digest, "exp-b")
+
+
+def test_spaces_and_operations(backend):
+    store, _ = backend
+    store.register_space(SPACE, {"dims": ["size"]}, ["exp-a"],
+                         space_digest="omega-digest",
+                         meta={"dimensions": ["size"]})
+    store.register_operation(OP, SPACE, "optimizer", {"seed": 7})
+    spaces = store.list_spaces()
+    assert [s["space_id"] for s in spaces] == [SPACE]
+    assert spaces[0]["space_digest"] == "omega-digest"
+    assert spaces[0]["meta"] == {"dimensions": ["size"]}
+    ops = store.operations_for(SPACE)
+    assert [(o["operation_id"], o["kind"], o["meta"]) for o in ops] \
+        == [(OP, "optimizer", {"seed": 7})]
+
+
+# ------------------------------------------------------------------- claims
+
+
+def test_claim_single_winner_across_threads(backend):
+    store, _ = backend
+    digest = store.put_configuration(_config(1))
+    wins = []
+    barrier = threading.Barrier(8)
+
+    def racer(i):
+        barrier.wait()
+        if store.claim_experiment(digest, "exp-a", owner=f"w{i}"):
+            wins.append(i)
+
+    threads = [threading.Thread(target=racer, args=(i,)) for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(wins) == 1
+    assert store.claim_exists(digest, "exp-a")
+    store.release_claim(digest, "exp-a")
+    assert not store.claim_exists(digest, "exp-a")
+
+
+def test_steal_only_after_lease_expiry(backend):
+    store, clock = backend
+    digest = store.put_configuration(_config(2))
+    assert store.claim_experiment(digest, "exp-a", owner="alice", lease_s=10.0)
+    # live lease: unstealable no matter how impatient the waiter
+    assert not store.steal_claim(digest, "exp-a", "bob", older_than_s=0.0)
+    clock.advance(11.0)
+    assert store.steal_claim(digest, "exp-a", "bob", older_than_s=30.0)
+    # the winner's refreshed lease shuts out the rest of the pack
+    assert not store.steal_claim(digest, "exp-a", "carol", older_than_s=30.0)
+
+
+def test_lease_renewal_and_sweep(backend):
+    store, clock = backend
+    d1 = store.put_configuration(_config(3))
+    d2 = store.put_configuration(_config(4))
+    assert store.claim_experiment(d1, "exp-a", owner="alive", lease_s=5.0)
+    assert store.claim_experiment(d2, "exp-a", owner="dead", lease_s=5.0)
+    clock.advance(4.0)
+    assert store.renew_lease("alive", 5.0) == 1  # heartbeat
+    clock.advance(2.0)  # dead's lease (t=5) expired; alive's (t=9) has not
+    assert store.sweep_stale_claims() == 1
+    assert store.claim_exists(d1, "exp-a")
+    assert not store.claim_exists(d2, "exp-a")
+    assert store.release_claims_owned_by("alive") == 1
+
+
+def test_wait_for_values_outcomes_and_backoff(backend):
+    store, clock = backend
+    digest = store.put_configuration(_config(5))
+    # no claim, no values -> immediate False (owner vanished)
+    assert store.wait_for_values(digest, "exp-a", timeout_s=30.0) is False
+    # values present -> immediate True
+    store.put_values(digest, [PropertyValue(
+        name="m", value=1.0, experiment_id="exp-a", predicted=False,
+        timestamp=clock.time())])
+    assert store.wait_for_values(digest, "exp-a", timeout_s=30.0) is True
+    # a held claim with no values runs to timeout — and the exponential
+    # backoff keeps the poll count logarithmic-then-capped instead of
+    # hammering at a fixed interval (the satellite-1 fix): 60 s at the old
+    # fixed 50 ms interval would be 1200 polls
+    d2 = store.put_configuration(_config(6))
+    assert store.claim_experiment(d2, "exp-a", owner="slow", lease_s=3600.0)
+    polls = {"n": 0}
+    original = store._poll_cell
+
+    def counting(*args, **kwargs):
+        polls["n"] += 1
+        return original(*args, **kwargs)
+
+    store._poll_cell = counting
+    try:
+        assert store.wait_for_values(d2, "exp-a", timeout_s=60.0) is False
+    finally:
+        del store._poll_cell
+    assert 10 <= polls["n"] <= 300
+
+
+# --------------------------------------------------------------- work queue
+
+
+def test_work_queue_priority_order_and_batching(backend):
+    store, _ = backend
+    digests = store.put_configurations([_config(i) for i in range(5)])
+    items = [store.enqueue_work(SPACE, d, priority=p)
+             for d, p in zip(digests, [0.1, 2.0, 1.0, 2.0, 0.5])]
+    first = store.claim_work_batch("w1", limit=3, space_id=SPACE)
+    # best priority first, FIFO within the 2.0 tie
+    assert [c["item_id"] for c in first] == [items[1], items[3], items[2]]
+    assert store.pending_work(SPACE) == 5
+    assert store.finish_work_batch(
+        [(c["item_id"], "measured", None) for c in first], owner="w1") == 3
+    rest = store.claim_work_batch("w2", limit=10, space_id=SPACE)
+    assert [c["item_id"] for c in rest] == [items[4], items[0]]
+    assert store.finish_work(rest[0]["item_id"], "failed", "boom",
+                             owner="w2")
+    results = store.fetch_work_results(items)
+    assert results[items[1]] == ("measured", None)
+    assert results[items[4]] == ("failed", "boom")
+    stats = store.work_queue_stats(SPACE)
+    assert (stats["queued"], stats["running"], stats["done"]) == (0, 1, 4)
+
+
+def test_stale_work_requeue_and_owner_guard(backend):
+    store, clock = backend
+    digest = store.put_configuration(_config(9))
+    item = store.enqueue_work(SPACE, digest, priority=1.5)
+    claim = store.claim_work("ghost", space_id=SPACE, lease_s=5.0)
+    assert claim["item_id"] == item
+    clock.advance(6.0)  # ghost's heartbeats stopped
+    assert store.requeue_stale_work() == 1
+    reclaim = store.claim_work("survivor", space_id=SPACE, lease_s=5.0)
+    assert reclaim["item_id"] == item
+    assert reclaim["priority"] == 1.5  # priority survives the re-queue
+    # the ghost coming back to life cannot overwrite the re-execution
+    assert store.finish_work_batch([(item, "measured", None)],
+                                   owner="ghost") == 0
+    assert store.finish_work_batch([(item, "measured", None)],
+                                   owner="survivor") == 1
+
+
+def test_claim_work_batch_partitions_under_race(backend):
+    store, _ = backend
+    digests = store.put_configurations([_config(i) for i in range(20)])
+    for d in digests:
+        store.enqueue_work(SPACE, d)
+    claimed: dict = {}
+    lock = threading.Lock()
+    barrier = threading.Barrier(4)
+
+    def worker(name):
+        barrier.wait()
+        while True:
+            batch = store.claim_work_batch(name, limit=3, space_id=SPACE)
+            if not batch:
+                return
+            with lock:
+                for c in batch:
+                    assert c["item_id"] not in claimed, "double-claim!"
+                    claimed[c["item_id"]] = name
+
+    threads = [threading.Thread(target=worker, args=(f"w{i}",))
+               for i in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(claimed) == 20
+
+
+# ------------------------------------------------- records & watermark paging
+
+
+def test_append_records_batch_matches_per_row(backend):
+    store, _ = backend
+    digests = store.put_configurations([_config(i) for i in range(6)])
+    one = store.append_record(SPACE, OP, digests[0], "measured")
+    assert (one.seq, one.space_id, one.action) == (0, SPACE, "measured")
+    batch = store.append_records(
+        SPACE, OP, [(d, "measured") for d in digests[1:4]])
+    assert [r.seq for r in batch] == [1, 2, 3]
+    assert [r.config_digest for r in batch] == digests[1:4]
+    assert batch[0].rowid > one.rowid
+    assert store.next_seq(SPACE, OP) == 4
+    assert store.append_records(SPACE, OP, []) == []
+    # per-operation isolation: a second operation starts its own sequence
+    other = store.append_record(SPACE, "op-other", digests[4], "reused")
+    assert other.seq == 0
+    assert store.count_measured(SPACE) == 4
+    assert store.has_record(SPACE, digests[0])
+    assert not store.has_record(SPACE, digests[5])
+    assert store.sampled_digests(SPACE) == digests[:4] + [digests[4]]
+
+
+def test_records_since_watermark_paging(backend):
+    store, _ = backend
+    digests = store.put_configurations([_config(i) for i in range(30)])
+    store.append_records(SPACE, OP, [(d, "measured") for d in digests])
+    tail = store.last_record_rowid(SPACE)
+    assert tail > 0
+    # paged iteration sees every record exactly once, in rowid order
+    paged = list(store.iter_records_since(SPACE, 0, page_size=7))
+    assert [r.config_digest for r in paged] == digests
+    assert [r.rowid for r in paged] == sorted(r.rowid for r in paged)
+    # consume returns the snapshot tail as the new watermark
+    records, watermark = store.consume_records_since(SPACE, 0, page_size=7)
+    assert watermark == tail
+    assert len(records) == 30
+    # resuming from the watermark is empty until new rows land
+    assert store.consume_records_since(SPACE, watermark) == ([], watermark)
+    store.append_record(SPACE, "op-other", digests[0], "reused")
+    fresh, new_mark = store.consume_records_since(SPACE, watermark)
+    assert [r.action for r in fresh] == ["reused"]
+    assert new_mark == store.last_record_rowid(SPACE)
+    # exclude_operation drops rows server-side but still advances the mark
+    same, mark2 = store.consume_records_since(
+        SPACE, watermark, exclude_operation="op-other")
+    assert same == [] and mark2 == new_mark
+    # upto_rowid bounds a page at a snapshot
+    bounded = store.records_since(SPACE, 0, upto_rowid=paged[9].rowid)
+    assert len(bounded) == 10
+
+
+def test_records_since_page_boundary_exact_multiple(backend):
+    store, _ = backend
+    digests = store.put_configurations(
+        [_config(i) for i in range(2 * RECORD_PAGE_SIZE // 128)])
+    events = [(d, "measured") for d in digests]
+    store.append_records(SPACE, OP, events)
+    # page_size dividing the row count exactly must not loop or drop rows
+    page_size = len(events) // 2
+    got = list(store.iter_records_since(SPACE, 0, page_size=page_size))
+    assert len(got) == len(events)
+
+
+def test_measured_property_values_latest_wins(backend):
+    store, clock = backend
+    digests = store.put_configurations([_config(i) for i in range(3)])
+    store.append_records(SPACE, OP, [(d, "measured") for d in digests[:2]]
+                         + [(digests[2], "failed")])
+    for i, d in enumerate(digests[:2]):
+        store.put_values(d, [PropertyValue(
+            name="cost", value=float(i), experiment_id="exp-a",
+            predicted=False, timestamp=clock.time())])
+    # re-measurement: the later value wins
+    store.put_values(digests[0], [PropertyValue(
+        name="cost", value=9.0, experiment_id="exp-a", predicted=False,
+        timestamp=clock.time())])
+    # predicted values never surface here
+    store.put_values(digests[1], [PropertyValue(
+        name="cost", value=99.0, experiment_id="exp-a", predicted=True,
+        timestamp=clock.time())])
+    pairs = store.measured_property_values(SPACE, "cost")
+    assert [(dict(c.values)["size"], v) for c, v in pairs] \
+        == [(0, 9.0), (1, 1.0)]  # failed config absent, order = appearance
+
+
+# ---------------------------------------------- measure-once, cross-backend
+
+
+def test_measure_once_across_backend_boundary(tmp_path):
+    """A served client and a direct SQLite handle racing on one database
+    still measure each cell exactly once (the claim arbitration is the
+    database transaction, whichever door the request came through)."""
+    db = str(tmp_path / "shared.db")
+    direct = SampleStore(db)
+    server = StoreServer(SampleStore(db),
+                         unix_path=str(tmp_path / "s.sock")).start()
+    client = ClientStore(server.url)
+    try:
+        digest = direct.put_configuration(_config(0))
+        wins = []
+        barrier = threading.Barrier(2)
+
+        def race(store, name):
+            barrier.wait()
+            if store.claim_experiment(digest, "exp-a", owner=name):
+                wins.append(name)
+
+        threads = [threading.Thread(target=race, args=(direct, "direct")),
+                   threading.Thread(target=race, args=(client, "served"))]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert len(wins) == 1
+    finally:
+        client.close()
+        server.shutdown()
+        direct.close()
+
+
+# ------------------------------------------------------------ wire specifics
+
+
+def test_server_rejects_unknown_method_and_survives_errors(backend):
+    store, _ = backend
+    if not isinstance(store, ClientStore):
+        pytest.skip("wire-protocol specifics")
+    with pytest.raises(StoreRemoteError):
+        store._call("drop_all_tables")
+    # a failing request poisons neither the connection nor the server
+    with pytest.raises(StoreRemoteError):
+        store._call("claim_experiment")  # missing args -> TypeError remotely
+    assert store._call("ping") == "pong"
+
+
+def test_client_pipelining_order(backend):
+    store, _ = backend
+    if not isinstance(store, ClientStore):
+        pytest.skip("wire-protocol specifics")
+    digests = store.put_configurations([_config(i) for i in range(4)])
+    results = store._call_many(
+        [("has_record", [SPACE, d, False]) for d in digests]
+        + [("ping", [])])
+    assert results == [False, False, False, False, "pong"]
+
+
+def test_json_codec_fallback(tmp_path):
+    base = SampleStore(str(tmp_path / "j.db"))
+    server = StoreServer(base, unix_path=str(tmp_path / "j.sock")).start()
+    client = ClientStore(server.url, codec=b"J")
+    try:
+        config = _config(3)
+        digest = client.put_configuration(config)
+        client.invalidate_config_cache()
+        assert client.get_configuration(digest) == config
+        rec = client.append_record(SPACE, OP, digest, "measured")
+        assert rec.seq == 0 and rec.rowid > 0
+    finally:
+        client.close()
+        server.shutdown()
+
+
+def test_open_store_dispatch(tmp_path):
+    db = str(tmp_path / "o.db")
+    assert isinstance(open_store(db), SampleStore)
+    server = StoreServer(SampleStore(db),
+                         unix_path=str(tmp_path / "o.sock")).start()
+    try:
+        client = open_store(server.url)
+        assert isinstance(client, ClientStore)
+        assert client.path == server.url
+        client.close()
+    finally:
+        server.shutdown()
+    with pytest.raises(ValueError):
+        open_store("tcp://no-port")
+
+
+# ------------------------------------------------------------- index usage
+
+
+def _plan(store: SampleStore, sql: str, params=()) -> str:
+    return " ".join(str(row[3]) for row in
+                    store._rows(f"EXPLAIN QUERY PLAN {sql}", params))
+
+
+def test_sweeps_are_index_driven(tmp_path):
+    """The satellite-3 guarantee: stale-claim/stale-work sweeps run off the
+    covering indexes, not full-table scans — O(stale rows) per sweep at
+    10⁶-row depth."""
+    store = SampleStore(str(tmp_path / "idx.db"))
+    plan = _plan(store,
+                 "DELETE FROM value_claims WHERE lease_expires_at < ?",
+                 (0.0,))
+    assert "vc_lease" in plan, plan
+    plan = _plan(store,
+                 "UPDATE work_items SET status='queued'"
+                 " WHERE status='running' AND lease_expires_at < ?", (0.0,))
+    assert "wi_lease" in plan, plan
+    # the space-scoped queue pop and the catalog stats scan are covered too
+    plan = _plan(store,
+                 "SELECT item_id FROM work_items"
+                 " WHERE status='queued' AND space_id=?"
+                 " ORDER BY priority DESC, created_at, rowid LIMIT 1",
+                 ("s",))
+    assert "wi_prio" in plan, plan
+    plan = _plan(store,
+                 "SELECT space_id, COUNT(*), SUM(action='measured'),"
+                 " SUM(action='failed'), COUNT(DISTINCT config_digest)"
+                 " FROM records GROUP BY space_id")
+    assert "rec_stats" in plan, plan
+    store.close()
+
+
+# ----------------------------------------- measured_property_values decode
+
+
+def test_measured_property_values_decodes_once_per_digest(tmp_path,
+                                                          monkeypatch):
+    """Satellite-2 regression: on a 10⁴-row space the read decodes each
+    configuration once per DISTINCT digest, not once per value row (the old
+    JOIN shipped + decoded the config JSON on every property row)."""
+    store = SampleStore(str(tmp_path / "n1.db"))
+    n_distinct, rows_per = 100, 100  # 10⁴ value rows over 100 configs
+    configs = [_config(i) for i in range(n_distinct)]
+    digests = store.put_configurations(configs)
+    store.append_records(SPACE, OP, [(d, "measured") for d in digests])
+    for digest in digests:
+        store.put_values(digest, [
+            PropertyValue(name="cost", value=float(k), experiment_id="e",
+                          predicted=False, timestamp=0.0)
+            for k in range(rows_per)])
+    store.close()
+
+    fresh = SampleStore(str(tmp_path / "n1.db"))  # cold cache
+    from repro.core.store import sqlite as sqlite_mod
+    decodes = {"n": 0}
+    real_loads = json.loads
+
+    def counting_loads(s, *a, **k):
+        decodes["n"] += 1
+        return real_loads(s, *a, **k)
+
+    monkeypatch.setattr(sqlite_mod.json, "loads", counting_loads)
+    pairs = fresh.measured_property_values(SPACE, "cost")
+    assert len(pairs) == n_distinct
+    # last row per digest wins
+    assert all(v == float(rows_per - 1) for _, v in pairs)
+    assert decodes["n"] <= n_distinct, \
+        f"{decodes['n']} decodes for {n_distinct} digests (N+1 regression)"
+    # warm cache: a second read decodes nothing
+    decodes["n"] = 0
+    fresh.measured_property_values(SPACE, "cost")
+    assert decodes["n"] == 0
+    fresh.close()

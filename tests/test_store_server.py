@@ -1,0 +1,170 @@
+"""Served-store process tests: crash recovery, reconnects, spec e2e.
+
+The conformance suite (``test_store_backends.py``) pins the contract with an
+in-process server; these tests run ``python -m repro.core.store.server`` as
+a real subprocess and exercise what only a separate process can show:
+
+* **crash mid-claim** — SIGKILL the server while a worker holds a work-item
+  claim and a measurement claim; restart it on the same URL; the client
+  reconnects transparently and the *existing lease machinery* recovers both
+  (the server holds no volatile coordination state — everything lives in
+  the database).
+* **zombie fencing across the crash** — the pre-crash owner's finish is
+  rejected by the owner guard after its item was re-queued and re-claimed.
+* **spec-driven e2e** — ``InvestigationSpec.store = <url>`` runs a whole
+  investigation through the served store, draw-for-draw identical to the
+  same spec on the in-process reference backend.
+"""
+
+from __future__ import annotations
+
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (Configuration, Dimension, Investigation,
+                        InvestigationSpec, ProbabilitySpace, SampleStore)
+from repro.core.api.spec import BudgetSpec, ExperimentSpec, OptimizerSpec
+from repro.core.store.client import ClientStore
+
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                    "src")
+SPACE = "served-space"
+
+
+def start_server(db: str, sock: str) -> tuple:
+    """Launch a store-server subprocess; returns (proc, url) once it's up."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.core.store.server",
+         "--db", db, "--unix", sock],
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True, env=env)
+    line = proc.stdout.readline()  # blocks until the server binds
+    assert line.startswith("STORE_URL="), f"unexpected server output: {line!r}"
+    return proc, line.strip().split("=", 1)[1]
+
+
+def stop(proc) -> None:
+    if proc.poll() is None:
+        proc.send_signal(signal.SIGTERM)
+        try:
+            proc.wait(timeout=10)
+        except subprocess.TimeoutExpired:
+            proc.kill()
+            proc.wait(timeout=10)
+    proc.stdout.close()
+
+
+def test_server_crash_mid_claim_lease_recovery(tmp_path):
+    db, sock = str(tmp_path / "crash.db"), str(tmp_path / "crash.sock")
+    proc, url = start_server(db, sock)
+    client = ClientStore(url, retries=8)
+    try:
+        digest = client.put_configuration(
+            Configuration(values=(("size", 1),)))
+        item = client.enqueue_work(SPACE, digest, priority=1.0)
+        lease_s = 1.0
+        claim = client.claim_work("doomed", space_id=SPACE, lease_s=lease_s)
+        assert claim["item_id"] == item
+        assert client.claim_experiment(digest, "exp-a", owner="doomed",
+                                       lease_s=lease_s)
+        claimed_at = time.time()
+
+        proc.kill()  # SIGKILL: no shutdown path runs
+        proc.wait(timeout=10)
+
+        # same db, same socket path -> same URL; the durable state (queue,
+        # claims, leases) is all in the database
+        proc, url2 = start_server(db, sock)
+        assert url2 == url
+
+        # the doomed worker's heartbeats died with the old connection; wait
+        # out its lease, then the standard sweeps recover everything
+        time.sleep(max(0.0, claimed_at + lease_s + 0.3 - time.time()))
+        assert client.requeue_stale_work() == 1  # transparent reconnect too
+        assert client.sweep_stale_claims() >= 1
+        assert not client.claim_exists(digest, "exp-a")
+
+        survivor = client.claim_work("survivor", space_id=SPACE, lease_s=30.0)
+        assert survivor["item_id"] == item
+        assert survivor["priority"] == 1.0
+        # the pre-crash owner coming back cannot overwrite the re-execution
+        assert client.finish_work_batch([(item, "measured", None)],
+                                        owner="doomed") == 0
+        assert client.finish_work(item, "measured", owner="survivor")
+        assert client.fetch_work_results([item]) == {
+            item: ("measured", None)}
+    finally:
+        client.close()
+        stop(proc)
+
+
+def test_client_survives_clean_server_restart(tmp_path):
+    db, sock = str(tmp_path / "re.db"), str(tmp_path / "re.sock")
+    proc, url = start_server(db, sock)
+    client = ClientStore(url, retries=8)
+    try:
+        digest = client.put_configuration(
+            Configuration(values=(("size", 2),)))
+        stop(proc)
+        proc, _ = start_server(db, sock)
+        # the dead socket is detected and redialed inside one call
+        client.invalidate_config_cache()
+        assert client.get_configuration(digest) is not None
+        assert client.count_measured() == 0
+    finally:
+        client.close()
+        stop(proc)
+
+
+def test_dead_server_raises_connection_error(tmp_path):
+    db, sock = str(tmp_path / "dead.db"), str(tmp_path / "dead.sock")
+    proc, url = start_server(db, sock)
+    client = ClientStore(url, retries=2)
+    stop(proc)
+    with pytest.raises(ConnectionError):
+        client.count_measured()
+    client.close()
+
+
+def _quad_spec(store_url, seed=5):
+    vals = [round(v, 3) for v in np.linspace(-2, 2, 6)]
+    space = ProbabilitySpace.make([Dimension.discrete("x", vals),
+                                   Dimension.discrete("y", vals)])
+    return InvestigationSpec(
+        name="served-e2e", space=space, metric="loss",
+        experiments=(ExperimentSpec("quad"),),
+        optimizers=(OptimizerSpec("tpe", seed=seed),),
+        budget=BudgetSpec(max_trials=8, patience=8),
+        store=store_url)
+
+
+def trail(result):
+    return [(t.configuration.digest, t.value, t.action)
+            for t in result.members[0].run.trials]
+
+
+def test_investigation_runs_draw_for_draw_over_served_store(tmp_path):
+    """The acceptance gate in miniature: the same spec produces the
+    byte-identical trajectory whether the rendezvous is the in-process
+    reference backend or the served one."""
+    proc, url = start_server(str(tmp_path / "e2e.db"),
+                             str(tmp_path / "e2e.sock"))
+    try:
+        served = Investigation(_quad_spec(url)).run()
+        reference = Investigation(_quad_spec(None)).run()
+        assert trail(served) == trail(reference)
+        assert served.summary()["paid_measurements"] \
+            == reference.summary()["paid_measurements"]
+    finally:
+        stop(proc)
+    # the measurements are durable in the server's database
+    store = SampleStore(str(tmp_path / "e2e.db"))
+    assert store.count_measured() == 8
+    store.close()
