@@ -1,0 +1,266 @@
+"""SLA-constrained multi-objective benchmark: constrained search vs
+unconstrained-then-post-filter.
+
+The paper's headline use case (abstract: "minimal cost while meeting a
+defined service level agreement") over the Table-III workload surfaces:
+each workload gains a synthetic *provisioning cost* property shaped so the
+cheapest configurations are exactly the ones that violate a latency SLA —
+a cost-only search is actively steered toward SLA violators.
+
+Two arms per workload, same optimizer family (BO-GP), seed, and budget:
+
+* **constrained** — an :class:`~repro.core.api.investigation.Investigation`
+  with ``objective.constraints = [latency <= bound]``: feasibility-weighted
+  EI acquisition, infeasible trials excluded from the incumbent.
+* **unconstrained+post-filter** — minimize cost with no constraint, then
+  post-hoc discard trials whose ground-truth latency violates the bound
+  (the workflow the objective DSL replaces).
+
+Metric: *paid measurements* (measured + failed deployments) until the first
+feasible trial at/below the top-decile feasible cost of the exhaustive
+ground truth (the best-known-feasible-cost threshold — the strict minimum
+sits on the SLA boundary under measurement jitter, so the decile quantile
+plays the role transfer_bench's top-quantile threshold does); median over a
+seed set.  Both arms are additionally scored
+with the hypervolume of their measured (cost, latency) points over paid
+measurements — the multi-objective coverage the store's Pareto ``frontier``
+view exposes — and the constrained arm's store frontier is read back
+through :meth:`~repro.core.store.base.StoreBackend.frontier`.
+
+Run directly::
+
+    PYTHONPATH=src python -m benchmarks.moo_bench [--quick] [--out F]
+
+``--quick`` is the CI smoke mode (fewer seeds/trials); either mode writes
+the full result set to ``BENCH_moo.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core import (ActionSpace, DiscoverySpace, FunctionExperiment,
+                        Investigation, MeasurementError, SampleStore)
+from repro.core.api.spec import ConstraintSpec, ObjectiveSpec
+from repro.core.optimizers import OPTIMIZER_REGISTRY
+from repro.core.pareto import hypervolume
+
+from .workloads import make_mi_opt, make_si_opt, make_tp_opt
+
+__all__ = ["run_moo_bench", "SLA_WORKLOADS"]
+
+COST = "cost_per_h"
+
+
+def _sla_tp_opt():
+    """TP-OPT + per-hour cluster price: small/slow clusters are cheapest
+    and sit on the spill/parallelism penalty — they miss any runtime SLA."""
+    space, exp, metric, _ = make_tp_opt()
+
+    def fn(c):
+        out = dict(exp.measure(c))
+        out[COST] = c["executors"] * (0.05 * c["cores_per_exec"]
+                                      + 0.012 * c["mem_gb"])
+        return out
+
+    return {"name": "TP-OPT", "space": space, "latency": metric,
+            "quantile": 0.35,
+            "exp": FunctionExperiment(fn=fn, properties=(metric, COST),
+                                      name="tpcds-sla")}
+
+
+def _sla_si_opt():
+    """SI-OPT + GPU-tier instance price: a single T4 is the cheapest
+    deployment and the slowest — p95 SLAs need bigger silicon."""
+    space, exp, metric, _ = make_si_opt()
+    price = {"A100-PCIE-40GB": 3.0, "V100-PCIE-16GB": 1.8, "Tesla-T4": 0.6}
+
+    def fn(c):
+        out = dict(exp.measure(c))
+        out[COST] = (price[c["gpu_model"]] * c["num_gpus"]
+                     + 0.02 * c["cpu_cores"] + 0.004 * c["memory_gi"])
+        return out
+
+    return {"name": "SI-OPT", "space": space, "latency": metric,
+            "quantile": 0.35,
+            "exp": FunctionExperiment(fn=fn, properties=(metric, COST),
+                                      name="tgi-single-sla")}
+
+
+def _sla_mi_opt():
+    """MI-OPT + provisioned-capacity price (batch/concurrency/sequence
+    capacity drives instance sizing): low-capacity serving is cheap but
+    slow, and the OOM cliff makes some big configs non-deployable."""
+    space, exp, metric, _ = make_mi_opt()
+
+    def fn(c):
+        out = dict(exp.measure(c))  # raises MeasurementError on the cliff
+        out[COST] = (0.20 * np.log2(c["max_batch"])
+                     + 0.10 * np.log2(c["max_concurrent"] / 32)
+                     + 0.15 * np.log2(c["max_seq"] / 512)
+                     + 0.10 * (c["max_new_tokens"] / 512)
+                     + (0.25 if c["flash_attention"] else 0.0))
+        return out
+
+    return {"name": "MI-OPT", "space": space, "latency": metric,
+            "quantile": 0.30,
+            "exp": FunctionExperiment(fn=fn, properties=(metric, COST),
+                                      name="tgi-multi-sla")}
+
+
+SLA_WORKLOADS = {
+    "TP-OPT": _sla_tp_opt,
+    "SI-OPT": _sla_si_opt,
+    "MI-OPT": _sla_mi_opt,
+}
+
+
+def _ground_truth(wl: dict, goal_quantile: float = 0.10) -> dict:
+    """Exhaustive (cost, latency) per deployable digest + the SLA bound
+    (latency quantile), best-known feasible cost, and the goal threshold
+    (``goal_quantile`` of the feasible cost distribution)."""
+    truth = {}
+    for c in wl["space"].all_configurations():
+        try:
+            out = wl["exp"].measure(c)
+        except MeasurementError:
+            continue
+        truth[c.digest] = (float(out[COST]), float(out[wl["latency"]]))
+    lats = np.array([v[1] for v in truth.values()])
+    bound = float(np.quantile(lats, wl["quantile"]))
+    feas = [cost for cost, lat in truth.values() if lat <= bound]
+    return {"truth": truth, "bound": bound,
+            "best_feasible_cost": float(min(feas)),
+            "goal_cost": float(np.quantile(feas, goal_quantile)),
+            "cheapest_cost": float(min(c for c, _ in truth.values())),
+            "feasible_fraction": len(feas) / len(truth)}
+
+
+def _run_arm(wl: dict, gt: dict, seed: int, trials: int,
+             constrained: bool):
+    store = SampleStore(":memory:")
+    ds = DiscoverySpace(space=wl["space"],
+                        actions=ActionSpace.make([wl["exp"]]), store=store)
+    objective = None
+    if constrained:
+        objective = ObjectiveSpec(constraints=(
+            ConstraintSpec(wl["latency"], "<=", gt["bound"]),))
+    inv = Investigation.from_components(
+        ds, [OPTIMIZER_REGISTRY["bo-gp"](seed=seed)], COST, mode="min",
+        max_trials=trials, patience=trials + 1, backend="serial",
+        objective=objective, name="moo-bench")
+    return inv.run(), ds
+
+
+def _score(result, gt: dict, budget: int):
+    """(paid-to-goal, hypervolume-over-paid) for one run, judged against
+    ground truth so both arms face the same post-filter."""
+    goal = gt["goal_cost"]
+    ref = (max(c for c, _ in gt["truth"].values()) * 1.05,
+           max(l for _, l in gt["truth"].values()) * 1.05)
+    paid, paid_to_goal, points, hv = 0, budget + 1, [], []
+    for _, t in result.events:
+        if t.action not in ("measured", "failed"):
+            continue
+        paid += 1
+        pt = gt["truth"].get(t.configuration.digest)
+        if pt is not None and t.action == "measured":
+            points.append(pt)
+            if pt[1] <= gt["bound"] and pt[0] <= goal \
+                    and paid_to_goal > budget:
+                paid_to_goal = paid
+        hv.append(hypervolume(points, ref))
+    return paid_to_goal, hv
+
+
+def run_moo_bench(workloads=None, seeds=range(8), trials: int = 50,
+                  verbose: bool = True) -> dict:
+    """Constrained-vs-post-filter ablation over a seed set (module
+    docstring).  Reported per workload: median paid measurements to the
+    best-known feasible cost for each arm, the win flag, final-hypervolume
+    medians, and the size of the constrained store's Pareto frontier."""
+    workloads = workloads if workloads is not None else list(SLA_WORKLOADS)
+    out = {"trials_per_run": trials, "seeds": list(seeds),
+           "optimizer": "bo-gp", "cost_property": COST, "workloads": {}}
+    for wname in workloads:
+        wl = SLA_WORKLOADS[wname]()
+        gt = _ground_truth(wl)
+        arms = {"constrained": [], "unconstrained_postfilter": []}
+        hv_final = {k: [] for k in arms}
+        hv_curve, frontier_size = None, None
+        for seed in seeds:
+            for constrained, arm in ((True, "constrained"),
+                                     (False, "unconstrained_postfilter")):
+                res, ds = _run_arm(wl, gt, seed, trials, constrained)
+                paid_to_goal, hv = _score(res, gt, trials)
+                arms[arm].append(paid_to_goal)
+                hv_final[arm].append(hv[-1] if hv else 0.0)
+                if constrained and hv_curve is None:
+                    hv_curve = [round(v, 4) for v in hv]
+                    frontier_size = len(ds.store.frontier(
+                        ds.space_id, [COST, wl["latency"]]))
+        medians = {arm: float(np.median(v)) for arm, v in arms.items()}
+        row = {
+            "latency_property": wl["latency"],
+            "sla_bound": round(gt["bound"], 3),
+            "space_size": wl["space"].size,
+            "feasible_fraction": round(gt["feasible_fraction"], 3),
+            "best_feasible_cost": round(gt["best_feasible_cost"], 4),
+            "goal_cost": round(gt["goal_cost"], 4),
+            "cheapest_cost_overall": round(gt["cheapest_cost"], 4),
+            "median_paid_to_feasible_best": medians,
+            "per_seed": {k: list(map(int, v)) for k, v in arms.items()},
+            "constrained_wins":
+                medians["constrained"] < medians["unconstrained_postfilter"],
+            "hypervolume_final_median": {
+                k: round(float(np.median(v)), 4) for k, v in hv_final.items()},
+            "hypervolume_curve_seed0_constrained": hv_curve,
+            "store_frontier_size": frontier_size,
+        }
+        out["workloads"][wname] = row
+        if verbose:
+            print(f"[moo] {wname}: SLA {wl['latency']} <= "
+                  f"{row['sla_bound']} (feasible "
+                  f"{row['feasible_fraction']:.0%}); paid-to-feasible-best "
+                  f"median: constrained {medians['constrained']:.1f} vs "
+                  f"post-filter {medians['unconstrained_postfilter']:.1f}; "
+                  f"frontier {frontier_size} point(s)")
+    rows = list(out["workloads"].values())
+    out["workloads_won"] = sum(1 for r in rows if r["constrained_wins"])
+    # the acceptance claim: constrained BO-GP reaches the best-known
+    # feasible cost in fewer paid measurements than unconstrained search
+    # plus post-hoc filtering on at least two of the three workloads
+    out["pass"] = out["workloads_won"] >= min(2, len(rows))
+    return out
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    parser.add_argument("--quick", action="store_true",
+                        help="CI smoke mode: fewer seeds and trials")
+    parser.add_argument("--out", default="BENCH_moo.json",
+                        help="JSON artifact path (default: %(default)s)")
+    args = parser.parse_args(argv)
+
+    t0 = time.perf_counter()
+    if args.quick:
+        result = run_moo_bench(seeds=range(3), trials=40)
+    else:
+        result = run_moo_bench()
+    result["mode_flag"] = "quick" if args.quick else "full"
+    result["wall_s"] = round(time.perf_counter() - t0, 1)
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2, sort_keys=True)
+    print(f"[moo] wrote {args.out} in {result['wall_s']}s: "
+          f"{'PASS' if result['pass'] else 'FAIL'} "
+          f"({result['workloads_won']}/{len(result['workloads'])} "
+          f"workloads won)")
+    return 0 if result["pass"] else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -25,15 +25,17 @@ Spec-driven CLI::
 from .catalog import CatalogEntry, RelatedSpace, SpaceCatalog
 from .investigation import (Investigation, InvestigationPlan,
                             InvestigationResult, TransferReport)
-from .spec import (SCHEMA_VERSION, BudgetSpec, ExecutionSpec, ExperimentSpec,
-                   InvestigationSpec, OptimizerSpec, TransferSpec,
-                   register_experiment, resolve_experiment_factory)
+from .spec import (SCHEMA_VERSION, BudgetSpec, ConstraintSpec, ExecutionSpec,
+                   ExperimentSpec, InvestigationSpec, ObjectiveSpec,
+                   OptimizerSpec, TransferSpec, register_experiment,
+                   resolve_experiment_factory)
 from . import workloads  # noqa: F401 — registers the built-in factories
 
 __all__ = [
     "Investigation", "InvestigationPlan", "InvestigationResult",
     "TransferReport", "InvestigationSpec", "ExperimentSpec", "OptimizerSpec",
-    "ExecutionSpec", "BudgetSpec", "TransferSpec", "SCHEMA_VERSION",
+    "ExecutionSpec", "BudgetSpec", "TransferSpec", "ConstraintSpec",
+    "ObjectiveSpec", "SCHEMA_VERSION",
     "SpaceCatalog", "CatalogEntry", "RelatedSpace", "register_experiment",
     "resolve_experiment_factory",
 ]

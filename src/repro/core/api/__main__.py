@@ -6,6 +6,8 @@
                                            [--resume] [--out RESULT.json]
     python -m repro.core.api validate spec.json
     python -m repro.core.api catalog --store PATH
+    python -m repro.core.api frontier --store PATH --space ID \
+                                      --properties cost,p95 [--modes min,min]
 
 ``run`` executes the spec end to end over the given store (a fresh
 in-memory store when omitted — fine for self-contained smoke specs, useless
@@ -55,10 +57,17 @@ def _cmd_run(args) -> int:
               f"{result.transfer.n_warm_trials} warm trials, "
               f"{result.transfer.paid} paid representatives)", end="")
     print()
+    if spec.objective is not None and spec.objective.constraints:
+        bounds = ", ".join(c.describe() for c in spec.objective.constraints)
+        print(f"SLA: {bounds} — {summary['infeasible']} of "
+              f"{summary['trials']} trials infeasible")
     best = summary["best"]
     if best is not None:
-        print(f"best {spec.metric} = {best['value']:.4g} at "
-              f"{best['configuration']}")
+        label = "feasible " if summary["infeasible"] else ""
+        print(f"best {label}{spec.objective_label()} = {best['value']:.4g} "
+              f"at {best['configuration']}")
+    elif spec.objective is not None and spec.objective.constraints:
+        print("no feasible configuration found within budget")
     q = summary["prediction_quality"]
     if q is not None:
         print(f"prediction quality (surrogate vs later measurements): {q}")
@@ -88,6 +97,26 @@ def _cmd_catalog(args) -> int:
         print(f"{e.space_id}  dims={','.join(s['dimensions'])} "
               f"size={s['size']} properties={','.join(s['properties']) or '?'}"
               f" records={s['records']} measured={s['measured']}")
+    return 0
+
+
+def _cmd_frontier(args) -> int:
+    properties = [p for p in args.properties.split(",") if p]
+    modes = None
+    if args.modes:
+        modes = [m for m in args.modes.split(",") if m]
+    store = open_store(args.store)
+    front = store.frontier(args.space, properties, modes)
+    if not front:
+        print("frontier is empty (no configuration has measured values for "
+              "every requested property)")
+        return 0
+    header = "  ".join(f"{p:>14}" for p in properties)
+    print(f"{header}  configuration")
+    for config, values in front:
+        cells = "  ".join(f"{v:>14.6g}" for v in values)
+        print(f"{cells}  {config.as_dict()}")
+    print(f"{len(front)} non-dominated point(s)")
     return 0
 
 
@@ -123,6 +152,19 @@ def main(argv=None) -> int:
     p_cat.add_argument("--store", required=True,
                        help="store path or server URL")
     p_cat.set_defaults(fn=_cmd_catalog)
+
+    p_fr = sub.add_parser(
+        "frontier",
+        help="print a space's measured Pareto frontier over properties")
+    p_fr.add_argument("--store", required=True,
+                      help="store path or server URL")
+    p_fr.add_argument("--space", required=True, help="space id")
+    p_fr.add_argument("--properties", required=True,
+                      help="comma-separated measured property names")
+    p_fr.add_argument("--modes", default=None,
+                      help="comma-separated min|max per property "
+                           "(default all min)")
+    p_fr.set_defaults(fn=_cmd_frontier)
 
     args = parser.parse_args(argv)
     return args.fn(args)

@@ -245,3 +245,15 @@ class SpaceCatalog:
         """
         return self.store.measured_property_values(
             entry.space_id, metric, list(entry.action_ids))
+
+    def frontier(self, entry: CatalogEntry, properties: Sequence[str],
+                 modes: Optional[Sequence[str]] = None) -> list:
+        """The entry's measured Pareto frontier over ``properties`` —
+        ``[(configuration, values), ...]`` via the store backend's
+        :meth:`~repro.core.store.base.StoreBackend.frontier` view,
+        provenance-restricted to the entry's registered action space.  The
+        multi-objective analogue of :meth:`measured_pairs`: what an
+        SLA-aware investigation inspects before deciding whether a related
+        space already covers its cost/latency trade-off."""
+        return self.store.frontier(entry.space_id, properties, modes,
+                                   list(entry.action_ids))

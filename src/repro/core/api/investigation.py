@@ -115,11 +115,15 @@ class InvestigationPlan:
     warm_start: bool
     transfer_enabled: bool
     transfer_candidates: list = field(default_factory=list)
+    constraints: list = field(default_factory=list)  # SLA bound descriptions
 
     def describe(self) -> str:
+        objective = f"{self.mode} {self.metric}"
+        if self.constraints:
+            objective += "  s.t. " + ", ".join(self.constraints)
         lines = [
             f"investigation {self.name!r} on space {self.space_id[:12]}…",
-            f"  objective : {self.mode} {self.metric}",
+            f"  objective : {objective}",
             f"  engine    : {self.engine} (backend="
             f"{self.backend or 'default'}, workers={self.workers}, "
             f"batch_size={self.batch_size}, max_inflight={self.max_inflight})",
@@ -164,11 +168,18 @@ class InvestigationResult:
 
     @property
     def best(self):
+        """Best *feasible* trial (SLA violators are real measurements but
+        never incumbents; warm predictions never appear in events)."""
         sign = 1.0 if self.mode == "min" else -1.0
-        valued = [t for _, t in self.events if t.value is not None]
+        valued = [t for _, t in self.events
+                  if t.value is not None and t.feasible is not False]
         if not valued:
             return None
         return min(valued, key=lambda t: sign * t.value)
+
+    @property
+    def num_infeasible(self) -> int:
+        return sum(1 for _, t in self.events if t.feasible is False)
 
     @property
     def num_trials(self) -> int:
@@ -225,7 +236,8 @@ class InvestigationResult:
         for _, t in self.events:
             if t.action in ("measured", "failed"):
                 paid += 1
-            if t.value is not None and t.value == best.value:
+            if t.value is not None and t.feasible is not False \
+                    and t.value == best.value:
                 return paid
         return paid  # pragma: no cover - best always appears in events
 
@@ -241,6 +253,7 @@ class InvestigationResult:
             "trials": self.num_trials,
             "measured": self.num_measured,
             "paid_measurements": self.paid_measurements,
+            "infeasible": self.num_infeasible,
             "best": None if best is None else {
                 "value": best.value,
                 "configuration": best.configuration.as_dict(),
@@ -315,6 +328,7 @@ class Investigation:
                         backend=None, share_history: bool = False,
                         warm_start: bool = False,
                         transfer: Optional[TransferSpec] = None,
+                        objective=None,
                         name: str = "adhoc") -> "Investigation":
         """Build from prebuilt objects (optimizer instances, a ready space,
         possibly an ExecutionBackend instance) — the ``run_optimizer`` path.
@@ -323,6 +337,7 @@ class Investigation:
         from .spec import BudgetSpec, ExecutionSpec
         spec = InvestigationSpec(
             name=name, space=ds.space, metric=metric, mode=mode,
+            objective=objective,
             execution=ExecutionSpec(
                 backend=backend if isinstance(backend, (str, type(None)))
                 else None,
@@ -399,7 +414,7 @@ class Investigation:
                           for rel in self._transfer_candidates()]
         return InvestigationPlan(
             name=spec.name, space_id=self.ds.space_id, engine=self.engine,
-            metric=spec.metric, mode=spec.mode,
+            metric=spec.objective_label(), mode=spec.mode,
             members=self._member_labels(),
             backend=(spec.execution.backend
                      if not isinstance(self._backend, ExecutionBackend)
@@ -410,7 +425,9 @@ class Investigation:
             budget=spec.budget.to_json(),
             share_history=spec.share_history, warm_start=spec.warm_start,
             transfer_enabled=spec.transfer.enabled,
-            transfer_candidates=candidates)
+            transfer_candidates=candidates,
+            constraints=[] if spec.objective is None else
+            [c.describe() for c in spec.objective.constraints])
 
     # ------------------------------------------------------------- execution
 
@@ -425,8 +442,9 @@ class Investigation:
                              f"{len(rngs)} != {len(optimizers)}")
         members = []
         for label, opt, rng in zip(self._member_labels(), optimizers, rngs):
-            adapter = SearchAdapter(self.ds, spec.metric, spec.mode,
-                                    optimizer_name=label)
+            adapter = SearchAdapter(self.ds, spec.objective_label(),
+                                    spec.mode, optimizer_name=label,
+                                    objective=spec.objective)
             member = _Member(label, opt, adapter, rng, None,
                              spec.execution.max_inflight or 1)
             # the floor counts the member's OWN trials: warm-start and
@@ -485,7 +503,8 @@ class Investigation:
             for m in members:
                 m.foreign_told += m.adapter.sync_foreign()
         return InvestigationResult(
-            name=spec.name, space_id=ds.space_id, metric=spec.metric,
+            name=spec.name, space_id=ds.space_id,
+            metric=spec.objective_label(),
             mode=spec.mode, engine=self.engine,
             members=[self._member_result(m) for m in members],
             events=events, transfer=transfer_report)
@@ -529,7 +548,7 @@ class Investigation:
                 told = adapter.trials[before:]
                 member.own_told += len(told)
                 for t in told:
-                    rule.observe(t.value)
+                    rule.observe(t.value, t.feasible)
                     events.append((member.label, t))
         finally:
             if pool is not None:
@@ -538,10 +557,21 @@ class Investigation:
                 engine.close()
         return events, None
 
+    def frontier(self, properties: Sequence[str],
+                 modes: Optional[Sequence[str]] = None) -> list:
+        """The space's measured Pareto frontier over ``properties`` —
+        ``[(configuration, values), ...]`` straight from the store backend
+        (:meth:`~repro.core.store.base.StoreBackend.frontier`), restricted
+        to this investigation's action-space provenance."""
+        return self.ds.store.frontier(
+            self.ds.space_id, properties, modes,
+            list(self.ds.actions.identifiers))
+
     def _member_result(self, member: _Member) -> MemberResult:
         spec = self.spec
         run = OptimizerRun(
-            optimizer=member.label, metric=spec.metric, mode=spec.mode,
+            optimizer=member.label, metric=spec.objective_label(),
+            mode=spec.mode,
             trials=member.own_trials(),
             operation_id=member.adapter.operation_id,
             batch_size=(spec.execution.batch_size

@@ -35,7 +35,8 @@ from ..actions import Experiment
 from ..space import ProbabilitySpace
 
 __all__ = ["SCHEMA_VERSION", "ExperimentSpec", "OptimizerSpec",
-           "ExecutionSpec", "BudgetSpec", "TransferSpec", "InvestigationSpec",
+           "ExecutionSpec", "BudgetSpec", "TransferSpec", "ConstraintSpec",
+           "ObjectiveSpec", "InvestigationSpec",
            "register_experiment", "resolve_experiment_factory",
            "EXPERIMENT_REGISTRY"]
 
@@ -314,6 +315,162 @@ class TransferSpec:
             seed=int(d.get("seed", 0)))
 
 
+_CONSTRAINT_OPS = ("<=", ">=", "<", ">")
+
+
+@dataclass(frozen=True)
+class ConstraintSpec:
+    """One hard SLA bound over a measured property (paper abstract: "minimal
+    cost while meeting a defined service level agreement").
+
+    A violating trial is *infeasible*, not failed: it was deployable, it was
+    measured, and it is real evidence for the optimizers — it just must never
+    be reported as an incumbent.  A missing or NaN property value is treated
+    as infeasible: a sentinel must never silently pass an SLA.
+    """
+
+    property: str
+    op: str
+    bound: float
+
+    def __post_init__(self):
+        if not self.property:
+            raise ValueError("constraint: 'property' is required")
+        if self.op not in _CONSTRAINT_OPS:
+            raise ValueError(f"constraint: unknown op {self.op!r} "
+                             f"(known: {_CONSTRAINT_OPS})")
+        object.__setattr__(self, "bound", float(self.bound))
+
+    def satisfied(self, value: Optional[float]) -> bool:
+        if value is None or value != value:  # missing or NaN: infeasible
+            return False
+        if self.op == "<=":
+            return value <= self.bound
+        if self.op == ">=":
+            return value >= self.bound
+        if self.op == "<":
+            return value < self.bound
+        return value > self.bound
+
+    def describe(self) -> str:
+        return f"{self.property} {self.op} {self.bound:g}"
+
+    def to_json(self) -> dict:
+        return {"property": self.property, "op": self.op, "bound": self.bound}
+
+    @staticmethod
+    def from_json(d: Mapping) -> "ConstraintSpec":
+        _reject_unknown(d, ("property", "op", "bound"), "constraint")
+        for req in ("property", "op", "bound"):
+            if req not in d:
+                raise ValueError(f"constraint: {req!r} is required")
+        return ConstraintSpec(property=str(d["property"]), op=str(d["op"]),
+                              bound=float(d["bound"]))
+
+
+@dataclass(frozen=True)
+class ObjectiveSpec:
+    """What the search optimizes, beyond a single scalar property.
+
+    Two independent extensions over the plain ``metric`` field:
+
+    * **scalarization** — at most one of ``weights`` (a weighted sum of
+      measured properties, ``((property, weight), ...)``) or ``ratio``
+      (``(numerator, denominator)``, e.g. dollars per served request).
+      Neither given means the investigation's ``metric`` is the objective.
+    * **constraints** — hard SLA bounds; trials violating any are folded
+      into histories as *infeasible* and excluded from incumbent selection,
+      stopping-rule improvement, and reported bests.
+
+    Direction still comes from the investigation's ``mode``.
+    """
+
+    weights: tuple = ()
+    ratio: Optional[tuple] = None
+    constraints: tuple = ()
+
+    def __post_init__(self):
+        if self.weights and self.ratio is not None:
+            raise ValueError(
+                "objective: give at most one of weights | ratio")
+        weights = tuple((str(p), float(w)) for p, w in self.weights)
+        if any(not p for p, _ in weights):
+            raise ValueError("objective: weight property names are required")
+        object.__setattr__(self, "weights", weights)
+        if self.ratio is not None:
+            if len(self.ratio) != 2 or not all(self.ratio):
+                raise ValueError("objective: ratio must be "
+                                 "[numerator, denominator]")
+            object.__setattr__(
+                self, "ratio", (str(self.ratio[0]), str(self.ratio[1])))
+        constraints = tuple(self.constraints)
+        for c in constraints:
+            if not isinstance(c, ConstraintSpec):
+                raise ValueError(f"objective: constraints must be "
+                                 f"ConstraintSpec, got {type(c).__name__}")
+        object.__setattr__(self, "constraints", constraints)
+
+    @property
+    def scalarized(self) -> bool:
+        """True when the objective replaces the plain metric."""
+        return bool(self.weights) or self.ratio is not None
+
+    @property
+    def label(self) -> str:
+        """Display name of the scalarized objective ('' when not one)."""
+        if self.weights:
+            return "+".join(f"{w:g}*{p}" for p, w in self.weights)
+        if self.ratio is not None:
+            return f"{self.ratio[0]}/{self.ratio[1]}"
+        return ""
+
+    def objective_properties(self) -> tuple:
+        """Properties the scalarization reads (empty = inherit metric)."""
+        if self.weights:
+            return tuple(p for p, _ in self.weights)
+        if self.ratio is not None:
+            return self.ratio
+        return ()
+
+    def constraint_properties(self) -> tuple:
+        seen: dict = {}
+        for c in self.constraints:
+            seen.setdefault(c.property, None)
+        return tuple(seen)
+
+    def value(self, get: Callable[[str], float]) -> float:
+        """Scalarized objective value; ``get`` maps property → value and
+        may raise on a missing one (callers pre-check availability)."""
+        if self.weights:
+            return sum(w * float(get(p)) for p, w in self.weights)
+        if self.ratio is not None:
+            num = float(get(self.ratio[0]))
+            den = float(get(self.ratio[1]))
+            if den == 0.0:
+                return float("inf") if num >= 0 else float("-inf")
+            return num / den
+        raise ValueError("objective is not scalarized; use the metric")
+
+    def feasible(self, get: Callable[[str], Optional[float]]) -> bool:
+        """``get`` returns None for a missing property (→ infeasible)."""
+        return all(c.satisfied(get(c.property)) for c in self.constraints)
+
+    def to_json(self) -> dict:
+        return {"weights": [[p, w] for p, w in self.weights],
+                "ratio": None if self.ratio is None else list(self.ratio),
+                "constraints": [c.to_json() for c in self.constraints]}
+
+    @staticmethod
+    def from_json(d: Mapping) -> "ObjectiveSpec":
+        _reject_unknown(d, ("weights", "ratio", "constraints"), "objective")
+        ratio = d.get("ratio")
+        return ObjectiveSpec(
+            weights=tuple((pair[0], pair[1]) for pair in d.get("weights", ())),
+            ratio=None if ratio is None else tuple(ratio),
+            constraints=tuple(ConstraintSpec.from_json(c)
+                              for c in d.get("constraints", ())))
+
+
 @dataclass(frozen=True)
 class InvestigationSpec:
     """The full declarative description of one configuration search.
@@ -338,7 +495,7 @@ class InvestigationSpec:
 
     name: str
     space: ProbabilitySpace
-    metric: str
+    metric: str = ""
     experiments: tuple = ()
     mode: str = "min"
     optimizers: tuple = (OptimizerSpec("random"),)
@@ -348,6 +505,7 @@ class InvestigationSpec:
     share_history: bool = True
     warm_start: bool = False
     store: Optional[str] = None
+    objective: Optional[ObjectiveSpec] = None
 
     def __post_init__(self):
         if self.mode not in ("min", "max"):
@@ -357,6 +515,20 @@ class InvestigationSpec:
         if len(self.optimizers) > 1 and self.execution.batch_size != 1:
             raise ValueError("multi-optimizer investigations are pipelined; "
                              "batch_size must be 1 (use max_inflight)")
+        scalarized = self.objective is not None and self.objective.scalarized
+        if not self.metric and not scalarized:
+            raise ValueError("investigation: 'metric' is required "
+                             "(or give a scalarized objective)")
+        if self.metric and scalarized:
+            raise ValueError("investigation: give either 'metric' or a "
+                             "scalarized objective, not both")
+
+    def objective_label(self) -> str:
+        """The name of what the search minimizes/maximizes — the metric, or
+        the scalarized objective's display label."""
+        if self.objective is not None and self.objective.scalarized:
+            return self.objective.label
+        return self.metric
 
     # ------------------------------------------------------------- serialize
 
@@ -375,6 +547,8 @@ class InvestigationSpec:
             "share_history": self.share_history,
             "warm_start": self.warm_start,
             "store": self.store,
+            "objective": None if self.objective is None
+            else self.objective.to_json(),
         }
 
     @staticmethod
@@ -382,18 +556,20 @@ class InvestigationSpec:
         _reject_unknown(d, ("schema_version", "name", "space", "experiments",
                             "metric", "mode", "optimizers", "execution",
                             "budget", "transfer", "share_history",
-                            "warm_start", "store"), "investigation")
+                            "warm_start", "store", "objective"),
+                        "investigation")
         version = d.get("schema_version", SCHEMA_VERSION)
         if version != SCHEMA_VERSION:
             raise ValueError(f"unsupported schema_version {version!r} "
                              f"(this build reads {SCHEMA_VERSION})")
-        for req in ("name", "space", "metric"):
+        for req in ("name", "space"):
             if req not in d:
                 raise ValueError(f"investigation: {req!r} is required")
+        objective = d.get("objective")
         return InvestigationSpec(
             name=str(d["name"]),
             space=ProbabilitySpace.from_json(d["space"]),
-            metric=str(d["metric"]),
+            metric=str(d.get("metric", "")),
             experiments=tuple(ExperimentSpec.from_json(e)
                               for e in d.get("experiments", ())),
             mode=str(d.get("mode", "min")),
@@ -406,6 +582,8 @@ class InvestigationSpec:
             share_history=bool(d.get("share_history", True)),
             warm_start=bool(d.get("warm_start", False)),
             store=None if d.get("store") is None else str(d["store"]),
+            objective=None if objective is None
+            else ObjectiveSpec.from_json(objective),
         )
 
     # --------------------------------------------------------------- file IO

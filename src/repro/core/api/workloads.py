@@ -22,7 +22,7 @@ from ..actions import Experiment, FunctionExperiment
 from ..entities import Configuration, content_hash
 from .spec import register_experiment, resolve_experiment_factory
 
-__all__ = ["quad", "cloud_deploy", "linear_shift"]
+__all__ = ["quad", "cloud_deploy", "cloud_sla", "linear_shift"]
 
 
 def quad(x_dim: str = "x", y_dim: str = "y", prop: str = "loss") -> Experiment:
@@ -53,6 +53,35 @@ def cloud_deploy(prop: str = "cost_per_1k") -> Experiment:
 
     return FunctionExperiment(fn=fn, properties=(prop,), name="cloud-deploy",
                               params={"prop": prop})
+
+
+def cloud_sla(cost_prop: str = "cost_per_1k",
+              latency_prop: str = "p95_ms") -> Experiment:
+    """The :func:`cloud_deploy` surface with a p95-latency property next to
+    the cost — the SLA-constrained example's workload (paper abstract:
+    minimal cost while meeting a defined service level agreement).
+
+    Latency falls with per-worker batch efficiency and the instance's
+    compute tier, while cost favors small, slow deployments — so the
+    cheapest configurations violate any reasonable latency bound and a
+    cost-only search is actively steered toward SLA violators.  Used by
+    ``examples/specs/sla_constrained.json``.
+    """
+    inner = cloud_deploy(prop=cost_prop)
+    tier = {"m5.large": 1.0, "m5.xlarge": 0.72,
+            "c5.xlarge": 0.55, "c5.2xlarge": 0.38}
+
+    def fn(c: Configuration):
+        out = dict(inner.measure(c))
+        eff = min(1.0, 0.4 + 0.13 * np.log2(c["workers"] * c["batch_size"] / 8))
+        queue = 1.0 + 4.0 / (c["workers"] * eff)
+        out[latency_prop] = 120.0 * tier[c["instance"]] * queue \
+            / (1.0 + 0.1 * np.log2(c["prefetch"]))
+        return out
+
+    return FunctionExperiment(
+        fn=fn, properties=(cost_prop, latency_prop), name="cloud-sla",
+        params={"cost": cost_prop, "latency": latency_prop})
 
 
 def linear_shift(base: str, scale: float = 1.2, offset: float = 10.0,
@@ -99,4 +128,5 @@ def linear_shift(base: str, scale: float = 1.2, offset: float = 10.0,
 
 register_experiment("quad", quad)
 register_experiment("cloud-deploy", cloud_deploy)
+register_experiment("cloud-sla", cloud_sla)
 register_experiment("linear-shift", linear_shift)

@@ -183,7 +183,7 @@ def _absorb(ds: DiscoverySpace, completed, state: _RunState) -> bool:
                                   member.adapter.operation_id)
         trial = member.adapter.tell_result(result)
         member.own_told += 1
-        member.rule.observe(trial.value)
+        member.rule.observe(trial.value, trial.feasible)
         state.events.append((member.label, trial))
     return bool(completed)
 

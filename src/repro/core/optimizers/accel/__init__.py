@@ -35,7 +35,7 @@ import importlib.util
 import warnings
 
 __all__ = ["BACKENDS", "jax_available", "pallas_available",
-           "resolve_backend", "gp_ei", "tpe_scores", "bucket"]
+           "resolve_backend", "gp_ei", "gp_pof", "tpe_scores", "bucket"]
 
 #: Every selectable ask backend, reference first.
 BACKENDS = ("numpy", "jax", "pallas")
@@ -89,13 +89,25 @@ def resolve_backend(backend: str) -> str:
 
 
 def gp_ei(X, y, Xc, *, length_scale, noise, xi, use_pallas=False,
-          cache=None):
-    """Lazy dispatch to :func:`.gp_jax.gp_ei`; None when jax is missing."""
+          cache=None, best=None):
+    """Lazy dispatch to :func:`.gp_jax.gp_ei`; None when jax is missing.
+    ``best`` overrides the incumbent EI improves on (constrained asks pass
+    the best feasible value); default is the history minimum."""
     if not jax_available():  # pragma: no cover - jax-less installs
         return None
     from . import gp_jax
     return gp_jax.gp_ei(X, y, Xc, length_scale=length_scale, noise=noise,
-                        xi=xi, use_pallas=use_pallas, cache=cache)
+                        xi=xi, use_pallas=use_pallas, cache=cache, best=best)
+
+
+def gp_pof(X, z, Xc, *, length_scale, noise, use_pallas=False, cache=None):
+    """Lazy dispatch to :func:`.gp_jax.gp_pof` — P(feasible) over the
+    candidate pool from a GP on ±1 labels; None when jax is missing."""
+    if not jax_available():  # pragma: no cover - jax-less installs
+        return None
+    from . import gp_jax
+    return gp_jax.gp_pof(X, z, Xc, length_scale=length_scale, noise=noise,
+                         use_pallas=use_pallas, cache=cache)
 
 
 def tpe_scores(space, good_configs, bad_configs, candidates, bw=0.12):

@@ -56,7 +56,7 @@ except Exception:  # pragma: no cover - jax-less installs
 
 from . import bucket
 
-__all__ = ["gp_ei", "bucket"]
+__all__ = ["gp_ei", "gp_pof", "bucket"]
 
 
 if HAVE_JAX:
@@ -121,6 +121,17 @@ if HAVE_JAX:
         z = imp / std
         return imp * _jnorm.cdf(z) + std * _jnorm.pdf(z)
 
+    @functools.partial(jax.jit, static_argnames=("use_pallas",))
+    def _gp_pof(Linv, alpha, mu, sd, Xh, mh, Xc, inv2ls2, use_pallas):
+        # Same cached-fit posterior as _gp_ei, squashed to P(feasible):
+        # the GP regresses ±1 feasibility labels, so Φ(mean/std) is the
+        # posterior probability mass above the decision boundary at 0.
+        Ks = _rbf(Xc, Xh, inv2ls2, use_pallas) * mh[None, :]
+        mean = Ks @ alpha
+        var = jnp.clip(1.0 - _inv_quadform(Linv, Ks), 1e-12, None)
+        mean, std = mean * sd + mu, jnp.sqrt(var) * sd
+        return _jnorm.cdf(mean / jnp.maximum(std, 1e-12))
+
 
 def _history_key(X, y, H, D, length_scale, noise, use_pallas):
     """Content hash of the fit inputs — any tell/fold changes it."""
@@ -131,23 +142,13 @@ def _history_key(X, y, H, D, length_scale, noise, use_pallas):
             digest.digest())
 
 
-def gp_ei(X: np.ndarray, y: np.ndarray, Xc: np.ndarray, *,
-          length_scale: float, noise: float, xi: float,
-          use_pallas: bool = False, cache: dict | None = None):
-    """Batched EI over the whole candidate pool; returns a float64 numpy
-    array of shape ``(len(Xc),)``, or None when jax is unavailable (caller
-    falls back to the numpy reference path).
-
-    ``cache`` is an optimizer-owned dict holding the fitted factorization
-    (device buffers) from the previous call; it is reused when the history
-    content hash matches and replaced otherwise, so it never grows beyond
-    one fit.
-    """
-    if not HAVE_JAX:  # pragma: no cover - jax-less installs
-        return None
-    H, C = len(y), len(Xc)
+def _fit_cached(X: np.ndarray, y: np.ndarray, length_scale: float,
+                noise: float, use_pallas: bool, cache: dict | None):
+    """The (padded, jitted, NaN-retried) GP fit behind both scorers,
+    served from ``cache`` while the history content hash matches."""
+    H = len(y)
     D = X.shape[1]
-    Hp, Cp = bucket(H), bucket(C)
+    Hp = bucket(H)
     key = _history_key(X, y, H, D, length_scale, noise, use_pallas)
     fit = cache.get("fit") if cache is not None else None
     if fit is None or fit[0] != key:
@@ -163,16 +164,64 @@ def gp_ei(X: np.ndarray, y: np.ndarray, Xc: np.ndarray, *,
         if bool(jnp.isnan(alpha).any()):
             # Cholesky failed (NaN factor): one jittered retry, exactly the
             # numpy reference's second cho_factor attempt.  If this also
-            # fails, the NaN surface below triggers the random fallback.
+            # fails, the NaN surface downstream triggers the random fallback.
             Linv, alpha, mu, sd, best = _gp_fit(Xh, yh, mh, inv2ls2,
                                                 np.float32(noise + 1e-6),
                                                 use_pallas)
         fit = (key, Linv, alpha, mu, sd, best, Xh, mh, inv2ls2)
         if cache is not None:
             cache["fit"] = fit
-    _, Linv, alpha, mu, sd, best, Xh, mh, inv2ls2 = fit
-    Xcp = np.zeros((Cp, D), np.float32)
+    return fit
+
+
+def gp_ei(X: np.ndarray, y: np.ndarray, Xc: np.ndarray, *,
+          length_scale: float, noise: float, xi: float,
+          use_pallas: bool = False, cache: dict | None = None,
+          best: float | None = None):
+    """Batched EI over the whole candidate pool; returns a float64 numpy
+    array of shape ``(len(Xc),)``, or None when jax is unavailable (caller
+    falls back to the numpy reference path).
+
+    ``cache`` is an optimizer-owned dict holding the fitted factorization
+    (device buffers) from the previous call; it is reused when the history
+    content hash matches and replaced otherwise, so it never grows beyond
+    one fit.  ``best`` overrides the incumbent EI improves on (constrained
+    asks pass the best *feasible* value — the history minimum may be an SLA
+    violator); default is the fit's history minimum.
+    """
+    if not HAVE_JAX:  # pragma: no cover - jax-less installs
+        return None
+    C = len(Xc)
+    Cp = bucket(C)
+    fit = _fit_cached(X, y, length_scale, noise, use_pallas, cache)
+    _, Linv, alpha, mu, sd, fit_best, Xh, mh, inv2ls2 = fit
+    if best is not None:
+        fit_best = np.float32(best)
+    Xcp = np.zeros((Cp, X.shape[1]), np.float32)
     Xcp[:C] = Xc
-    ei = _gp_ei(Linv, alpha, mu, sd, best, Xh, mh, Xcp, inv2ls2,
+    ei = _gp_ei(Linv, alpha, mu, sd, fit_best, Xh, mh, Xcp, inv2ls2,
                 np.float32(xi), use_pallas)
     return np.asarray(ei)[:C].astype(np.float64)
+
+
+def gp_pof(X: np.ndarray, z: np.ndarray, Xc: np.ndarray, *,
+           length_scale: float, noise: float, use_pallas: bool = False,
+           cache: dict | None = None):
+    """P(feasible) over the whole candidate pool from a GP regressed on ±1
+    feasibility labels ``z`` (the feasibility-weighted-EI classifier);
+    float64 array of shape ``(len(Xc),)``, or None when jax is unavailable.
+
+    Reuses the exact fit machinery (padding, caching, NaN retry) of
+    :func:`gp_ei` — pass a *separate* cache dict, since the label vector
+    changes on a different schedule than the value history.
+    """
+    if not HAVE_JAX:  # pragma: no cover - jax-less installs
+        return None
+    C = len(Xc)
+    Cp = bucket(C)
+    fit = _fit_cached(X, z, length_scale, noise, use_pallas, cache)
+    _, Linv, alpha, mu, sd, _best, Xh, mh, inv2ls2 = fit
+    Xcp = np.zeros((Cp, X.shape[1]), np.float32)
+    Xcp[:C] = Xc
+    pof = _gp_pof(Linv, alpha, mu, sd, Xh, mh, Xcp, inv2ls2, use_pallas)
+    return np.asarray(pof)[:C].astype(np.float64)

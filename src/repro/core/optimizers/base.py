@@ -117,6 +117,11 @@ class Trial:
     value: Optional[float]  # objective value (None => non-deployable)
     action: str             # 'measured' | 'reused' | 'predicted' | 'failed'
     seq: int
+    # SLA verdict under the adapter's objective constraints: True/False when
+    # evaluated against one, None when unconstrained or unknowable (warm
+    # predictions carry no constraint properties).  Infeasible trials are
+    # real evidence — they train models — but are never incumbents.
+    feasible: Optional[bool] = None
 
 
 @dataclass
@@ -142,8 +147,20 @@ class OptimizerRun:
         return sum(1 for t in self.trials if t.action in ("reused", "predicted"))
 
     @property
+    def num_infeasible(self) -> int:
+        return sum(1 for t in self.trials if t.feasible is False)
+
+    @staticmethod
+    def _incumbent_eligible(t: Trial) -> bool:
+        """Incumbents are REAL, SLA-meeting observations: warm trials are
+        surrogate predictions (an unmeasured guess must never be reported as
+        the best found), and constraint-violating trials are infeasible."""
+        return (t.value is not None and t.action != WARM_ACTION
+                and t.feasible is not False)
+
+    @property
     def best(self) -> Optional[Trial]:
-        vals = [t for t in self.trials if t.value is not None]
+        vals = [t for t in self.trials if self._incumbent_eligible(t)]
         if not vals:
             return None
         key = (lambda t: t.value) if self.mode == "min" else (lambda t: -t.value)
@@ -151,16 +168,21 @@ class OptimizerRun:
 
     @property
     def normalized_cost(self) -> float:
-        """Paper §V-B1: new measurements / total samples."""
-        if not self.trials:
+        """Paper §V-B1: new measurements / samples this run itself told.
+        Foreign- and warm-folded history is other operations' spending (or
+        free predictions) — counting it in the denominator understates the
+        member's own cost."""
+        own = sum(1 for t in self.trials
+                  if t.action not in (FOREIGN_ACTION, WARM_ACTION))
+        if not own:
             return 0.0
-        return self.num_measured / len(self.trials)
+        return self.num_measured / own
 
     def best_value_by_step(self) -> list:
         out, best = [], None
         sign = 1.0 if self.mode == "min" else -1.0
         for t in self.trials:
-            if t.value is not None:
+            if self._incumbent_eligible(t):
                 v = sign * t.value
                 best = v if best is None else min(best, v)
             out.append(None if best is None else sign * best)
@@ -180,14 +202,23 @@ class SearchAdapter:
     """
 
     def __init__(self, ds: DiscoverySpace, metric: str, mode: str = "min",
-                 operation_id: Optional[str] = None, optimizer_name: str = "opt"):
+                 operation_id: Optional[str] = None, optimizer_name: str = "opt",
+                 objective=None):
         if mode not in ("min", "max"):
             raise ValueError(f"mode must be min|max, got {mode}")
         self.ds = ds
         self.metric = metric
         self.mode = mode
+        # Optional ObjectiveSpec (repro.core.api.spec): scalarizes the
+        # trial value from several measured properties and/or attaches hard
+        # SLA constraints.  None keeps the single-metric behavior exactly.
+        self.objective = objective
+        self._constrained = objective is not None and bool(objective.constraints)
+        meta = {"optimizer": optimizer_name, "metric": metric, "mode": mode}
+        if self._constrained:
+            meta["constraints"] = [c.describe() for c in objective.constraints]
         self.operation_id = operation_id or ds.begin_operation(
-            "optimization", {"optimizer": optimizer_name, "metric": metric, "mode": mode}
+            "optimization", meta
         )
         self.trials: list = []
         # Digests proposed but not yet told (in-flight on an execution
@@ -210,6 +241,22 @@ class SearchAdapter:
         # Trials folded by warm_start (cross-space transfer): counted apart
         # from told trials so budgets/stopping rules never charge for them.
         self.warm_told: int = 0
+        # Lazily-built {digest: configuration} of the finite space's
+        # not-yet-told configurations, in enumeration order.  tell() evicts
+        # told digests, so ``ask`` filters O(pool) instead of re-enumerating
+        # O(|Ω|) every call (see Optimizer._unseen_candidates).  Pending and
+        # warm digests stay IN the cache — pending clears on tell/requeue and
+        # warm configurations may legitimately be re-proposed — and are
+        # filtered per-ask.
+        self._unseen_cache: Optional[dict] = None
+
+    def unseen_pool(self) -> dict:
+        """The cached not-yet-told enumeration of a finite space."""
+        if self._unseen_cache is None:
+            self._unseen_cache = {
+                c.digest: c for c in self.space.all_configurations()
+                if c.digest not in self._history_digests}
+        return self._unseen_cache
 
     @property
     def space(self):
@@ -231,20 +278,52 @@ class SearchAdapter:
         """
         for t in trials:
             self._history_digests.add(t.configuration.digest)
+            if self._unseen_cache is not None:
+                self._unseen_cache.pop(t.configuration.digest, None)
             if t.value is None and t.action in ("failed", FOREIGN_ACTION):
                 self._provisional_failed[t.configuration.digest] = t
         self.trials.extend(trials)
 
+    def _objective_properties(self) -> tuple:
+        """Properties the trial value is computed from."""
+        if self.objective is not None and self.objective.scalarized:
+            return self.objective.objective_properties()
+        return (self.metric,)
+
+    def _sample_objective(self, sample):
+        """``(value, feasible)`` of a sample under this adapter's objective,
+        or None when the sample lacks the properties the value needs (e.g. a
+        foreign operation measured a different action space)."""
+        obj = self.objective
+        if obj is None or not obj.scalarized:
+            if not sample.has(self.metric):
+                return None
+            value = sample.value(self.metric)
+        else:
+            if not all(sample.has(p) for p in obj.objective_properties()):
+                return None
+            value = obj.value(sample.value)
+        feasible = None
+        if self._constrained:
+            feasible = obj.feasible(
+                lambda p: sample.value(p) if sample.has(p) else None)
+        return value, feasible
+
     def _make_trial(self, result: BatchResult, seq: int) -> Trial:
         if not result.ok:
-            return Trial(result.configuration, None, "failed", seq)
-        if not result.sample.has(self.metric):
+            # a non-deployable configuration certainly does not meet an SLA
+            return Trial(result.configuration, None, "failed", seq,
+                         feasible=False if self._constrained else None)
+        vf = self._sample_objective(result.sample)
+        if vf is None:
             raise KeyError(
-                f"metric {self.metric!r} not among action-space properties "
+                f"objective properties {self._objective_properties()!r} not "
+                f"all among action-space properties "
                 f"{self.ds.actions.observed_properties}"
             )
-        return Trial(result.configuration, result.sample.value(self.metric),
-                     result.action, seq)
+        value, feasible = vf
+        return Trial(result.configuration, value, result.action, seq,
+                     feasible=feasible)
 
     def tell_result(self, result: BatchResult) -> Trial:
         """Tell ONE completed evaluation (the pipelined engine's tell path)."""
@@ -373,16 +452,19 @@ class SearchAdapter:
             if rec.action == "failed":
                 if seen:
                     continue  # a trial (provisional or not) already stands
-                self.tell([Trial(config, None, FOREIGN_ACTION,
-                                 len(self.trials))])  # registers provisional
+                self.tell([Trial(
+                    config, None, FOREIGN_ACTION, len(self.trials),
+                    feasible=False if self._constrained else None,
+                )])  # registers provisional
                 folded += 1
                 continue
             sample = self.ds._reconstruct(rec.config_digest, config)
-            if not sample.has(self.metric):
+            vf = self._sample_objective(sample)
+            if vf is None:
                 # foreign operation measured a different action space's
                 # properties; nothing this study can train on
                 continue
-            value = sample.value(self.metric)
+            value, feasible = vf
             if provisional is not None:
                 # the earlier failure (own or foreign) was transient:
                 # another operation since measured this configuration —
@@ -390,7 +472,8 @@ class SearchAdapter:
                 # failed trial stays untouched; see docstring), at most
                 # once per digest
                 del self._provisional_failed[rec.config_digest]
-            self.tell([Trial(config, value, FOREIGN_ACTION, len(self.trials))])
+            self.tell([Trial(config, value, FOREIGN_ACTION, len(self.trials),
+                             feasible=feasible)])
             folded += 1
         return folded
 
@@ -503,17 +586,36 @@ class Optimizer(abc.ABC):
         Enumeration finds exactly the unseen remainder; when it exceeds
         ``max_candidates``, a uniform subsample keeps the pool bounded.
         The rejection loop now serves only truly continuous spaces, where
-        ``[]`` genuinely cannot mean exhaustion."""
+        ``[]`` genuinely cannot mean exhaustion.
+
+        Finite enumeration is served from the adapter's told-invalidated
+        cache when it has one (:meth:`SearchAdapter.unseen_pool`): the space
+        is walked ONCE per adapter instead of once per ask — at depth d over
+        |Ω| that is O(|Ω| + Σ pool) instead of O(d·|Ω|).  Dict insertion
+        order preserves enumeration order, so the filtered pool (and the
+        subsample drawn from it) is draw-for-draw identical to a fresh
+        enumeration.  Adapters without the cache (ask-only stubs, legacy
+        wrappers) fall back to enumerating."""
         space = adapter.space
-        seen = adapter.seen_digests()
-        if exclude:
-            seen |= exclude
         if space.finite:
-            pool = [c for c in space.all_configurations() if c.digest not in seen]
+            unseen = getattr(adapter, "unseen_pool", None)
+            if unseen is not None:
+                skip = adapter.pending if not exclude \
+                    else adapter.pending | exclude
+                pool = [c for d, c in unseen().items() if d not in skip]
+            else:
+                seen = adapter.seen_digests()
+                if exclude:
+                    seen = seen | exclude
+                pool = [c for c in space.all_configurations()
+                        if c.digest not in seen]
             if len(pool) > max_candidates:
                 idx = rng.choice(len(pool), size=max_candidates, replace=False)
                 pool = [pool[i] for i in idx]
             return pool
+        seen = adapter.seen_digests()
+        if exclude:
+            seen |= exclude
         out, tries = [], 0
         while len(out) < max_candidates and tries < max_candidates * 4:
             c = space.sample_configuration(rng)
@@ -537,6 +639,38 @@ class Optimizer(abc.ABC):
         X = np.stack([adapter.space.encode(t.configuration) for t in ok])
         y = np.array([adapter.signed(t.value) for t in ok])
         return X, y
+
+    @staticmethod
+    def _constrained(adapter: SearchAdapter) -> bool:
+        """True when the adapter's objective carries hard SLA constraints
+        (duck-typed: ask-only stubs without an objective are unconstrained)."""
+        obj = getattr(adapter, "objective", None)
+        return obj is not None and bool(obj.constraints)
+
+    @staticmethod
+    def _feasibility_arrays(adapter: SearchAdapter):
+        """(X, z) over trials with a KNOWN feasibility verdict, z = ±1.
+
+        Failed trials count (labelled infeasible at tell time under a
+        constrained objective); warm predictions carry None and are skipped
+        — the feasibility classifier trains on evidence only."""
+        labelled = [t for t in adapter.trials if t.feasible is not None]
+        if not labelled:
+            return (np.zeros((0, len(adapter.space.dimensions))),
+                    np.zeros((0,)))
+        X = np.stack([adapter.space.encode(t.configuration)
+                      for t in labelled])
+        z = np.array([1.0 if t.feasible else -1.0 for t in labelled])
+        return X, z
+
+    @staticmethod
+    def _best_feasible(adapter: SearchAdapter) -> Optional[float]:
+        """Best (signed, minimization-oriented) value over trials not known
+        to violate a constraint — the incumbent a constrained acquisition
+        improves on.  None when no such value exists yet."""
+        vals = [adapter.signed(t.value) for t in adapter.trials
+                if t.value is not None and t.feasible is not False]
+        return min(vals) if vals else None
 
     @staticmethod
     def _top_n(candidates: list, score: np.ndarray, n: int) -> List[ScoredCandidate]:
@@ -582,8 +716,13 @@ class _StoppingRule:
         self.stall = 0
         self.stop = False
 
-    def observe(self, value: Optional[float]) -> None:
-        if value is not None:
+    def observe(self, value: Optional[float],
+                feasible: Optional[bool] = None) -> None:
+        """One trial's outcome.  ``feasible=False`` marks an SLA-violating
+        trial: whatever its value, it can never improve the incumbent — the
+        rule tracks the best *feasible* value, so a streak of ever-cheaper
+        constraint violators still counts as stalling."""
+        if value is not None and feasible is not False:
             sv = self.adapter.signed(value)
             if self.best is None or sv < self.best - 1e-12:
                 self.best = sv

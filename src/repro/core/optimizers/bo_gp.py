@@ -51,8 +51,12 @@ class GPBayesOpt(Optimizer):
         # Accelerated-backend fit cache (one entry: the current factorization
         # as device buffers).  Any history change — every tell or foreign
         # fold — changes the content hash and replaces it, so repeated asks
-        # against one fitted surrogate skip the O(|H|^3) refit.
+        # against one fitted surrogate skip the O(|H|^3) refit.  The
+        # feasibility classifier GP keeps its own single-entry cache — its
+        # training set (±1 labels over labelled trials) changes on a
+        # different schedule than the value history.
         self._accel_cache: dict = {}
+        self._feas_cache: dict = {}
 
     # -- GP machinery -----------------------------------------------------------
 
@@ -84,26 +88,58 @@ class GPBayesOpt(Optimizer):
         var = np.clip(1.0 - np.einsum("ij,ji->i", Ks, v), 1e-12, None)
         return mean * sd_y + mu_y, np.sqrt(var) * sd_y
 
-    def _acquisition(self, X: np.ndarray, y: np.ndarray,
-                     Xc: np.ndarray) -> Optional[np.ndarray]:
+    def _acquisition(self, X: np.ndarray, y: np.ndarray, Xc: np.ndarray,
+                     best: Optional[float] = None) -> Optional[np.ndarray]:
         """EI over the whole encoded candidate pool, backend-dispatched;
-        None signals an unfittable model (caller falls back to random)."""
+        None signals an unfittable model (caller falls back to random).
+        ``best`` overrides the incumbent EI improves on (constrained asks
+        pass the best *feasible* value); default is the history minimum."""
         if self.backend != "numpy":
             from . import accel
             ei = accel.gp_ei(X, y, Xc, length_scale=self.length_scale,
                              noise=self.noise, xi=self.xi,
                              use_pallas=self.backend == "pallas",
-                             cache=self._accel_cache)
+                             cache=self._accel_cache, best=best)
             if ei is not None:
                 return ei
         fit = self._fit_predict(X, y, Xc)
         if fit is None:
             return None
         mean, std = fit
-        best = y.min()
+        if best is None:
+            best = y.min()
         # expected improvement for minimization
         z = (best - self.xi - mean) / std
         return (best - self.xi - mean) * norm.cdf(z) + std * norm.pdf(z)
+
+    def _feasibility_weight(self, adapter: SearchAdapter,
+                            Xc: np.ndarray) -> Optional[np.ndarray]:
+        """P(feasible) over the candidate pool: a second GP regressed on ±1
+        feasibility labels, squashed through the normal CDF (the
+        constraint-classifier construction of Gardner et al. 2014).  None
+        when weighting carries no signal — the labels are all one class —
+        or the classifier GP cannot be fitted.  All-feasible callers then
+        rank on EI alone; all-infeasible callers (no incumbent either) fall
+        back to random exploration: the standardized-y GP fit degenerates
+        on a constant label vector (posterior mean -1, std ~0 -> PoF = 0
+        everywhere), and ranking on that flat surface would crawl the
+        candidate pool in enumeration order instead of exploring."""
+        Xf, z = self._feasibility_arrays(adapter)
+        if len(z) == 0 or bool((z > 0).all()) or bool((z < 0).all()):
+            return None
+        if self.backend != "numpy":
+            from . import accel
+            pof = accel.gp_pof(Xf, z, Xc, length_scale=self.length_scale,
+                               noise=self.noise,
+                               use_pallas=self.backend == "pallas",
+                               cache=self._feas_cache)
+            if pof is not None:
+                return pof
+        fit = self._fit_predict(Xf, z, Xc)
+        if fit is None:
+            return None
+        mean, std = fit
+        return norm.cdf(mean / np.maximum(std, 1e-12))
 
     # -- proposal -----------------------------------------------------------------
 
@@ -125,6 +161,16 @@ class GPBayesOpt(Optimizer):
         all-equal history) falls back to random proposals for this step,
         and residual NaN scores are zeroed before ranking so ``_top_n``
         never sorts on NaN.
+
+        Under a constrained objective (SLA bounds on the adapter's
+        ``objective``) the acquisition is feasibility-weighted EI: the value
+        GP still fits every valued trial (an infeasible measurement is real
+        evidence about the objective surface), but EI improves on the best
+        *feasible* incumbent and is multiplied by P(feasible) from a second
+        GP classifying the constraint verdicts.  Before any feasible value
+        exists, P(feasible) alone drives the search toward the feasible
+        region.  The weighting never consumes rng draws, so unconstrained
+        trajectories are unchanged draw-for-draw.
         """
         candidates = self._unseen_candidates(adapter, rng, self.max_candidates)
         if not candidates:
@@ -134,8 +180,26 @@ class GPBayesOpt(Optimizer):
             return self._random_n(candidates, rng, n)
 
         Xc = np.stack([adapter.space.encode(c) for c in candidates])
-        ei = self._acquisition(X, y, Xc)
+        if not self._constrained(adapter):
+            ei = self._acquisition(X, y, Xc)
+            if ei is None or bool(np.isnan(ei).all()):
+                return self._random_n(candidates, rng, n)
+            ei = np.nan_to_num(ei, nan=0.0)
+            return self._top_n(candidates, ei, n)
+
+        pof = self._feasibility_weight(adapter, Xc)
+        best = self._best_feasible(adapter)
+        if best is None:
+            # nothing feasible measured yet: EI has no incumbent to improve
+            # on — chase feasibility itself (or fall back to random when the
+            # classifier has nothing to say either)
+            if pof is None or bool(np.isnan(pof).all()):
+                return self._random_n(candidates, rng, n)
+            return self._top_n(candidates, np.nan_to_num(pof, nan=0.0), n)
+        ei = self._acquisition(X, y, Xc, best=best)
         if ei is None or bool(np.isnan(ei).all()):
             return self._random_n(candidates, rng, n)
-        ei = np.nan_to_num(ei, nan=0.0)
-        return self._top_n(candidates, ei, n)
+        score = np.clip(np.nan_to_num(ei, nan=0.0), 0.0, None)
+        if pof is not None:
+            score = score * np.nan_to_num(pof, nan=0.0)
+        return self._top_n(candidates, score, n)

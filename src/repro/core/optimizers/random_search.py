@@ -27,10 +27,20 @@ class RandomSearch(Optimizer):
         digests and are unchanged.
         """
         space = adapter.space
-        seen = adapter.seen_digests()
         if space.finite and space.size <= 65536:
-            pool = [c for c in space.all_configurations() if c.digest not in seen]
+            # served from the adapter's told-invalidated cache when it has
+            # one (same pool, same enumeration order — draw-for-draw with
+            # the fresh enumeration, without the O(|Ω|)-per-ask walk)
+            unseen = getattr(adapter, "unseen_pool", None)
+            if unseen is not None:
+                pool = [c for d, c in unseen().items()
+                        if d not in adapter.pending]
+            else:
+                seen = adapter.seen_digests()
+                pool = [c for c in space.all_configurations()
+                        if c.digest not in seen]
             return self._random_n(pool, rng, n)
+        seen = adapter.seen_digests()
         # continuous / huge spaces: rejection-sample the batch
         out: List[ScoredCandidate] = []
         exclude: set = set()

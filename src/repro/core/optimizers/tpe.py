@@ -99,6 +99,16 @@ class TPE(Optimizer):
         ``n_initial``: a member warm-started by the fleet leaves its random
         init phase early.  Solo runs have no foreign trials, and sharing
         never touches the rng stream, so solo trajectories are unchanged.
+
+        Under a constrained objective the γ-quantile split is
+        constraint-filtered: only *feasible* valued trials compete for the
+        good set, and every valued SLA violator lands in the bad set
+        whatever its objective value — l(x)/g(x) then models "good AND
+        within SLA" against everything else.  With no feasible valued trial
+        yet the split degrades to the unconstrained one (the violators are
+        still the only signal there is).  Filtering happens before scoring,
+        so the accelerated backends inherit it unchanged, and it never
+        consumes rng draws.
         """
         candidates = self._unseen_candidates(adapter, rng, self.max_candidates,
                                              exclude=exclude)
@@ -107,6 +117,19 @@ class TPE(Optimizer):
         ok = [t for t in adapter.trials if t.value is not None]
         if len(ok) < self.n_initial:
             return self._random_n(candidates, rng, n)
+
+        if self._constrained(adapter):
+            feas = [t for t in ok if t.feasible is not False]
+            if feas:
+                infeas = [t for t in ok if t.feasible is False]
+                values = np.array([adapter.signed(t.value) for t in feas])
+                order = np.argsort(values)
+                n_good = max(1, int(np.ceil(self.gamma * len(feas))))
+                good = [feas[i].configuration for i in order[:n_good]]
+                bad = [feas[i].configuration for i in order[n_good:]] \
+                    + [t.configuration for t in infeas]
+                score = self._score(adapter.space, good, bad, candidates)
+                return self._top_n(candidates, score, n)
 
         values = np.array([adapter.signed(t.value) for t in ok])
         order = np.argsort(values)

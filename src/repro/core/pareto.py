@@ -1,0 +1,112 @@
+"""Pareto dominance and hypervolume over measured property tuples.
+
+The SLA-constrained search story (paper abstract: minimal cost while
+meeting a service level agreement) is inherently multi-objective: the
+interesting summary of a Discovery Space's paid measurements is not one
+incumbent but the *frontier* of non-dominated (cost, latency, ...) points.
+This module is the pure-math half of that view — the store backends expose
+``frontier`` (which filters measured rows through :func:`pareto_front`),
+and ``benchmarks/moo_bench.py`` tracks :func:`hypervolume` over paid
+measurements as its progress metric.
+
+All helpers take per-coordinate ``modes`` (``"min"`` | ``"max"``; default
+all-min) and normalize internally to minimization.  The hypervolume
+computation is exact (hypervolume-by-slicing-objectives), fine for the
+small fronts and low dimensionalities of configuration searches; it is not
+meant for hundreds of points in many objectives.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+__all__ = ["pareto_front", "dominates", "hypervolume"]
+
+
+def _signs(n: int, modes: Optional[Sequence[str]]) -> tuple:
+    if modes is None:
+        return (1.0,) * n
+    if len(modes) != n:
+        raise ValueError(
+            f"modes has {len(modes)} entries for {n} objectives")
+    signs = []
+    for m in modes:
+        if m not in ("min", "max"):
+            raise ValueError(f"mode must be min|max, got {m!r}")
+        signs.append(1.0 if m == "min" else -1.0)
+    return tuple(signs)
+
+
+def _normalize(point: Sequence[float], signs: tuple) -> tuple:
+    if len(point) != len(signs):
+        raise ValueError(
+            f"point has {len(point)} coordinates, expected {len(signs)}")
+    return tuple(s * float(v) for s, v in zip(signs, point))
+
+
+def dominates(a: Sequence[float], b: Sequence[float],
+              modes: Optional[Sequence[str]] = None) -> bool:
+    """True when ``a`` Pareto-dominates ``b``: at least as good in every
+    coordinate and strictly better in one."""
+    signs = _signs(len(a), modes)
+    an, bn = _normalize(a, signs), _normalize(b, signs)
+    return all(x <= y for x, y in zip(an, bn)) and an != bn
+
+
+def pareto_front(points: Sequence[Sequence[float]],
+                 modes: Optional[Sequence[str]] = None) -> list:
+    """Indices of the non-dominated points, in input order.
+
+    Duplicate-valued points are all kept (distinct configurations can land
+    on the same objective tuple; neither dominates the other).
+    """
+    if not points:
+        return []
+    signs = _signs(len(points[0]), modes)
+    normed = [_normalize(p, signs) for p in points]
+    out = []
+    for i, p in enumerate(normed):
+        if not any(all(x <= y for x, y in zip(q, p)) and q != p
+                   for q in normed):
+            out.append(i)
+    return out
+
+
+def hypervolume(points: Sequence[Sequence[float]],
+                reference: Sequence[float],
+                modes: Optional[Sequence[str]] = None) -> float:
+    """Exact volume dominated by ``points`` and bounded by ``reference``.
+
+    The reference point must be the worst corner (e.g. worst cost AND worst
+    latency); points not strictly better than it in every coordinate
+    contribute nothing.  Monotone in the point set, so it works as a
+    paid-measurement progress curve: each new measurement can only grow it.
+    """
+    signs = _signs(len(reference), modes)
+    ref = _normalize(reference, signs)
+    normed = [_normalize(p, signs) for p in points]
+    inside = [p for p in normed
+              if all(x < r for x, r in zip(p, ref))]
+    if not inside:
+        return 0.0
+    front = [inside[i] for i in pareto_front(inside)]
+    return _hv_min(sorted(set(front)), ref)
+
+
+def _hv_min(front: list, ref: tuple) -> float:
+    """Hypervolume of a minimization front (sorted, deduped, all strictly
+    inside ``ref``) by slicing along the first objective."""
+    if not front:
+        return 0.0
+    if len(ref) == 1:
+        return ref[0] - min(p[0] for p in front)
+    vol = 0.0
+    for i, p in enumerate(front):
+        upper = front[i + 1][0] if i + 1 < len(front) else ref[0]
+        width = upper - p[0]
+        if width <= 0.0:
+            continue
+        slab = [q[1:] for q in front[:i + 1]]
+        sub = [slab[j] for j in pareto_front(slab)]
+        vol += width * _hv_min(sorted(set(sub)), ref[1:])
+    return vol

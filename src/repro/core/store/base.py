@@ -141,6 +141,24 @@ class StoreBackend:
                                  ) -> list:
         raise NotImplementedError
 
+    def frontier(self, space_id: str, properties: Sequence[str],
+                 modes: Optional[Sequence[str]] = None,
+                 experiment_ids: Optional[Sequence[str]] = None) -> list:
+        """``[(configuration, values), ...]``: the Pareto-non-dominated
+        *measured* points of a space over ``properties`` — the
+        multi-objective view behind SLA-constrained investigations.
+
+        ``values`` is a float tuple aligned with ``properties``; ``modes``
+        gives each property's direction (``min``/``max``, default all-min).
+        Only configurations with a measured (never predicted) value for
+        EVERY requested property participate — a partial row cannot be
+        compared — with the latest measured write winning per property,
+        matching :meth:`measured_property_values`.  Rows come back in
+        first-sampled order.  Backends must agree exactly (conformance-gated
+        in ``tests/test_store_backends.py``).
+        """
+        raise NotImplementedError
+
     def has_values(self, config_digest: str, experiment_id: str) -> bool:
         raise NotImplementedError
 

@@ -289,6 +289,16 @@ class ClientStore(StoreBackend):
         return [(config_from_pairs(pairs), float(value))
                 for pairs, value in rows]
 
+    def frontier(self, space_id: str, properties: Sequence[str],
+                 modes: Optional[Sequence[str]] = None,
+                 experiment_ids: Optional[Sequence[str]] = None) -> list:
+        rows = self._call("frontier", space_id, list(properties),
+                          list(modes) if modes is not None else None,
+                          list(experiment_ids)
+                          if experiment_ids is not None else None)
+        return [(config_from_pairs(pairs), tuple(float(v) for v in values))
+                for pairs, values in rows]
+
     def has_values(self, config_digest: str, experiment_id: str) -> bool:
         return bool(self._call("has_values", config_digest, experiment_id))
 

@@ -118,6 +118,11 @@ class StoreServer:
                     [list(config.values), value] for config, value in
                     store_do.measured_property_values(space_id, prop,
                                                       experiment_ids)],
+            "frontier": lambda space_id, properties, modes=None,
+                experiment_ids=None: [
+                    [list(config.values), list(values)] for config, values in
+                    store_do.frontier(space_id, properties, modes,
+                                      experiment_ids)],
             "has_values": store_do.has_values,
             "claim_experiment": store_do.claim_experiment,
             "release_claim": store_do.release_claim,

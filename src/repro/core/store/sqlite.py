@@ -521,6 +521,49 @@ class SampleStore(StoreBackend):
         return [(configs[digest], val) for digest, val in latest.items()
                 if digest in configs]
 
+    def frontier(self, space_id: str, properties: Sequence[str],
+                 modes: Optional[Sequence[str]] = None,
+                 experiment_ids: Optional[Sequence[str]] = None) -> list:
+        """Reference implementation of :meth:`StoreBackend.frontier`.
+
+        One bounded scan fetches the measured values of ALL requested
+        properties together (same shape as
+        :meth:`measured_property_values`, with ``pv.property IN (...)``);
+        rows missing any property are dropped, the latest measured write
+        wins per (configuration, property), and the dominance filter runs
+        in-process over the complete tuples — the frontier is typically
+        tiny next to the measured set, so shipping it pre-filtered is what
+        makes this a cheap served call.
+        """
+        if not properties:
+            raise ValueError("frontier needs at least one property")
+        from ..pareto import pareto_front
+        marks = ",".join("?" * len(properties))
+        sql = (
+            "SELECT r.config_digest, pv.property, pv.value"
+            " FROM (SELECT config_digest, MIN(id) AS first_id FROM records"
+            "       WHERE space_id=? AND action != 'failed'"
+            "       GROUP BY config_digest) r"
+            " JOIN property_values pv ON pv.config_digest = r.config_digest"
+            f" WHERE pv.property IN ({marks}) AND pv.predicted=0")
+        params: list = [space_id, *properties]
+        if experiment_ids is not None:
+            emarks = ",".join("?" * len(experiment_ids))
+            sql += f" AND pv.experiment_id IN ({emarks})"
+            params.extend(experiment_ids)
+        sql += " ORDER BY r.first_id, pv.id"
+        latest: dict = {}  # digest -> {property: value}, insertion-ordered
+        for digest, prop, value in self._rows(sql, params):
+            latest.setdefault(digest, {})[prop] = float(value)
+        complete = [(digest, tuple(row[p] for p in properties))
+                    for digest, row in latest.items()
+                    if len(row) == len(properties)]
+        points = [values for _, values in complete]
+        keep = [complete[i] for i in pareto_front(points, modes)]
+        configs = self.get_configurations([digest for digest, _ in keep])
+        return [(configs[digest], values) for digest, values in keep
+                if digest in configs]
+
     def has_values(self, config_digest: str, experiment_id: str) -> bool:
         rows = self._rows(
             "SELECT 1 FROM property_values WHERE config_digest=? AND experiment_id=? LIMIT 1",

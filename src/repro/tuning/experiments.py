@@ -84,16 +84,27 @@ class DryrunRooflineExperiment(Experiment):
             raise MeasurementError(
                 f"over HBM: {report.bytes_per_device / 1e9:.1f} GB "
                 f"> {self.hbm_limit / 1e9:.1f} GB")
-        return {
+        return self._report_properties(report, compile_s)
+
+    @staticmethod
+    def _report_properties(report, compile_s: float) -> Mapping[str, float]:
+        out = {
             "compute_s": report.compute_s,
             "memory_s": report.memory_s,
             "collective_s": report.collective_s,
             "step_time_s": report.step_time_s,
             "roofline_fraction": report.roofline_fraction,
             "hlo_flops": report.hlo_flops,
-            "bytes_per_device": report.bytes_per_device or 0.0,
             "compile_s": compile_s,
         }
+        # A report without a byte count must OMIT bytes_per_device, never
+        # record 0.0: a zero sentinel silently satisfies any memory SLA
+        # (`bytes_per_device <= limit`), while constraint evaluation treats
+        # a missing property as infeasible.  (NaN is no alternative —
+        # sqlite3 binds float('nan') as NULL, corrupting the read path.)
+        if report.bytes_per_device is not None:
+            out["bytes_per_device"] = float(report.bytes_per_device)
+        return out
 
 
 class WalltimeExperiment(Experiment):

@@ -1,0 +1,575 @@
+"""SLA-constrained objectives: the DSL, feasibility plumbing, constrained
+acquisition, Pareto utilities, and the incumbent/reporting bugfix sweep.
+
+Covers, in order:
+
+* :class:`~repro.core.api.spec.ConstraintSpec` /
+  :class:`~repro.core.api.spec.ObjectiveSpec` validation + JSON round-trip;
+* :mod:`repro.core.pareto` (dominance, frontier, hypervolume);
+* adapter-level feasibility verdicts (missing property => infeasible,
+  failed => infeasible under constraints, scalarized trial values);
+* the incumbent bugfixes (warm predictions and infeasible trials are never
+  ``best``; ``normalized_cost`` charges own trials only);
+* the infeasible-aware stopping rule;
+* constrained acquisition for BO-GP (feasibility-weighted EI) and TPE
+  (constraint-filtered split);
+* the per-adapter unseen-candidate cache (enumeration-count regression);
+* the dry-run roofline ``bytes_per_device`` omission fix;
+* an end-to-end SLA-constrained :class:`~repro.core.api.Investigation`.
+"""
+
+from __future__ import annotations
+
+import math
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.core import (ActionSpace, Configuration, Dimension, DiscoverySpace,
+                        FunctionExperiment, Investigation, MeasurementError,
+                        ProbabilitySpace, SampleStore)
+from repro.core.api.spec import ConstraintSpec, InvestigationSpec, ObjectiveSpec
+from repro.core.optimizers import GPBayesOpt, RandomSearch, TPE, run_optimizer
+from repro.core.optimizers.base import (FOREIGN_ACTION, WARM_ACTION, Optimizer,
+                                        OptimizerRun, SearchAdapter, Trial,
+                                        _StoppingRule)
+from repro.core.pareto import dominates, hypervolume, pareto_front
+
+
+def _config(**values) -> Configuration:
+    return Configuration.make(values)
+
+
+def _eval(adapter: SearchAdapter, config: Configuration) -> Trial:
+    """Evaluate one configuration and return the resulting Trial."""
+    adapter.evaluate(config)
+    return adapter.trials[-1]
+
+
+# -------------------------------------------------------------- the DSL
+
+
+def test_constraint_spec_semantics():
+    c = ConstraintSpec("p95_ms", "<=", 250)
+    assert c.bound == 250.0
+    assert c.satisfied(250.0) and c.satisfied(1.0)
+    assert not c.satisfied(250.1)
+    # missing or NaN must NEVER silently pass an SLA
+    assert not c.satisfied(None)
+    assert not c.satisfied(float("nan"))
+    assert c.describe() == "p95_ms <= 250"
+    assert ConstraintSpec("x", ">", 0).satisfied(0.1)
+    assert not ConstraintSpec("x", ">", 0).satisfied(0.0)
+    assert ConstraintSpec("x", ">=", 0).satisfied(0.0)
+    assert ConstraintSpec("x", "<", 1).satisfied(0.999)
+
+
+def test_constraint_spec_validation():
+    with pytest.raises(ValueError, match="unknown op"):
+        ConstraintSpec("p95_ms", "==", 1.0)
+    with pytest.raises(ValueError, match="required"):
+        ConstraintSpec("", "<=", 1.0)
+
+
+def test_constraint_json_roundtrip_strict():
+    c = ConstraintSpec("p95_ms", "<=", 250.0)
+    assert ConstraintSpec.from_json(c.to_json()) == c
+    with pytest.raises(ValueError, match="unknown"):
+        ConstraintSpec.from_json({"property": "p", "op": "<=", "bound": 1,
+                                  "slo": True})
+    with pytest.raises(ValueError, match="required"):
+        ConstraintSpec.from_json({"property": "p", "op": "<="})
+
+
+def test_objective_spec_validation():
+    with pytest.raises(ValueError, match="at most one"):
+        ObjectiveSpec(weights=(("a", 1.0),), ratio=("a", "b"))
+    with pytest.raises(ValueError, match="ratio"):
+        ObjectiveSpec(ratio=("a",))
+    with pytest.raises(ValueError, match="ConstraintSpec"):
+        ObjectiveSpec(constraints=({"property": "p"},))
+    assert not ObjectiveSpec().scalarized
+    assert ObjectiveSpec(weights=(("a", 1.0),)).scalarized
+    assert ObjectiveSpec(ratio=("a", "b")).scalarized
+
+
+def test_objective_scalarization_values():
+    w = ObjectiveSpec(weights=(("cost", 1.0), ("lat", 0.5)))
+    assert w.label == "1*cost+0.5*lat"
+    assert w.objective_properties() == ("cost", "lat")
+    assert w.value({"cost": 2.0, "lat": 4.0}.__getitem__) == 4.0
+    r = ObjectiveSpec(ratio=("dollars", "requests"))
+    assert r.label == "dollars/requests"
+    assert r.value({"dollars": 6.0, "requests": 3.0}.__getitem__) == 2.0
+    # a zero denominator is the worst possible efficiency, not a crash
+    assert r.value({"dollars": 6.0, "requests": 0.0}.__getitem__) \
+        == float("inf")
+    assert r.value({"dollars": -6.0, "requests": 0.0}.__getitem__) \
+        == float("-inf")
+    with pytest.raises(ValueError):
+        ObjectiveSpec().value({"x": 1.0}.__getitem__)
+
+
+def test_objective_feasibility_and_json_roundtrip():
+    o = ObjectiveSpec(ratio=("cost", "qps"),
+                      constraints=(ConstraintSpec("p95_ms", "<=", 250.0),
+                                   ConstraintSpec("qps", ">=", 100.0)))
+    assert o.constraint_properties() == ("p95_ms", "qps")
+    get = {"p95_ms": 200.0, "qps": 150.0}.get
+    assert o.feasible(get)
+    assert not o.feasible({"p95_ms": 300.0, "qps": 150.0}.get)
+    assert not o.feasible({"qps": 150.0}.get)  # missing => infeasible
+    assert ObjectiveSpec.from_json(o.to_json()) == o
+    with pytest.raises(ValueError, match="unknown"):
+        ObjectiveSpec.from_json({"target": "x"})
+
+
+def test_spec_metric_xor_scalarized_objective():
+    space = ProbabilitySpace.make([Dimension.discrete("x", [1, 2])])
+    constrained = ObjectiveSpec(
+        constraints=(ConstraintSpec("lat", "<=", 1.0),))
+    spec = InvestigationSpec(name="s", space=space, metric="cost",
+                             objective=constrained)
+    assert spec.objective_label() == "cost"
+    assert InvestigationSpec.from_json(spec.to_json()) == spec
+    scalarized = ObjectiveSpec(ratio=("cost", "qps"))
+    spec2 = InvestigationSpec(name="s", space=space, objective=scalarized)
+    assert spec2.objective_label() == "cost/qps"
+    assert InvestigationSpec.from_json(spec2.to_json()) == spec2
+    with pytest.raises(ValueError, match="not both"):
+        InvestigationSpec(name="s", space=space, metric="cost",
+                          objective=scalarized)
+    with pytest.raises(ValueError, match="metric"):
+        InvestigationSpec(name="s", space=space)
+
+
+# --------------------------------------------------------------- pareto
+
+
+def test_dominates_and_front():
+    assert dominates((1.0, 1.0), (2.0, 2.0))
+    assert not dominates((1.0, 3.0), (2.0, 2.0))
+    assert not dominates((1.0, 1.0), (1.0, 1.0))
+    pts = [(1.0, 4.0), (2.0, 2.0), (3.0, 3.0), (4.0, 1.0), (2.0, 2.0)]
+    # duplicates of a non-dominated point are both kept, input order
+    assert pareto_front(pts) == [0, 1, 3, 4]
+    assert pareto_front(pts, modes=("max", "max")) == [0, 2, 3]
+    assert pareto_front([], None) == []
+
+
+def test_hypervolume_exact_and_monotone():
+    ref = (4.0, 4.0)
+    assert hypervolume([(2.0, 2.0)], ref) == pytest.approx(4.0)
+    # two staircase points: 2x2 + 1x1 extra slab
+    assert hypervolume([(2.0, 2.0), (1.0, 3.0)], ref) == pytest.approx(5.0)
+    # dominated and out-of-reference points add nothing
+    assert hypervolume([(2.0, 2.0), (3.0, 3.0)], ref) == pytest.approx(4.0)
+    assert hypervolume([(2.0, 2.0), (5.0, 0.0)], ref) == pytest.approx(4.0)
+    assert hypervolume([], ref) == 0.0
+    # max mode mirrors min mode
+    assert hypervolume([(2.0, 2.0)], (0.0, 0.0), modes=("max", "max")) \
+        == pytest.approx(4.0)
+
+
+# ----------------------------------------------- adapter feasibility
+
+
+def sla_ds(store=None):
+    """cost rises with x while latency falls: the cheapest configurations
+    violate any latency bound — the canonical SLA trade-off."""
+    space = ProbabilitySpace.make([
+        Dimension.discrete("x", list(range(8))),
+        Dimension.categorical("tier", ["a", "b"]),
+    ])
+
+    def fn(c):
+        bump = 0.25 if c["tier"] == "b" else 0.0
+        return {"cost": 1.0 + c["x"] + bump, "lat": 10.0 - 2.0 * c["x"]}
+
+    exp = FunctionExperiment(fn=fn, properties=("cost", "lat"), name="sla")
+    return DiscoverySpace(space=space, actions=ActionSpace.make([exp]),
+                          store=store or SampleStore(":memory:"))
+
+
+SLA = ObjectiveSpec(constraints=(ConstraintSpec("lat", "<=", 6.0),))
+
+
+def test_adapter_attaches_feasibility_verdicts():
+    ds = sla_ds()
+    adapter = SearchAdapter(ds, "cost", "min", objective=SLA)
+    t_bad = _eval(adapter, _config(x=0, tier="a"))   # lat 10 > 6
+    t_ok = _eval(adapter, _config(x=3, tier="a"))    # lat 4 <= 6
+    assert t_bad.feasible is False and t_bad.value == 1.0
+    assert t_ok.feasible is True and t_ok.value == 4.0
+    # unconstrained adapters leave the verdict unknown
+    plain = SearchAdapter(sla_ds(), "cost", "min")
+    assert _eval(plain, _config(x=0, tier="a")).feasible is None
+
+
+def test_adapter_scalarized_objective_value():
+    ds = sla_ds()
+    obj = ObjectiveSpec(weights=(("cost", 1.0), ("lat", 0.1)))
+    adapter = SearchAdapter(ds, "", "min", objective=obj)
+    t = _eval(adapter, _config(x=2, tier="a"))
+    assert t.value == pytest.approx(3.0 + 0.6)
+    ratio = SearchAdapter(sla_ds(), "", "min",
+                          objective=ObjectiveSpec(ratio=("cost", "lat")))
+    t2 = _eval(ratio, _config(x=2, tier="a"))
+    assert t2.value == pytest.approx(3.0 / 6.0)
+
+
+def test_adapter_missing_objective_property_raises():
+    ds = sla_ds()
+    obj = ObjectiveSpec(weights=(("cost", 1.0), ("watts", 1.0)))
+    adapter = SearchAdapter(ds, "", "min", objective=obj)
+    with pytest.raises(KeyError, match="watts"):
+        adapter.evaluate(_config(x=2, tier="a"))
+
+
+def test_missing_constraint_property_is_infeasible():
+    """A constraint over a property the action space never measures can
+    never be satisfied — no sentinel value sneaks an SLA pass through."""
+    ds = sla_ds()
+    obj = ObjectiveSpec(constraints=(ConstraintSpec("p99_ms", "<=", 1e9),))
+    adapter = SearchAdapter(ds, "cost", "min", objective=obj)
+    assert _eval(adapter, _config(x=3, tier="a")).feasible is False
+
+
+def test_failed_trial_infeasible_only_under_constraints():
+    def fn(c):
+        if c["x"] >= 6:
+            raise MeasurementError("OOM")
+        return {"cost": float(c["x"]), "lat": 10.0 - c["x"]}
+
+    def make(objective):
+        space = ProbabilitySpace.make([Dimension.discrete("x", range(8))])
+        exp = FunctionExperiment(fn=fn, properties=("cost", "lat"),
+                                 name="cliff")
+        ds = DiscoverySpace(space=space, actions=ActionSpace.make([exp]),
+                            store=SampleStore(":memory:"))
+        return SearchAdapter(ds, "cost", "min", objective=objective)
+
+    failed = _eval(make(SLA), _config(x=7))
+    assert failed.value is None and failed.action == "failed"
+    assert failed.feasible is False
+    assert _eval(make(None), _config(x=7)).feasible is None
+
+
+# ------------------------------------- incumbent/reporting bugfixes
+
+
+def test_best_excludes_warm_predictions():
+    """Reproduces the incumbent bug: a warm-folded surrogate *prediction*
+    with the lowest value must never be reported as the best found."""
+    ds = sla_ds()
+    adapter = SearchAdapter(ds, "cost", "min")
+    adapter.evaluate(_config(x=3, tier="a"))          # measured, cost 4.0
+    adapter.warm_start([(_config(x=0, tier="a"), 0.01)])  # prediction!
+    run = OptimizerRun(optimizer="o", metric="cost", mode="min",
+                       trials=list(adapter.trials))
+    assert run.best.value == 4.0
+    assert run.best.action == "measured"
+    # the by-step incumbent curve skips the warm step too
+    curve = run.best_value_by_step()
+    assert curve == [4.0, 4.0]
+    # warm-only history: no incumbent at all
+    warm_only = OptimizerRun(optimizer="o", metric="cost", mode="min",
+                             trials=[t for t in adapter.trials
+                                     if t.action == WARM_ACTION])
+    assert warm_only.best is None
+    assert warm_only.best_value_by_step() == [None]
+
+
+def test_best_excludes_infeasible_trials():
+    c = _config(x=1)
+    run = OptimizerRun(optimizer="o", metric="cost", mode="min", trials=[
+        Trial(c, 1.0, "measured", 0, feasible=False),
+        Trial(c, 5.0, "measured", 1, feasible=True),
+        Trial(c, 3.0, "measured", 2),  # unknown verdict stays eligible
+    ])
+    assert run.best.value == 3.0
+    assert run.num_infeasible == 1
+    assert run.best_value_by_step() == [None, 5.0, 3.0]
+    all_bad = OptimizerRun(optimizer="o", metric="cost", mode="min", trials=[
+        Trial(c, 1.0, "measured", 0, feasible=False)])
+    assert all_bad.best is None
+
+
+def test_normalized_cost_counts_own_trials_only():
+    """Reproduces the reporting bug: foreign- and warm-folded history used
+    to inflate the denominator, understating the member's own cost."""
+    c = _config(x=1)
+    run = OptimizerRun(optimizer="o", metric="m", mode="min", trials=[
+        Trial(c, 1.0, "measured", 0),
+        Trial(c, 2.0, "measured", 1),
+        Trial(c, 3.0, "reused", 2),
+        Trial(c, 4.0, FOREIGN_ACTION, 3),
+        Trial(c, 5.0, FOREIGN_ACTION, 4),
+        Trial(c, 6.0, WARM_ACTION, 5),
+    ])
+    # 2 measured / 3 own told trials — NOT 2/6
+    assert run.normalized_cost == pytest.approx(2.0 / 3.0)
+    foreign_only = OptimizerRun(optimizer="o", metric="m", mode="min",
+                                trials=[Trial(c, 1.0, FOREIGN_ACTION, 0)])
+    assert foreign_only.normalized_cost == 0.0
+
+
+def test_stopping_rule_infeasible_trials_stall():
+    adapter = SimpleNamespace(trials=[1] * 10, signed=lambda v: v)
+    rule = _StoppingRule(adapter, patience=3, min_trials=1)
+    rule.observe(5.0, True)
+    assert rule.best == 5.0 and rule.stall == 0
+    # a streak of ever-cheaper SLA violators is STALLING, not improving
+    for v in (4.0, 3.0, 2.0):
+        rule.observe(v, False)
+    assert rule.best == 5.0
+    assert rule.stop
+    # ...while a feasible improvement resets the streak
+    rule2 = _StoppingRule(adapter, patience=3, min_trials=1)
+    rule2.observe(5.0, True)
+    rule2.observe(4.0, False)
+    rule2.observe(3.0, True)
+    assert rule2.best == 3.0 and rule2.stall == 0
+
+
+# ------------------------------------------- constrained acquisition
+
+
+def test_bo_gp_feasibility_weight_signal():
+    ds = sla_ds()
+    adapter = SearchAdapter(ds, "cost", "min", objective=SLA)
+    for x in range(8):
+        adapter.evaluate(_config(x=x, tier="a"))
+    opt = GPBayesOpt(seed=0)
+    cand = [_config(x=x, tier="b") for x in range(8)]
+    Xc = np.stack([ds.space.encode(c) for c in cand])
+    pof = opt._feasibility_weight(adapter, Xc)
+    assert pof is not None and pof.shape == (8,)
+    assert np.all((pof >= 0.0) & (pof <= 1.0))
+    # feasibility rises with x in this surface; the classifier must agree
+    assert pof[7] > pof[0]
+    # all-feasible history carries no signal: weighting is skipped entirely
+    feas_only = SearchAdapter(sla_ds(), "cost", "min", objective=SLA)
+    for x in (3, 4, 5):
+        feas_only.evaluate(_config(x=x, tier="a"))
+    assert opt._feasibility_weight(feas_only, Xc) is None
+
+
+def test_bo_gp_all_infeasible_history_explores_randomly():
+    """An all-infeasible history is a one-class label set: the standardized
+    classifier fit degenerates (PoF = 0 everywhere), and ranking on that
+    flat surface would crawl the candidate pool in enumeration order.  The
+    weight must be None so the ask falls back to random exploration."""
+    ds = sla_ds()
+    adapter = SearchAdapter(ds, "cost", "min", objective=SLA)
+    for x in (0, 1):  # lat 10, 8 > bound 6 — every observation infeasible
+        adapter.evaluate(_config(x=x, tier="a"))
+    assert all(t.feasible is False for t in adapter.trials)
+    opt = GPBayesOpt(seed=0, n_initial=1)
+    cand = [_config(x=x, tier="b") for x in range(8)]
+    Xc = np.stack([ds.space.encode(c) for c in cand])
+    assert opt._feasibility_weight(adapter, Xc) is None
+    # and the full ask explores: different rng streams pick different
+    # configurations instead of deterministically walking enumeration order
+    picks = {opt.ask(adapter, np.random.default_rng(s), 1)[0]
+             .configuration.digest for s in range(8)}
+    assert len(picks) > 1
+
+
+@pytest.mark.parametrize("opt_cls", [GPBayesOpt, TPE])
+def test_constrained_search_lands_feasible(opt_cls):
+    """On a surface where cheap == SLA-violating, the constrained search
+    must report a feasible incumbent at the cheapest feasible cost, while
+    the unconstrained run happily reports a violator."""
+    def run(objective):
+        ds = sla_ds()
+        inv = Investigation.from_components(
+            ds, [opt_cls(seed=0)], "cost", mode="min", max_trials=16,
+            patience=17, backend="serial", objective=objective)
+        return inv.run()
+
+    res = run(SLA)
+    assert res.best is not None and res.best.feasible is True
+    # cheapest feasible: x=2 (lat 6.0), tier a => cost 3.0
+    assert res.best.value == pytest.approx(3.0)
+    assert res.num_infeasible > 0
+    assert res.summary()["infeasible"] == res.num_infeasible
+    plain = run(None)
+    assert plain.best.value < 3.0  # the violator the SLA exists to reject
+
+
+def boundary_adapter(objective):
+    """16-point 1-d surface, even x measured: cost rises with x, latency
+    falls, ``lat <= 8`` means x >= 6 — the odd-x pool spans deep violators
+    (x=1,3), the boundary (x=5), and the feasible shelf (x>=7)."""
+    space = ProbabilitySpace.make([Dimension.discrete("x", list(range(16)))])
+
+    def fn(c):
+        return {"cost": 1.0 + c["x"], "lat": 20.0 - 2.0 * c["x"]}
+
+    exp = FunctionExperiment(fn=fn, properties=("cost", "lat"), name="bnd")
+    ds = DiscoverySpace(space=space, actions=ActionSpace.make([exp]),
+                        store=SampleStore(":memory:"))
+    adapter = SearchAdapter(ds, "cost", "min", objective=objective)
+    for x in range(0, 16, 2):
+        adapter.evaluate(_config(x=x))
+    return adapter
+
+
+BOUNDARY_SLA = ObjectiveSpec(constraints=(ConstraintSpec("lat", "<=", 8.0),))
+
+
+def test_constrained_bo_gp_prefers_feasible_region():
+    """Feasibility-weighted EI steers proposals to the constraint boundary;
+    unweighted EI on the same history chases the deep violators."""
+    opt = GPBayesOpt(seed=0)
+    con = opt.ask(boundary_adapter(BOUNDARY_SLA),
+                  np.random.default_rng(0), n=4)
+    unc = GPBayesOpt(seed=0).ask(boundary_adapter(None),
+                                 np.random.default_rng(0), n=4)
+    # cost-only EI proposes the cheapest unseen point — an SLA violator
+    assert unc[0].configuration["x"] == 1
+    # P(feasible) weighting moves the top proposal to the boundary/feasible
+    # region and zeroes the deep violators' scores
+    assert con[0].configuration["x"] >= 5
+    assert con[0].score > 0.0
+    deep = [c.score for c in con if c.configuration["x"] <= 3]
+    assert all(s == 0.0 for s in deep)
+
+
+def test_tpe_constrained_split_uses_feasible_good():
+    con = TPE(seed=0).ask(boundary_adapter(BOUNDARY_SLA),
+                          np.random.default_rng(0), n=1)
+    unc = TPE(seed=0).ask(boundary_adapter(None),
+                          np.random.default_rng(0), n=1)
+    assert unc[0].configuration["x"] == 1   # the violator again
+    assert con[0].configuration["x"] >= 6   # inside the feasible shelf
+
+
+def test_unconstrained_rng_stream_untouched():
+    """The constrained machinery must not change unconstrained draws: same
+    seed, same history => same proposals as before the feature existed."""
+    def proposals(objective):
+        ds = sla_ds()
+        adapter = SearchAdapter(ds, "cost", "min", objective=objective)
+        for x in (0, 3, 5):
+            adapter.evaluate(_config(x=x, tier="a"))
+        rng = np.random.default_rng(42)
+        return [c.configuration.digest
+                for c in GPBayesOpt(seed=0).ask(adapter, rng, n=3)]
+
+    # None and a constraint-free objective are both the unconstrained path
+    assert proposals(None) == proposals(ObjectiveSpec())
+
+
+# ------------------------------------------------- unseen-pool cache
+
+
+def test_unseen_pool_matches_fresh_enumeration():
+    ds = sla_ds()
+    adapter = SearchAdapter(ds, "cost", "min")
+    for x in (0, 2, 4):
+        adapter.evaluate(_config(x=x, tier="a"))
+    pool = adapter.unseen_pool()
+    fresh = [c for c in ds.space.all_configurations()
+             if c.digest not in {t.configuration.digest
+                                 for t in adapter.trials}]
+    # same configurations, same enumeration order
+    assert list(pool.values()) == fresh
+    # tell() evicts in place
+    nxt = fresh[0]
+    adapter.evaluate(nxt)
+    assert nxt.digest not in adapter.unseen_pool()
+    # pending digests are filtered per-ask but stay in the cache
+    adapter.pending.add(fresh[1].digest)
+    got = Optimizer._unseen_candidates(adapter, np.random.default_rng(0),
+                                       max_candidates=512)
+    assert fresh[1] not in got
+    assert fresh[1].digest in adapter.unseen_pool()
+
+
+def test_ask_enumerates_space_once_per_adapter(monkeypatch):
+    """The O(|Ω|)-per-ask regression gate: a full run's ask loop walks the
+    finite space ONCE (the cache build), not once per trial."""
+    calls = {"n": 0}
+    orig = ProbabilitySpace.all_configurations
+
+    def counting(self, *a, **k):
+        calls["n"] += 1
+        return orig(self, *a, **k)
+
+    monkeypatch.setattr(ProbabilitySpace, "all_configurations", counting)
+    ds = sla_ds()
+    baseline = calls["n"]  # space registration etc.
+    run = run_optimizer(RandomSearch(seed=0), ds, "cost", "min",
+                        max_trials=12, patience=13,
+                        rng=np.random.default_rng(0))
+    assert run.num_trials == 12
+    assert calls["n"] - baseline <= 1
+
+
+# ------------------------------------------- dry-run report properties
+
+
+def test_dryrun_report_omits_unknown_byte_count():
+    from repro.tuning.experiments import DryrunRooflineExperiment
+
+    report = SimpleNamespace(compute_s=1.0, memory_s=2.0, collective_s=0.5,
+                             step_time_s=3.5, roofline_fraction=0.9,
+                             hlo_flops=1e12, bytes_per_device=None)
+    out = DryrunRooflineExperiment._report_properties(report, 7.0)
+    # no zero sentinel: a memory SLA must not silently pass
+    assert "bytes_per_device" not in out
+    assert out["compile_s"] == 7.0
+    report.bytes_per_device = 2.5e9
+    out2 = DryrunRooflineExperiment._report_properties(report, 7.0)
+    assert out2["bytes_per_device"] == 2.5e9
+    # and the constraint layer treats the omission as an SLA failure
+    hbm = ConstraintSpec("bytes_per_device", "<=", 16e9)
+    assert not hbm.satisfied(out.get("bytes_per_device"))
+    assert hbm.satisfied(out2["bytes_per_device"])
+
+
+# ------------------------------------------------------- end to end
+
+
+def test_investigation_sla_end_to_end():
+    store = SampleStore(":memory:")
+    ds = sla_ds(store)
+    inv = Investigation.from_components(
+        ds, [TPE(seed=1)], "cost", mode="min", max_trials=14, patience=15,
+        backend="serial", objective=SLA)
+    plan = inv.plan()
+    assert "s.t. lat <= 6" in plan.describe()
+    res = inv.run()
+    assert res.best is not None and res.best.feasible is True
+    summary = res.summary()
+    assert summary["infeasible"] == res.num_infeasible
+    assert summary["best"]["value"] >= 3.0  # never a violator's cost
+    # the store's frontier view over (cost, lat) is non-empty, mutually
+    # non-dominating, and contains the reported best
+    front = inv.frontier(["cost", "lat"])
+    assert front
+    pts = [v for _, v in front]
+    assert pareto_front(pts) == list(range(len(pts)))
+    assert any(v[0] == pytest.approx(res.best.value) for v in pts)
+
+
+def test_measurements_to_best_skips_infeasible_match():
+    """An infeasible trial sharing the best's value must not shortcut the
+    measurements-to-best count."""
+    ds = sla_ds()
+    inv = Investigation.from_components(
+        ds, [TPE(seed=3)], "cost", mode="min", max_trials=12, patience=13,
+        backend="serial", objective=SLA)
+    res = inv.run()
+    n = res.measurements_to_best()
+    paid = 0
+    for _, t in res.events:
+        if t.action in ("measured", "failed"):
+            paid += 1
+        if t.feasible is not False and t.value is not None \
+                and t.value == res.best.value:
+            break
+    assert n == paid

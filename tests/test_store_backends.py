@@ -347,6 +347,117 @@ def test_measured_property_values_latest_wins(backend):
         == [(0, 9.0), (1, 1.0)]  # failed config absent, order = appearance
 
 
+# ------------------------------------------------------- frontier view
+
+
+def _put_point(store, clock, i, cost, lat, action="measured", exp="exp-a",
+               predicted=False):
+    """One sampled configuration with (cost, lat) values recorded."""
+    digest = store.put_configuration(_config(i))
+    store.append_record(SPACE, OP, digest, action)
+    store.put_values(digest, [
+        PropertyValue(name="cost", value=cost, experiment_id=exp,
+                      predicted=predicted, timestamp=clock.time()),
+        PropertyValue(name="lat", value=lat, experiment_id=exp,
+                      predicted=predicted, timestamp=clock.time()),
+    ])
+    return digest
+
+
+def test_frontier_dominance_and_order(backend):
+    store, clock = backend
+    _put_point(store, clock, 0, 1.0, 9.0)   # frontier (cheap, slow)
+    _put_point(store, clock, 1, 5.0, 5.0)   # dominated by config 3
+    _put_point(store, clock, 2, 9.0, 1.0)   # frontier (dear, fast)
+    _put_point(store, clock, 3, 4.0, 4.0)   # frontier (middle)
+    front = store.frontier(SPACE, ["cost", "lat"])
+    # non-dominated only, first-sampled order, values aligned to properties
+    assert [(dict(c.values)["size"], v) for c, v in front] \
+        == [(0, (1.0, 9.0)), (2, (9.0, 1.0)), (3, (4.0, 4.0))]
+    # modes flip the dominance orientation per coordinate
+    worst = store.frontier(SPACE, ["cost", "lat"], modes=["max", "max"])
+    assert {dict(c.values)["size"] for c, _ in worst} == {1, 2, 0}
+    # single property: the frontier degenerates to the argmin
+    assert [v for _, v in store.frontier(SPACE, ["cost"])] == [(1.0,)]
+
+
+def test_frontier_excludes_failed_predicted_incomplete(backend):
+    store, clock = backend
+    _put_point(store, clock, 0, 5.0, 5.0)
+    # a strictly-better point whose only record is a failed deployment
+    _put_point(store, clock, 1, 1.0, 1.0, action="failed")
+    # a strictly-better point whose values are surrogate predictions
+    _put_point(store, clock, 2, 0.5, 0.5, predicted=True)
+    # a strictly-better point missing one of the requested properties
+    d3 = store.put_configuration(_config(3))
+    store.append_record(SPACE, OP, d3, "measured")
+    store.put_values(d3, [PropertyValue(
+        name="cost", value=0.1, experiment_id="exp-a", predicted=False,
+        timestamp=clock.time())])
+    front = store.frontier(SPACE, ["cost", "lat"])
+    assert [(dict(c.values)["size"], v) for c, v in front] \
+        == [(0, (5.0, 5.0))]
+    # ...but a foreign experiment's measurements are excluded only when the
+    # caller scopes the view to its own action space
+    _put_point(store, clock, 4, 2.0, 2.0, exp="exp-other")
+    assert {dict(c.values)["size"] for c, _ in
+            store.frontier(SPACE, ["cost", "lat"])} == {4}
+    assert {dict(c.values)["size"] for c, _ in
+            store.frontier(SPACE, ["cost", "lat"],
+                           experiment_ids=["exp-a"])} == {0}
+
+
+def test_frontier_latest_measurement_wins(backend):
+    store, clock = backend
+    d0 = _put_point(store, clock, 0, 1.0, 1.0)
+    _put_point(store, clock, 1, 3.0, 3.0)
+    # config 0 is re-measured to a dominated position: the later write wins
+    # and config 1 joins the frontier
+    store.put_values(d0, [PropertyValue(
+        name="cost", value=4.0, experiment_id="exp-a", predicted=False,
+        timestamp=clock.time())])
+    front = store.frontier(SPACE, ["cost", "lat"])
+    assert [(dict(c.values)["size"], v) for c, v in front] \
+        == [(0, (4.0, 1.0)), (1, (3.0, 3.0))]
+
+
+def test_frontier_validates_and_empty(backend):
+    store, _ = backend
+    assert store.frontier(SPACE, ["cost", "lat"]) == []
+    with pytest.raises((ValueError, StoreRemoteError)):
+        store.frontier(SPACE, [])
+
+
+def test_frontier_under_concurrent_appends(backend):
+    """Writers racing on the record/value tables never corrupt the view:
+    afterwards the frontier equals the pure-math frontier of everything
+    written, on both backends."""
+    from repro.core.pareto import pareto_front
+
+    store, clock = backend
+    # staircase points are all mutually non-dominated; interior points never
+    # surface.  8 writers x 6 points each.
+    def writer(w):
+        for j in range(6):
+            i = w * 6 + j
+            if i % 3 == 0:
+                _put_point(store, clock, i, 1.0 + i, 100.0 - i)  # staircase
+            else:
+                _put_point(store, clock, i, 200.0 + i, 200.0 + i)  # interior
+
+    threads = [threading.Thread(target=writer, args=(w,)) for w in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    front = store.frontier(SPACE, ["cost", "lat"])
+    expected = {(1.0 + i, 100.0 - i) for i in range(48) if i % 3 == 0}
+    assert {v for _, v in front} == expected
+    # and the store agrees with the reference dominance filter
+    pts = [v for _, v in front]
+    assert pareto_front(pts) == list(range(len(pts)))
+
+
 # ---------------------------------------------- measure-once, cross-backend
 
 
