@@ -1,0 +1,242 @@
+"""Actuation-lifecycle benchmark: trace replay at depth, priced honestly.
+
+The phased actuation path (``repro.core.connector``) promises three things
+this bench measures and gates, writing ``BENCH_actuation.json``:
+
+* **replay** — recorded-trace replay throughput through the *full*
+  ``sample -> store`` path (claims, records, failure rows, billed
+  properties) on a fresh SQLite store: trials/s, plus the virtual-vs-wall
+  compression ratio (hours of recorded actuation replayed in wall-clock
+  seconds — the whole point of traces).  Acceptance: >= 50 trials/s.
+* **overhead** — the lifecycle adapter's per-trial cost over calling the
+  connector's four phases directly (retry bookkeeping, billing, teardown
+  discipline).  Acceptance: < 2 ms/trial — the adapter must be noise next
+  to any real cloud actuation.
+* **billing** — exact failed-trial cost accounting: after the replay, the
+  sum of every successful trial's ``provisioned_cost`` property plus every
+  failed trial's billed failure cost must reconcile with the rate times
+  the provisioned seconds recorded in the trace, to 1e-6 relative.
+  Scout/Lynceus both charge failed trials; a drifting ledger here means
+  the lifecycle dropped or double-billed a phase window.
+
+``--quick`` is the CI mode (reduced trial count).  Run directly::
+
+    PYTHONPATH=src python -m benchmarks.actuation_bench [--quick] [--out F]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+
+from repro.core import (ActionSpace, Configuration, Dimension, DiscoverySpace,
+                        ProbabilitySpace, SampleStore)
+from repro.core.clock import FakeClock
+from repro.core.connector import (Deployment, ExperimentConnector,
+                                  FlatPricing, LifecycleExperiment,
+                                  RetryPolicy, TraceConnector, write_trace)
+
+__all__ = ["run_bench", "main"]
+
+RATE_PER_S = 0.01
+PROVISION_S = 5.0
+RUN_S = 10.0
+TEARDOWN_S = 1.0
+RETRY = {"provision_attempts": 3, "run_attempts": 1, "backoff_s": 1.0,
+         "backoff_factor": 2.0, "max_backoff_s": 60.0, "jitter": 0.1}
+
+
+def _synthesize_trace(path: str, n: int) -> tuple:
+    """Deterministic n-trial trace: every 7th trial flakes provisioning
+    once (retried at replay), every 20th never provisions (billed failure),
+    the rest measure cleanly."""
+    header = {"trace": "actuation-v1", "name": "bench-cloud", "version": "1",
+              "params": {"region": "bench"}, "properties": ["m"],
+              "retry": dict(RETRY),
+              "pricing": {"kind": "flat", "rate_per_s": RATE_PER_S}}
+    trials = []
+    for i in range(n):
+        config = {"i": i}
+        digest = Configuration.make(config).digest
+        if i % 20 == 0:
+            attempts = [{"phase": "provision", "ok": False, "s": PROVISION_S,
+                         "reason": "zone outage"} for _ in range(3)]
+            props = None
+        else:
+            attempts = []
+            if i % 7 == 0:
+                attempts.append({"phase": "provision", "ok": False,
+                                 "s": PROVISION_S,
+                                 "reason": "insufficient capacity"})
+            attempts += [{"phase": "provision", "ok": True, "s": PROVISION_S},
+                         {"phase": "run", "ok": True, "s": RUN_S},
+                         {"phase": "parse", "ok": True, "s": 0.0},
+                         {"phase": "teardown", "ok": True, "s": TEARDOWN_S}]
+            props = {"m": float(i)}
+        trials.append({"config": config, "digest": digest,
+                       "attempts": attempts, "properties": props})
+    write_trace(path, header, trials)
+    return header, trials
+
+
+def bench_replay(path: str, n: int, workdir: str) -> dict:
+    clock = FakeClock()
+    connector = TraceConnector(path, clock=clock)
+    experiment = LifecycleExperiment(
+        connector, retry=RetryPolicy(**{**RETRY, "backoff_s": 0.0}),
+        pricing=FlatPricing(rate_per_s=RATE_PER_S), clock=clock)
+    ds = DiscoverySpace(
+        space=ProbabilitySpace.make([Dimension.discrete("i", list(range(n)))]),
+        actions=ActionSpace.make([experiment]),
+        store=SampleStore(os.path.join(workdir, "replay.db")))
+    configs = [Configuration.make({"i": i}) for i in range(n)]
+    wall0, virt0 = time.perf_counter(), clock.time()
+    results = ds.sample_batch(configs, operation_id="bench")
+    wall = time.perf_counter() - wall0
+    virtual = clock.time() - virt0
+    failed = sum(1 for r in results if not r.ok)
+    return {
+        "trials": n,
+        "failed_trials": failed,
+        "wall_s": round(wall, 3),
+        "trials_per_s": round(n / wall, 1),
+        "virtual_hours_replayed": round(virtual / 3600.0, 3),
+        "virtual_over_wall": round(virtual / max(wall, 1e-9), 1),
+        "_ds": ds,  # stripped before serialization; billing bench reads it
+    }
+
+
+def bench_billing(ds: DiscoverySpace, trials: list) -> dict:
+    """Reconcile the store's ledger against the trace's provisioned
+    seconds (backoff waits are unbilled — you hold no instance while you
+    wait to retry)."""
+    expected = RATE_PER_S * sum(ev["s"] for t in trials
+                                for ev in t["attempts"])
+    measured_cost = 0.0
+    for s in ds.read():
+        for v in s.properties.values():
+            if v.name == "provisioned_cost":
+                measured_cost += v.value
+    summary = ds.store.failure_summary(ds.space_id)
+    failed_cost = sum(p["cost"] for p in summary.values())
+    actual = measured_cost + failed_cost
+    drift = abs(actual - expected) / max(expected, 1e-9)
+    return {
+        "expected_cost": round(expected, 6),
+        "measured_trials_cost": round(measured_cost, 6),
+        "failed_trials_cost": round(failed_cost, 6),
+        "failures_by_phase": {k: v["count"] for k, v in summary.items()},
+        "relative_drift": drift,
+    }
+
+
+class _InstantConnector(ExperimentConnector):
+    name = "instant"
+    version = "1"
+
+    @property
+    def parameterization(self):
+        return {}
+
+    @property
+    def observed_properties(self):
+        return ("m",)
+
+    def provision(self, configuration):
+        return Deployment(ident="i", configuration=configuration, handle="h")
+
+    def run(self, deployment):
+        return {"m": 1.0}
+
+
+def bench_overhead(n: int) -> dict:
+    """Lifecycle adapter vs calling the four phases directly."""
+    clock = FakeClock()
+    connector = _InstantConnector()
+    experiment = LifecycleExperiment(
+        connector, retry=RetryPolicy(**RETRY),
+        pricing=FlatPricing(rate_per_s=RATE_PER_S), clock=clock)
+    configs = [Configuration.make({"i": i}) for i in range(n)]
+
+    t0 = time.perf_counter()
+    for c in configs:
+        experiment.measure(c)
+    lifecycle_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    for c in configs:
+        d = connector.provision(c)
+        props = dict(connector.parse(connector.run(d)))
+        connector.teardown(d)
+        del props
+    direct_s = time.perf_counter() - t0
+
+    per_trial_us = (lifecycle_s - direct_s) / n * 1e6
+    return {"trials": n,
+            "lifecycle_us_per_trial": round(lifecycle_s / n * 1e6, 2),
+            "direct_us_per_trial": round(direct_s / n * 1e6, 2),
+            "overhead_us_per_trial": round(per_trial_us, 2)}
+
+
+def run_bench(quick: bool = False) -> dict:
+    n = 200 if quick else 2000
+    overhead_n = 2000 if quick else 20_000
+    workdir = tempfile.mkdtemp(prefix="actuation_bench_")
+    trace_path = os.path.join(workdir, "trace.jsonl")
+    _header, trials = _synthesize_trace(trace_path, n)
+
+    replay = bench_replay(trace_path, n, workdir)
+    ds = replay.pop("_ds")
+    billing = bench_billing(ds, trials)
+    overhead = bench_overhead(overhead_n)
+
+    gates = {
+        "replay_ge_50_trials_per_s": replay["trials_per_s"] >= 50.0,
+        "lifecycle_overhead_under_2ms":
+            overhead["overhead_us_per_trial"] < 2000.0,
+        "billing_reconciles_1e-6":
+            billing["relative_drift"] < 1e-6,
+        "billing_relative_drift": billing["relative_drift"],
+    }
+    billing["relative_drift"] = round(billing["relative_drift"], 9)
+    gates["billing_relative_drift"] = billing["relative_drift"]
+    return {
+        "generated_by": "benchmarks/actuation_bench.py",
+        "mode": "quick" if quick else "full",
+        "note": ("replay = recorded-trace replay through the full "
+                 "sample->store path on FakeClock (zero real sleeps); "
+                 "billing reconciles provisioned_cost properties + failure "
+                 "rows against the trace's provisioned seconds."),
+        "replay": replay,
+        "overhead": overhead,
+        "billing": billing,
+        "gates": gates,
+    }
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    parser.add_argument("--quick", action="store_true",
+                        help="CI mode: 200-trial trace, 2k-trial overhead "
+                             "loop")
+    parser.add_argument("--out", default="BENCH_actuation.json")
+    args = parser.parse_args(argv)
+    result = run_bench(quick=args.quick)
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+        f.write("\n")
+    print(json.dumps(result, indent=2))
+    print(f"wrote {args.out}")
+    failed = [name for name, ok in result["gates"].items()
+              if isinstance(ok, bool) and not ok]
+    if failed:
+        print(f"GATE FAILURE: {', '.join(failed)}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,126 @@
+"""Record the bundled sample actuation trace (examples/traces/).
+
+A synthetic cloud connector — phased provision / run / parse / teardown
+with realistic warts: per-instance startup times and hourly rates, a
+capacity-starved zone that flakes provisioning (retried by the lifecycle),
+one permanently-out-of-capacity corner, and an OOM corner that fails at the
+run phase.  Everything runs on a ``FakeClock``, so recording the 50-trial
+trace takes milliseconds of wall-clock while the trace itself spans hours
+of virtual provisioned time — and replaying it is deterministic down to the
+billed cent.
+
+Regenerate with::
+
+    PYTHONPATH=src python examples/record_actuation_trace.py
+
+Replay it through a full investigation with::
+
+    PYTHONPATH=src python -m repro.core.api run examples/specs/trace_replay.json
+"""
+
+import os
+
+import numpy as np
+
+from repro.core import Dimension, ProbabilitySpace
+from repro.core.actions import MeasurementError, ProvisioningError
+from repro.core.clock import FakeClock
+from repro.core.connector import (Deployment, DimensionPricing,
+                                  ExperimentConnector, LifecycleExperiment,
+                                  RetryPolicy, record_trace)
+
+OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                   "traces", "sample_actuation.jsonl")
+
+#: $/hour on-demand prices, converted to $/s by the pricing model below.
+HOURLY = {"m5.large": 0.096, "m5.xlarge": 0.192,
+          "c5.xlarge": 0.17, "c5.2xlarge": 0.34}
+STARTUP_S = {"m5.large": 35.0, "m5.xlarge": 40.0,
+             "c5.xlarge": 45.0, "c5.2xlarge": 55.0}
+BASE_RATE = {"m5.large": 210.0, "m5.xlarge": 420.0,
+             "c5.xlarge": 520.0, "c5.2xlarge": 990.0}
+
+
+def space():
+    return ProbabilitySpace.make([
+        Dimension.categorical("instance", list(HOURLY)),
+        Dimension.discrete("workers", [1, 2, 4, 8]),
+        Dimension.discrete("batch_size", [8, 16, 32, 64]),
+    ])
+
+
+class SyntheticCloud(ExperimentConnector):
+    """A simulated provider: deterministic performance surface, flaky
+    capacity.  ``c5.xlarge`` needs one extra provisioning attempt (the
+    capacity-starved zone); ``c5.2xlarge`` at 8 workers never provisions;
+    ``m5.large`` at batch 64 OOMs during the benchmark run."""
+
+    name = "synthetic-cloud"
+    version = "1"
+
+    def __init__(self, clock):
+        self.clock = clock
+        self._attempts = {}
+
+    @property
+    def parameterization(self):
+        return {"region": "sim-east-1"}
+
+    @property
+    def observed_properties(self):
+        return ("throughput", "startup_s")
+
+    def provision(self, configuration):
+        inst = configuration["instance"]
+        d = configuration.digest
+        n = self._attempts[d] = self._attempts.get(d, 0) + 1
+        if inst == "c5.2xlarge" and configuration["workers"] == 8:
+            self.clock.sleep(12.0)  # the API rejects the request quickly
+            raise ProvisioningError("InsufficientInstanceCapacity")
+        if inst == "c5.xlarge" and n == 1:
+            self.clock.sleep(18.0)
+            raise ProvisioningError("capacity rebalancing, try again")
+        self.clock.sleep(STARTUP_S[inst] * configuration["workers"] ** 0.5)
+        return Deployment(ident=f"fleet-{d[:10]}",
+                          configuration=configuration, handle=d,
+                          meta={"startup_s": self.clock.time()})
+
+    def run(self, deployment):
+        c = deployment.configuration
+        if c["instance"] == "m5.large" and c["batch_size"] == 64:
+            self.clock.sleep(30.0)
+            raise MeasurementError("worker OOM-killed at batch 64")
+        # scaling is sublinear in workers, batch helps with a knee at 32
+        rate = (BASE_RATE[c["instance"]] * c["workers"] ** 0.8
+                * min(c["batch_size"], 32) / 32.0)
+        self.clock.sleep(120.0)  # the benchmark itself
+        return {"throughput": round(rate, 3),
+                "startup_s": STARTUP_S[c["instance"]] * c["workers"] ** 0.5}
+
+    def teardown(self, deployment):
+        self.clock.sleep(3.0)
+
+
+def main():
+    clock = FakeClock()
+    experiment = LifecycleExperiment(
+        SyntheticCloud(clock),
+        retry=RetryPolicy(provision_attempts=3, backoff_s=5.0,
+                          backoff_factor=2.0, jitter=0.1),
+        pricing=DimensionPricing(
+            dimension="instance",
+            rates=tuple(sorted((k, v / 3600.0) for k, v in HOURLY.items())),
+            default=0.0001),
+        clock=clock)
+    rng = np.random.default_rng(0)
+    configs = space().sample_configurations(rng, 50)
+    t0 = clock.time()
+    header, trials = record_trace(experiment, configs, path=OUT, clock=clock)
+    ok = sum(1 for t in trials if t["properties"] is not None)
+    print(f"recorded {len(trials)} trials ({ok} ok, {len(trials) - ok} "
+          f"failed) spanning {(clock.time() - t0) / 3600.0:.2f} virtual "
+          f"hours -> {OUT}")
+
+
+if __name__ == "__main__":
+    main()

@@ -18,7 +18,8 @@ from typing import Any, Callable, Mapping, Optional, Sequence
 
 from .entities import Configuration, content_hash
 
-__all__ = ["Experiment", "FunctionExperiment", "SurrogateExperiment", "ActionSpace"]
+__all__ = ["Experiment", "FunctionExperiment", "SurrogateExperiment", "ActionSpace",
+           "MeasurementError", "ProvisioningError", "FailureRecord"]
 
 
 class Experiment(abc.ABC):
@@ -66,7 +67,54 @@ class Experiment(abc.ABC):
 
 
 class MeasurementError(RuntimeError):
-    """A configuration could not be deployed / measured."""
+    """A configuration could not be deployed / measured.
+
+    This is *the configuration's* fault (a non-deployable point, paper
+    §III-C): retrying the same configuration would fail again, so the
+    Discovery Space records a failed sample and moves on.  The optional
+    ``failure`` attribute carries structured provenance (a
+    :class:`FailureRecord`) from the actuation lifecycle; the execution
+    layer persists it through ``StoreBackend.record_failure``.
+    """
+
+    def __init__(self, message: str = "", failure: "Optional[FailureRecord]" = None):
+        super().__init__(message)
+        self.failure = failure
+
+
+class ProvisioningError(RuntimeError):
+    """Infrastructure failed to provision / respond — NOT the configuration's
+    fault.  Retryable: the actuation lifecycle's :class:`RetryPolicy` backs
+    off and tries again; only after exhausting its attempts does the trial
+    become a failed sample (wrapped as :class:`MeasurementError` with
+    ``phase="provision"`` provenance)."""
+
+
+@dataclass(frozen=True)
+class FailureRecord:
+    """Structured provenance for one failed trial.
+
+    ``phase`` names the lifecycle phase that gave up (``provision`` / ``run``
+    / ``parse`` / ``measure`` for monolithic experiments), ``reason`` is the
+    human-readable cause, ``attempts`` counts tries of the failing phase, and
+    ``cost`` is the provisioned-but-unmeasured spend charged to the trial
+    (the Scout/Lynceus accounting: failed trials are not free).
+    """
+
+    phase: str
+    reason: str
+    attempts: int = 1
+    cost: float = 0.0
+
+    def to_json(self) -> dict:
+        return {"phase": self.phase, "reason": self.reason,
+                "attempts": self.attempts, "cost": self.cost}
+
+    @staticmethod
+    def from_json(d: Mapping[str, Any]) -> "FailureRecord":
+        return FailureRecord(phase=str(d["phase"]), reason=str(d["reason"]),
+                             attempts=int(d.get("attempts", 1)),
+                             cost=float(d.get("cost", 0.0)))
 
 
 class DeferredExperiment(Experiment):
@@ -139,7 +187,15 @@ class FunctionExperiment(Experiment):
         missing = set(self.properties) - set(out)
         if missing:
             raise MeasurementError(f"experiment {self.name} missing properties {missing}")
-        return {k: float(v) for k, v in out.items() if k in self.properties}
+        try:
+            return {k: float(v) for k, v in out.items() if k in self.properties}
+        except (TypeError, ValueError) as err:
+            # A non-float-coercible value is a bad *measurement*, not a crash
+            # of the worker: surface it as a failed trial so the search keeps
+            # going instead of killing the backend.
+            raise MeasurementError(
+                f"experiment {self.name} returned a non-numeric property value "
+                f"for configuration {configuration.digest}: {err}") from err
 
 
 @dataclass
@@ -181,6 +237,19 @@ class ActionSpace:
 
     experiments: tuple
 
+    def __post_init__(self):
+        # property -> experiment resolution happens on every measurement and
+        # every optimizer tell; build the map once (first experiment claiming
+        # a property wins, matching the original scan order).  The instance
+        # is frozen, so the cache is installed via object.__setattr__; it is
+        # not a dataclass field, so eq/hash/repr are unchanged and
+        # `extended()` (which builds a new instance) rebuilds it naturally.
+        by_prop = {}
+        for e in self.experiments:
+            for p in e.observed_properties:
+                by_prop.setdefault(p, e)
+        object.__setattr__(self, "_experiment_by_property", by_prop)
+
     @staticmethod
     def make(exps: Sequence[Experiment]) -> "ActionSpace":
         return ActionSpace(experiments=tuple(exps))
@@ -207,7 +276,7 @@ class ActionSpace:
         return ActionSpace(experiments=self.experiments + tuple(exps))
 
     def experiment_for(self, prop: str) -> Experiment:
-        for e in self.experiments:
-            if prop in e.observed_properties:
-                return e
-        raise KeyError(prop)
+        try:
+            return self._experiment_by_property[prop]
+        except KeyError:
+            raise KeyError(prop) from None

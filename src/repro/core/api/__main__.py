@@ -8,6 +8,8 @@
     python -m repro.core.api catalog --store PATH
     python -m repro.core.api frontier --store PATH --space ID \
                                       --properties cost,p95 [--modes min,min]
+    python -m repro.core.api record-trace spec.json --out trace.jsonl \
+                                          [--n 50] [--seed 0]
 
 ``run`` executes the spec end to end over the given store (a fresh
 in-memory store when omitted — fine for self-contained smoke specs, useless
@@ -17,7 +19,11 @@ engine dispatch, fleet, budget, and which catalog spaces transfer would
 warm-start from — without measuring anything.  ``validate`` parses the spec
 (strict: unknown fields and schema-version mismatches fail) and re-emits
 its canonical JSON.  ``catalog`` lists every registered space in a store
-with its measurement counts.
+with its measurement counts.  ``record-trace`` measures N sampled
+configurations through the spec's first experiment/connector and captures
+the actuation trace (phase outcomes, durations, retries, properties) to a
+JSONL file replayable via the ``trace-replay`` factory — pay for a sweep
+once, replay it forever.
 """
 
 from __future__ import annotations
@@ -120,6 +126,27 @@ def _cmd_frontier(args) -> int:
     return 0
 
 
+def _cmd_record_trace(args) -> int:
+    import numpy as np
+
+    from ..connector import record_trace
+
+    spec = _load_spec(args.spec)
+    experiments = [e.build() for e in spec.experiments] \
+        + [c.build() for c in spec.connectors]
+    if not experiments:
+        raise SystemExit("error: spec names no experiments/connectors "
+                         "to record")
+    experiment = experiments[0]
+    rng = np.random.default_rng(args.seed)
+    configs = spec.space.sample_configurations(rng, args.n)
+    header, trials = record_trace(experiment, configs, path=args.out)
+    ok = sum(1 for t in trials if t["properties"] is not None)
+    print(f"recorded {len(trials)} trial(s) from {experiment.identifier} "
+          f"({ok} ok, {len(trials) - ok} failed) -> {args.out}")
+    return 0
+
+
 def main(argv=None) -> int:
     parser = argparse.ArgumentParser(
         prog="python -m repro.core.api",
@@ -165,6 +192,20 @@ def main(argv=None) -> int:
                       help="comma-separated min|max per property "
                            "(default all min)")
     p_fr.set_defaults(fn=_cmd_frontier)
+
+    p_rt = sub.add_parser(
+        "record-trace",
+        help="measure sampled configurations and capture a replayable "
+             "actuation trace")
+    p_rt.add_argument("spec", help="path to the spec JSON (its first "
+                                   "experiment/connector is recorded)")
+    p_rt.add_argument("--out", required=True,
+                      help="trace JSONL output path")
+    p_rt.add_argument("--n", type=int, default=50,
+                      help="distinct configurations to sample (default 50)")
+    p_rt.add_argument("--seed", type=int, default=0,
+                      help="sampling seed (default 0)")
+    p_rt.set_defaults(fn=_cmd_record_trace)
 
     args = parser.parse_args(argv)
     return args.fn(args)

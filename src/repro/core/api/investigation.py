@@ -116,6 +116,9 @@ class InvestigationPlan:
     transfer_enabled: bool
     transfer_candidates: list = field(default_factory=list)
     constraints: list = field(default_factory=list)  # SLA bound descriptions
+    #: prior failed trials already recorded in the space, by lifecycle phase:
+    #: ``{phase: {"count": n, "cost": charged}}`` (legacy rows → "unknown")
+    failures: dict = field(default_factory=dict)
 
     def describe(self) -> str:
         objective = f"{self.mode} {self.metric}"
@@ -134,6 +137,11 @@ class InvestigationPlan:
             f"  sharing   : share_history={self.share_history}, "
             f"warm_start={self.warm_start}",
         ]
+        if self.failures:
+            parts = [f"{phase}={s['count']} (${s['cost']:.4g})"
+                     for phase, s in sorted(self.failures.items())]
+            lines.append(f"  failures  : {sum(s['count'] for s in self.failures.values())}"
+                         f" prior failed trial(s) — {', '.join(parts)}")
         if not self.transfer_enabled:
             lines.append("  transfer  : disabled")
         elif not self.transfer_candidates:
@@ -165,6 +173,10 @@ class InvestigationResult:
     #: ``(member_label, Trial)`` in tell order — the fleet event trace
     events: list = field(default_factory=list)
     transfer: Optional[TransferReport] = None
+    #: failed trials in the space by lifecycle phase, with the provisioned
+    #: cost they still charged: ``{phase: {"count": n, "cost": charged}}``.
+    #: Rows that predate failure provenance surface as phase "unknown".
+    failures: dict = field(default_factory=dict)
 
     @property
     def best(self):
@@ -254,6 +266,10 @@ class InvestigationResult:
             "measured": self.num_measured,
             "paid_measurements": self.paid_measurements,
             "infeasible": self.num_infeasible,
+            "failures": {phase: dict(s)
+                         for phase, s in sorted(self.failures.items())},
+            "failed_cost": sum(s.get("cost", 0.0)
+                               for s in self.failures.values()),
             "best": None if best is None else {
                 "value": best.value,
                 "configuration": best.configuration.as_dict(),
@@ -297,15 +313,16 @@ class Investigation:
                  ds: Optional[DiscoverySpace] = None):
         self.spec = spec
         if ds is None:
-            if not spec.experiments:
+            if not spec.experiments and not spec.connectors:
                 raise ValueError(
                     "spec has no experiments; pass a ready DiscoverySpace "
-                    "or add experiment factories to the spec")
+                    "or add experiment/connector factories to the spec")
             from ..actions import ActionSpace
+            built = [e.build() for e in spec.experiments] \
+                + [c.build() for c in spec.connectors]
             ds = DiscoverySpace(
                 space=spec.space,
-                actions=ActionSpace.make([e.build()
-                                          for e in spec.experiments]),
+                actions=ActionSpace.make(built),
                 store=store if store is not None
                 else open_store(spec.store or ":memory:"))
         self.ds = ds
@@ -427,7 +444,20 @@ class Investigation:
             transfer_enabled=spec.transfer.enabled,
             transfer_candidates=candidates,
             constraints=[] if spec.objective is None else
-            [c.describe() for c in spec.objective.constraints])
+            [c.describe() for c in spec.objective.constraints],
+            failures=self._failure_summary())
+
+    def _failure_summary(self) -> dict:
+        """Per-phase failed-trial counts and charged provisioned cost for
+        this space (``{phase: {"count", "cost"}}``) — best-effort: a store
+        backend without failure provenance just reports nothing."""
+        try:
+            summary = self.ds.store.failure_summary(self.ds.space_id)
+        except Exception:
+            return {}
+        return {str(phase): {"count": int(s["count"]),
+                             "cost": float(s["cost"])}
+                for phase, s in summary.items()}
 
     # ------------------------------------------------------------- execution
 
@@ -507,7 +537,8 @@ class Investigation:
             metric=spec.objective_label(),
             mode=spec.mode, engine=self.engine,
             members=[self._member_result(m) for m in members],
-            events=events, transfer=transfer_report)
+            events=events, transfer=transfer_report,
+            failures=self._failure_summary())
 
     def resume(self) -> InvestigationResult:
         """Continue an investigation whose store already holds history."""

@@ -32,9 +32,12 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Mapping, Optional, Sequence, Tuple
 
 from ..actions import Experiment
+from ..connector.pricing import PricingModel, pricing_from_json
+from ..connector.retry import RetryPolicy
 from ..space import ProbabilitySpace
 
-__all__ = ["SCHEMA_VERSION", "ExperimentSpec", "OptimizerSpec",
+__all__ = ["SCHEMA_VERSION", "ExperimentSpec", "ConnectorSpec",
+           "OptimizerSpec",
            "ExecutionSpec", "BudgetSpec", "TransferSpec", "ConstraintSpec",
            "ObjectiveSpec", "InvestigationSpec",
            "register_experiment", "resolve_experiment_factory",
@@ -126,6 +129,89 @@ class ExperimentSpec:
             raise ValueError("experiment: 'factory' is required")
         return ExperimentSpec(factory=str(d["factory"]),
                               params=dict(d.get("params", {})))
+
+
+#: Allowed keys of a connector spec's nested ``retry`` / ``pricing`` blocks
+#: (strict like everything else in the document: a typo'd retry knob must
+#: never silently leave a paid search un-retried).
+_RETRY_FIELDS = ("provision_attempts", "run_attempts", "backoff_s",
+                 "backoff_factor", "max_backoff_s", "jitter")
+_PRICING_FIELDS = ("kind", "rate_per_s", "dimension", "rates", "default")
+
+
+@dataclass(frozen=True)
+class ConnectorSpec:
+    """One action-space entry measured through the actuation lifecycle.
+
+    The factory returns an
+    :class:`~repro.core.connector.base.ExperimentConnector`, which is wrapped
+    in a :class:`~repro.core.connector.lifecycle.LifecycleExperiment` with
+    this entry's :class:`~repro.core.connector.retry.RetryPolicy` and
+    :class:`~repro.core.connector.pricing.PricingModel`.  A factory may also
+    return a ready :class:`~repro.core.actions.Experiment` (e.g. the
+    ``trace-replay`` built-in, which already wraps itself) — then ``retry`` /
+    ``pricing`` / ``virtual_clock`` must be unset here, because they would be
+    silently ignored.
+
+    ``virtual_clock=True`` drives the whole lifecycle — backoff sleeps and
+    the connector itself, when it exposes a ``clock`` attribute — on a fresh
+    :class:`~repro.core.clock.FakeClock`: zero real sleeps, virtual billing.
+    That is the trace-replay default posture; live connectors keep real time.
+    """
+
+    factory: str
+    params: dict = field(default_factory=dict)
+    retry: Optional[RetryPolicy] = None
+    pricing: Optional[PricingModel] = None
+    virtual_clock: bool = False
+
+    def build(self) -> Experiment:
+        from ..clock import SYSTEM_CLOCK, FakeClock
+        from ..connector import ExperimentConnector, LifecycleExperiment
+        obj = resolve_experiment_factory(self.factory)(**self.params)
+        if isinstance(obj, ExperimentConnector):
+            clock = FakeClock() if self.virtual_clock else SYSTEM_CLOCK
+            if self.virtual_clock and hasattr(obj, "clock"):
+                obj.clock = clock  # replay sleeps on the same virtual time
+            return LifecycleExperiment(obj, retry=self.retry,
+                                       pricing=self.pricing, clock=clock)
+        if isinstance(obj, Experiment):
+            if (self.retry is not None or self.pricing is not None
+                    or self.virtual_clock):
+                raise ValueError(
+                    f"connector factory {self.factory!r} returned a ready "
+                    f"Experiment; retry/pricing/virtual_clock would be "
+                    f"ignored — configure them through the factory's params")
+            return obj
+        raise TypeError(
+            f"connector factory {self.factory!r} returned "
+            f"{type(obj).__name__}, not an ExperimentConnector or Experiment")
+
+    def to_json(self) -> dict:
+        return {"factory": self.factory, "params": dict(self.params),
+                "retry": None if self.retry is None else self.retry.to_json(),
+                "pricing": None if self.pricing is None
+                else self.pricing.to_json(),
+                "virtual_clock": self.virtual_clock}
+
+    @staticmethod
+    def from_json(d: Mapping) -> "ConnectorSpec":
+        _reject_unknown(d, ("factory", "params", "retry", "pricing",
+                            "virtual_clock"), "connector")
+        if "factory" not in d:
+            raise ValueError("connector: 'factory' is required")
+        retry = d.get("retry")
+        if retry is not None:
+            _reject_unknown(retry, _RETRY_FIELDS, "connector.retry")
+        pricing = d.get("pricing")
+        if pricing is not None:
+            _reject_unknown(pricing, _PRICING_FIELDS, "connector.pricing")
+        return ConnectorSpec(
+            factory=str(d["factory"]),
+            params=dict(d.get("params", {})),
+            retry=None if retry is None else RetryPolicy.from_json(retry),
+            pricing=None if pricing is None else pricing_from_json(pricing),
+            virtual_clock=bool(d.get("virtual_clock", False)))
 
 
 @dataclass(frozen=True)
@@ -497,6 +583,7 @@ class InvestigationSpec:
     space: ProbabilitySpace
     metric: str = ""
     experiments: tuple = ()
+    connectors: tuple = ()
     mode: str = "min"
     optimizers: tuple = (OptimizerSpec("random"),)
     execution: ExecutionSpec = ExecutionSpec()
@@ -538,6 +625,7 @@ class InvestigationSpec:
             "name": self.name,
             "space": self.space.to_json(),
             "experiments": [e.to_json() for e in self.experiments],
+            "connectors": [c.to_json() for c in self.connectors],
             "metric": self.metric,
             "mode": self.mode,
             "optimizers": [o.to_json() for o in self.optimizers],
@@ -554,9 +642,10 @@ class InvestigationSpec:
     @staticmethod
     def from_json(d: Mapping) -> "InvestigationSpec":
         _reject_unknown(d, ("schema_version", "name", "space", "experiments",
-                            "metric", "mode", "optimizers", "execution",
-                            "budget", "transfer", "share_history",
-                            "warm_start", "store", "objective"),
+                            "connectors", "metric", "mode", "optimizers",
+                            "execution", "budget", "transfer",
+                            "share_history", "warm_start", "store",
+                            "objective"),
                         "investigation")
         version = d.get("schema_version", SCHEMA_VERSION)
         if version != SCHEMA_VERSION:
@@ -572,6 +661,8 @@ class InvestigationSpec:
             metric=str(d.get("metric", "")),
             experiments=tuple(ExperimentSpec.from_json(e)
                               for e in d.get("experiments", ())),
+            connectors=tuple(ConnectorSpec.from_json(c)
+                             for c in d.get("connectors", ())),
             mode=str(d.get("mode", "min")),
             optimizers=tuple(OptimizerSpec.from_json(o)
                              for o in d.get("optimizers",

@@ -16,13 +16,16 @@ exists for.
 
 from __future__ import annotations
 
+from typing import Mapping
+
 import numpy as np
 
 from ..actions import Experiment, FunctionExperiment
 from ..entities import Configuration, content_hash
 from .spec import register_experiment, resolve_experiment_factory
 
-__all__ = ["quad", "cloud_deploy", "cloud_sla", "linear_shift"]
+__all__ = ["quad", "cloud_deploy", "cloud_sla", "linear_shift",
+           "trace_replay"]
 
 
 def quad(x_dim: str = "x", y_dim: str = "y", prop: str = "loss") -> Experiment:
@@ -126,7 +129,42 @@ def linear_shift(base: str, scale: float = 1.2, offset: float = 10.0,
                 "base_params": sorted(base_params.items())})
 
 
+def trace_replay(path: str, retry=None, pricing=None,
+                 virtual_clock: bool = True) -> Experiment:
+    """Replay a recorded actuation trace (see
+    :mod:`repro.core.connector.trace`) as a live experiment: every recorded
+    provisioning failure, retry sequence, duration, and parsed property is
+    re-enacted — zero cloud spend.
+
+    ``retry``/``pricing`` accept JSON blocks (spec-friendly) or constructed
+    policy/model objects; when omitted they default to the blocks the trace
+    was *captured* under (from its header), so a bare
+    ``{"factory": "trace-replay", "params": {"path": ...}}`` reproduces the
+    recording's behavior — including its charged costs.  ``virtual_clock``
+    (the default) replays on a fresh :class:`~repro.core.clock.FakeClock`,
+    advancing virtual time instead of sleeping; pass False to re-enact the
+    recording in real time.
+    """
+    from ..clock import SYSTEM_CLOCK, FakeClock
+    from ..connector import (LifecycleExperiment, RetryPolicy, TraceConnector,
+                             pricing_from_json)
+    clock = FakeClock() if virtual_clock else SYSTEM_CLOCK
+    connector = TraceConnector(path, clock=clock)
+    header = connector.header
+    if retry is None:
+        retry = header.get("retry")
+    if isinstance(retry, Mapping):
+        retry = RetryPolicy.from_json(retry)
+    if pricing is None:
+        pricing = header.get("pricing")
+    if isinstance(pricing, Mapping):
+        pricing = pricing_from_json(pricing)
+    return LifecycleExperiment(connector, retry=retry, pricing=pricing,
+                               clock=clock)
+
+
 register_experiment("quad", quad)
 register_experiment("cloud-deploy", cloud_deploy)
 register_experiment("cloud-sla", cloud_sla)
 register_experiment("linear-shift", linear_shift)
+register_experiment("trace-replay", trace_replay)

@@ -1,0 +1,50 @@
+"""Phased actuation lifecycle for cloud experiments (ROADMAP: actuation layer).
+
+The paper's experiments are cloud actuations — provision resources, run a
+benchmark, parse metrics, tear down — but a bare
+:class:`~repro.core.actions.Experiment` is a single opaque ``measure()``
+call, so provisioning failures, retries, and provisioned-but-unmeasured cost
+are invisible to the store and the optimizers.  This package splits the
+lifecycle into phases and adapts it back onto the standard experiment
+interface, so ``DiscoverySpace.sample`` and all four execution backends work
+unchanged:
+
+* :class:`~repro.core.connector.base.ExperimentConnector` — the four-phase
+  interface: ``provision(config) -> Deployment``, ``run(deployment) -> raw``,
+  ``parse(raw) -> {prop: value}``, ``teardown(deployment)``.
+* :class:`~repro.core.connector.lifecycle.LifecycleExperiment` — adapts any
+  connector into an :class:`Experiment`, driving the phases under a
+  :class:`~repro.core.connector.retry.RetryPolicy` (per-phase attempts,
+  exponential backoff with deterministic jitter on the injectable ``Clock``,
+  idempotent teardown always attempted) and a
+  :class:`~repro.core.connector.pricing.PricingModel` that charges
+  per-second provisioned cost to every trial *including failed ones*.
+* :class:`~repro.core.connector.trace.TraceConnector` — replays captured
+  ``(config -> phase outcomes, metrics, durations)`` JSONL traces, including
+  recorded provisioning failures and retry sequences, so CI and benches
+  exercise the full actuation path with zero cloud spend and zero wall-clock
+  sleeps (``FakeClock``).
+
+Failure taxonomy (from :mod:`repro.core.actions`):
+:class:`~repro.core.actions.ProvisioningError` is the *infrastructure's*
+fault and retryable; :class:`~repro.core.actions.MeasurementError` is the
+*configuration's* fault and terminal.  Exhausted retries surface as a
+``MeasurementError`` carrying a :class:`~repro.core.actions.FailureRecord`
+(phase, reason, attempts, cost) that the execution layer persists through
+``StoreBackend.record_failure``.
+"""
+
+from __future__ import annotations
+
+from .base import Deployment, ExperimentConnector
+from .lifecycle import PROVISIONED_COST, LifecycleExperiment
+from .pricing import DimensionPricing, FlatPricing, PricingModel, pricing_from_json
+from .retry import RetryPolicy
+from .trace import TraceConnector, load_trace, record_trace, write_trace
+
+__all__ = [
+    "Deployment", "ExperimentConnector", "LifecycleExperiment",
+    "PROVISIONED_COST", "RetryPolicy", "PricingModel", "FlatPricing",
+    "DimensionPricing", "pricing_from_json", "TraceConnector",
+    "load_trace", "record_trace", "write_trace",
+]

@@ -1,0 +1,85 @@
+"""Provider pricing models: per-second provisioned cost, failed trials too.
+
+Scout and Lynceus both charge the *provisioned* cost of failed and
+timed-out trials, not just successful ones — otherwise a search that
+provisions expensive instances which fail to benchmark looks free.  The
+lifecycle bills every provisioned second (provision start through teardown,
+across all retry attempts) through one of these models.
+"""
+
+from __future__ import annotations
+
+import abc
+from dataclasses import dataclass
+from typing import Any, Mapping
+
+from ..entities import Configuration
+
+__all__ = ["PricingModel", "FlatPricing", "DimensionPricing", "pricing_from_json"]
+
+
+class PricingModel(abc.ABC):
+    """Maps a configuration to a provisioned-cost rate ($/second)."""
+
+    @abc.abstractmethod
+    def rate(self, configuration: Configuration) -> float:
+        """Cost per provisioned second for this configuration."""
+
+    def cost(self, configuration: Configuration, seconds: float) -> float:
+        return self.rate(configuration) * max(0.0, float(seconds))
+
+    @abc.abstractmethod
+    def to_json(self) -> dict:
+        """Strict-round-trippable JSON form (``kind`` selects the class)."""
+
+
+@dataclass(frozen=True)
+class FlatPricing(PricingModel):
+    """One rate for every configuration."""
+
+    rate_per_s: float = 0.0
+
+    def rate(self, configuration: Configuration) -> float:
+        return self.rate_per_s
+
+    def to_json(self) -> dict:
+        return {"kind": "flat", "rate_per_s": self.rate_per_s}
+
+
+@dataclass(frozen=True)
+class DimensionPricing(PricingModel):
+    """Rate keyed on one dimension's value (e.g. the instance type).
+
+    ``rates`` is a tuple of ``(value, rate)`` pairs (tuple, not dict, so the
+    model is hashable and its JSON form is order-stable); unknown values fall
+    back to ``default``.
+    """
+
+    dimension: str = "instance"
+    rates: tuple = ()
+    default: float = 0.0
+
+    def rate(self, configuration: Configuration) -> float:
+        value = configuration.get(self.dimension)
+        for v, r in self.rates:
+            if v == value:
+                return float(r)
+        return self.default
+
+    def to_json(self) -> dict:
+        return {"kind": "dimension", "dimension": self.dimension,
+                "rates": {str(v): r for v, r in self.rates},
+                "default": self.default}
+
+
+def pricing_from_json(d: Mapping[str, Any]) -> PricingModel:
+    kind = d.get("kind")
+    if kind == "flat":
+        return FlatPricing(rate_per_s=float(d.get("rate_per_s", 0.0)))
+    if kind == "dimension":
+        rates = tuple(sorted((str(k), float(v))
+                             for k, v in dict(d.get("rates", {})).items()))
+        return DimensionPricing(dimension=str(d.get("dimension", "instance")),
+                                rates=rates,
+                                default=float(d.get("default", 0.0)))
+    raise ValueError(f"unknown pricing kind {kind!r} (expected flat|dimension)")

@@ -1,0 +1,69 @@
+"""Per-phase retry policy with deterministic backoff jitter."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Mapping
+
+from ..entities import content_hash
+
+__all__ = ["RetryPolicy"]
+
+
+@dataclass(frozen=True)
+class RetryPolicy:
+    """How the lifecycle retries infrastructure faults.
+
+    Only :class:`~repro.core.actions.ProvisioningError` is retried —
+    ``provision`` up to ``provision_attempts`` total tries (each on fresh
+    infrastructure), ``run`` up to ``run_attempts`` on the same deployment.
+    Backoff is exponential (``backoff_s * backoff_factor**(attempt-1)``,
+    capped at ``max_backoff_s``) and slept on the *injected* clock, so a
+    ``FakeClock`` replay performs zero real sleeps.
+
+    Jitter is deterministic: keyed on the content hash of
+    ``(key, attempt)`` rather than a live RNG, so a recorded retry sequence
+    replays with identical delays — and identical charged costs — every time.
+    """
+
+    provision_attempts: int = 3
+    run_attempts: int = 1
+    backoff_s: float = 1.0
+    backoff_factor: float = 2.0
+    max_backoff_s: float = 60.0
+    jitter: float = 0.1
+
+    def __post_init__(self):
+        if self.provision_attempts < 1 or self.run_attempts < 1:
+            raise ValueError("retry policy needs at least one attempt per phase")
+        if self.backoff_s < 0 or self.backoff_factor < 1 or not (0 <= self.jitter <= 1):
+            raise ValueError(
+                f"bad retry policy: backoff_s={self.backoff_s}, "
+                f"backoff_factor={self.backoff_factor}, jitter={self.jitter}")
+
+    def delay(self, attempt: int, key: str = "") -> float:
+        """Backoff before attempt ``attempt + 1`` (deterministic in ``key``)."""
+        base = min(self.max_backoff_s,
+                   self.backoff_s * self.backoff_factor ** max(0, attempt - 1))
+        if not self.jitter or not base:
+            return base
+        h = int(content_hash([key, attempt])[:8], 16) / 0xFFFFFFFF
+        return base * (1.0 + self.jitter * (2.0 * h - 1.0))
+
+    def to_json(self) -> dict:
+        return {"provision_attempts": self.provision_attempts,
+                "run_attempts": self.run_attempts,
+                "backoff_s": self.backoff_s,
+                "backoff_factor": self.backoff_factor,
+                "max_backoff_s": self.max_backoff_s,
+                "jitter": self.jitter}
+
+    @staticmethod
+    def from_json(d: Mapping[str, Any]) -> "RetryPolicy":
+        return RetryPolicy(
+            provision_attempts=int(d.get("provision_attempts", 3)),
+            run_attempts=int(d.get("run_attempts", 1)),
+            backoff_s=float(d.get("backoff_s", 1.0)),
+            backoff_factor=float(d.get("backoff_factor", 2.0)),
+            max_backoff_s=float(d.get("max_backoff_s", 60.0)),
+            jitter=float(d.get("jitter", 0.1)))

@@ -1,0 +1,314 @@
+"""Recorded-trace capture and replay for the actuation lifecycle.
+
+A *trace* is a JSONL file: one header line (experiment identity, property
+names, and the retry/pricing blocks it was captured under) followed by one
+line per trial holding the configuration, the ordered phase attempts
+(``{"phase", "ok", "s", "reason"?}``), and the parsed properties (or null
+for a failed trial).  :func:`record_trace` captures one from any existing
+experiment — phase-accurate when the experiment is a
+:class:`~repro.core.connector.lifecycle.LifecycleExperiment`, synthesized
+(free provision, timed run) for monolithic ones.  :class:`TraceConnector`
+replays it: every recorded phase outcome, provisioning failure, retry
+sequence, and duration is re-enacted by sleeping on the *injected* clock, so
+a ``FakeClock`` replay advances virtual time (making billed costs
+byte-identical to the recording) while performing zero real sleeps and zero
+cloud spend.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, List, Mapping, Optional, Sequence, Tuple, Union
+
+from ..actions import Experiment, MeasurementError, ProvisioningError
+from ..clock import SYSTEM_CLOCK, Clock
+from ..entities import Configuration, canonical_json
+from .base import Deployment, ExperimentConnector
+
+__all__ = ["TraceConnector", "record_trace", "write_trace", "load_trace",
+           "TRACE_FORMAT"]
+
+TRACE_FORMAT = "actuation-v1"
+
+
+# ---------------------------------------------------------------------------
+# Trace I/O
+# ---------------------------------------------------------------------------
+
+
+def write_trace(path: str, header: Mapping[str, Any],
+                trials: Sequence[Mapping[str, Any]]) -> None:
+    """Write a trace file atomically (tmp + rename)."""
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "w", encoding="utf-8") as f:
+        f.write(canonical_json(dict(header)) + "\n")
+        for t in trials:
+            f.write(canonical_json(dict(t)) + "\n")
+    os.replace(tmp, path)
+
+
+def load_trace(path: str) -> Tuple[dict, List[dict]]:
+    """Load a trace file: ``(header, trials)``."""
+    with open(path, "r", encoding="utf-8") as f:
+        lines = [ln for ln in (ln.strip() for ln in f) if ln]
+    if not lines:
+        raise ValueError(f"empty trace file {path!r}")
+    header = json.loads(lines[0])
+    if header.get("trace") != TRACE_FORMAT:
+        raise ValueError(
+            f"{path!r} is not an actuation trace "
+            f"(trace={header.get('trace')!r}, expected {TRACE_FORMAT!r})")
+    return header, [json.loads(ln) for ln in lines[1:]]
+
+
+# ---------------------------------------------------------------------------
+# Replay
+# ---------------------------------------------------------------------------
+
+
+class TraceConnector(ExperimentConnector):
+    """Replay a captured trace as a live connector.
+
+    Identity (name/version/params) comes from the trace header, so a replay
+    reconciles with the original experiment's stored provenance — the same
+    surface, measured from a recording instead of the cloud.
+
+    Each trial's recorded attempt sequence is consumed event-by-event:
+    ``provision`` calls consume recorded provision outcomes (raising
+    :class:`ProvisioningError` for recorded infrastructure failures after
+    sleeping the recorded duration on the injected clock), ``run``/``parse``/
+    ``teardown`` likewise.  After a trial completes (teardown) its cursor
+    resets, so re-measuring a digest replays identically.  If a replay
+    policy allows more provision attempts than were recorded for a failing
+    trial, the last recorded failure repeats (zero extra virtual time) so
+    the trial still converges to the recorded outcome.
+    """
+
+    def __init__(self, trace: Union[str, Tuple[Mapping[str, Any], Sequence[Mapping[str, Any]]]],
+                 clock: Clock = SYSTEM_CLOCK):
+        if isinstance(trace, (str, os.PathLike)):
+            header, trials = load_trace(os.fspath(trace))
+        else:
+            header, trials = trace
+        self._header = dict(header)
+        self.name = str(self._header.get("name", "trace-replay"))
+        self.version = str(self._header.get("version", "1"))
+        self._params = dict(self._header.get("params", {}))
+        self._props = tuple(self._header.get("properties", ()))
+        self.clock = clock
+        self._trials = {}
+        for t in trials:
+            digest = t.get("digest") or Configuration.make(t["config"]).digest
+            self._trials[digest] = dict(t)
+        self._cursor = {d: 0 for d in self._trials}
+
+    @property
+    def header(self) -> dict:
+        return dict(self._header)
+
+    @property
+    def parameterization(self) -> Mapping[str, Any]:
+        return self._params
+
+    @property
+    def observed_properties(self) -> Sequence[str]:
+        return self._props
+
+    def __len__(self) -> int:
+        return len(self._trials)
+
+    # -- event cursor --------------------------------------------------------
+
+    def _trial(self, digest: str) -> dict:
+        try:
+            return self._trials[digest]
+        except KeyError:
+            raise MeasurementError(
+                f"configuration {digest} is not in the recorded trace "
+                f"({len(self._trials)} trials)") from None
+
+    def _next(self, digest: str, phase: str) -> Optional[dict]:
+        """Consume the next recorded event if it matches ``phase``.
+
+        Returns None when the recording has no (more) events for this phase —
+        the caller decides whether that is benign (optional teardown event)
+        or should repeat the last recorded outcome (exhausted provisions).
+        """
+        attempts = self._trial(digest).get("attempts", [])
+        i = self._cursor.get(digest, 0)
+        if i < len(attempts) and attempts[i].get("phase") == phase:
+            self._cursor[digest] = i + 1
+            return attempts[i]
+        return None
+
+    # -- phases ---------------------------------------------------------------
+
+    def provision(self, configuration: Configuration) -> Deployment:
+        digest = configuration.digest
+        trial = self._trial(digest)
+        ev = self._next(digest, "provision")
+        if ev is None:
+            # recording exhausted: repeat the last provision outcome
+            evs = [a for a in trial.get("attempts", []) if a.get("phase") == "provision"]
+            if not evs:
+                raise MeasurementError(
+                    f"trace trial {digest} has no recorded provision events")
+            last = evs[-1]
+            if last.get("ok"):
+                return Deployment(ident=f"trace-{digest[:12]}",
+                                  configuration=configuration,
+                                  created_at=self.clock.time(), handle=digest)
+            raise ProvisioningError(str(last.get("reason", "recorded provisioning failure")))
+        self.clock.sleep(float(ev.get("s", 0.0)))
+        if not ev.get("ok"):
+            raise ProvisioningError(str(ev.get("reason", "recorded provisioning failure")))
+        return Deployment(ident=f"trace-{digest[:12]}", configuration=configuration,
+                          created_at=self.clock.time(), handle=digest)
+
+    def run(self, deployment: Deployment) -> Any:
+        digest = deployment.handle
+        trial = self._trial(digest)
+        ev = self._next(digest, "run")
+        if ev is not None:
+            self.clock.sleep(float(ev.get("s", 0.0)))
+            if not ev.get("ok"):
+                if ev.get("retryable"):
+                    raise ProvisioningError(str(ev.get("reason", "recorded run flake")))
+                raise MeasurementError(str(ev.get("reason", "recorded run failure")))
+        return digest
+
+    def parse(self, raw: Any) -> Mapping[str, float]:
+        digest = raw
+        trial = self._trial(digest)
+        ev = self._next(digest, "parse")
+        if ev is not None:
+            self.clock.sleep(float(ev.get("s", 0.0)))
+            if not ev.get("ok"):
+                raise MeasurementError(str(ev.get("reason", "recorded parse failure")))
+        props = trial.get("properties")
+        if props is None:
+            raise MeasurementError(f"trace trial {digest} recorded no properties")
+        return {str(k): float(v) for k, v in props.items()}
+
+    def teardown(self, deployment: Deployment) -> None:
+        digest = deployment.handle
+        ev = self._next(digest, "teardown")
+        if ev is not None:
+            self.clock.sleep(float(ev.get("s", 0.0)))
+        # full replay done: reset so a re-measure replays identically
+        self._cursor[digest] = 0
+
+
+# ---------------------------------------------------------------------------
+# Capture
+# ---------------------------------------------------------------------------
+
+
+class _RecordingConnector(ExperimentConnector):
+    """Delegate to a real connector, logging every phase call into a sink."""
+
+    def __init__(self, inner: ExperimentConnector, clock: Clock, sink: list):
+        self.inner = inner
+        self.clock = clock
+        self.sink = sink
+        self.name = inner.name
+        self.version = inner.version
+
+    @property
+    def parameterization(self) -> Mapping[str, Any]:
+        return self.inner.parameterization
+
+    @property
+    def observed_properties(self) -> Sequence[str]:
+        return self.inner.observed_properties
+
+    def _call(self, phase: str, fn, *args):
+        t0 = self.clock.time()
+        try:
+            out = fn(*args)
+        except (ProvisioningError, MeasurementError) as err:
+            ev = {"phase": phase, "ok": False, "s": self.clock.time() - t0,
+                  "reason": str(err)}
+            if phase == "run" and isinstance(err, ProvisioningError):
+                ev["retryable"] = True
+            self.sink.append(ev)
+            raise
+        self.sink.append({"phase": phase, "ok": True, "s": self.clock.time() - t0})
+        return out
+
+    def provision(self, configuration: Configuration) -> Deployment:
+        return self._call("provision", self.inner.provision, configuration)
+
+    def run(self, deployment: Deployment) -> Any:
+        return self._call("run", self.inner.run, deployment)
+
+    def parse(self, raw: Any) -> Mapping[str, float]:
+        return self._call("parse", self.inner.parse, raw)
+
+    def teardown(self, deployment: Deployment) -> None:
+        return self._call("teardown", self.inner.teardown, deployment)
+
+
+def record_trace(experiment: Experiment,
+                 configurations: Sequence[Configuration],
+                 path: Optional[str] = None,
+                 clock: Clock = SYSTEM_CLOCK) -> Tuple[dict, List[dict]]:
+    """Capture a trace by actually measuring ``configurations``.
+
+    Lifecycle experiments are instrumented per-phase (true durations, true
+    retry sequences); monolithic experiments get a synthesized lifecycle
+    (free provision, the whole ``measure()`` as the run phase).  Failed
+    trials (``MeasurementError``) are recorded with their phase outcomes and
+    null properties; crashes propagate.
+    """
+    from .lifecycle import LifecycleExperiment  # local import: cycle
+
+    header = {"trace": TRACE_FORMAT, "name": experiment.name,
+              "version": experiment.version}
+    trials: List[dict] = []
+
+    if isinstance(experiment, LifecycleExperiment):
+        header["params"] = json.loads(canonical_json(dict(experiment.connector.parameterization)))
+        header["properties"] = list(experiment.connector.observed_properties)
+        header["retry"] = experiment.retry.to_json()
+        if experiment.pricing is not None:
+            header["pricing"] = experiment.pricing.to_json()
+        events: list = []
+        probe = LifecycleExperiment(
+            _RecordingConnector(experiment.connector, clock, events),
+            retry=experiment.retry, pricing=experiment.pricing, clock=clock)
+        for c in configurations:
+            del events[:]
+            try:
+                props = dict(probe.measure(c))
+                props.pop("provisioned_cost", None)  # re-billed at replay
+            except MeasurementError:
+                props = None
+            trials.append({"config": c.as_dict(), "digest": c.digest,
+                           "attempts": list(events), "properties": props})
+    else:
+        header["params"] = json.loads(canonical_json(dict(experiment.parameterization)))
+        header["properties"] = list(experiment.observed_properties)
+        for c in configurations:
+            t0 = clock.time()
+            try:
+                props = {k: float(v) for k, v in experiment.measure(c).items()}
+                attempts = [{"phase": "provision", "ok": True, "s": 0.0},
+                            {"phase": "run", "ok": True, "s": clock.time() - t0},
+                            {"phase": "parse", "ok": True, "s": 0.0},
+                            {"phase": "teardown", "ok": True, "s": 0.0}]
+            except MeasurementError as err:
+                props = None
+                rec = getattr(err, "failure", None)
+                phase = rec.phase if rec is not None else "run"
+                attempts = [{"phase": "provision", "ok": True, "s": 0.0}] \
+                    if phase != "provision" else []
+                attempts.append({"phase": phase, "ok": False,
+                                 "s": clock.time() - t0, "reason": str(err)})
+            trials.append({"config": c.as_dict(), "digest": c.digest,
+                           "attempts": attempts, "properties": props})
+
+    if path is not None:
+        write_trace(path, header, trials)
+    return header, trials

@@ -371,6 +371,23 @@ class DiscoverySpace:
     def count_sampled(self) -> int:
         return len(self.store.sampled_digests(self.space_id))
 
+    def failure_summary(self) -> dict:
+        """Failed trials in this space by actuation phase, with the
+        provisioned cost they still charged:
+        ``{phase: {"count": n, "cost": charged}}``.  Failed rows recorded
+        before failure provenance existed surface under phase ``"unknown"``
+        with zero cost (the backfill contract — see
+        :meth:`~repro.core.store.base.StoreBackend.failure_summary`)."""
+        return self.store.failure_summary(self.space_id)
+
+    def failures_for(self, configuration: Configuration) -> list:
+        """Full failure provenance rows recorded for one configuration,
+        restricted to this space's experiments (zombie retries included —
+        the history is honest even where the summary de-duplicates)."""
+        rows = self.store.failures_for(configuration.digest)
+        ids = set(self.actions.identifiers)
+        return [r for r in rows if r.get("experiment_id") in ids]
+
     # ------------------------------------------------------------ derived space
 
     def with_predictor(self, surrogate: SurrogateExperiment) -> "DiscoverySpace":

@@ -27,7 +27,7 @@ import time
 from dataclasses import dataclass, field
 from typing import List, Optional, Sequence
 
-from ..actions import MeasurementError
+from ..actions import FailureRecord, MeasurementError
 from ..clock import Clock, SYSTEM_CLOCK
 from ..entities import Configuration, PropertyValue
 
@@ -354,6 +354,22 @@ def run_measurement(store, experiments, configuration: Configuration,
                         for k, v in values.items()
                     ],
                 )
+            except MeasurementError as err:
+                # persist structured failure provenance BEFORE releasing the
+                # claim: the lifecycle attaches (phase, reason, attempts,
+                # cost) to the exception, monolithic experiments get a
+                # synthesized "measure" record.  Provenance is best-effort —
+                # a store hiccup here must not turn a failed trial into a
+                # crashed slot (nor mask the claim release below).
+                rec = getattr(err, "failure", None) \
+                    or FailureRecord("measure", str(err))
+                try:
+                    store.record_failure(digest, exp.identifier, rec.phase,
+                                         rec.reason, rec.attempts, rec.cost)
+                except Exception:
+                    pass
+                store.release_claim(digest, exp.identifier)
+                raise
             except BaseException:
                 store.release_claim(digest, exp.identifier)
                 raise

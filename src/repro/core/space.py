@@ -102,6 +102,33 @@ class ProbabilitySpace:
                 values[d.name] = d.values[int(idx)]
         return Configuration.make(values)
 
+    def sample_configurations(self, rng: np.random.Generator,
+                              n: int) -> list:
+        """Up to ``n`` *distinct* configurations drawn according to P.
+
+        A finite space with ``size <= n`` enumerates exhaustively (rng
+        shuffles the order, so the draw is still P-flavored downstream);
+        otherwise rejection-sample digests until ``n`` distinct ones land.
+        Used by trace capture, where re-measuring a digest would only
+        overwrite the same trace trial.
+        """
+        if n < 1:
+            return []
+        if self.finite and self.size <= n:
+            configs = list(self.all_configurations())
+            rng.shuffle(configs)
+            return configs
+        seen: set = set()
+        out: list = []
+        budget = max(1000, 50 * n)  # tiny prior-mass tails must not spin
+        while len(out) < n and budget > 0:
+            budget -= 1
+            c = self.sample_configuration(rng)
+            if c.digest not in seen:
+                seen.add(c.digest)
+                out.append(c)
+        return out
+
     # -- vector encoding for optimizers ---------------------------------------
 
     def encode(self, config: Configuration) -> np.ndarray:

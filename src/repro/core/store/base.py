@@ -248,6 +248,42 @@ class StoreBackend:
     def count_measured(self, space_id: Optional[str] = None) -> int:
         raise NotImplementedError
 
+    def record_failure(self, config_digest: str, experiment_id: str,
+                       phase: str, reason: str, attempts: int = 1,
+                       cost: float = 0.0) -> None:
+        """Persist structured provenance for one failed trial.
+
+        Keyed on the configuration digest (like property values), not the
+        space: the same non-deployable configuration failing in two related
+        spaces is one fact about the configuration.  ``phase`` names the
+        actuation lifecycle phase that gave up (``provision``/``run``/
+        ``parse``, or ``measure`` for monolithic experiments), ``attempts``
+        counts tries of that phase, and ``cost`` is the provisioned-but-
+        unmeasured spend billed to the trial.  Legacy failed records written
+        before this column existed surface with phase/reason ``"unknown"``
+        from the read side (:meth:`failure_summary`).
+        """
+        raise NotImplementedError
+
+    def failures_for(self, config_digest: str,
+                     experiment_id: Optional[str] = None) -> list:
+        """All failure rows for a digest, oldest first, as plain dicts
+        ``{config_digest, experiment_id, phase, reason, attempts, cost,
+        created_at}``."""
+        raise NotImplementedError
+
+    def failure_summary(self, space_id: str) -> dict:
+        """Per-phase failure accounting for one space's *failed records*:
+        ``{phase: {"count": n, "cost": total}}``.
+
+        Joins the space's ``action='failed'`` record rows against the
+        failure table; failed records with no structured row (written before
+        the failure refactor, or by writers that bypassed
+        ``record_failure``) are backfilled under phase ``"unknown"`` so
+        legacy stores keep summing correctly.
+        """
+        raise NotImplementedError
+
     def close(self) -> None:
         raise NotImplementedError
 

@@ -408,6 +408,21 @@ class ClientStore(StoreBackend):
     def count_measured(self, space_id: Optional[str] = None) -> int:
         return int(self._call("count_measured", space_id))
 
+    def record_failure(self, config_digest: str, experiment_id: str,
+                       phase: str, reason: str, attempts: int = 1,
+                       cost: float = 0.0) -> None:
+        self._call("record_failure", config_digest, experiment_id, phase,
+                   reason, attempts, cost)
+
+    def failures_for(self, config_digest: str,
+                     experiment_id: Optional[str] = None) -> list:
+        return [dict(r) for r in self._call("failures_for", config_digest,
+                                            experiment_id)]
+
+    def failure_summary(self, space_id: str) -> dict:
+        return {phase: dict(stats) for phase, stats
+                in self._call("failure_summary", space_id).items()}
+
     def close(self) -> None:
         self._closed = True
         with self._socks_lock:

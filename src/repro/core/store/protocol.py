@@ -44,6 +44,11 @@ The protocol ships plain data only.  Rich store types cross the wire as:
 * :class:`~repro.core.entities.PropertyValue` — a 5-tuple
   ``(name, value, experiment_id, predicted, timestamp)``.
 * :class:`~repro.core.store.base.RecordEntry` — a 7-tuple in field order.
+* failure provenance (``record_failure`` / ``failures_for`` /
+  ``failure_summary``) — plain maps end to end: a failure row is
+  ``{config_digest, experiment_id, phase, reason, attempts, cost,
+  created_at}`` and a summary is ``{phase: {count, cost}}``; no dataclass
+  crosses the wire, so both codecs pass them through unchanged.
 
 Both codecs lose tuple-ness (msgpack and JSON render tuples as arrays), so
 every decode path rebuilds the dataclasses explicitly — never trust

@@ -158,6 +158,11 @@ class StoreServer:
             "has_record": store_do.has_record,
             "sampled_digests": store_do.sampled_digests,
             "count_measured": store_do.count_measured,
+            # failure provenance (actuation lifecycle): rows are plain dicts
+            # already, so they cross the wire unchanged
+            "record_failure": store_do.record_failure,
+            "failures_for": store_do.failures_for,
+            "failure_summary": store_do.failure_summary,
         }
 
     def _get_configuration(self, digest: str):

@@ -150,6 +150,17 @@ CREATE TABLE IF NOT EXISTS work_items (
     finished_at      REAL,
     lease_expires_at REAL NOT NULL DEFAULT 0
 );
+CREATE TABLE IF NOT EXISTS failures (
+    id            INTEGER PRIMARY KEY AUTOINCREMENT,
+    config_digest TEXT NOT NULL,
+    experiment_id TEXT NOT NULL,
+    phase         TEXT NOT NULL,
+    reason        TEXT NOT NULL,
+    attempts      INTEGER NOT NULL DEFAULT 1,
+    cost          REAL NOT NULL DEFAULT 0,
+    created_at    REAL NOT NULL
+);
+CREATE INDEX IF NOT EXISTS fail_digest ON failures(config_digest, experiment_id);
 """
 
 # Indexes over MIGRATED columns: must be created after _migrate() has run,
@@ -1049,6 +1060,61 @@ class SampleStore(StoreBackend):
                "{} GROUP BY config_digest ORDER BY MIN(id)")
         sql = sql.format("" if include_failed else " AND action != 'failed'")
         return [r[0] for r in self._rows(sql, (space_id,))]
+
+    # -- failure provenance (actuation lifecycle) ---------------------------------------
+
+    def record_failure(self, config_digest: str, experiment_id: str,
+                       phase: str, reason: str, attempts: int = 1,
+                       cost: float = 0.0) -> None:
+        """Persist one failed trial's structured provenance (see the base
+        interface).  Keyed on the digest like property values — the failure
+        is a fact about the configuration, shared across spaces."""
+        self._write(
+            "INSERT INTO failures"
+            "(config_digest, experiment_id, phase, reason, attempts, cost, created_at)"
+            " VALUES (?,?,?,?,?,?,?)",
+            (config_digest, experiment_id, phase, reason, int(attempts),
+             float(cost), self.clock.time()),
+        )
+
+    def failures_for(self, config_digest: str,
+                     experiment_id: Optional[str] = None) -> list:
+        sql = ("SELECT config_digest, experiment_id, phase, reason, attempts,"
+               " cost, created_at FROM failures WHERE config_digest=?")
+        params: list = [config_digest]
+        if experiment_id is not None:
+            sql += " AND experiment_id=?"
+            params.append(experiment_id)
+        sql += " ORDER BY id"
+        return [
+            {"config_digest": r[0], "experiment_id": r[1], "phase": r[2],
+             "reason": r[3], "attempts": int(r[4]), "cost": float(r[5]),
+             "created_at": r[6]}
+            for r in self._rows(sql, params)
+        ]
+
+    def failure_summary(self, space_id: str) -> dict:
+        """Per-phase failure accounting over the space's failed records.
+
+        A LEFT JOIN against the failure table backfills legacy failed
+        records — rows written before structured failure provenance existed
+        have no failures row, and surface under phase ``"unknown"`` with
+        zero cost.  One failed record joins its digest's LATEST failure row
+        (not every retry of every operation), so a digest that failed once
+        contributes once per failed record.
+        """
+        rows = self._rows(
+            "SELECT COALESCE(f.phase, 'unknown'), COUNT(*),"
+            " COALESCE(SUM(f.cost), 0)"
+            " FROM records r LEFT JOIN failures f ON f.id ="
+            "  (SELECT MAX(f2.id) FROM failures f2"
+            "   WHERE f2.config_digest = r.config_digest)"
+            " WHERE r.space_id=? AND r.action='failed'"
+            " GROUP BY COALESCE(f.phase, 'unknown')",
+            (space_id,),
+        )
+        return {r[0]: {"count": int(r[1]), "cost": float(r[2] or 0.0)}
+                for r in rows}
 
     # -- statistics --------------------------------------------------------------------
 

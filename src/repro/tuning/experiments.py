@@ -1,11 +1,22 @@
 """Action-space experiments over deployment configurations.
 
-* :class:`DryrunRooflineExperiment` — deploy = ``jit(step).lower().compile()``
-  on the production mesh; measure = trip-corrected roofline terms from the
-  compiled artifact (the honest measurement available on this CPU-only
-  container; identical interface to a wall-clock experiment on real TPUs).
-  Non-compiling or over-HBM configurations raise :class:`MeasurementError`
-  — the paper's "non-deployable points".
+Both experiments are phased through the actuation lifecycle
+(:mod:`repro.core.connector`): *provision* is the deployment step (building
+the model and compiling the jitted step on the production mesh), *run* is
+the measurement proper (roofline analysis of the compiled artifact / the
+timed step), *parse* shapes the properties, *teardown* is free (compiled
+artifacts are process-local and garbage-collected).  The public classes are
+compatibility shims — :class:`~repro.core.connector.LifecycleExperiment`
+subclasses with the historical constructor signatures and identities — so
+stored provenance reconciles and optimizer trajectories stay draw-for-draw
+with the monolithic originals.
+
+* :class:`DryrunRooflineExperiment` — provision = ``jit(step).lower()
+  .compile()`` on the production mesh; run = trip-corrected roofline terms
+  from the compiled artifact (the honest measurement available on this
+  CPU-only container; identical interface to a wall-clock experiment on real
+  TPUs).  Non-compiling or over-HBM configurations raise
+  :class:`MeasurementError` — the paper's "non-deployable points".
 * :class:`WalltimeExperiment` — real wall-clock timing of a reduced-config
   step on the local device (used by the optimizer benchmarks so that the
   paper-validation spaces contain genuinely *measured* data).
@@ -21,14 +32,20 @@ from __future__ import annotations
 import time
 from typing import Any, Mapping, Optional, Sequence
 
-from ..core.actions import Experiment, MeasurementError
+from ..core.actions import MeasurementError
+from ..core.clock import SYSTEM_CLOCK, Clock
+from ..core.connector import (Deployment, ExperimentConnector,
+                              LifecycleExperiment, PricingModel, RetryPolicy)
 from ..core.entities import Configuration
 from ..roofline.hw import HWSpec, HW_V5E
 
-__all__ = ["DryrunRooflineExperiment", "WalltimeExperiment"]
+__all__ = ["DryrunRooflineExperiment", "WalltimeExperiment",
+           "DryrunRooflineConnector", "WalltimeConnector"]
 
 
-class DryrunRooflineExperiment(Experiment):
+class DryrunRooflineConnector(ExperimentConnector):
+    """Phased dry-run roofline measurement (see module docstring)."""
+
     name = "dryrun-roofline"
     version = "1"
 
@@ -52,11 +69,13 @@ class DryrunRooflineExperiment(Experiment):
                 "roofline_fraction", "hlo_flops", "bytes_per_device",
                 "compile_s")
 
-    def measure(self, configuration: Configuration) -> Mapping[str, float]:
+    def provision(self, configuration: Configuration) -> Deployment:
+        """Deploy: translate the configuration and compile on the mesh.  A
+        non-compiling configuration is the configuration's fault, not the
+        infrastructure's — terminal :class:`MeasurementError`, no retry."""
         # imports deferred: this experiment requires the dry-run device env
         from ..configs import SHAPES, get_config
-        from ..launch.dryrun import lower_cell, model_flops_for
-        from ..roofline.analysis import analyze_compiled
+        from ..launch.dryrun import lower_cell
         from .deployment import deployment_from_configuration
 
         cfg = get_config(self.arch)
@@ -73,18 +92,51 @@ class DryrunRooflineExperiment(Experiment):
         except Exception as e:
             raise MeasurementError(f"non-deployable: {type(e).__name__}: {e}")
         compile_s = time.time() - t0
+        return Deployment(
+            ident=f"dryrun-{configuration.digest[:12]}",
+            configuration=configuration, created_at=t0,
+            handle=compiled, meta={"compile_s": compile_s, "cfg": cfg,
+                                   "shape": shape})
+
+    def run(self, deployment: Deployment) -> Any:
+        from ..launch.dryrun import model_flops_for
+        from ..roofline.analysis import analyze_compiled
+
+        cfg = deployment.meta["cfg"]
+        shape = deployment.meta["shape"]
         chips = self.mesh.devices.size
         groups = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
         report = analyze_compiled(
-            compiled, self.arch, self.shape_name,
+            deployment.handle, self.arch, self.shape_name,
             "x".join(map(str, self.mesh.devices.shape)), chips, groups,
             model_flops=model_flops_for(cfg, shape), hw=self.hw)
+        return report, deployment.meta["compile_s"]
+
+    def parse(self, raw: Any) -> Mapping[str, float]:
+        report, compile_s = raw
         if (self.hbm_limit is not None and report.bytes_per_device is not None
                 and report.bytes_per_device > self.hbm_limit):
             raise MeasurementError(
                 f"over HBM: {report.bytes_per_device / 1e9:.1f} GB "
                 f"> {self.hbm_limit / 1e9:.1f} GB")
-        return self._report_properties(report, compile_s)
+        return DryrunRooflineExperiment._report_properties(report, compile_s)
+
+
+class DryrunRooflineExperiment(LifecycleExperiment):
+    """Compatibility shim: :class:`DryrunRooflineConnector` behind the
+    historical constructor/identity (provenance reconciles; see module
+    docstring).  ``retry``/``pricing``/``clock`` are new, optional, and —
+    when left at their defaults — change nothing observable."""
+
+    def __init__(self, arch: str, shape_name: str, mesh, hw: HWSpec = HW_V5E,
+                 hbm_limit: Optional[float] = None,
+                 retry: Optional[RetryPolicy] = None,
+                 pricing: Optional[PricingModel] = None,
+                 clock: Clock = SYSTEM_CLOCK):
+        super().__init__(
+            DryrunRooflineConnector(arch, shape_name, mesh, hw=hw,
+                                    hbm_limit=hbm_limit),
+            retry=retry, pricing=pricing, clock=clock)
 
     @staticmethod
     def _report_properties(report, compile_s: float) -> Mapping[str, float]:
@@ -107,13 +159,9 @@ class DryrunRooflineExperiment(Experiment):
         return out
 
 
-class WalltimeExperiment(Experiment):
-    """Wall-clock step timing of a reduced config on the local device(s).
-
-    The configuration space maps to real compute knobs (batch, seq, chunk
-    sizes, remat) — this produces genuinely measured performance surfaces
-    for the optimizer/RSSC validation benchmarks.
-    """
+class WalltimeConnector(ExperimentConnector):
+    """Phased wall-clock step timing (see module docstring): provision
+    builds + compiles the jitted step, run times it."""
 
     name = "walltime"
     version = "1"
@@ -134,7 +182,7 @@ class WalltimeExperiment(Experiment):
     def observed_properties(self) -> Sequence[str]:
         return ("step_ms", "tokens_per_s")
 
-    def measure(self, configuration: Configuration) -> Mapping[str, float]:
+    def provision(self, configuration: Configuration) -> Deployment:
         import jax
         import numpy as np
 
@@ -169,6 +217,17 @@ class WalltimeExperiment(Experiment):
 
         try:
             step(params, b).block_until_ready()  # compile
+        except Exception as e:
+            raise MeasurementError(f"non-deployable: {e}")
+        return Deployment(
+            ident=f"walltime-{configuration.digest[:12]}",
+            configuration=configuration, created_at=time.time(),
+            handle=(step, params, b),
+            meta={"batch": batch, "seq": seq})
+
+    def run(self, deployment: Deployment) -> Any:
+        step, params, b = deployment.handle
+        try:
             times = []
             for _ in range(self.repeats):
                 t0 = time.perf_counter()
@@ -176,6 +235,25 @@ class WalltimeExperiment(Experiment):
                 times.append(time.perf_counter() - t0)
         except Exception as e:
             raise MeasurementError(f"non-deployable: {e}")
-        best = min(times)
+        return min(times), deployment.meta
+
+    def parse(self, raw: Any) -> Mapping[str, float]:
+        best, meta = raw
         return {"step_ms": best * 1e3,
-                "tokens_per_s": batch * seq / best}
+                "tokens_per_s": meta["batch"] * meta["seq"] / best}
+
+
+class WalltimeExperiment(LifecycleExperiment):
+    """Compatibility shim: :class:`WalltimeConnector` behind the historical
+    constructor/identity."""
+
+    def __init__(self, arch: str, repeats: int = 3, compute_dtype="float32",
+                 arch_scale: float = 1.0,
+                 retry: Optional[RetryPolicy] = None,
+                 pricing: Optional[PricingModel] = None,
+                 clock: Clock = SYSTEM_CLOCK):
+        super().__init__(
+            WalltimeConnector(arch, repeats=repeats,
+                              compute_dtype=compute_dtype,
+                              arch_scale=arch_scale),
+            retry=retry, pricing=pricing, clock=clock)

@@ -1,0 +1,106 @@
+"""Module-level connector fixtures for the actuation-lifecycle tests.
+
+Process backends may run under ``spawn`` and the queue worker is a separate
+interpreter, so everything a child needs to import lives here (the
+``_execution_workers`` pattern).  The flaky connector keeps its attempt
+counters in *files* under a state directory derived from the store path, so
+retry/teardown counts are observable across process boundaries.
+"""
+
+import os
+import sys
+
+# Children must resolve `repro` even when launched without PYTHONPATH=src.
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+if _SRC not in sys.path:  # pragma: no cover - depends on launcher env
+    sys.path.insert(0, _SRC)
+
+from repro.core import (ActionSpace, DiscoverySpace, Dimension,
+                        ProbabilitySpace, SampleStore)
+from repro.core.actions import ProvisioningError
+from repro.core.connector import (Deployment, ExperimentConnector,
+                                  FlatPricing, LifecycleExperiment,
+                                  RetryPolicy)
+
+POISON_X = 2   # this coordinate's zone is permanently out of capacity
+FLAKES = 2     # healthy configurations fail provisioning this many times
+RATE_PER_S = 1.0
+
+
+def state_dir_for(store_path):
+    return store_path + ".state"
+
+
+def counter(state_dir, kind, digest):
+    """Read a phase counter written by :class:`FlakyCloudConnector`."""
+    path = os.path.join(state_dir, f"{kind}-{digest}")
+    if not os.path.exists(path):
+        return 0
+    with open(path) as f:
+        return int(f.read().strip() or 0)
+
+
+class FlakyCloudConnector(ExperimentConnector):
+    """A cloud that needs ``FLAKES + 1`` provisioning attempts per healthy
+    configuration and never provisions the poison one.  Counters live on
+    disk so the retry loop (which runs entirely inside one worker's
+    ``measure()`` call) is auditable from the test process."""
+
+    name = "flaky-cloud"
+    version = "1"
+
+    def __init__(self, state_dir):
+        self.state_dir = state_dir
+
+    @property
+    def parameterization(self):
+        return {"flakes": FLAKES}  # state_dir is host detail, not identity
+
+    @property
+    def observed_properties(self):
+        return ("m",)
+
+    def _bump(self, kind, digest):
+        # one digest is claimed by exactly one worker at a time, so the
+        # read-increment-write below never races
+        path = os.path.join(self.state_dir, f"{kind}-{digest}")
+        n = counter(self.state_dir, kind, digest) + 1
+        with open(path, "w") as f:
+            f.write(str(n))
+        return n
+
+    def provision(self, configuration):
+        n = self._bump("provision", configuration.digest)
+        if configuration["x"] == POISON_X:
+            raise ProvisioningError(f"zone outage (attempt {n})")
+        if n <= FLAKES:
+            raise ProvisioningError(f"insufficient capacity (attempt {n})")
+        return Deployment(ident=f"flaky-{configuration.digest[:12]}",
+                          configuration=configuration,
+                          handle=configuration.digest)
+
+    def run(self, deployment):
+        return {"m": float(deployment.configuration["x"]) * 10.0}
+
+    def teardown(self, deployment):
+        self._bump("teardown", deployment.handle)
+
+
+def flaky_experiment(state_dir):
+    return LifecycleExperiment(
+        FlakyCloudConnector(state_dir),
+        retry=RetryPolicy(provision_attempts=FLAKES + 1, backoff_s=0.0,
+                          jitter=0.0),  # zero real sleeps on SYSTEM_CLOCK
+        pricing=FlatPricing(rate_per_s=RATE_PER_S))
+
+
+def build_flaky_ds(store_path):
+    """Worker factory: rebuild the same (Ω, A) from the store path — same
+    space_id, shared state directory derived from the path."""
+    state_dir = state_dir_for(store_path)
+    os.makedirs(state_dir, exist_ok=True)
+    space = ProbabilitySpace.make([Dimension.discrete("x", [0, 1, 2, 3])])
+    return DiscoverySpace(space=space,
+                          actions=ActionSpace.make(
+                              [flaky_experiment(state_dir)]),
+                          store=SampleStore(store_path), claim_timeout_s=5.0)

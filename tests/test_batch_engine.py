@@ -171,13 +171,35 @@ def test_sample_batch_failures_do_not_abort():
     assert [t.action for t in adapter.trials] == ["reused", "failed", "reused", "failed"]
 
 
+def test_non_numeric_property_is_failed_not_crashed():
+    """A non-float-coercible property value is the experiment's measurement
+    going wrong, not an engine bug: it must surface as a structured
+    ``failed`` trial (MeasurementError naming the configuration), never as
+    a bare ValueError/TypeError crash that aborts the whole batch."""
+    def fn(c):
+        if c["x"] == 2:
+            return {"m": "not-a-number"}
+        return {"m": float(c["x"])}
+
+    space = ProbabilitySpace.make([Dimension.discrete("x", [0, 1, 2, 3])])
+    exp = FunctionExperiment(fn=fn, properties=("m",), name="buggy")
+    ds = DiscoverySpace(space=space, actions=ActionSpace.make([exp]))
+    configs = [Configuration.make({"x": v}) for v in (0, 1, 2, 3)]
+    results = ds.sample_batch(configs, operation_id="op", workers=2)
+    assert [r.action for r in results] == \
+        ["measured", "measured", "failed", "measured"]
+    bad = results[2]
+    assert isinstance(bad.error, MeasurementError)
+    assert configs[2].digest in str(bad.error)  # names the culprit
+
+
 def test_crashed_slot_keeps_other_records_and_releases_claim():
     """A non-MeasurementError in one slot (experiment bug) must not lose the
     other slots' sampling records, must release the crashed cell's claim so
     other investigators don't stall, and must re-raise."""
     def fn(c):
         if c["x"] == 2:
-            return {"m": "not-a-number"}  # float() will raise TypeError-ish
+            raise ValueError("experiment bug")  # not a MeasurementError
         return {"m": float(c["x"])}
 
     space = ProbabilitySpace.make([Dimension.discrete("x", [0, 1, 2, 3])])

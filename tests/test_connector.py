@@ -1,0 +1,554 @@
+"""Actuation-lifecycle tests (paper: experiments are *cloud actuations*).
+
+Four guarantees matter:
+
+* **lifecycle semantics** — provision/run/parse/teardown with per-phase
+  retries on the injected clock, idempotent teardown on every exit path,
+  and per-second provisioned billing that charges failed trials too;
+* **failure provenance** — exhausted retries surface as ``MeasurementError``
+  carrying a ``FailureRecord`` (phase, reason, attempts, cost) that the
+  execution layer persists and ``failure_summary`` aggregates (legacy
+  failed records backfill as phase ``"unknown"``; a reaped zombie's stale
+  failure row is never double-counted);
+* **trace replay fidelity** — a recorded trace replayed through the full
+  ``sample → store`` path reproduces the live run byte-for-byte (records,
+  property values including ``provisioned_cost``, failure rows) on both the
+  sqlite and the served store, with zero real sleeps under ``FakeClock``;
+* **backend conformance** — a flaky connector behaves identically through
+  all four execution backends: same retry counts, same teardowns, same
+  billed failures.
+"""
+
+import signal
+import subprocess
+import sys
+import threading
+import time
+
+import pytest
+
+from repro.core import (ActionSpace, Configuration, Dimension, DiscoverySpace,
+                        FunctionExperiment, MeasurementError, ProbabilitySpace,
+                        SampleStore)
+from repro.core.actions import ProvisioningError
+from repro.core.api.spec import ConnectorSpec
+from repro.core.clock import FakeClock
+from repro.core.connector import (Deployment, DimensionPricing,
+                                  ExperimentConnector, FlatPricing,
+                                  LifecycleExperiment, RetryPolicy,
+                                  TraceConnector, load_trace,
+                                  pricing_from_json, record_trace)
+from repro.core.execution.worker import run_worker
+from repro.core.store.client import ClientStore
+
+from _connector_workers import (_SRC, FLAKES, POISON_X, build_flaky_ds,
+                                counter, state_dir_for)
+
+RETRY = RetryPolicy(provision_attempts=3, backoff_s=2.0, backoff_factor=2.0,
+                    jitter=0.0)
+PRICING = FlatPricing(rate_per_s=0.01)
+
+
+class VirtualCloud(ExperimentConnector):
+    """Scripted cloud on a virtual clock: deterministic phase durations,
+    ``x == 1`` flakes once at provisioning, ``x == 2`` never provisions."""
+
+    name = "vcloud"
+    version = "1"
+    PROVISION_S = 5.0
+    RUN_S = 10.0
+
+    def __init__(self, clock):
+        self.clock = clock
+        self._attempts = {}
+
+    @property
+    def parameterization(self):
+        return {"cloud": "virtual"}
+
+    @property
+    def observed_properties(self):
+        return ("lat",)
+
+    def provision(self, configuration):
+        self.clock.sleep(self.PROVISION_S)
+        d = configuration.digest
+        n = self._attempts[d] = self._attempts.get(d, 0) + 1
+        if configuration["x"] == 2:
+            raise ProvisioningError(f"zone outage (attempt {n})")
+        if configuration["x"] == 1 and n == 1:
+            raise ProvisioningError("insufficient capacity")
+        return Deployment(ident=f"v-{d[:8]}", configuration=configuration,
+                          handle=d)
+
+    def run(self, deployment):
+        self.clock.sleep(self.RUN_S)
+        return {"lat": self.RUN_S + deployment.configuration["x"]}
+
+
+def _vclock_experiment():
+    clock = FakeClock()
+    return LifecycleExperiment(VirtualCloud(clock), retry=RETRY,
+                               pricing=PRICING, clock=clock)
+
+
+def _vspace():
+    return ProbabilitySpace.make([Dimension.discrete("x", [0, 1, 2, 3])])
+
+
+def _vconfigs():
+    return [Configuration.make({"x": v}) for v in (0, 1, 2, 3)]
+
+
+# ------------------------------------------------------ lifecycle semantics
+
+
+def test_lifecycle_bills_every_provisioned_second():
+    """Billing covers provision start through teardown across all attempts
+    — backoff waits are not provisioned time and are free."""
+    exp = _vclock_experiment()
+    # clean trial: 5 s provision + 10 s run window, at $0.01/s
+    out = exp.measure(Configuration.make({"x": 0}))
+    assert out == {"lat": 10.0, "provisioned_cost": pytest.approx(0.15)}
+    # one flake: two 5 s provision attempts billed, 2 s backoff free
+    out = exp.measure(Configuration.make({"x": 1}))
+    assert out == {"lat": 11.0, "provisioned_cost": pytest.approx(0.20)}
+
+
+def test_retry_exhaustion_carries_failure_record():
+    """Exhausted provisioning retries fail with phase/attempts/cost
+    provenance — three billed 5 s attempts, backoffs free."""
+    exp = _vclock_experiment()
+    with pytest.raises(MeasurementError) as ei:
+        exp.measure(Configuration.make({"x": 2}))
+    rec = ei.value.failure
+    assert rec is not None
+    assert rec.phase == "provision"
+    assert rec.attempts == 3
+    assert rec.cost == pytest.approx(0.15)
+    assert "zone outage" in rec.reason
+
+
+class _TearCloud(ExperimentConnector):
+    name = "tear"
+    version = "1"
+
+    def __init__(self, run_raises=None, parse_raises=None):
+        self.run_raises = run_raises
+        self.parse_raises = parse_raises
+        self.torn = 0
+
+    @property
+    def parameterization(self):
+        return {}
+
+    @property
+    def observed_properties(self):
+        return ("m",)
+
+    def provision(self, configuration):
+        return Deployment(ident="t", configuration=configuration, handle="h")
+
+    def run(self, deployment):
+        if self.run_raises is not None:
+            raise self.run_raises
+        return {"m": 1.0}
+
+    def parse(self, raw):
+        if self.parse_raises is not None:
+            raise self.parse_raises
+        return dict(raw)
+
+    def teardown(self, deployment):
+        self.torn += 1
+
+
+def test_teardown_exactly_once_on_every_exit_path():
+    # success
+    conn = _TearCloud()
+    assert LifecycleExperiment(conn).measure(Configuration.make({"x": 0})) \
+        == {"m": 1.0}
+    assert conn.torn == 1
+    # run fails terminally: torn down, phase provenance says "run"
+    conn = _TearCloud(run_raises=MeasurementError("benchmark OOM"))
+    with pytest.raises(MeasurementError) as ei:
+        LifecycleExperiment(conn).measure(Configuration.make({"x": 0}))
+    assert conn.torn == 1 and ei.value.failure.phase == "run"
+    # parse fails: torn down, phase "parse"
+    conn = _TearCloud(parse_raises=MeasurementError("garbled metrics"))
+    with pytest.raises(MeasurementError) as ei:
+        LifecycleExperiment(conn).measure(Configuration.make({"x": 0}))
+    assert conn.torn == 1 and ei.value.failure.phase == "parse"
+    # crash (experiment bug): infrastructure still released, crash propagates
+    conn = _TearCloud(run_raises=RuntimeError("wild pointer"))
+    with pytest.raises(RuntimeError):
+        LifecycleExperiment(conn).measure(Configuration.make({"x": 0}))
+    assert conn.torn == 1
+
+
+def test_run_phase_retries_infrastructure_flakes_on_same_deployment():
+    class FlakyRun(_TearCloud):
+        calls = 0
+
+        def run(self, deployment):
+            FlakyRun.calls += 1
+            if FlakyRun.calls < 3:
+                raise ProvisioningError("ssh reset by peer")
+            return {"m": 7.0}
+
+    conn = FlakyRun()
+    exp = LifecycleExperiment(
+        conn, retry=RetryPolicy(run_attempts=3, backoff_s=0.0, jitter=0.0))
+    assert exp.measure(Configuration.make({"x": 0})) == {"m": 7.0}
+    assert FlakyRun.calls == 3
+    assert conn.torn == 1  # retries reuse the deployment; one teardown
+
+
+# -------------------------------------------------------- policies & pricing
+
+
+def test_retry_policy_validation_and_deterministic_jitter():
+    with pytest.raises(ValueError):
+        RetryPolicy(provision_attempts=0)
+    with pytest.raises(ValueError):
+        RetryPolicy(jitter=1.5)
+    with pytest.raises(ValueError):
+        RetryPolicy(backoff_factor=0.5)
+    plain = RetryPolicy(backoff_s=1.0, backoff_factor=2.0, jitter=0.0)
+    assert [plain.delay(a) for a in (1, 2, 3)] == [1.0, 2.0, 4.0]
+    capped = RetryPolicy(backoff_s=1.0, max_backoff_s=5.0, jitter=0.1)
+    assert capped.delay(10, "k") <= 5.0 * 1.1
+    # jitter is keyed content-hash, not a live RNG: replays are identical
+    assert capped.delay(2, "digest-a") == capped.delay(2, "digest-a")
+    assert capped.delay(2, "digest-a") != capped.delay(2, "digest-b")
+    assert RetryPolicy.from_json(capped.to_json()) == capped
+
+
+def test_pricing_models_and_round_trip():
+    flat = FlatPricing(rate_per_s=0.5)
+    c = Configuration.make({"inst": "a"})
+    assert flat.cost(c, 10.0) == 5.0
+    assert flat.cost(c, -1.0) == 0.0  # clock skew never refunds
+    dim = DimensionPricing(dimension="inst",
+                           rates=(("a", 1.0), ("b", 2.5)), default=9.0)
+    assert dim.rate(Configuration.make({"inst": "b"})) == 2.5
+    assert dim.rate(Configuration.make({"inst": "zz"})) == 9.0
+    assert pricing_from_json(flat.to_json()) == flat
+    assert pricing_from_json(dim.to_json()) == dim
+    with pytest.raises(ValueError, match="unknown pricing kind"):
+        pricing_from_json({"kind": "spot"})
+
+
+def test_experiment_for_matches_linear_scan():
+    """The cached property→experiment map must agree with a linear scan of
+    the action space for every observed property."""
+    e1 = FunctionExperiment(fn=lambda c: {"a": 1.0, "b": 2.0},
+                            properties=("a", "b"), name="one")
+    e2 = FunctionExperiment(fn=lambda c: {"c": 3.0}, properties=("c",),
+                            name="two")
+    actions = ActionSpace.make([e1, e2])
+    for prop in ("a", "b", "c"):
+        scan = next(e for e in actions.experiments
+                    if prop in e.observed_properties)
+        assert actions.experiment_for(prop) is scan
+    with pytest.raises(KeyError):
+        actions.experiment_for("nope")
+
+
+def test_tuning_shim_identity_preserved():
+    """The compatibility shims keep the monolithic experiments' identity:
+    same identifier as the bare connector behind the adapter, unchanged by
+    a retry policy (robustness, not surface) — while pricing, which adds
+    the ``provisioned_cost`` property, is honestly a different surface."""
+    from repro.tuning.experiments import WalltimeConnector, WalltimeExperiment
+
+    shim = WalltimeExperiment("nano", repeats=2)
+    bare = LifecycleExperiment(WalltimeConnector("nano", repeats=2))
+    assert (shim.name, shim.version) == ("walltime", "1")
+    assert shim.identifier == bare.identifier
+    retried = WalltimeExperiment("nano", repeats=2,
+                                 retry=RetryPolicy(provision_attempts=5))
+    assert retried.identifier == shim.identifier
+    priced = WalltimeExperiment("nano", repeats=2, pricing=FlatPricing(1.0))
+    assert priced.identifier != shim.identifier
+    assert "provisioned_cost" in priced.observed_properties
+    assert "provisioned_cost" not in shim.observed_properties
+
+
+# ------------------------------------------------------- failure provenance
+
+
+def test_store_failure_primitives(tmp_path):
+    store = SampleStore(str(tmp_path / "f.db"))
+    store.record_failure("d1", "exp-a", "provision", "zone outage",
+                         attempts=3, cost=0.5)
+    store.record_failure("d1", "exp-b", "run", "OOM")
+    rows = store.failures_for("d1")
+    assert [(r["experiment_id"], r["phase"], r["attempts"], r["cost"])
+            for r in rows] == [("exp-a", "provision", 3, 0.5),
+                               ("exp-b", "run", 1, 0.0)]
+    assert [r["phase"] for r in store.failures_for("d1", "exp-a")] \
+        == ["provision"]
+    assert store.failures_for("other") == []
+
+
+def test_failure_summary_backfills_legacy_rows_as_unknown(tmp_path):
+    store = SampleStore(str(tmp_path / "f.db"))
+    sp = "space-1"
+    # a pre-provenance failed record: no failures row at all
+    store.append_record(sp, "op", "legacy-digest", "failed")
+    # a modern one with structured provenance
+    store.append_record(sp, "op", "modern-digest", "failed")
+    store.record_failure("modern-digest", "exp-a", "provision", "outage",
+                         attempts=2, cost=1.25)
+    assert store.failure_summary(sp) == {
+        "unknown": {"count": 1, "cost": 0.0},
+        "provision": {"count": 1, "cost": 1.25},
+    }
+
+
+def test_zombie_failure_rows_never_double_charge(tmp_path):
+    """A worker that died mid-trial leaves a failure row; after lease
+    reaping the re-executing owner writes another.  ``failures_for`` keeps
+    the full audit trail, but the summary counts each failed record once —
+    against the LATEST row only."""
+    store = SampleStore(str(tmp_path / "f.db"))
+    sp = "space-1"
+    store.append_record(sp, "op", "d1", "failed")
+    store.record_failure("d1", "exp-a", "provision", "outage", 3, 5.0)
+    store.record_failure("d1", "exp-a", "provision", "outage", 3, 7.0)
+    assert len(store.failures_for("d1")) == 2  # audit trail intact
+    assert store.failure_summary(sp) == {
+        "provision": {"count": 1, "cost": 7.0}}
+
+
+# ------------------------------------------------------------ spec plumbing
+
+
+def test_connector_spec_round_trip_and_strict_parse(tmp_path):
+    import json
+
+    spec = ConnectorSpec(factory="trace-replay",
+                         params={"path": "t.jsonl"},
+                         retry=RetryPolicy(provision_attempts=4, jitter=0.0),
+                         pricing=FlatPricing(rate_per_s=0.25),
+                         virtual_clock=True)
+    assert ConnectorSpec.from_json(
+        json.loads(json.dumps(spec.to_json()))) == spec
+    with pytest.raises(ValueError):
+        ConnectorSpec.from_json({"params": {}})  # factory required
+    with pytest.raises(ValueError, match="unknown"):
+        ConnectorSpec.from_json({"factory": "f", "retry": {"attempts": 3}})
+    with pytest.raises(ValueError, match="unknown"):
+        ConnectorSpec.from_json(
+            {"factory": "f", "pricing": {"kind": "flat", "rate": 1}})
+    with pytest.raises(ValueError, match="unknown"):
+        ConnectorSpec.from_json({"factory": "f", "clock": "fake"})
+
+
+def test_connector_spec_rejects_ignored_knobs_on_ready_experiments(tmp_path):
+    """``trace-replay`` returns a ready experiment that manages its own
+    retry/pricing/clock; setting them on the spec too must fail loudly
+    instead of being silently ignored."""
+    path = str(tmp_path / "t.jsonl")
+    exp = _vclock_experiment()
+    record_trace(exp, _vconfigs()[:1], path=path, clock=exp.clock)
+    ok = ConnectorSpec(factory="trace-replay", params={"path": path}).build()
+    assert ok.name == "vcloud"
+    bad = ConnectorSpec(factory="trace-replay", params={"path": path},
+                        retry=RetryPolicy())
+    with pytest.raises(ValueError, match="ignored"):
+        bad.build()
+
+
+# -------------------------------------------------- trace capture & replay
+
+
+def _sampled_state(ds, op, digests):
+    """Everything observable about a finished operation, minus wall-clock
+    timestamps: the sampling record, the reconciled sample set (property
+    values AND their experiment provenance), and the failure accounting."""
+    recs = [(r.seq, r.config_digest, r.action) for r in ds.timeseries(op)]
+    samples = sorted(
+        (s.configuration.digest,
+         sorted((v.name, v.value, v.experiment_id)
+                for v in s.properties.values()))
+        for s in ds.read())
+    fails = {d: [{k: r[k] for k in ("phase", "reason", "attempts", "cost")}
+                 for r in ds.store.failures_for(d)] for d in digests}
+    return recs, samples, fails, ds.store.failure_summary(ds.space_id)
+
+
+def test_trace_replay_byte_identical_through_store(tmp_path):
+    """Acceptance gate: a recorded trace replayed through the full
+    ``sample → store`` path reproduces the live run exactly — same records,
+    same property values (``provisioned_cost`` included), same failure rows
+    — while advancing only *virtual* time."""
+    path = str(tmp_path / "trace.jsonl")
+    rec_exp = _vclock_experiment()
+    header, trials = record_trace(rec_exp, _vconfigs(), path=path,
+                                  clock=rec_exp.clock)
+    assert header["retry"] == RETRY.to_json()
+    assert header["pricing"] == PRICING.to_json()
+    assert [t["properties"] is None for t in trials] \
+        == [False, False, True, False]
+    # the flaky trial recorded its true retry sequence
+    assert [a["ok"] for a in trials[1]["attempts"]
+            if a["phase"] == "provision"] == [False, True]
+
+    # live reference through the full path
+    ds_live = DiscoverySpace(space=_vspace(),
+                             actions=ActionSpace.make([_vclock_experiment()]),
+                             store=SampleStore(str(tmp_path / "live.db")))
+    res = ds_live.sample_batch(_vconfigs(), operation_id="op")
+    assert [r.action for r in res] \
+        == ["measured", "measured", "failed", "measured"]
+
+    # replay from the recording: zero cloud calls, zero real sleeps
+    clock = FakeClock()
+    replay = LifecycleExperiment(
+        TraceConnector(path, clock=clock),
+        retry=RetryPolicy.from_json(header["retry"]),
+        pricing=pricing_from_json(header["pricing"]), clock=clock)
+    ds_replay = DiscoverySpace(space=_vspace(),
+                               actions=ActionSpace.make([replay]),
+                               store=SampleStore(str(tmp_path / "replay.db")))
+    wall0, virt0 = time.perf_counter(), clock.time()
+    res2 = ds_replay.sample_batch(_vconfigs(), operation_id="op")
+    wall = time.perf_counter() - wall0
+    assert [r.action for r in res2] == [r.action for r in res]
+    digests = [c.digest for c in _vconfigs()]
+    assert _sampled_state(ds_replay, "op", digests) \
+        == _sampled_state(ds_live, "op", digests)
+    # the ~73 recorded seconds passed virtually, not in wall-clock
+    assert clock.time() - virt0 >= 40.0
+    assert wall < 5.0
+
+
+def test_trace_replay_is_idempotent_per_digest(tmp_path):
+    """Re-measuring a digest replays the same recording again (the cursor
+    resets after teardown), so reuse-vs-remeasure decisions upstream never
+    desynchronize the replay."""
+    path = str(tmp_path / "trace.jsonl")
+    exp = _vclock_experiment()
+    record_trace(exp, _vconfigs(), path=path, clock=exp.clock)
+    clock = FakeClock()
+    header, _ = load_trace(path)
+    replay = LifecycleExperiment(TraceConnector(path, clock=clock),
+                                 retry=RetryPolicy.from_json(header["retry"]),
+                                 pricing=pricing_from_json(header["pricing"]),
+                                 clock=clock)
+    c = Configuration.make({"x": 1})
+    first = replay.measure(c)
+    second = replay.measure(c)
+    assert first == second
+    with pytest.raises(MeasurementError, match="not in the recorded trace"):
+        replay.measure(Configuration.make({"x": 99}))
+
+
+def _start_server(db, sock):
+    env = dict(__import__("os").environ)
+    env["PYTHONPATH"] = _SRC + ":" + env.get("PYTHONPATH", "")
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.core.store.server",
+         "--db", db, "--unix", sock],
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True, env=env)
+    line = proc.stdout.readline()
+    assert line.startswith("STORE_URL="), f"unexpected server output: {line!r}"
+    return proc, line.strip().split("=", 1)[1]
+
+
+def _stop_server(proc):
+    if proc.poll() is None:
+        proc.send_signal(signal.SIGTERM)
+        try:
+            proc.wait(timeout=10)
+        except subprocess.TimeoutExpired:
+            proc.kill()
+            proc.wait(timeout=10)
+    proc.stdout.close()
+
+
+def test_trace_replay_identical_through_served_store(tmp_path):
+    """The same replay against a server-mediated store lands the same
+    records, failure rows, and summary as against local sqlite — the
+    failure-provenance protocol frames carry everything across the wire."""
+    path = str(tmp_path / "trace.jsonl")
+    exp = _vclock_experiment()
+    header, _ = record_trace(exp, _vconfigs(), path=path, clock=exp.clock)
+
+    def replay_into(store):
+        clock = FakeClock()
+        replay = LifecycleExperiment(
+            TraceConnector(path, clock=clock),
+            retry=RetryPolicy.from_json(header["retry"]),
+            pricing=pricing_from_json(header["pricing"]), clock=clock)
+        ds = DiscoverySpace(space=_vspace(),
+                            actions=ActionSpace.make([replay]), store=store)
+        ds.sample_batch(_vconfigs(), operation_id="op")
+        return ds
+
+    ds_local = replay_into(SampleStore(str(tmp_path / "local.db")))
+    proc, url = _start_server(str(tmp_path / "served.db"),
+                              str(tmp_path / "served.sock"))
+    try:
+        ds_served = replay_into(ClientStore(url, retries=8))
+        digests = [c.digest for c in _vconfigs()]
+        assert _sampled_state(ds_served, "op", digests) \
+            == _sampled_state(ds_local, "op", digests)
+    finally:
+        _stop_server(proc)
+
+
+# --------------------------------------------------- cross-backend conformance
+
+
+@pytest.mark.parametrize("backend", ["serial", "thread", "process", "queue"])
+def test_flaky_connector_conformance_across_backends(tmp_path, backend):
+    """Satellite gate: the lifecycle behaves identically through every
+    execution backend — healthy trials retried to success (exactly
+    ``FLAKES`` flakes each, one teardown), the poison trial exhausts its
+    attempts, is billed, and lands a provision-phase failure row."""
+    path = str(tmp_path / "store.db")
+    ds = build_flaky_ds(path)
+    sd = state_dir_for(path)
+    configs = [Configuration.make({"x": v}) for v in (0, 1, 2, 3)]
+    workers = []
+    if backend == "queue":
+        workers = [threading.Thread(target=run_worker,
+                                    args=(build_flaky_ds(path),),
+                                    kwargs={"idle_timeout_s": 1.0,
+                                            "owner": f"w{i}"})
+                   for i in range(2)]
+        for t in workers:
+            t.start()
+    kwargs = {"workers": 2} if backend in ("thread", "process") else {}
+    results = ds.sample_batch(configs, operation_id="op", backend=backend,
+                              **kwargs)
+    for t in workers:
+        t.join()
+    assert [r.action for r in results] \
+        == ["measured", "measured", "failed", "measured"]
+
+    exp = ds.actions.experiments[0]
+    for c in configs:
+        assert counter(sd, "provision", c.digest) == FLAKES + 1
+        expected_teardowns = 0 if c["x"] == POISON_X else 1
+        assert counter(sd, "teardown", c.digest) == expected_teardowns
+
+    poison = configs[POISON_X]
+    rows = ds.store.failures_for(poison.digest)
+    assert len(rows) == 1
+    assert rows[0]["phase"] == "provision"
+    assert rows[0]["attempts"] == FLAKES + 1
+    assert "zone outage" in rows[0]["reason"]
+    assert rows[0]["experiment_id"] == exp.identifier
+    assert ds.store.failure_summary(ds.space_id) == {
+        "provision": {"count": 1,
+                      "cost": pytest.approx(rows[0]["cost"], abs=1e-12)}}
+    # successful trials carry their billed cost as an ordinary property
+    samples = list(ds.read())
+    assert len(samples) == 3
+    for s in samples:
+        names = {v.name for v in s.properties.values()}
+        assert "provisioned_cost" in names
