@@ -19,7 +19,8 @@ from typing import Optional, Tuple
 
 from repro.models.config import ModelConfig
 
-__all__ = ["ShapeSpec", "SHAPES", "cell_applicability", "all_cells"]
+__all__ = ["ShapeSpec", "SHAPES", "custom_shape", "cell_applicability",
+           "all_cells"]
 
 
 @dataclass(frozen=True)
@@ -36,6 +37,19 @@ SHAPES = {
     "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
     "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
 }
+
+
+def custom_shape(seq_len: int, global_batch: int, kind: str = "train",
+                 name: Optional[str] = None) -> ShapeSpec:
+    """An off-matrix :class:`ShapeSpec` (the LLM deployment-space family
+    sweeps sequence lengths the fixed 40-cell table does not cover)."""
+    if kind not in ("train", "prefill", "decode"):
+        raise ValueError(f"unknown shape kind {kind!r}")
+    if seq_len < 1 or global_batch < 1:
+        raise ValueError(
+            f"seq_len and global_batch must be >= 1, "
+            f"got {seq_len} / {global_batch}")
+    return ShapeSpec(name or f"{kind}_{seq_len}", seq_len, global_batch, kind)
 
 
 def cell_applicability(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[bool, str]:

@@ -55,6 +55,14 @@ class CatalogEntry:
         (empty for pre-catalog rows — treat as unknown, not as none)."""
         return tuple(self.meta.get("properties", ()))
 
+    @property
+    def family(self) -> dict:
+        """The workload-family identity block the registering space attached
+        (see :mod:`repro.workloads`), empty for family-less spaces.  Two
+        entries with equal family blocks are siblings: the same generator
+        with different member knobs (sequence length, topology)."""
+        return dict(self.meta.get("family", {}))
+
     def summary(self) -> dict:
         return {
             "space_id": self.space_id,
@@ -178,6 +186,7 @@ class SpaceCatalog:
         min_overlap: float = 1.0,
         metric: Optional[str] = None,
         min_measured: int = 0,
+        family: Optional[Mapping] = None,
     ) -> list:
         """Catalog entries relatable to ``space``, best candidates first.
 
@@ -191,7 +200,11 @@ class SpaceCatalog:
         ``exclude`` drops space ids (callers pass their own); ``metric``
         keeps only entries whose registered properties include it (entries
         with unknown properties pass — the data check happens when values
-        are read); ``min_measured`` requires that many measured records.
+        are read); ``min_measured`` requires that many measured records;
+        ``family`` keeps only entries whose registered family block equals
+        it — restricting transfer sources to siblings of one workload
+        family (dimension matching alone can relate e.g. two different
+        models that happen to share knob names).
 
         Ranking: exact matches first, then by overlap, then by measured
         data volume, explicit mappings before inferred ones.
@@ -206,6 +219,8 @@ class SpaceCatalog:
                 continue
             if metric is not None and entry.properties \
                     and metric not in entry.properties:
+                continue
+            if family is not None and entry.family != dict(family):
                 continue
             src_dims = {d.name: d for d in entry.space.dimensions}
             tgt_dims = {d.name: d for d in space.dimensions}

@@ -69,6 +69,11 @@ class TransferReport:
     n_rep_measured: int = 0
     n_rep_failed: int = 0
     n_warm_trials: int = 0       # entries folded into EACH member's history
+    # the §IV-4 predict-remaining sweep (transfer.predict_remaining): how
+    # many still-unmeasured configurations got surrogate predictions, and
+    # the A*_pred space id they were recorded under (None = sweep not run)
+    n_predicted: int = 0
+    predicted_space_id: Optional[str] = None
     operation_id: Optional[str] = None
     #: digest -> surrogate-predicted value for warm entries that were NOT
     #: measured during the rep pass: the out-of-sample predictions that
@@ -89,6 +94,8 @@ class TransferReport:
             "n_representatives": self.n_representatives,
             "rep_measurements_paid": self.paid,
             "warm_trials_per_member": self.n_warm_trials,
+            "predicted": self.n_predicted,
+            "predicted_space_id": self.predicted_space_id,
             "attempts": list(self.attempts),
         }
         if self.assessment is not None:
@@ -114,6 +121,7 @@ class InvestigationPlan:
     share_history: bool
     warm_start: bool
     transfer_enabled: bool
+    transfer_predict_remaining: bool = False
     transfer_candidates: list = field(default_factory=list)
     constraints: list = field(default_factory=list)  # SLA bound descriptions
     #: prior failed trials already recorded in the space, by lifecycle phase:
@@ -148,7 +156,9 @@ class InvestigationPlan:
             lines.append("  transfer  : enabled — no related measured space "
                          "in the catalog (search runs cold)")
         else:
-            lines.append(f"  transfer  : enabled — "
+            sweep = (" (+ predict-remaining sweep)"
+                     if self.transfer_predict_remaining else "")
+            lines.append(f"  transfer  : enabled{sweep} — "
                          f"{len(self.transfer_candidates)} candidate "
                          f"source(s):")
             for c in self.transfer_candidates:
@@ -324,7 +334,8 @@ class Investigation:
                 space=spec.space,
                 actions=ActionSpace.make(built),
                 store=store if store is not None
-                else open_store(spec.store or ":memory:"))
+                else open_store(spec.store or ":memory:"),
+                meta=spec.meta or None)
         self.ds = ds
         # programmatic overrides (shim paths); None => build from the spec
         self._optimizers: Optional[list] = None
@@ -442,6 +453,7 @@ class Investigation:
             budget=spec.budget.to_json(),
             share_history=spec.share_history, warm_start=spec.warm_start,
             transfer_enabled=spec.transfer.enabled,
+            transfer_predict_remaining=spec.transfer.predict_remaining,
             transfer_candidates=candidates,
             constraints=[] if spec.objective is None else
             [c.describe() for c in spec.objective.constraints],
@@ -740,5 +752,51 @@ class Investigation:
             report.n_warm_trials = len(warm)
             report.operation_id = op
             report.warm_predictions = predictions
+            if t.predict_remaining and ds.space.finite:
+                self._predict_remaining(report, rel, pairs, assessment, op)
             return report
         return report
+
+    def _predict_remaining(self, report: TransferReport, rel, pairs,
+                           assessment, fit_op: str) -> None:
+        """The RSSC step-⑧ sweep as a spec mode (``transfer.
+        predict_remaining``): build ``A*_pred`` — this space plus a
+        :class:`~repro.core.actions.SurrogateExperiment` wrapping the fitted
+        line over the source's measured values — and sweep it over every
+        configuration the search has not touched, so the store ends up
+        holding a full predicted surface (provenance-marked ``predicted``)
+        next to the paid measurements.  A target point whose source sibling
+        was never measured fails its prediction (terminal, recorded), same
+        as the serial RSSC sweep."""
+        from ..actions import MeasurementError, SurrogateExperiment
+
+        spec = self.spec
+        src_values = {rel.entry.space.translate(c, rel.mapping).digest:
+                      float(v) for c, v in pairs}
+
+        def lookup(target_config):
+            digest = target_config.digest
+            if digest not in src_values:
+                raise MeasurementError(
+                    f"no source value of {spec.metric!r} for "
+                    f"{target_config!r}")
+            return src_values[digest]
+
+        surrogate = SurrogateExperiment(
+            source=lookup,
+            model=assessment.surrogate,
+            property_name=spec.metric,
+            name=f"transfer-{spec.metric}",
+            version="1",
+            params={"slope": assessment.surrogate.slope,
+                    "intercept": assessment.surrogate.intercept,
+                    "source_space": rel.entry.space_id,
+                    "fit_op": fit_op})
+        predicted_space = self.ds.with_predictor(surrogate)
+        pred_op = predicted_space.begin_operation("transfer-predict")
+        results = predicted_space.sample_batch(
+            list(predicted_space.remaining_configurations()),
+            operation_id=pred_op)
+        report.n_predicted = sum(1 for r in results
+                                 if r.action == "predicted")
+        report.predicted_space_id = predicted_space.space_id

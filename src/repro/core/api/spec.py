@@ -353,6 +353,14 @@ class TransferSpec:
     points, Table VI); ``max_warm`` caps the folded history
     (best-predicted first); ``seed`` fixes the representative-selection
     rng.
+
+    ``predict_remaining`` is the RSSC step-⑧ sweep as a spec mode: after a
+    transfer passes the criteria, build the predicted space ``A*_pred``
+    (the fitted surrogate as a :class:`~repro.core.actions.
+    SurrogateExperiment` over the target Ω) and sweep it over every
+    still-unmeasured configuration, so the store holds a full predicted
+    surface next to the paid measurements — queryable like any other
+    space, provenance-marked ``predicted``.
     """
 
     enabled: bool = False
@@ -364,6 +372,7 @@ class TransferSpec:
     max_representatives: Optional[int] = None
     max_warm: Optional[int] = None
     seed: int = 0
+    predict_remaining: bool = False
 
     def __post_init__(self):
         if self.selection not in _SELECTIONS:
@@ -380,13 +389,15 @@ class TransferSpec:
                 "min_r": self.min_r, "max_p": self.max_p,
                 "selection": self.selection,
                 "max_representatives": self.max_representatives,
-                "max_warm": self.max_warm, "seed": self.seed}
+                "max_warm": self.max_warm, "seed": self.seed,
+                "predict_remaining": self.predict_remaining}
 
     @staticmethod
     def from_json(d: Mapping) -> "TransferSpec":
         _reject_unknown(d, ("enabled", "sources", "mappings", "min_r",
                             "max_p", "selection", "max_representatives",
-                            "max_warm", "seed"), "transfer")
+                            "max_warm", "seed", "predict_remaining"),
+                        "transfer")
         mw = d.get("max_warm")
         mr = d.get("max_representatives")
         return TransferSpec(
@@ -398,7 +409,8 @@ class TransferSpec:
             selection=str(d.get("selection", "clustering")),
             max_representatives=None if mr is None else int(mr),
             max_warm=None if mw is None else int(mw),
-            seed=int(d.get("seed", 0)))
+            seed=int(d.get("seed", 0)),
+            predict_remaining=bool(d.get("predict_remaining", False)))
 
 
 _CONSTRAINT_OPS = ("<=", ">=", "<", ">")
@@ -593,6 +605,11 @@ class InvestigationSpec:
     warm_start: bool = False
     store: Optional[str] = None
     objective: Optional[ObjectiveSpec] = None
+    #: Free-form catalog annotations attached to the built Discovery Space's
+    #: registration (e.g. a workload family's ``{"family": ..., "member":
+    #: ...}`` identity block, see :mod:`repro.workloads`).  Must be plain
+    #: JSON; never interpreted by the investigation itself.
+    meta: dict = field(default_factory=dict)
 
     def __post_init__(self):
         if self.mode not in ("min", "max"):
@@ -637,6 +654,7 @@ class InvestigationSpec:
             "store": self.store,
             "objective": None if self.objective is None
             else self.objective.to_json(),
+            "meta": dict(self.meta),
         }
 
     @staticmethod
@@ -645,7 +663,7 @@ class InvestigationSpec:
                             "connectors", "metric", "mode", "optimizers",
                             "execution", "budget", "transfer",
                             "share_history", "warm_start", "store",
-                            "objective"),
+                            "objective", "meta"),
                         "investigation")
         version = d.get("schema_version", SCHEMA_VERSION)
         if version != SCHEMA_VERSION:
@@ -675,6 +693,7 @@ class InvestigationSpec:
             store=None if d.get("store") is None else str(d["store"]),
             objective=None if objective is None
             else ObjectiveSpec.from_json(objective),
+            meta=dict(d.get("meta", {})),
         )
 
     # --------------------------------------------------------------- file IO

@@ -25,7 +25,7 @@ from ..entities import Configuration, content_hash
 from .spec import register_experiment, resolve_experiment_factory
 
 __all__ = ["quad", "cloud_deploy", "cloud_sla", "linear_shift",
-           "trace_replay"]
+           "trace_replay", "llm_dryrun", "llm_walltime"]
 
 
 def quad(x_dim: str = "x", y_dim: str = "y", prop: str = "loss") -> Experiment:
@@ -163,8 +163,31 @@ def trace_replay(path: str, retry=None, pricing=None,
                                clock=clock)
 
 
+def llm_dryrun(arch: str, seq_len: int, devices: int, kind: str = "train",
+               hw: str = "tpu-v5e", hbm_fraction: float = 1.0):
+    """Fast-tier LLM deployment scoring: the analytic roofline cost model
+    over (mesh × sharding × batch × kernel × precision) — see
+    :class:`repro.workloads.llm.LLMDryrunConnector`.  Returns the bare
+    connector, so the spec's ``retry``/``pricing``/``virtual_clock`` blocks
+    apply."""
+    from ...workloads.llm import LLMDryrunConnector
+    return LLMDryrunConnector(arch, seq_len=seq_len, devices=devices,
+                              kind=kind, hw=hw, hbm_fraction=hbm_fraction)
+
+
+def llm_walltime(arch: str, seq_len: int, devices: int = 1,
+                 kind: str = "train", repeats: int = 3, smoke: bool = True):
+    """Slow-tier LLM deployment microbench: a timed jitted step of the real
+    model — see :class:`repro.workloads.llm.LLMWalltimeConnector`."""
+    from ...workloads.llm import LLMWalltimeConnector
+    return LLMWalltimeConnector(arch, seq_len=seq_len, devices=devices,
+                                kind=kind, repeats=repeats, smoke=smoke)
+
+
 register_experiment("quad", quad)
 register_experiment("cloud-deploy", cloud_deploy)
 register_experiment("cloud-sla", cloud_sla)
 register_experiment("linear-shift", linear_shift)
 register_experiment("trace-replay", trace_replay)
+register_experiment("llm-dryrun", llm_dryrun)
+register_experiment("llm-walltime", llm_walltime)

@@ -82,6 +82,7 @@ class DiscoverySpace:
         lease_s: float = 15.0,
         clock: Optional[Clock] = None,
         autoscale: Optional[AutoscalePolicy] = None,
+        meta: Optional[Mapping] = None,
     ):
         self.space = space
         self.actions = actions
@@ -112,15 +113,20 @@ class DiscoverySpace:
         # Catalog registration: the Ω-only digest + entity metadata are what
         # SpaceCatalog.find_related matches on — a target investigation can
         # discover this space as a transfer source without reconstructing
-        # its (code-only) experiments.
+        # its (code-only) experiments.  Caller-supplied ``meta`` (e.g. a
+        # workload family's identity block) is merged in first; the reserved
+        # keys below always reflect this space's actual (Ω, A).
+        self.extra_meta = dict(meta) if meta else {}
+        registered_meta = dict(self.extra_meta)
+        registered_meta.update({
+            "dimensions": list(space.names),
+            "size": space.size if space.finite else None,
+            "properties": list(actions.observed_properties),
+        })
         self.store.register_space(
             self.space_id, space.to_json(), actions.identifiers,
             space_digest=space.digest,
-            meta={
-                "dimensions": list(space.names),
-                "size": space.size if space.finite else None,
-                "properties": list(actions.observed_properties),
-            },
+            meta=registered_meta,
         )
         # Stale-claim GC pacing: the batch/pipelined drivers sweep at most
         # once per lease interval — and the FIRST call always sweeps, so
@@ -409,6 +415,7 @@ class DiscoverySpace:
             lease_s=self.lease_s,
             clock=self.clock,
             autoscale=self.autoscale,
+            meta=self.extra_meta,
         )
 
     def related(self, mapping: Mapping[str, Mapping], actions: Optional[ActionSpace] = None,
@@ -422,6 +429,7 @@ class DiscoverySpace:
             lease_s=self.lease_s,
             clock=self.clock,
             autoscale=self.autoscale,
+            meta=self.extra_meta,
         )
 
     def __repr__(self) -> str:  # pragma: no cover

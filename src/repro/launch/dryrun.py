@@ -19,7 +19,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.configs import ARCHITECTURES, SHAPES, cell_applicability, get_config
+from repro.configs import (ARCHITECTURES, SHAPES, ShapeSpec,
+                           cell_applicability, get_config)
 from repro.distributed.sharding import (DeploymentConfig, batch_specs,
                                         default_deployment)
 from repro.launch.mesh import make_production_mesh
@@ -66,11 +67,17 @@ def model_flops_for(cfg, shape) -> float:
     return 2.0 * n * tokens
 
 
-def lower_cell(arch: str, shape_name: str, mesh, deployment=None):
+def lower_cell(arch: str, shape_name, mesh, deployment=None):
     """Build and lower the step function for one cell.  Returns (lowered,
-    meta) — compile separately so callers can time the phases."""
+    meta) — compile separately so callers can time the phases.
+
+    ``shape_name`` is a key of :data:`~repro.configs.SHAPES` or a
+    :class:`~repro.configs.ShapeSpec` directly (the LLM deployment-space
+    family lowers off-matrix sequence lengths via
+    :func:`~repro.configs.custom_shape`)."""
     cfg = get_config(arch)
-    shape = SHAPES[shape_name]
+    shape = shape_name if isinstance(shape_name, ShapeSpec) \
+        else SHAPES[shape_name]
     if deployment is None:
         deployment = default_deployment(cfg, mesh, shape_kind=shape.kind,
                                         global_batch=shape.global_batch,

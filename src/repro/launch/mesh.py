@@ -12,7 +12,8 @@ from typing import Optional, Sequence
 
 import jax
 
-__all__ = ["make_production_mesh", "make_mesh", "available_devices"]
+__all__ = ["make_production_mesh", "make_mesh", "available_devices",
+           "mesh_split_options", "parse_mesh_split"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -31,3 +32,34 @@ def make_mesh(shape: Sequence[int], axes: Sequence[str]):
 
 def available_devices() -> int:
     return len(jax.devices())
+
+
+def mesh_split_options(devices: int) -> tuple:
+    """Canonical ``data×model`` splits of a ``devices``-chip slice, as
+    ``"DxM"`` labels: full-TP, the most-square split, full-DP.
+
+    Every power-of-two topology yields the SAME number of options in the
+    same semantic order (TP-heavy → balanced → DP-heavy) for ``devices >=
+    4``, so two family-sibling Discovery Spaces on different topologies have
+    same-cardinality categorical mesh dimensions — exactly what the
+    catalog's positional rename inference needs to bridge them (§IV-1).
+    Pure arithmetic: never touches jax device state.
+    """
+    if devices < 1 or devices & (devices - 1):
+        raise ValueError(f"devices must be a power of two, got {devices}")
+    half = 1
+    while half * half < devices:
+        half *= 2
+    splits = [(1, devices), (devices // half, half), (devices, 1)]
+    seen, out = set(), []
+    for data, model in splits:
+        if (data, model) not in seen:
+            seen.add((data, model))
+            out.append(f"{data}x{model}")
+    return tuple(out)
+
+
+def parse_mesh_split(label: str) -> tuple:
+    """``"2x4"`` → ``(2, 4)`` (data, model)."""
+    data, _, model = label.partition("x")
+    return int(data), int(model)

@@ -1,0 +1,246 @@
+"""Closed-form roofline estimation for LLM deployment configurations.
+
+The analytic counterpart of :func:`repro.roofline.analysis.analyze_compiled`:
+where that path prices a *compiled* HLO module (per-instruction FLOP/byte
+counts), this one prices a deployment configuration directly from the
+architecture's analytic parameter counts — no device, no lowering, no
+compile.  That makes it the fast measurement tier of the LLM workload family
+(:mod:`repro.workloads.llm`): thousands of (mesh × sharding × batch × kernel
+× precision) points per second, sharing the same :class:`~repro.roofline.hw.
+HWSpec` constants and the same max-of-terms roofline semantics as the
+measured path, so values from the two tiers live on one scale.
+
+Cost model, per device per step:
+
+* **compute** — ``2·N_active·D`` matmul FLOPs (the
+  :func:`~repro.launch.dryrun.model_flops_for` convention: embedding-table
+  lookups excluded, ×3 for the backward pass) plus the explicit attention
+  score/apply FLOPs that N·D misses at long sequence, against the precision-
+  scaled peak.
+* **memory** — weight streaming (sharded over the model axis), optimizer
+  update traffic (fp32, additionally sharded over data under ``fsdp``),
+  residual-stream activation traffic, KV-cache reads for serve kinds, and
+  attention score traffic scaled by the kernel variant's materialization
+  passes (``ref`` spills full score tiles, ``xla`` chunks them, ``flash``
+  keeps them on-chip).
+* **collective** — ring all-reduces of TP activations per layer, and the
+  data-parallel gradient exchange (all-reduce when replicated, reduce-scatter
+  + param all-gather under ``fsdp``), over the ICI links.
+
+The estimate also carries an HBM *residency* footprint (params + optimizer
+states + gradients + KV cache + live activations); a configuration whose
+footprint exceeds the chip's HBM is the paper's "non-deployable point" and
+is rejected by the measuring connector, not here — the estimator itself is
+judgement-free arithmetic.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from ..models.config import ModelConfig
+from .hw import HWSpec, HW_V5E
+
+__all__ = ["RooflineEstimate", "estimate_deployment",
+           "PRECISION_BYTES", "KERNEL_SCORE_PASSES"]
+
+#: compute-dtype width per supported precision dimension value
+PRECISION_BYTES = {"bf16": 2.0, "fp32": 4.0}
+
+#: attention score-matrix HBM materialization passes per kernel variant:
+#: ``ref`` writes and re-reads the full S×S_kv scores around the softmax,
+#: ``xla`` chunks them (one spill pass), ``flash`` streams tiles on-chip
+#: and only pays for the running max/sum statistics.
+KERNEL_SCORE_PASSES = {"ref": 4.0, "xla": 2.0, "flash": 0.25}
+
+
+def _ring(group: int, factor: float = 2.0) -> float:
+    """Per-device wire-byte multiplier of a ring collective over ``group``
+    devices: all-reduce moves ``2(g-1)/g`` × payload, all-gather and
+    reduce-scatter ``(g-1)/g`` (pass ``factor=1.0``)."""
+    if group <= 1:
+        return 0.0
+    return factor * (group - 1) / group
+
+
+@dataclass(frozen=True)
+class RooflineEstimate:
+    """Analytic per-step roofline terms for one deployment configuration."""
+
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_device: float
+    bytes_per_device: float        # HBM traffic per step, per device
+    hbm_resident_bytes: float      # capacity footprint, per device
+    tokens_per_step: float         # new tokens processed globally per step
+    chips: int
+    hw: HWSpec
+
+    @property
+    def step_time_s(self) -> float:
+        """Max of the three terms (perfect overlap) — the same optimistic
+        bound as :class:`~repro.roofline.analysis.RooflineReport`."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.tokens_per_step / self.step_time_s
+
+    @property
+    def cost_per_1m_tokens(self) -> float:
+        """Fleet dollars per million new tokens at the hardware's on-demand
+        chip-hour price."""
+        per_s = self.chips * self.hw.price_per_chip_h / 3600.0
+        return per_s / self.tokens_per_s * 1e6
+
+    def fits_hbm(self, fraction: float = 1.0) -> bool:
+        return self.hbm_resident_bytes <= self.hw.hbm_bytes * fraction
+
+    def properties(self) -> dict:
+        """The measurement-record view (what a connector's parse returns)."""
+        return {
+            "step_time_s": self.step_time_s,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bytes_per_device": self.bytes_per_device,
+            "hbm_resident_bytes": self.hbm_resident_bytes,
+            "tokens_per_s": self.tokens_per_s,
+            "cost_per_1m_tokens": self.cost_per_1m_tokens,
+        }
+
+
+def estimate_deployment(
+    cfg: ModelConfig,
+    *,
+    seq_len: int,
+    batch_per_replica: int,
+    data: int = 1,
+    model: int = 1,
+    kind: str = "train",
+    sharding: str = "replicate",
+    kernel: str = "xla",
+    precision: str = "bf16",
+    hw: HWSpec = HW_V5E,
+) -> RooflineEstimate:
+    """Estimate the per-step roofline of ``cfg`` deployed on a
+    ``data × model`` mesh (see module docstring for the cost model).
+
+    ``batch_per_replica`` is the batch per data-parallel replica (the global
+    batch is ``batch_per_replica × data``); ``kind`` follows the repo's
+    shape kinds (``train`` = loss step over ``seq_len``, ``prefill`` =
+    forward over ``seq_len``, ``decode`` = one new token over a ``seq_len``
+    KV cache); ``sharding`` ∈ {replicate, fsdp} places parameters and
+    optimizer state; ``kernel`` ∈ {ref, xla, flash} and ``precision`` ∈
+    {bf16, fp32} select the attention variant and compute dtype.
+    """
+    if kind not in ("train", "prefill", "decode"):
+        raise ValueError(f"unknown kind {kind!r}")
+    if sharding not in ("replicate", "fsdp"):
+        raise ValueError(f"unknown sharding {sharding!r}")
+    if kernel not in KERNEL_SCORE_PASSES:
+        raise ValueError(f"unknown kernel {kernel!r} "
+                         f"(known: {sorted(KERNEL_SCORE_PASSES)})")
+    if precision not in PRECISION_BYTES:
+        raise ValueError(f"unknown precision {precision!r} "
+                         f"(known: {sorted(PRECISION_BYTES)})")
+
+    chips = data * model
+    bytes_c = PRECISION_BYTES[precision]
+    # bf16 runs the MXU at full rate; fp32 at half
+    peak = hw.peak_flops_bf16 * 2.0 / bytes_c
+    train = kind == "train"
+
+    d_model = cfg.d_model
+    heads, kv_heads, head_dim = (cfg.num_heads, cfg.num_kv_heads,
+                                 cfg.resolved_head_dim)
+    layers = cfg.num_layers
+    kv_layers = sum(stage.repeat
+                    * sum(1 for s in stage.superblock if s.has_kv_cache)
+                    for stage in cfg.stages)
+    n_total = float(cfg.param_count())
+    n_matmul = float(cfg.active_param_count())
+    if cfg.uses_tokens:  # embedding lookups are gathers, not matmuls
+        n_matmul -= cfg.vocab_size * d_model
+
+    # -- tokens ----------------------------------------------------------
+    kv_len = seq_len
+    new_tokens_per_replica = (batch_per_replica if kind == "decode"
+                              else batch_per_replica * seq_len)
+    tokens_global = float(new_tokens_per_replica * data)
+    # activation rows live on every device of a model group (TP shards
+    # features, not tokens)
+    tokens_local = float(new_tokens_per_replica)
+
+    # -- compute ---------------------------------------------------------
+    fwd_factor = 3.0 if train else 1.0
+    flops = fwd_factor * 2.0 * n_matmul * tokens_global
+    # attention score+apply FLOPs (4·T·span·d_attn per kv layer; causal
+    # masking halves the visible span for train/prefill)
+    span = kv_len * (1.0 if kind == "decode" else 0.5)
+    flops += fwd_factor * kv_layers * 4.0 * tokens_global * span \
+        * (heads * head_dim)
+    flops_per_device = flops / chips
+    compute_s = flops_per_device / peak
+
+    # -- memory traffic --------------------------------------------------
+    param_shard = model * (data if (train and sharding == "fsdp") else 1)
+    weight_stream = n_total * bytes_c / model
+    traffic = weight_stream * (3.0 if train else 1.0)  # fwd + bwd + grads
+    if train:
+        # fp32 master params + two Adam moments, read and written
+        traffic += 6.0 * n_total * 4.0 / param_shard
+    # residual-stream activations: ~16 reads/writes of the hidden state per
+    # layer forward, doubled for the backward pass
+    traffic += layers * tokens_local * d_model * bytes_c \
+        * 16.0 * (2.0 if train else 1.0)
+    # attention score materialization, kernel-dependent (bwd recompute ×2.5)
+    q_rows = 1.0 if kind == "decode" else float(seq_len)
+    score_bytes = batch_per_replica * (heads / model) * q_rows * kv_len \
+        * bytes_c
+    traffic += kv_layers * KERNEL_SCORE_PASSES[kernel] * score_bytes \
+        * (2.5 if train else 1.0)
+    kv_cache_bytes = (batch_per_replica * kv_len * 2.0 * kv_heads * head_dim
+                      * bytes_c * kv_layers / model)
+    if kind != "train":
+        traffic += kv_cache_bytes  # streamed once per serve step
+    memory_s = traffic / hw.hbm_bw
+
+    # -- collectives -----------------------------------------------------
+    wire = 0.0
+    if model > 1:
+        # two TP activation all-reduces per layer (mixer out, FFN out)
+        payload = tokens_local * d_model * bytes_c
+        wire += 2.0 * layers * _ring(model) * payload \
+            * (2.0 if train else 1.0)
+    if train and data > 1:
+        grads = n_total * 4.0 / model
+        if sharding == "fsdp":
+            wire += _ring(data, 1.0) * grads                    # reduce-scatter
+            wire += _ring(data, 1.0) * n_total * bytes_c / model  # all-gather
+        else:
+            wire += _ring(data) * grads                         # all-reduce
+    collective_s = wire / (hw.ici_link_bw * hw.ici_links)
+
+    # -- HBM residency ---------------------------------------------------
+    if train:
+        # fp32 master + 2 moments (sharded per `sharding`) + gradients
+        resident = 12.0 * n_total / param_shard \
+            + 4.0 * n_total / param_shard
+        resident += 2.0 * layers * tokens_local * d_model * bytes_c  # stashes
+    else:
+        resident = n_total * bytes_c / model
+        resident += 4.0 * tokens_local * d_model * bytes_c
+        resident += kv_cache_bytes
+    return RooflineEstimate(
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        flops_per_device=flops_per_device,
+        bytes_per_device=traffic,
+        hbm_resident_bytes=resident,
+        tokens_per_step=tokens_global,
+        chips=chips,
+        hw=hw,
+    )

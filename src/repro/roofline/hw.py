@@ -15,6 +15,7 @@ class HWSpec:
     ici_link_bw: float          # per link, B/s
     ici_links: int = 4          # usable links per chip in a 2-D torus
     hbm_bytes: float = 16e9
+    price_per_chip_h: float = 1.2   # on-demand $/chip-hour (cost modeling)
 
 
 HW_V5E = HWSpec(
@@ -24,6 +25,7 @@ HW_V5E = HWSpec(
     ici_link_bw=50e9,
     ici_links=4,
     hbm_bytes=16e9,
+    price_per_chip_h=1.2,
 )
 
 # A v4-like point used by the RSSC hardware-transfer experiment: same roofline
@@ -35,4 +37,5 @@ HW_V4_LIKE = HWSpec(
     ici_link_bw=45e9,
     ici_links=6,
     hbm_bytes=32e9,
+    price_per_chip_h=3.2,
 )

@@ -29,7 +29,6 @@ processes through the common context, and a different mesh or hardware is a
 
 from __future__ import annotations
 
-import time
 from typing import Any, Mapping, Optional, Sequence
 
 from ..core.actions import MeasurementError
@@ -50,12 +49,18 @@ class DryrunRooflineConnector(ExperimentConnector):
     version = "1"
 
     def __init__(self, arch: str, shape_name: str, mesh, hw: HWSpec = HW_V5E,
-                 hbm_limit: Optional[float] = None):
+                 hbm_limit: Optional[float] = None,
+                 clock: Clock = SYSTEM_CLOCK):
         self.arch = arch
         self.shape_name = shape_name
         self.mesh = mesh
         self.hw = hw
         self.hbm_limit = hbm_limit
+        # every phase timestamp/duration this connector records goes through
+        # the injectable clock, so virtual-clock specs and trace replays of
+        # tuning experiments are deterministic (a FakeClock legitimately
+        # reports zero compile time)
+        self.clock = clock
 
     @property
     def parameterization(self) -> Mapping[str, Any]:
@@ -83,7 +88,8 @@ class DryrunRooflineConnector(ExperimentConnector):
         dep = deployment_from_configuration(
             configuration, cfg, self.mesh, shape_kind=shape.kind,
             global_batch=shape.global_batch, seq_len=shape.seq_len)
-        t0 = time.time()
+        created_at = self.clock.time()
+        t0 = self.clock.monotonic()
         try:
             with self.mesh:
                 lowered, _ = lower_cell(self.arch, self.shape_name, self.mesh,
@@ -91,10 +97,10 @@ class DryrunRooflineConnector(ExperimentConnector):
                 compiled = lowered.compile()
         except Exception as e:
             raise MeasurementError(f"non-deployable: {type(e).__name__}: {e}")
-        compile_s = time.time() - t0
+        compile_s = self.clock.monotonic() - t0
         return Deployment(
             ident=f"dryrun-{configuration.digest[:12]}",
-            configuration=configuration, created_at=t0,
+            configuration=configuration, created_at=created_at,
             handle=compiled, meta={"compile_s": compile_s, "cfg": cfg,
                                    "shape": shape})
 
@@ -135,7 +141,7 @@ class DryrunRooflineExperiment(LifecycleExperiment):
                  clock: Clock = SYSTEM_CLOCK):
         super().__init__(
             DryrunRooflineConnector(arch, shape_name, mesh, hw=hw,
-                                    hbm_limit=hbm_limit),
+                                    hbm_limit=hbm_limit, clock=clock),
             retry=retry, pricing=pricing, clock=clock)
 
     @staticmethod
@@ -167,11 +173,13 @@ class WalltimeConnector(ExperimentConnector):
     version = "1"
 
     def __init__(self, arch: str, repeats: int = 3, compute_dtype="float32",
-                 arch_scale: float = 1.0):
+                 arch_scale: float = 1.0, clock: Clock = SYSTEM_CLOCK):
         self.arch = arch
         self.repeats = repeats
         self.compute_dtype = compute_dtype
         self.arch_scale = arch_scale
+        # injectable timing source (see DryrunRooflineConnector.__init__)
+        self.clock = clock
 
     @property
     def parameterization(self) -> Mapping[str, Any]:
@@ -221,7 +229,7 @@ class WalltimeConnector(ExperimentConnector):
             raise MeasurementError(f"non-deployable: {e}")
         return Deployment(
             ident=f"walltime-{configuration.digest[:12]}",
-            configuration=configuration, created_at=time.time(),
+            configuration=configuration, created_at=self.clock.time(),
             handle=(step, params, b),
             meta={"batch": batch, "seq": seq})
 
@@ -230,15 +238,17 @@ class WalltimeConnector(ExperimentConnector):
         try:
             times = []
             for _ in range(self.repeats):
-                t0 = time.perf_counter()
+                t0 = self.clock.monotonic()
                 step(params, b).block_until_ready()
-                times.append(time.perf_counter() - t0)
+                times.append(self.clock.monotonic() - t0)
         except Exception as e:
             raise MeasurementError(f"non-deployable: {e}")
         return min(times), deployment.meta
 
     def parse(self, raw: Any) -> Mapping[str, float]:
         best, meta = raw
+        # a virtual clock can legitimately observe zero elapsed time
+        best = max(best, 1e-9)
         return {"step_ms": best * 1e3,
                 "tokens_per_s": meta["batch"] * meta["seq"] / best}
 
@@ -255,5 +265,5 @@ class WalltimeExperiment(LifecycleExperiment):
         super().__init__(
             WalltimeConnector(arch, repeats=repeats,
                               compute_dtype=compute_dtype,
-                              arch_scale=arch_scale),
+                              arch_scale=arch_scale, clock=clock),
             retry=retry, pricing=pricing, clock=clock)

@@ -1,0 +1,9 @@
+"""Native workload families: real in-repo workloads exposed as Discovery
+Spaces (as opposed to the synthetic Table-III surfaces in
+:mod:`repro.core.api.workloads`).
+
+Each subpackage owns one workload family — a generator of *related*
+configuration spaces plus the tiered connectors that measure them — and
+registers its connector factories with the spec registry so the family is
+reachable from JSON specs and the CLI.
+"""

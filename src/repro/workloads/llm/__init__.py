@@ -1,0 +1,10 @@
+"""Self-measuring LLM deployment spaces (see :mod:`.family`)."""
+
+from __future__ import annotations
+
+from .connectors import (KERNEL_IMPLS, LLMDryrunConnector,
+                         LLMWalltimeConnector, resolve_hw)
+from .family import FAMILY_NAME, DeploymentSpaceFamily
+
+__all__ = ["DeploymentSpaceFamily", "FAMILY_NAME", "LLMDryrunConnector",
+           "LLMWalltimeConnector", "KERNEL_IMPLS", "resolve_hw"]

@@ -1,0 +1,199 @@
+"""The LLM deployment-space family: one generator, many related spaces.
+
+A :class:`DeploymentSpaceFamily` turns any :mod:`repro.configs` model into
+Discovery Spaces over the deployment knobs a serving/training team actually
+searches:
+
+    mesh shape × sharding strategy × per-replica batch × kernel variant
+    × precision
+
+parameterized by the *member knobs* — sequence length and device topology.
+Every member of a family shares the same five dimension names and semantics
+while the member knobs move, which is exactly the "related spaces" setup the
+paper's §IV transfer machinery is built for:
+
+* **seq-shift** (same topology, different sequence length): identical Ω —
+  the FT-TRANS pattern, distinct spaces because the member knobs live in the
+  experiment parameterization, related by an exact dimension match.
+* **topology-shift** (different device count): the ``mesh`` dimension's
+  labels change (``"1x4","2x2","4x1"`` → ``"1x8","2x4","8x1"``) but keep
+  their cardinality and semantic order (TP-heavy → balanced → DP-heavy), so
+  the catalog bridges them by positional rename inference (§IV-1).
+* **tier-shift** (same member, dryrun → walltime): same Ω, different action
+  space — the cheap tier's exhaustive measurements seed the expensive one.
+
+The family also emits the catalog identity block (:meth:`family_meta`) that
+marks its members as siblings, and a ready :class:`InvestigationSpec`
+(:meth:`investigation_spec`) so a member is runnable from JSON via
+``python -m repro.core.api run``.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Union
+
+from ...core.api.spec import (ConnectorSpec, InvestigationSpec, OptimizerSpec,
+                              BudgetSpec, TransferSpec)
+from ...core.discovery import DiscoverySpace
+from ...core.entities import Dimension
+from ...core.space import ProbabilitySpace
+from ...launch.mesh import mesh_split_options
+from ...roofline.hw import HWSpec, HW_V5E
+from .connectors import LLMDryrunConnector, LLMWalltimeConnector, resolve_hw
+
+__all__ = ["DeploymentSpaceFamily", "FAMILY_NAME"]
+
+#: Catalog family identifier for spaces generated here.
+FAMILY_NAME = "llm-deployment"
+
+_TIERS = ("dryrun", "walltime")
+
+
+class DeploymentSpaceFamily:
+    """Generator of related deployment Discovery Spaces for one model.
+
+    The constructor fixes the *family*: the model architecture, the workload
+    kind, and the per-point value sets.  Member methods take the *member
+    knobs* (``seq_len``, ``devices``) and yield that member's dimensions,
+    probability space, connector, meta block, Discovery Space, or runnable
+    investigation spec.
+    """
+
+    def __init__(self, arch: str, kind: str = "train",
+                 batches: tuple = (1, 2, 4, 8),
+                 shardings: tuple = ("replicate", "fsdp"),
+                 kernels: tuple = ("ref", "xla", "flash"),
+                 precisions: tuple = ("bf16", "fp32"),
+                 hw: Union[str, HWSpec] = HW_V5E):
+        from ...configs import get_config
+        try:
+            get_config(arch)  # includes extras like nano-100m
+        except KeyError as e:
+            raise ValueError(str(e))
+        if kind not in ("train", "prefill", "decode"):
+            raise ValueError(f"unknown workload kind {kind!r}")
+        self.arch = arch
+        self.kind = kind
+        self.batches = tuple(int(b) for b in batches)
+        self.shardings = tuple(shardings)
+        self.kernels = tuple(kernels)
+        self.precisions = tuple(precisions)
+        self.hw = resolve_hw(hw)
+
+    # ------------------------------------------------------------ the space
+
+    def dimensions(self, devices: int) -> list:
+        """The five deployment dimensions of the ``devices``-chip member.
+
+        ``mesh`` values come from :func:`mesh_split_options`, which keeps
+        cardinality and semantic order constant across power-of-two
+        topologies ≥ 4 chips — the invariant topology-shift transfer relies
+        on.  ``batch`` is per-replica and discrete (quantities, never
+        positionally renamed); the rest are categorical.
+        """
+        return [
+            Dimension.categorical("mesh", mesh_split_options(devices)),
+            Dimension.categorical("sharding", self.shardings),
+            Dimension.discrete("batch", self.batches),
+            Dimension.categorical("kernel", self.kernels),
+            Dimension.categorical("precision", self.precisions),
+        ]
+
+    def space(self, devices: int) -> ProbabilitySpace:
+        """Ω of the ``devices``-chip member (uniform P)."""
+        return ProbabilitySpace.make(self.dimensions(devices))
+
+    # --------------------------------------------------------------- identity
+
+    def family_meta(self, seq_len: int, devices: int, tier: str) -> dict:
+        """The catalog meta block of one member.
+
+        ``family`` is the sibling-identity block
+        (:attr:`~repro.core.api.catalog.CatalogEntry.family` — equal across
+        every member of this generator, whatever the member knobs); the
+        member knobs ride alongside for human inspection and reporting.
+        """
+        if tier not in _TIERS:
+            raise ValueError(f"unknown tier {tier!r} (known: {_TIERS})")
+        return {
+            "family": {"name": FAMILY_NAME, "arch": self.arch,
+                       "kind": self.kind},
+            "member": {"seq_len": int(seq_len), "devices": int(devices),
+                       "tier": tier, "hw": self.hw.name},
+        }
+
+    # ------------------------------------------------------------ measurement
+
+    def connector(self, seq_len: int, devices: int, tier: str = "dryrun",
+                  **kwargs):
+        """The member's measurement connector at the given tier."""
+        if tier == "dryrun":
+            return LLMDryrunConnector(self.arch, seq_len=seq_len,
+                                      devices=devices, kind=self.kind,
+                                      hw=self.hw, **kwargs)
+        if tier == "walltime":
+            return LLMWalltimeConnector(self.arch, seq_len=seq_len,
+                                        devices=devices, kind=self.kind,
+                                        **kwargs)
+        raise ValueError(f"unknown tier {tier!r} (known: {_TIERS})")
+
+    def member(self, seq_len: int, devices: int, tier: str = "dryrun",
+               store=None, **kwargs) -> DiscoverySpace:
+        """One member as a ready :class:`DiscoverySpace` (programmatic path;
+        the spec path goes through :meth:`investigation_spec`).  ``kwargs``
+        reach the connector (e.g. ``clock=``, ``hbm_fraction=``)."""
+        from ...core.actions import ActionSpace
+        from ...core.connector import LifecycleExperiment
+        experiment = LifecycleExperiment(
+            self.connector(seq_len, devices, tier, **kwargs))
+        return DiscoverySpace(
+            space=self.space(devices),
+            actions=ActionSpace.make([experiment]),
+            store=store,
+            meta=self.family_meta(seq_len, devices, tier),
+        )
+
+    # ------------------------------------------------------------------ spec
+
+    def connector_spec(self, seq_len: int, devices: int,
+                       tier: str = "dryrun", **params) -> ConnectorSpec:
+        """The member's measurement as a JSON-able :class:`ConnectorSpec`
+        (factory reference + plain-JSON params — ``hw`` travels by name)."""
+        if tier == "dryrun":
+            p = {"arch": self.arch, "seq_len": int(seq_len),
+                 "devices": int(devices), "kind": self.kind,
+                 "hw": self.hw.name}
+            p.update(params)
+            return ConnectorSpec(factory="llm-dryrun", params=p)
+        if tier == "walltime":
+            p = {"arch": self.arch, "seq_len": int(seq_len),
+                 "devices": int(devices), "kind": self.kind}
+            p.update(params)
+            return ConnectorSpec(factory="llm-walltime", params=p)
+        raise ValueError(f"unknown tier {tier!r} (known: {_TIERS})")
+
+    def investigation_spec(self, seq_len: int, devices: int,
+                           tier: str = "dryrun",
+                           metric: str = "step_time_s",
+                           name: Optional[str] = None,
+                           optimizer: str = "random", seed: int = 0,
+                           max_trials: int = 30, patience: int = 10,
+                           transfer: Optional[TransferSpec] = None,
+                           store: Optional[str] = None,
+                           **connector_params) -> InvestigationSpec:
+        """A runnable declarative description of one member's search —
+        everything :mod:`repro.core.api.cli` needs to execute it from JSON.
+        """
+        return InvestigationSpec(
+            name=name or (f"{FAMILY_NAME}-{self.arch}-{self.kind}"
+                          f"-s{seq_len}-d{devices}-{tier}"),
+            space=self.space(devices),
+            metric=metric,
+            connectors=(self.connector_spec(seq_len, devices, tier,
+                                            **connector_params),),
+            optimizers=(OptimizerSpec(optimizer, seed=seed),),
+            budget=BudgetSpec(max_trials=max_trials, patience=patience),
+            transfer=transfer if transfer is not None else TransferSpec(),
+            store=store,
+            meta=self.family_meta(seq_len, devices, tier),
+        )

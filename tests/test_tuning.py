@@ -95,3 +95,76 @@ def test_walltime_discovery_space_end_to_end(mesh):
                         max_trials=4, patience=4)
     assert run.best is not None
     assert run.best.value > 0
+
+
+# ----------------------------------------------------------- injectable clock
+
+
+class TickingClock:
+    """A clock whose monotonic() advances a fixed step per call, so every
+    timed interval in a connector is exactly one step — deterministic."""
+
+    def __init__(self, step=0.005):
+        self.step = step
+        self._now = 0.0
+
+    def time(self):
+        return self._now
+
+    def monotonic(self):
+        self._now += self.step
+        return self._now
+
+    def sleep(self, seconds):
+        self._now += seconds
+
+
+class _Ready:
+    def block_until_ready(self):
+        return self
+
+
+def test_walltime_connector_times_on_the_injected_clock():
+    from repro.core.connector import Deployment
+    from repro.tuning.experiments import WalltimeConnector
+
+    clock = TickingClock(step=0.005)
+    conn = WalltimeConnector("xlstm-125m", repeats=3, clock=clock)
+    dep = Deployment(ident="d", configuration=Configuration.make({}),
+                     created_at=clock.time(),
+                     handle=(lambda p, b: _Ready(), None, None),
+                     meta={"batch": 2, "seq": 8})
+    best, meta = conn.run(dep)
+    # two monotonic() reads bracket each repeat: every duration is one tick
+    assert best == pytest.approx(0.005)
+    out = conn.parse((best, meta))
+    assert out["step_ms"] == pytest.approx(5.0)
+    assert out["tokens_per_s"] == pytest.approx(2 * 8 / 0.005)
+
+
+def test_walltime_parse_survives_a_frozen_virtual_clock():
+    from repro.core.clock import FakeClock
+    from repro.core.connector import Deployment
+    from repro.tuning.experiments import WalltimeConnector
+
+    conn = WalltimeConnector("xlstm-125m", repeats=2, clock=FakeClock())
+    dep = Deployment(ident="d", configuration=Configuration.make({}),
+                     created_at=0.0,
+                     handle=(lambda p, b: _Ready(), None, None),
+                     meta={"batch": 1, "seq": 16})
+    best, meta = conn.run(dep)
+    assert best == 0.0  # a FakeClock legitimately observes zero elapsed time
+    out = conn.parse((best, meta))
+    assert out["step_ms"] > 0
+    assert np.isfinite(out["tokens_per_s"])
+
+
+def test_experiment_shims_plumb_the_clock_into_their_connector(mesh):
+    from repro.tuning.experiments import DryrunRooflineExperiment
+
+    clock = TickingClock()
+    dry = DryrunRooflineExperiment("xlstm-125m", "train-256", mesh,
+                                   clock=clock)
+    wall = WalltimeExperiment("xlstm-125m", clock=clock)
+    assert dry.connector.clock is clock and dry.clock is clock
+    assert wall.connector.clock is clock and wall.clock is clock
